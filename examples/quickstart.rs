@@ -1,0 +1,53 @@
+//! Quickstart: load an AOT artifact, run one inference through the PJRT
+//! runtime, and print the simulated ZCU104 deployment numbers.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use spaceinfer::board::{Calibration, Zcu104};
+use spaceinfer::hls::HlsDesign;
+use spaceinfer::model::catalog::model_info;
+use spaceinfer::model::Precision;
+use spaceinfer::runtime::{Engine, GoldenIo};
+use spaceinfer::sensors::generators::{ion_distribution, Region};
+use spaceinfer::util::prng::Prng;
+
+fn main() -> Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    let calib = Calibration::default();
+    let board = Zcu104::default();
+
+    // 1. load the LogisticNet artifact (MMS plasma-region classifier)
+    let engine = Engine::new(dir)?;
+    println!("PJRT platform: {}", engine.platform());
+    let model = engine.load("logistic", Precision::Fp32)?;
+    println!("loaded {} ({} params)", model.tag, model.manifest.total_params);
+
+    // 2. startup self-check against the python-side golden output
+    let io = GoldenIo::load(&dir.join("logistic.fp32.io.json"))?;
+    let out = model.run(&io.input_slices())?;
+    println!("golden-IO max|err| = {:.3e}", io.max_abs_err(&out));
+
+    // 3. classify a synthetic magnetosheath ion distribution
+    let mut rng = Prng::new(42);
+    let dist = ion_distribution(&mut rng, Region::Msh);
+    let logits = model.run(&[&dist])?;
+    let arg = (0..4).max_by(|&a, &b| logits[a].total_cmp(&logits[b])).unwrap();
+    println!("logits {:?} -> region {}", logits, Region::ALL[arg].label());
+
+    // 4. what would this cost on the ZCU104? (simulated deployment)
+    let info = model_info("logistic")?;
+    let design = HlsDesign::synthesize(&model.manifest, &board, &calib);
+    println!(
+        "simulated HLS IP: {:.0} FPS ({}x paper's {:.0}), {:.1} BRAMs, \
+         latency {:.3} ms",
+        design.fps(),
+        (design.fps() / info.paper.accel_fps * 100.0).round() / 100.0,
+        info.paper.accel_fps,
+        design.plan.brams(),
+        1e3 * design.latency_s()
+    );
+    Ok(())
+}

@@ -1,0 +1,143 @@
+"""AOT compile path: lower every model variant to HLO text + manifest.
+
+Run once via ``make artifacts`` (``python -m compile.aot --out ../artifacts``).
+Python never appears on the request path: the rust coordinator loads the
+HLO text with ``HloModuleProto::from_text_file`` and executes it on the
+PJRT CPU client.
+
+Interchange is HLO **text**, not serialized protos: jax >= 0.5 emits
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Weights are baked into the artifact as constants — the moral equivalent of
+the DPU's compiled ``.xmodel`` (instructions + weights in one deployable
+blob).  Per artifact we emit:
+
+* ``<name>.<prec>.hlo.txt``       — the executable
+* ``<name>.<prec>.manifest.json`` — per-layer counts for the simulators
+* ``<name>.<prec>.io.json``       — one golden input/output pair (rust
+  integration tests + the coordinator's self-check at startup)
+
+plus ``index.json`` tying the catalog together.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import data
+from .models import archspec, graph, quant
+
+# Models lowered to executable HLO (name, precision).  Ablation variants
+# that only feed the analytic simulators are manifest-only.
+HLO_VARIANTS = [
+    ("vae", "fp32"), ("vae", "int8"),
+    ("cnet", "fp32"), ("cnet", "int8"),
+    ("esperta", "fp32"), ("esperta_single", "fp32"),
+    ("logistic", "fp32"), ("reduced", "fp32"), ("baseline", "fp32"),
+    ("cnet_small", "int8"),
+]
+
+MANIFEST_ONLY = [
+    ("cnet_nopool", "int8"), ("cnet_small", "fp32"),
+    ("cnet_noscalar", "int8"), ("esperta_single", "fp32"),
+]
+
+CALIB_SAMPLES = 4
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants: the default printer elides weight tensors as
+    # "{...}", which the rust-side text parser cannot reconstruct — the
+    # artifact must be self-contained (weights baked in, like a DPU
+    # .xmodel).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def build_variant(name, prec, seed_base=0):
+    spec = archspec.model_spec(name)
+    params = graph.init_params(spec)
+    input_names = list(spec["inputs"])
+    scales = None
+    if prec == "int8":
+        calib = [data.model_inputs(name, jax.random.PRNGKey(1000 + i))
+                 for i in range(CALIB_SAMPLES)]
+        scales = quant.calibrate_ptq(spec, params, calib)
+
+    def fn(*args):
+        inputs = dict(zip(input_names, args))
+        return (graph.forward(spec, params, inputs, quant=scales),)
+
+    example = data.model_inputs(name, jax.random.PRNGKey(42))
+    args = [example[n] for n in input_names]
+    lowered = jax.jit(fn).lower(*[jax.ShapeDtypeStruct(a.shape, a.dtype)
+                                  for a in args])
+    hlo = to_hlo_text(lowered)
+    out = jax.jit(fn)(*args)[0]
+    io = {
+        "inputs": [{"name": n, "shape": list(example[n].shape),
+                    "data": [float(v) for v in
+                             jnp.ravel(example[n]).tolist()]}
+                   for n in input_names],
+        "expected": {"shape": list(out.shape),
+                     "data": [float(v) for v in jnp.ravel(out).tolist()]},
+    }
+    man = graph.manifest(spec, precision=prec)
+    man["input_order"] = input_names
+    if scales is not None:
+        man["ptq_scales"] = {str(k): v for k, v in scales.items()}
+    return hlo, man, io
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated model names to rebuild")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    index = {"artifacts": [], "manifests": []}
+    for name, prec in HLO_VARIANTS:
+        tag = f"{name}.{prec}"
+        if only and name not in only:
+            # keep existing entries in the index
+            if os.path.exists(os.path.join(args.out, f"{tag}.hlo.txt")):
+                index["artifacts"].append(tag)
+            continue
+        print(f"[aot] lowering {tag} ...", flush=True)
+        hlo, man, io = build_variant(name, prec)
+        with open(os.path.join(args.out, f"{tag}.hlo.txt"), "w") as f:
+            f.write(hlo)
+        with open(os.path.join(args.out, f"{tag}.manifest.json"), "w") as f:
+            json.dump(man, f)
+        with open(os.path.join(args.out, f"{tag}.io.json"), "w") as f:
+            json.dump(io, f)
+        index["artifacts"].append(tag)
+
+    for name, prec in MANIFEST_ONLY:
+        tag = f"{name}.{prec}"
+        spec = archspec.model_spec(name)
+        man = graph.manifest(spec, precision=prec)
+        man["input_order"] = list(spec["inputs"])
+        with open(os.path.join(args.out, f"{tag}.manifest.json"), "w") as f:
+            json.dump(man, f)
+        index["manifests"].append(tag)
+
+    index["manifests"] += index["artifacts"]
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"[aot] wrote {len(index['artifacts'])} HLO artifacts + "
+          f"{len(index['manifests'])} manifests to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

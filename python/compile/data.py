@@ -1,0 +1,127 @@
+"""Synthetic mission-data generators (the flight-data substitution).
+
+The paper's inputs are SDO/HMI SHARP magnetogram tiles, SDO/AIA 193 A
+imagery, GOES soft-X-ray background flux, flare descriptors, and MMS/FPI
+3-D ion energy distributions — none publicly bundled with the paper.  These
+generators produce structurally faithful synthetic equivalents: same
+shapes, same dynamic ranges, same qualitative structure (bipolar active
+regions, limb-brightened disk, drifting-Maxwellian ion populations), so the
+full preprocessing + inference path is exercised.  DESIGN.md §2 documents
+the substitution.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def magnetogram_tile(key, shape=(128, 256)):
+    """Bipolar active-region Br tile (VAE input), [-1, 1] normalized.
+
+    A sunspot pair: strong positive blob with a weaker opposite-polarity
+    ring, plus salt-and-pepper network field — mimicking Fig 1.
+    """
+    h, w = shape
+    k1, k2, k3 = jax.random.split(key, 3)
+    yy, xx = jnp.meshgrid(jnp.linspace(-1, 1, h), jnp.linspace(-1, 1, w),
+                          indexing="ij")
+    cx, cy = jax.random.uniform(k1, (2,), minval=-0.4, maxval=0.4)
+    r2p = (xx - cx) ** 2 + (yy - cy) ** 2
+    r2n = (xx - cx - 0.25) ** 2 + (yy - cy + 0.1) ** 2
+    spot = jnp.exp(-r2p / 0.02) - 0.7 * jnp.exp(-r2n / 0.04)
+    network = 0.08 * jax.random.normal(k2, shape)
+    img = jnp.clip(spot + network, -1.0, 1.0)
+    # replicate to the 3 RGB channels the published encoder ingests
+    return jnp.broadcast_to(img[..., None], shape + (3,)).astype(jnp.float32)
+
+
+def aia_hmi_pair(key, shape=(256, 256)):
+    """CNetPlusScalar image input: [AIA 193 | HMI] channel pair with
+    limb-brightening geometry (the paper's §II-C.2 correction target)."""
+    h, w = shape
+    k1, k2, k3 = jax.random.split(key, 3)
+    yy, xx = jnp.meshgrid(jnp.linspace(-1, 1, h), jnp.linspace(-1, 1, w),
+                          indexing="ij")
+    r = jnp.sqrt(xx ** 2 + yy ** 2)
+    disk = (r < 0.95).astype(jnp.float32)
+    # limb brightening ~ 1/sqrt(cos theta), clipped at the limb
+    mu = jnp.sqrt(jnp.clip(1.0 - (r / 0.95) ** 2, 1e-3, 1.0))
+    limb = disk / jnp.sqrt(mu)
+    loops = jnp.zeros(shape)
+    for i in range(3):
+        k2, kk = jax.random.split(k2)
+        cx, cy = jax.random.uniform(kk, (2,), minval=-0.5, maxval=0.5)
+        loops = loops + jnp.exp(-((xx - cx) ** 2 + (yy - cy) ** 2) / 0.01)
+    aia = jnp.clip(0.3 * limb + loops, 0, 4.0) / 4.0
+    hmi = magnetogram_tile(k3, shape)[..., 0]
+    return jnp.stack([aia, hmi], axis=-1).astype(jnp.float32)
+
+
+def background_flux(key):
+    """log10 GOES background flux over the preceding 30 min (scalar)."""
+    return (jax.random.uniform(key, (1, 1), minval=-8.0, maxval=-5.0)
+            .astype(jnp.float32))
+
+
+def flare_features(key):
+    """ESPERTA inputs: (heliolongitude/90, log SXR fluence, log radio
+    fluence), normalized to O(1)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    lon = jax.random.uniform(k1, (1, 1), minval=-1.0, maxval=1.0)
+    sxr = jax.random.uniform(k2, (1, 1), minval=0.0, maxval=2.0)
+    radio = jax.random.uniform(k3, (1, 1), minval=0.0, maxval=2.0)
+    return jnp.concatenate([lon, sxr, radio], axis=1).astype(jnp.float32)
+
+
+REGIONS = ("SW", "IF", "MSH", "MSP")
+
+
+def ion_distribution(key, region=None, shape=(32, 16, 32)):
+    """FPI-like 3-D ion energy distribution (energy x theta x phi), log-
+    scaled to [0, 1].  Region changes the population structure:
+
+    SW  — cold narrow beam;         IF — beam + diffuse suprathermal;
+    MSH — hot broad Maxwellian;     MSP — tenuous, very hot.
+    """
+    kd, kr, kn = jax.random.split(key, 3)
+    if region is None:
+        region = REGIONS[int(jax.random.randint(kr, (), 0, 4))]
+    e, t, p = shape
+    ee, tt, pp = jnp.meshgrid(jnp.linspace(0, 1, e), jnp.linspace(-1, 1, t),
+                              jnp.linspace(-1, 1, p), indexing="ij")
+    if region == "SW":
+        f = jnp.exp(-((ee - 0.25) ** 2) / 0.003 - (tt ** 2 + pp ** 2) / 0.08)
+    elif region == "IF":
+        beam = jnp.exp(-((ee - 0.25) ** 2) / 0.003
+                       - (tt ** 2 + pp ** 2) / 0.08)
+        supra = 0.25 * jnp.exp(-((ee - 0.55) ** 2) / 0.05)
+        f = beam + supra
+    elif region == "MSH":
+        f = jnp.exp(-((ee - 0.4) ** 2) / 0.04) * (1 + 0.2 * tt)
+    elif region == "MSP":
+        f = 0.3 * jnp.exp(-((ee - 0.7) ** 2) / 0.08)
+    else:
+        raise ValueError(f"unknown region {region!r}")
+    noise = 0.03 * jax.random.normal(kn, shape)
+    f = jnp.clip(f + noise, 0.0, 1.0)
+    f = jnp.log1p(100.0 * f) / math.log(101.0)
+    return f.reshape(1, e, t, p, 1).astype(jnp.float32), region
+
+
+def model_inputs(name, key):
+    """One synthetic input dict for any model in the catalog."""
+    if name == "vae":
+        return {"image": magnetogram_tile(key)[None]}
+    if name.startswith("cnet"):
+        k1, k2 = jax.random.split(key)
+        d = {"image": aia_hmi_pair(k1)[None]}
+        if name != "cnet_noscalar":
+            d["scalar"] = background_flux(k2)
+        return d
+    if name.startswith("esperta"):
+        return {"features": flare_features(key)}
+    if name in ("logistic", "reduced", "baseline"):
+        dist, _ = ion_distribution(key)
+        return {"dist": dist}
+    raise KeyError(name)

@@ -1,0 +1,25 @@
+"""Layer-1 Pallas kernels.
+
+Every MAC in the six paper networks funnels through the tiled Pallas matmul
+in :mod:`matmul` (fp32, "HLS path") or :mod:`matmul_int8` (int8-emulated,
+"Vitis-AI DPU path"); convolutions are expressed as im2col/vol2col + matmul
+(:mod:`conv`), pooling and activations are window / elementwise kernels
+(:mod:`pool`, :mod:`elementwise`).  All kernels are lowered with
+``interpret=True`` so the resulting HLO runs on the CPU PJRT client used by
+the rust coordinator; :mod:`ref` holds the pure-jnp oracles the pytest suite
+checks against.
+"""
+
+from .matmul import matmul, choose_blocks, vmem_bytes, mxu_tile_utilization
+from .matmul_int8 import matmul_int8, quantize, dequantize, quant_scale
+from .conv import conv2d, conv3d
+from .pool import maxpool2d, maxpool3d, avgpool3d
+from .elementwise import relu, leaky_relu, sigmoid, bias_add
+
+__all__ = [
+    "matmul", "choose_blocks", "vmem_bytes", "mxu_tile_utilization",
+    "matmul_int8", "quantize", "dequantize", "quant_scale",
+    "conv2d", "conv3d",
+    "maxpool2d", "maxpool3d", "avgpool3d",
+    "relu", "leaky_relu", "sigmoid", "bias_add",
+]

@@ -1,0 +1,74 @@
+"""Convolutions as im2col/vol2col + the Pallas matmul.
+
+Hardware adaptation: the DPU executes convolution by streaming image tiles
+through its MAC array with weights held on-chip; the HLS designs unroll the
+same loop nest into a per-layer pipeline.  On the TPU model this is the
+classic im2col formulation — patch extraction is pure data movement (the
+HBM->VMEM staging the paper did with AXI streams / line buffers) and every
+MAC lands in the Pallas matmul kernel, which is the MXU analogue of the
+B4096 array.
+
+Patch feature order from ``lax.conv_general_dilated_patches`` is
+``(cin, *kernel_spatial)`` (verified empirically and pinned by tests), so
+weights are transposed to match before the flattening reshape.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from .matmul import matmul
+from .matmul_int8 import matmul_int8
+
+
+def _conv_nd(x, w, stride, padding, spatial, quant=None, policy="interp"):
+    """Shared n-d conv: x NHWC/NDHWC, w (*spatial, cin, cout)."""
+    ksp = w.shape[:spatial]
+    cin, cout = w.shape[spatial], w.shape[spatial + 1]
+    if x.shape[-1] != cin:
+        raise ValueError(f"conv channel mismatch: x {x.shape} w {w.shape}")
+    if spatial == 2:
+        dn = ("NHWC", "HWIO", "NHWC")
+        wt = jnp.transpose(w, (2, 0, 1, 3))            # (cin, kh, kw, cout)
+    else:
+        dn = ("NDHWC", "DHWIO", "NDHWC")
+        wt = jnp.transpose(w, (3, 0, 1, 2, 4))         # (cin, kd, kh, kw, cout)
+    patches = lax.conv_general_dilated_patches(
+        x, ksp, stride, padding, dimension_numbers=dn)
+    out_spatial = patches.shape[1:-1]
+    kfeat = patches.shape[-1]                          # cin * prod(ksp)
+    lhs = patches.reshape(-1, kfeat)
+    rhs = wt.reshape(kfeat, cout)
+    if quant is None:
+        out = matmul(lhs, rhs, policy=policy)
+    else:
+        sx, sw = quant
+        out = matmul_int8(lhs, rhs, sx, sw, policy=policy)
+    return out.reshape((x.shape[0],) + out_spatial + (cout,))
+
+
+def conv2d(x, w, *, stride=(1, 1), padding="SAME", quant=None, policy="interp"):
+    """2-D convolution.
+
+    Args:
+      x: f32[N, H, W, Cin].
+      w: f32[kh, kw, Cin, Cout].
+      stride: (sh, sw).
+      padding: "SAME" | "VALID".
+      quant: optional (sx, sw) per-tensor scales -> int8 DPU-path conv.
+    Returns:
+      f32[N, H', W', Cout].
+    """
+    return _conv_nd(x, w, stride, padding, 2, quant=quant, policy=policy)
+
+
+def conv3d(x, w, *, stride=(1, 1, 1), padding="SAME", quant=None,
+           policy="interp"):
+    """3-D convolution (the MMS networks' "unsupported" operator).
+
+    Args:
+      x: f32[N, D, H, W, Cin].
+      w: f32[kd, kh, kw, Cin, Cout].
+    Returns:
+      f32[N, D', H', W', Cout].
+    """
+    return _conv_nd(x, w, stride, padding, 3, quant=quant, policy=policy)

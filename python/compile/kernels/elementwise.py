@@ -1,0 +1,53 @@
+"""Elementwise Pallas kernels: activations and bias-add.
+
+``sigmoid`` is the operator that disqualifies ESPERTA from the DPU in the
+paper (Vitis AI has no sigmoid); here it is a first-class kernel on the
+fp32 path.  ``leaky_relu`` exists so the CNetPlusScalar "original" variant
+(before the paper's DPU-compatibility substitution to plain ReLU) can be
+built and the substitution's effect measured.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _elementwise(fn, x):
+    def kernel(x_ref, o_ref):
+        o_ref[...] = fn(x_ref[...])
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))
+
+
+def relu(x):
+    """max(x, 0)."""
+    return _elementwise(lambda v: jnp.maximum(v, 0.0), x)
+
+
+def leaky_relu(x, alpha: float = 0.01):
+    """x if x>0 else alpha*x (unsupported by Vitis AI; paper §III-A.2)."""
+    return _elementwise(lambda v: jnp.where(v > 0, v, alpha * v), x)
+
+
+def sigmoid(x):
+    """1/(1+exp(-x)) (unsupported by Vitis AI; forces ESPERTA onto HLS)."""
+    return _elementwise(lambda v: 1.0 / (1.0 + jnp.exp(-v)), x)
+
+
+def bias_add(x, b):
+    """x + b broadcast over the trailing (channel/feature) axis."""
+    if x.shape[-1] != b.shape[-1]:
+        raise ValueError(f"bias_add mismatch: {x.shape} + {b.shape}")
+
+    def kernel(x_ref, b_ref, o_ref):
+        o_ref[...] = x_ref[...] + b_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), b.astype(jnp.float32))

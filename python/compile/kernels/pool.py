@@ -1,0 +1,74 @@
+"""Pooling Pallas kernels (max 2-D/3-D, average 3-D).
+
+The MMS networks need 3-D pooling — one of the operators the paper singles
+out as unsupported by the DPU and the reason those nets go down the HLS
+path.  Each kernel reduces a VMEM-resident block with a window reduction;
+the models only pool with window == stride and spatial dims divisible by
+the window, which is asserted here (the paper's nets satisfy it).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _check_divisible(spatial, window):
+    for s, w in zip(spatial, window):
+        if s % w != 0:
+            raise ValueError(f"pool window {window} does not divide {spatial}")
+
+
+def _pool_call(kernel, x, out_shape):
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))
+
+
+def maxpool2d(x, window=(2, 2)):
+    """f32[N,H,W,C] -> f32[N,H/wh,W/ww,C], window == stride."""
+    n, h, w, c = x.shape
+    _check_divisible((h, w), window)
+    wh, ww = window
+    out_shape = (n, h // wh, w // ww, c)
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = lax.reduce_window(
+            x_ref[...], -jnp.inf, lax.max,
+            (1, wh, ww, 1), (1, wh, ww, 1), "VALID")
+
+    return _pool_call(kernel, x, out_shape)
+
+
+def maxpool3d(x, window=(2, 2, 2)):
+    """f32[N,D,H,W,C] -> pooled, window == stride."""
+    n, d, h, w, c = x.shape
+    _check_divisible((d, h, w), window)
+    wd, wh, ww = window
+    out_shape = (n, d // wd, h // wh, w // ww, c)
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = lax.reduce_window(
+            x_ref[...], -jnp.inf, lax.max,
+            (1, wd, wh, ww, 1), (1, wd, wh, ww, 1), "VALID")
+
+    return _pool_call(kernel, x, out_shape)
+
+
+def avgpool3d(x, window=(2, 2, 2)):
+    """f32[N,D,H,W,C] -> mean-pooled (LogisticNet front end)."""
+    n, d, h, w, c = x.shape
+    _check_divisible((d, h, w), window)
+    wd, wh, ww = window
+    out_shape = (n, d // wd, h // wh, w // ww, c)
+    denom = float(wd * wh * ww)
+
+    def kernel(x_ref, o_ref):
+        s = lax.reduce_window(
+            x_ref[...], 0.0, lax.add,
+            (1, wd, wh, ww, 1), (1, wd, wh, ww, 1), "VALID")
+        o_ref[...] = s / denom
+
+    return _pool_call(kernel, x, out_shape)

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+No Pallas anywhere in this module — these are the ground truth the pytest
+suite (and the paper's "HLS matches CPU to <=1e-10" fidelity claim) checks
+the kernels against.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+QMIN, QMAX = -128, 127
+
+
+def matmul(x, w):
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def quant_scale(amax, *, pow2=True):
+    amax = jnp.maximum(jnp.asarray(amax, jnp.float32), 1e-8)
+    scale = amax / QMAX
+    if pow2:
+        scale = 2.0 ** jnp.ceil(jnp.log2(scale))
+    return scale
+
+
+def quantize(x, scale):
+    return jnp.clip(jnp.round(x / scale), QMIN, QMAX).astype(jnp.int32)
+
+
+def matmul_int8(x, w, sx, sw):
+    acc = jnp.matmul(quantize(x, sx), quantize(w, sw),
+                     preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * (jnp.asarray(sx, jnp.float32)
+                                      * jnp.asarray(sw, jnp.float32))
+
+
+def conv2d(x, w, *, stride=(1, 1), padding="SAME"):
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32), stride, padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def conv3d(x, w, *, stride=(1, 1, 1), padding="SAME"):
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32), stride, padding,
+        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"))
+
+
+def maxpool2d(x, window=(2, 2)):
+    wh, ww = window
+    return lax.reduce_window(x, -jnp.inf, lax.max,
+                             (1, wh, ww, 1), (1, wh, ww, 1), "VALID")
+
+
+def maxpool3d(x, window=(2, 2, 2)):
+    wd, wh, ww = window
+    return lax.reduce_window(x, -jnp.inf, lax.max,
+                             (1, wd, wh, ww, 1), (1, wd, wh, ww, 1), "VALID")
+
+
+def avgpool3d(x, window=(2, 2, 2)):
+    wd, wh, ww = window
+    s = lax.reduce_window(x, 0.0, lax.add,
+                          (1, wd, wh, ww, 1), (1, wd, wh, ww, 1), "VALID")
+    return s / float(wd * wh * ww)
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def leaky_relu(x, alpha=0.01):
+    return jnp.where(x > 0, x, alpha * x)
+
+
+def sigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def bias_add(x, b):
+    return x + b

@@ -1,0 +1,18 @@
+"""Layer-2 JAX models: the six paper networks, built on the L1 kernels.
+
+Single source of truth is the layer-graph spec in :mod:`archspec`; the
+generic executor in :mod:`graph` runs a spec forward (fp32 or int8-PTQ),
+initializes parameters, and derives the per-layer manifest the rust
+simulators consume.
+"""
+
+from .archspec import MODELS, model_spec, TABLE1_PARAMS
+from .graph import (forward, init_params, manifest, param_count, op_count,
+                    input_shapes)
+from .quant import calibrate_ptq
+
+__all__ = [
+    "MODELS", "model_spec", "TABLE1_PARAMS",
+    "forward", "init_params", "manifest", "param_count", "op_count",
+    "input_shapes", "calibrate_ptq",
+]

@@ -1,0 +1,349 @@
+"""Generic layer-graph executor / analyzer.
+
+A model spec is a dict::
+
+    {"name": str,
+     "inputs": {input_name: shape_tuple, ...},
+     "layers": [layer, ...]}
+
+Each ``layer`` is a dict with a ``kind`` plus kind-specific fields.  The
+same spec drives three consumers:
+
+* :func:`forward`      — run it with JAX, every MAC through the L1 Pallas
+  kernels (``quant`` switches conv/dense onto the int8 DPU-path kernel);
+* :func:`init_params`  — seeded He-style parameter pytree;
+* :func:`manifest`     — per-layer MAC/op/param/byte accounting for the
+  rust DPU/HLS/CPU simulators (the hw-codesign interchange format).
+
+Layer kinds
+-----------
+conv2d  {cin, cout, k, stride, padding, act}
+conv3d  {cin, cout, k, stride, padding, act}
+maxpool2d / maxpool3d / avgpool3d  {window}
+flatten {}
+concat_scalar {scalar_input}       append an extra scalar input (CNet)
+dense   {din, dout, act}
+dense_heads {din, dout, heads}     N parallel dense heads, outputs concat
+esperta_bank {n, din}              n parallel dense(din->1) + sigmoid +
+                                   greater-than threshold comparators;
+                                   output [probs | alerts] of width 2n
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import (matmul, matmul_int8, conv2d, conv3d, maxpool2d,
+                       maxpool3d, avgpool3d, relu, leaky_relu, sigmoid,
+                       bias_add)
+
+ACTS = ("none", "relu", "leaky_relu", "sigmoid")
+
+
+def _act(x, act):
+    if act == "none":
+        return x
+    if act == "relu":
+        return relu(x)
+    if act == "leaky_relu":
+        return leaky_relu(x, 0.01)
+    if act == "sigmoid":
+        return sigmoid(x)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _seed_for(name: str) -> int:
+    return sum(ord(c) * 31 ** i for i, c in enumerate(name)) % (2 ** 31)
+
+
+# ---------------------------------------------------------------------------
+# shape propagation (shared by forward-shape checks and the manifest)
+# ---------------------------------------------------------------------------
+
+def _conv_out_spatial(spatial, k, stride, padding):
+    if padding == "SAME":
+        return tuple(-(-s // st) for s, st in zip(spatial, stride))
+    return tuple((s - k) // st + 1 for s, st in zip(spatial, stride))
+
+
+def propagate_shapes(spec):
+    """Yield (layer, in_shape, out_shape) walking the main input through."""
+    inputs = spec["inputs"]
+    main = next(iter(inputs))
+    shape = tuple(inputs[main])
+    out = []
+    for layer in spec["layers"]:
+        kind = layer["kind"]
+        ish = shape
+        if kind in ("conv2d", "conv3d"):
+            nd = 2 if kind == "conv2d" else 3
+            spatial = shape[1:1 + nd]
+            osp = _conv_out_spatial(spatial, layer["k"],
+                                    layer.get("stride", (1,) * nd),
+                                    layer.get("padding", "SAME"))
+            shape = (shape[0],) + osp + (layer["cout"],)
+        elif kind in ("maxpool2d", "maxpool3d", "avgpool3d"):
+            win = layer["window"]
+            spatial = shape[1:-1]
+            shape = (shape[0],) + tuple(s // w for s, w in
+                                        zip(spatial, win)) + (shape[-1],)
+        elif kind == "flatten":
+            shape = (shape[0], int(math.prod(shape[1:])))
+        elif kind == "concat_scalar":
+            shape = (shape[0], shape[1] + 1)
+        elif kind == "dense":
+            shape = (shape[0], layer["dout"])
+        elif kind == "dense_heads":
+            shape = (shape[0], layer["dout"] * layer["heads"])
+        elif kind == "esperta_bank":
+            shape = (shape[0], 2 * layer["n"])
+        else:
+            raise ValueError(f"unknown layer kind {kind!r}")
+        out.append((layer, ish, shape))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def init_params(spec, seed=None):
+    """Seeded parameter pytree (list indexed like spec['layers'])."""
+    key = jax.random.PRNGKey(_seed_for(spec["name"]) if seed is None else seed)
+    params = []
+    for layer in spec["layers"]:
+        kind = layer["kind"]
+        key, kw, kb = jax.random.split(key, 3)
+        if kind == "conv2d":
+            shp = (layer["k"], layer["k"], layer["cin"], layer["cout"])
+            fan_in = layer["k"] ** 2 * layer["cin"]
+        elif kind == "conv3d":
+            shp = (layer["k"],) * 3 + (layer["cin"], layer["cout"])
+            fan_in = layer["k"] ** 3 * layer["cin"]
+        elif kind == "dense":
+            shp = (layer["din"], layer["dout"])
+            fan_in = layer["din"]
+        elif kind == "dense_heads":
+            # per-head weights AND per-head biases
+            shp = (layer["heads"], layer["din"], layer["dout"])
+            fan_in = layer["din"]
+            scale = math.sqrt(2.0 / fan_in)
+            w = jax.random.normal(kw, shp, jnp.float32) * scale
+            b = jax.random.normal(kb, (layer["heads"], layer["dout"]),
+                                  jnp.float32) * 0.01
+            params.append({"w": w, "b": b})
+            continue
+        elif kind == "esperta_bank":
+            # fixed Laurenza-style coefficients, not trained: weights on
+            # (heliolongitude, SXR fluence, 1-MHz radio fluence), biases,
+            # and per-model alert thresholds.
+            n, din = layer["n"], layer["din"]
+            base = jnp.asarray([[1.0, 2.0, 1.6]], jnp.float32)
+            tilt = 0.1 * jnp.sin(jnp.arange(n * din, dtype=jnp.float32)
+                                 ).reshape(n, din)
+            w = base + tilt
+            # biases tuned so quiet flares (fluences < ~0.8) stay below
+            # threshold while M2+ well-connected events trip every model —
+            # the paper's POD-83% / low-false-alarm operating point
+            b = jnp.linspace(-4.6, -4.0, n, dtype=jnp.float32)
+            thr = jnp.linspace(0.45, 0.60, n, dtype=jnp.float32)
+            params.append({"w": w, "b": b, "thr": thr})
+            continue
+        else:
+            params.append(None)
+            continue
+        scale = math.sqrt(2.0 / fan_in)
+        w = jax.random.normal(kw, shp, jnp.float32) * scale
+        b = jax.random.normal(kb, shp[-1:], jnp.float32) * 0.01
+        params.append({"w": w, "b": b})
+    return params
+
+
+def param_count(spec):
+    """Total trainable parameters (must reproduce Table I exactly)."""
+    total = 0
+    for layer in spec["layers"]:
+        kind = layer["kind"]
+        if kind == "conv2d":
+            total += layer["cout"] * (layer["k"] ** 2 * layer["cin"] + 1)
+        elif kind == "conv3d":
+            total += layer["cout"] * (layer["k"] ** 3 * layer["cin"] + 1)
+        elif kind == "dense":
+            total += layer["dout"] * (layer["din"] + 1)
+        elif kind == "dense_heads":
+            total += layer["heads"] * layer["dout"] * (layer["din"] + 1)
+        elif kind == "esperta_bank":
+            total += layer["n"] * (layer["din"] + 1)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# forward execution
+# ---------------------------------------------------------------------------
+
+def input_shapes(spec):
+    return dict(spec["inputs"])
+
+
+def forward(spec, params, inputs, quant=None):
+    """Run the spec.
+
+    Args:
+      spec: model spec.
+      params: from :func:`init_params`.
+      inputs: dict {input_name: array} matching ``spec['inputs']``.
+      quant: None for fp32, or {layer_idx: {"sx": .., "sw": ..}} to run the
+        conv/dense MACs through the int8 DPU-path kernel.
+    Returns:
+      output array (batch-major).
+    """
+    names = list(spec["inputs"])
+    x = inputs[names[0]]
+    for idx, layer in enumerate(spec["layers"]):
+        kind = layer["kind"]
+        q = None
+        if quant is not None and idx in quant:
+            q = (quant[idx]["sx"], quant[idx]["sw"])
+        if kind == "conv2d":
+            p = params[idx]
+            x = conv2d(x, p["w"], stride=layer.get("stride", (1, 1)),
+                       padding=layer.get("padding", "SAME"), quant=q)
+            x = bias_add(x, p["b"])
+            x = _act(x, layer.get("act", "none"))
+        elif kind == "conv3d":
+            p = params[idx]
+            x = conv3d(x, p["w"], stride=layer.get("stride", (1, 1, 1)),
+                       padding=layer.get("padding", "SAME"), quant=q)
+            x = bias_add(x, p["b"])
+            x = _act(x, layer.get("act", "none"))
+        elif kind == "maxpool2d":
+            x = maxpool2d(x, layer["window"])
+        elif kind == "maxpool3d":
+            x = maxpool3d(x, layer["window"])
+        elif kind == "avgpool3d":
+            x = avgpool3d(x, layer["window"])
+        elif kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif kind == "concat_scalar":
+            s = inputs[layer["scalar_input"]]
+            x = jnp.concatenate([x, s.reshape(x.shape[0], 1)], axis=1)
+        elif kind == "dense":
+            p = params[idx]
+            if q is None:
+                x = matmul(x, p["w"])
+            else:
+                x = matmul_int8(x, p["w"], *q)
+            x = bias_add(x, p["b"])
+            x = _act(x, layer.get("act", "none"))
+        elif kind == "dense_heads":
+            p = params[idx]
+            outs = []
+            for h in range(layer["heads"]):
+                if q is None:
+                    o = matmul(x, p["w"][h])
+                else:
+                    o = matmul_int8(x, p["w"][h], *q)
+                outs.append(bias_add(o, p["b"][h]))
+            x = jnp.concatenate(outs, axis=1)
+        elif kind == "esperta_bank":
+            p = params[idx]
+            # n parallel dense(din->1): one matmul against w^T does the bank
+            z = matmul(x, p["w"].T)
+            z = bias_add(z, p["b"])
+            probs = sigmoid(z)
+            alerts = (probs > p["thr"]).astype(jnp.float32)
+            x = jnp.concatenate([probs, alerts], axis=1)
+        else:
+            raise ValueError(f"unknown layer kind {kind!r}")
+    return x
+
+
+# ---------------------------------------------------------------------------
+# manifest (counts per DESIGN.md §8 convention)
+# ---------------------------------------------------------------------------
+
+def _layer_counts(layer, ish, osh):
+    """(macs, ops, params, weight_elems) for one layer."""
+    kind = layer["kind"]
+    out_elems = int(math.prod(osh[1:]))
+    if kind in ("conv2d", "conv3d"):
+        kd = layer["k"] ** (2 if kind == "conv2d" else 3)
+        macs = out_elems * kd * layer["cin"]
+        ops = 2 * macs + out_elems  # MACs*2 + bias
+        if layer.get("act", "none") != "none":
+            ops += out_elems
+        w = layer["cout"] * (kd * layer["cin"] + 1)
+        return macs, ops, w, w
+    if kind == "dense":
+        macs = layer["din"] * layer["dout"]
+        ops = 2 * macs + layer["dout"]
+        if layer.get("act", "none") != "none":
+            ops += layer["dout"]
+        w = layer["dout"] * (layer["din"] + 1)
+        return macs, ops, w, w
+    if kind == "dense_heads":
+        macs = layer["heads"] * layer["din"] * layer["dout"]
+        ops = 2 * macs + layer["heads"] * layer["dout"]
+        w = layer["heads"] * layer["dout"] * (layer["din"] + 1)
+        return macs, ops, w, w
+    if kind == "esperta_bank":
+        n, din = layer["n"], layer["din"]
+        macs = n * din
+        # 2*macs + bias + sigmoid + comparator per model
+        ops = 2 * macs + 3 * n
+        w = n * (din + 1)
+        return macs, ops, w, w
+    if kind in ("maxpool2d", "maxpool3d", "avgpool3d"):
+        win = int(math.prod(layer["window"]))
+        per = (win - 1) if kind.startswith("max") else win  # cmps | adds+div
+        return 0, out_elems * per, 0, 0
+    if kind == "flatten" or kind == "concat_scalar":
+        return 0, 0, 0, 0
+    raise ValueError(kind)
+
+
+def op_count(spec):
+    return sum(_layer_counts(l, i, o)[1] for l, i, o in propagate_shapes(spec))
+
+
+def mac_count(spec):
+    return sum(_layer_counts(l, i, o)[0] for l, i, o in propagate_shapes(spec))
+
+
+def manifest(spec, *, precision="fp32"):
+    """Build the manifest dict the rust side consumes (serialized to JSON).
+
+    ``precision`` affects weight bytes: fp32 = 4 B/param (HLS path),
+    int8 = 1 B/param (DPU path).
+    """
+    wbytes = 4 if precision == "fp32" else 1
+    layers = []
+    total = {"macs": 0, "ops": 0, "params": 0}
+    for layer, ish, osh in propagate_shapes(spec):
+        macs, ops, params, welems = _layer_counts(layer, ish, osh)
+        layers.append({
+            "kind": layer["kind"],
+            "in_shape": list(ish),
+            "out_shape": list(osh),
+            "macs": macs,
+            "ops": ops,
+            "params": params,
+            "weight_bytes": welems * wbytes,
+            "act_bytes": int(math.prod(osh)) * 4,
+            "act": layer.get("act", "none"),
+        })
+        total["macs"] += macs
+        total["ops"] += ops
+        total["params"] += params
+    return {
+        "name": spec["name"],
+        "precision": precision,
+        "inputs": {k: list(v) for k, v in spec["inputs"].items()},
+        "output_shape": list(propagate_shapes(spec)[-1][2]),
+        "layers": layers,
+        "total_macs": total["macs"],
+        "total_ops": total["ops"],
+        "total_params": total["params"],
+        "weight_bytes": sum(l["weight_bytes"] for l in layers),
+    }

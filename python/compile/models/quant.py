@@ -1,0 +1,70 @@
+"""Post-training quantization (PTQ) emulation of the Vitis AI quantizer.
+
+Vitis AI PTQ calibrates per-tensor power-of-two scales from a handful of
+representative inputs, then runs every conv/dense on the DPU's INT8 MAC
+array.  :func:`calibrate_ptq` reproduces that: run the fp32 model over a
+calibration batch, record the amax of every quantizable layer's *input*
+activation and of its weights, and derive scales with
+:func:`..kernels.quant_scale`.
+
+The resulting dict plugs straight into :func:`..models.graph.forward` as
+its ``quant`` argument, switching those layers onto the int8 kernel.
+"""
+
+import jax.numpy as jnp
+
+from ..kernels import quant_scale
+from . import graph
+
+QUANTIZABLE = ("conv2d", "conv3d", "dense", "dense_heads")
+
+
+def calibrate_ptq(spec, params, calib_inputs):
+    """Derive per-layer (sx, sw) scales from calibration data.
+
+    Args:
+      spec: model spec.
+      params: fp32 parameters.
+      calib_inputs: list of input dicts (same keys as ``spec['inputs']``).
+    Returns:
+      {layer_idx: {"sx": float, "sw": float}} for every quantizable layer.
+    """
+    if not calib_inputs:
+        raise ValueError("PTQ calibration needs at least one input")
+    # record per-layer input amax by replaying the graph manually
+    amax = {}
+    for inputs in calib_inputs:
+        acts = _trace_activations(spec, params, inputs)
+        for idx, a in acts.items():
+            cur = float(jnp.max(jnp.abs(a)))
+            amax[idx] = max(amax.get(idx, 0.0), cur)
+    scales = {}
+    for idx, layer in enumerate(spec["layers"]):
+        if layer["kind"] not in QUANTIZABLE:
+            continue
+        w = params[idx]["w"]
+        scales[idx] = {
+            "sx": float(quant_scale(amax[idx])),
+            "sw": float(quant_scale(jnp.max(jnp.abs(w)))),
+        }
+    return scales
+
+
+def _trace_activations(spec, params, inputs):
+    """Input activation of every quantizable layer, via fp32 replay."""
+    names = list(spec["inputs"])
+    x = inputs[names[0]]
+    seen = {}
+    for idx, layer in enumerate(spec["layers"]):
+        if layer["kind"] in QUANTIZABLE:
+            seen[idx] = x
+        x = _step(spec, params, inputs, idx, layer, x)
+    return seen
+
+
+def _step(spec, params, inputs, idx, layer, x):
+    """One fp32 layer step, delegated to graph.forward on a 1-layer spec so
+    the replay can never drift from the real executor."""
+    main = next(iter(spec["inputs"]))
+    sub = {"name": spec["name"], "inputs": spec["inputs"], "layers": [layer]}
+    return graph.forward(sub, [params[idx]], {**inputs, main: x})

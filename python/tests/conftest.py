@@ -1,0 +1,13 @@
+import os
+import sys
+
+# `cd python && python -m pytest tests/` puts python/ on the path already,
+# but make the suite runnable from the repo root too.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from hypothesis import settings
+
+# interpret-mode pallas + jit tracing is slow per example; keep the sweeps
+# meaningful but bounded.
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

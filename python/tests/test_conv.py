@@ -1,0 +1,99 @@
+"""conv2d / conv3d (im2col + Pallas matmul) vs lax.conv oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import conv2d, conv3d, quant_scale
+from compile.kernels import ref
+
+small = st.integers(min_value=3, max_value=16)
+chans = st.integers(min_value=1, max_value=8)
+
+
+@given(h=small, w=small, cin=chans, cout=chans,
+       stride=st.sampled_from([(1, 1), (2, 2)]),
+       padding=st.sampled_from(["SAME", "VALID"]),
+       seed=st.integers(0, 2**31 - 1))
+def test_conv2d_matches_ref(h, w, cin, cout, stride, padding, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (1, h, w, cin), jnp.float32)
+    wt = jax.random.normal(kw, (3, 3, cin, cout), jnp.float32)
+    got = conv2d(x, wt, stride=stride, padding=padding)
+    want = ref.conv2d(x, wt, stride=stride, padding=padding)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(d=small, h=small, w=small, cin=st.integers(1, 4),
+       cout=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+def test_conv3d_matches_ref(d, h, w, cin, cout, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (1, d, h, w, cin), jnp.float32)
+    wt = jax.random.normal(kw, (3, 3, 3, cin, cout), jnp.float32)
+    got = conv3d(x, wt)
+    want = ref.conv3d(x, wt)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("batch", [1, 2, 3])
+def test_conv2d_batched(batch):
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (batch, 8, 8, 3), jnp.float32)
+    wt = jax.random.normal(kw, (3, 3, 3, 5), jnp.float32)
+    np.testing.assert_allclose(conv2d(x, wt), ref.conv2d(x, wt),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_kernel_sizes():
+    for k in [1, 3, 5]:
+        kx, kw = jax.random.split(jax.random.PRNGKey(k))
+        x = jax.random.normal(kx, (1, 12, 12, 2), jnp.float32)
+        wt = jax.random.normal(kw, (k, k, 2, 4), jnp.float32)
+        np.testing.assert_allclose(conv2d(x, wt), ref.conv2d(x, wt),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_paper_shapes_vae_first_layer():
+    """VAE conv1: 128x256x3 stride-2 (the real deployed shape)."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(kx, (1, 128, 256, 3), jnp.float32)
+    wt = jax.random.normal(kw, (3, 3, 3, 23), jnp.float32)
+    got = conv2d(x, wt, stride=(2, 2))
+    assert got.shape == (1, 64, 128, 23)
+    np.testing.assert_allclose(got, ref.conv2d(x, wt, stride=(2, 2)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv3d_paper_shape_mms_input():
+    """MMS input 32x16x32 (FPI ion energy distribution)."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(2))
+    x = jax.random.normal(kx, (1, 32, 16, 32, 1), jnp.float32)
+    wt = jax.random.normal(kw, (3, 3, 3, 1, 17), jnp.float32)
+    got = conv3d(x, wt)
+    assert got.shape == (1, 32, 16, 32, 17)
+    np.testing.assert_allclose(got, ref.conv3d(x, wt), rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_int8_quant_path():
+    """DPU-path conv: quantized conv close to fp32 conv, not equal."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(5))
+    x = jax.random.normal(kx, (1, 16, 16, 3), jnp.float32)
+    wt = jax.random.normal(kw, (3, 3, 3, 8), jnp.float32)
+    sx = quant_scale(jnp.max(jnp.abs(x)))
+    sw = quant_scale(jnp.max(jnp.abs(wt)))
+    q = np.asarray(conv2d(x, wt, quant=(sx, sw)))
+    f = np.asarray(ref.conv2d(x, wt))
+    assert not np.array_equal(q, f)
+    # every output within a few quantization steps of fp32
+    assert np.abs(q - f).max() < 27 * (float(sx) + float(sw)) * 4
+
+
+def test_conv_channel_mismatch_raises():
+    with pytest.raises(ValueError):
+        conv2d(jnp.zeros((1, 4, 4, 3)), jnp.zeros((3, 3, 2, 4)))
+    with pytest.raises(ValueError):
+        conv3d(jnp.zeros((1, 4, 4, 4, 2)), jnp.zeros((3, 3, 3, 1, 4)))

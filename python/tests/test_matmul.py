@@ -1,0 +1,109 @@
+"""Pallas matmul vs pure-jnp oracle: shape sweeps, policies, block math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import (matmul, choose_blocks, vmem_bytes,
+                             mxu_tile_utilization)
+from compile.kernels import ref
+
+dims = st.integers(min_value=1, max_value=96)
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_interp(m, k, n, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x, w = _rand(kx, (m, k)), _rand(kw, (k, n))
+    got = matmul(x, w)
+    want = ref.matmul(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_tpu_policy(m, k, n, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x, w = _rand(kx, (m, k)), _rand(kw, (k, n))
+    got = matmul(x, w, policy="tpu")
+    want = ref.matmul(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 1, 1), (1, 3, 1), (128, 128, 128), (200, 45, 7),
+    (517, 133, 67), (65, 1, 65),
+])
+def test_matmul_fixed_shapes(shape):
+    m, k, n = shape
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x, w = _rand(kx, (m, k)), _rand(kw, (k, n))
+    np.testing.assert_allclose(matmul(x, w), ref.matmul(x, w),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_explicit_blocks_partial_tiles():
+    """Blocks that do not divide the shape must still be exact."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(7))
+    x, w = _rand(kx, (70, 33)), _rand(kw, (33, 19))
+    got = matmul(x, w, blocks=(32, 16, 8))
+    np.testing.assert_allclose(got, ref.matmul(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_policies_agree_exactly():
+    """Same accumulation order => bitwise-equal across policies for
+    block-divisible shapes."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(3))
+    x, w = _rand(kx, (256, 128)), _rand(kw, (128, 64))
+    a = np.asarray(matmul(x, w, policy="interp"))
+    b = np.asarray(matmul(x, w, blocks=(256, 128, 64)))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_matmul_shape_mismatch_raises():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 3))
+    with pytest.raises(ValueError):
+        matmul(x, w)
+
+
+def test_dtype_promotion_f64_inputs():
+    """f64 inputs are demoted to the kernel's f32 (paper HLS designs are
+    IEEE-754 binary32)."""
+    x = jnp.ones((8, 8), jnp.float32) * (1.0 + 1e-9)
+    w = jnp.eye(8, dtype=jnp.float32)
+    out = matmul(x, w)
+    assert out.dtype == jnp.float32
+
+
+class TestBlockPolicy:
+    def test_tpu_blocks_within_vmem_budget(self):
+        from compile.kernels.matmul import VMEM_BUDGET
+        for m, k, n in [(1, 1, 1), (65536, 4096, 4096), (128, 30721, 89)]:
+            bm, bk, bn = choose_blocks(m, k, n, "tpu")
+            assert vmem_bytes(bm, bk, bn) <= VMEM_BUDGET
+
+    def test_tpu_blocks_mxu_aligned(self):
+        bm, bk, bn = choose_blocks(1000, 1000, 1000, "tpu")
+        assert bm % 128 == 0 and bk % 128 == 0 and bn % 128 == 0
+
+    def test_interp_blocks_cover_small_operands(self):
+        assert choose_blocks(10, 20, 30, "interp") == (10, 20, 30)
+
+    def test_unknown_policy_raises(self):
+        with pytest.raises(ValueError):
+            choose_blocks(1, 1, 1, "fpga")
+
+    def test_mxu_utilization_bounds(self):
+        assert mxu_tile_utilization(128, 128, 128) == 1.0
+        u = mxu_tile_utilization(1, 1, 1)
+        assert 0 < u < 1e-5
+
+    def test_vmem_bytes_formula(self):
+        # 2*(bm*bk + bk*bn) + bm*bn elements, 4 bytes each
+        assert vmem_bytes(2, 3, 5) == (2 * (6 + 15) + 10) * 4

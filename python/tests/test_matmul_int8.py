@@ -1,0 +1,86 @@
+"""INT8 (DPU-emulating) matmul: exactness vs oracle, quantization grid."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import matmul_int8, quantize, dequantize, quant_scale
+from compile.kernels import ref
+
+dims = st.integers(min_value=1, max_value=64)
+
+
+def _operands(seed, m, k, n, amp=3.0):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k), jnp.float32) * amp
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    sx = quant_scale(jnp.max(jnp.abs(x)))
+    sw = quant_scale(jnp.max(jnp.abs(w)))
+    return x, w, sx, sw
+
+
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_int8_matmul_bitexact_vs_ref(m, k, n, seed):
+    x, w, sx, sw = _operands(seed, m, k, n)
+    got = np.asarray(matmul_int8(x, w, sx, sw))
+    want = np.asarray(ref.matmul_int8(x, w, sx, sw))
+    # integer accumulation + identical dequant => bitwise equal
+    np.testing.assert_array_equal(got, want)
+
+
+def test_int8_accumulator_exact_beyond_f32_range():
+    """K large enough that an f32 accumulator would lose integer exactness;
+    the int32 path must not."""
+    k = 4096
+    x = jnp.full((1, k), 100.0)
+    w = jnp.full((k, 1), 100.0)
+    sx = sw = jnp.asarray(1.0)  # quantize -> 100 exactly
+    out = matmul_int8(x, w, sx, sw)
+    assert int(out[0, 0]) == 100 * 100 * k  # 40,960,000 > 2^24
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_quantize_saturates(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (32,)) * 1e4
+    q = quantize(x, jnp.asarray(1.0))
+    assert int(jnp.max(q)) <= 127 and int(jnp.min(q)) >= -128
+
+
+def test_quant_scale_power_of_two():
+    s = float(quant_scale(jnp.asarray(10.0)))
+    assert np.log2(s) == np.round(np.log2(s))
+
+
+def test_quant_scale_matches_ref():
+    for amax in [1e-9, 0.1, 1.0, 127.0, 3000.0]:
+        assert float(quant_scale(jnp.asarray(amax))) == pytest.approx(
+            float(ref.quant_scale(jnp.asarray(amax))))
+
+
+def test_dequantize_roundtrip_on_grid():
+    s = jnp.asarray(0.25)
+    q = jnp.arange(-128, 128, dtype=jnp.int32)
+    x = dequantize(q, s)
+    np.testing.assert_array_equal(quantize(x, s), q)
+
+
+def test_int8_error_vs_fp32_is_nonzero_but_bounded():
+    """The PTQ-degradation mechanism the paper reports: int8 output differs
+    from fp32, with error bounded by the quantization step."""
+    x, w, sx, sw = _operands(11, 64, 128, 32)
+    q8 = np.asarray(matmul_int8(x, w, sx, sw))
+    f32 = np.asarray(ref.matmul(x, w))
+    err = np.abs(q8 - f32)
+    assert err.max() > 0.0
+    # per-MAC error <= 0.5*sx*|w| + 0.5*sw*|x| + cross term; loose bound:
+    k = x.shape[1]
+    bound = k * (0.5 * float(sx) * (np.abs(np.asarray(w)).max() + 0.5 * float(sw))
+                 + 0.5 * float(sw) * np.abs(np.asarray(x)).max())
+    assert err.max() <= bound
+
+
+def test_int8_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        matmul_int8(jnp.zeros((2, 3)), jnp.zeros((4, 5)), 1.0, 1.0)

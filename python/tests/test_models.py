@@ -1,0 +1,244 @@
+"""Model-level tests: Table I parameter exactness, shapes, semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data
+from compile.models import (MODELS, model_spec, TABLE1_PARAMS, forward,
+                            init_params, manifest, param_count, op_count,
+                            calibrate_ptq)
+from compile.models.graph import propagate_shapes, mac_count
+
+
+# ---------------------------------------------------------------------------
+# Table I: parameter counts must match the paper EXACTLY
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,expected", sorted(TABLE1_PARAMS.items()))
+def test_param_count_matches_table1(name, expected):
+    assert param_count(model_spec(name)) == expected
+
+
+def test_reduced_is_95pct_smaller_than_baseline():
+    """Paper §II-C.4: Reduced/Logistic cut >95% of BaselineNet params."""
+    b = param_count(model_spec("baseline"))
+    assert param_count(model_spec("reduced")) < 0.05 * b
+    assert param_count(model_spec("logistic")) < 0.05 * b
+
+
+def test_vae_compression_ratio():
+    """Paper: 128x256 RGB -> 6 latent elements = 1:16,384."""
+    spec = model_spec("vae")
+    in_elems = np.prod(spec["inputs"]["image"][1:])
+    assert in_elems / 6 == 16384
+
+
+def test_op_counts_same_order_as_paper():
+    """Counting conventions differ (DESIGN §8); totals must stay within
+    2x of the paper's Netron-derived numbers."""
+    from compile.models.archspec import TABLE1_OPS_PAPER
+    for name, paper_ops in TABLE1_OPS_PAPER.items():
+        ours = op_count(model_spec(name))
+        ratio = ours / paper_ops
+        assert 0.5 < ratio < 2.0, (name, ours, paper_ops)
+
+
+# ---------------------------------------------------------------------------
+# shapes & forward execution
+# ---------------------------------------------------------------------------
+
+EXPECTED_OUT = {
+    "vae": (1, 12),          # [mu | logvar]
+    "cnet": (1, 1),
+    "esperta": (1, 12),      # [probs | alerts]
+    "esperta_single": (1, 2),
+    "logistic": (1, 4),
+    "reduced": (1, 4),
+    "baseline": (1, 4),
+    "cnet_small": (1, 1),
+    "cnet_noscalar": (1, 1),
+}
+
+
+@pytest.mark.parametrize("name", sorted(set(EXPECTED_OUT) - {"cnet"}))
+def test_forward_output_shape(name):
+    spec = model_spec(name)
+    params = init_params(spec)
+    inputs = data.model_inputs(name, jax.random.PRNGKey(0))
+    out = forward(spec, params, inputs)
+    assert out.shape == EXPECTED_OUT[name]
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_forward_cnet_full():
+    """CNet is the heavyweight — run it once, reuse for several checks."""
+    spec = model_spec("cnet")
+    params = init_params(spec)
+    inputs = data.model_inputs("cnet", jax.random.PRNGKey(0))
+    out = forward(spec, params, inputs)
+    assert out.shape == (1, 1)
+    assert bool(jnp.isfinite(out[0, 0]))
+    # scalar input must matter (it feeds the first dense layer)
+    inputs2 = dict(inputs, scalar=inputs["scalar"] + 3.0)
+    out2 = forward(spec, params, inputs2)
+    assert float(jnp.abs(out2 - out)[0, 0]) > 0
+
+
+def test_esperta_alert_semantics():
+    """alerts = (sigmoid(z) > thr): binary, consistent with probs."""
+    spec = model_spec("esperta")
+    params = init_params(spec)
+    inputs = data.model_inputs("esperta", jax.random.PRNGKey(3))
+    out = np.asarray(forward(spec, params, inputs))[0]
+    probs, alerts = out[:6], out[6:]
+    thr = np.asarray(params[0]["thr"])
+    assert set(np.unique(alerts)) <= {0.0, 1.0}
+    np.testing.assert_array_equal(alerts, (probs > thr).astype(np.float32))
+
+
+def test_esperta_strong_flare_alerts():
+    """A large, well-connected flare must trip every model; a quiet input
+    must trip none — sanity of the Laurenza-style coefficients."""
+    spec = model_spec("esperta")
+    params = init_params(spec)
+    strong = {"features": jnp.asarray([[1.0, 2.0, 2.0]], jnp.float32)}
+    quiet = {"features": jnp.asarray([[-1.0, 0.0, 0.0]], jnp.float32)}
+    a_strong = np.asarray(forward(spec, params, strong))[0, 6:]
+    a_quiet = np.asarray(forward(spec, params, quiet))[0, 6:]
+    assert a_strong.sum() == 6.0
+    assert a_quiet.sum() == 0.0
+
+
+def test_mms_sigmoid_removal_argmax_invariant():
+    """Paper §III-A.4: dropping the final sigmoid keeps the argmax."""
+    spec = model_spec("baseline")
+    params = init_params(spec)
+    for seed in range(4):
+        inputs = data.model_inputs("baseline", jax.random.PRNGKey(seed))
+        logits = np.asarray(forward(spec, params, inputs))
+        assert np.argmax(logits) == np.argmax(1 / (1 + np.exp(-logits)))
+
+
+def test_shape_propagation_consistent_with_execution():
+    for name in ("vae", "logistic", "reduced", "esperta"):
+        spec = model_spec(name)
+        params = init_params(spec)
+        inputs = data.model_inputs(name, jax.random.PRNGKey(1))
+        out = forward(spec, params, inputs)
+        assert tuple(propagate_shapes(spec)[-1][2]) == out.shape
+
+
+def test_params_deterministic_by_name():
+    spec = model_spec("reduced")
+    p1, p2 = init_params(spec), init_params(spec)
+    for a, b in zip(p1, p2):
+        if a is None:
+            continue
+        np.testing.assert_array_equal(a["w"], b["w"])
+
+
+def test_mac_le_ops():
+    for name in MODELS:
+        spec = model_spec(name)
+        assert mac_count(spec) * 2 <= op_count(spec)
+
+
+# ---------------------------------------------------------------------------
+# PTQ quantization path
+# ---------------------------------------------------------------------------
+
+def test_ptq_calibration_and_degradation_vae():
+    """int8 output close to fp32 but measurably different (paper §IV)."""
+    spec = model_spec("vae")
+    params = init_params(spec)
+    calib = [data.model_inputs("vae", jax.random.PRNGKey(100 + i))
+             for i in range(2)]
+    scales = calibrate_ptq(spec, params, calib)
+    # every conv/dense got scales
+    quantizable = [i for i, l in enumerate(spec["layers"])
+                   if l["kind"] in ("conv2d", "conv3d", "dense",
+                                    "dense_heads")]
+    assert sorted(scales) == quantizable
+    inputs = data.model_inputs("vae", jax.random.PRNGKey(7))
+    f32 = np.asarray(forward(spec, params, inputs))
+    q8 = np.asarray(forward(spec, params, inputs, quant=scales))
+    assert np.all(np.isfinite(q8))
+    assert not np.array_equal(q8, f32)           # PTQ error exists
+    denom = np.abs(f32).mean() + 1e-6
+    assert np.abs(q8 - f32).mean() / denom < 0.35  # ...but bounded
+
+
+def test_ptq_scales_are_power_of_two():
+    spec = model_spec("logistic")
+    params = init_params(spec)
+    calib = [data.model_inputs("logistic", jax.random.PRNGKey(5))]
+    scales = calibrate_ptq(spec, params, calib)
+    for s in scales.values():
+        assert np.log2(s["sx"]) == round(np.log2(s["sx"]))
+        assert np.log2(s["sw"]) == round(np.log2(s["sw"]))
+
+
+def test_ptq_requires_calibration_data():
+    spec = model_spec("logistic")
+    with pytest.raises(ValueError):
+        calibrate_ptq(spec, init_params(spec), [])
+
+
+# ---------------------------------------------------------------------------
+# manifests (the rust-facing interchange)
+# ---------------------------------------------------------------------------
+
+def test_manifest_totals_consistent():
+    for name in ("vae", "cnet", "esperta", "logistic", "reduced",
+                 "baseline"):
+        spec = model_spec(name)
+        man = manifest(spec)
+        assert man["total_params"] == param_count(spec)
+        assert man["total_ops"] == op_count(spec)
+        assert man["total_macs"] == mac_count(spec)
+        assert man["total_params"] == sum(l["params"] for l in man["layers"])
+
+
+def test_manifest_weight_bytes_by_precision():
+    spec = model_spec("vae")
+    f32 = manifest(spec, precision="fp32")
+    i8 = manifest(spec, precision="int8")
+    assert f32["weight_bytes"] == 4 * f32["total_params"]
+    assert i8["weight_bytes"] == i8["total_params"]
+
+
+def test_manifest_layer_shapes_chain():
+    man = manifest(model_spec("baseline"))
+    for prev, nxt in zip(man["layers"], man["layers"][1:]):
+        assert prev["out_shape"] == nxt["in_shape"]
+
+
+# ---------------------------------------------------------------------------
+# synthetic data generators
+# ---------------------------------------------------------------------------
+
+def test_ion_distribution_regions_distinct():
+    key = jax.random.PRNGKey(0)
+    means = {}
+    for region in data.REGIONS:
+        d, r = data.ion_distribution(key, region)
+        assert r == region and d.shape == (1, 32, 16, 32, 1)
+        assert float(jnp.min(d)) >= 0.0 and float(jnp.max(d)) <= 1.0
+        means[region] = float(d.mean())
+    assert len({round(v, 3) for v in means.values()}) == 4
+
+
+def test_magnetogram_bipolar():
+    img = data.magnetogram_tile(jax.random.PRNGKey(1))
+    assert img.shape == (128, 256, 3)
+    assert float(img.max()) > 0.3 and float(img.min()) < -0.1
+
+
+def test_model_inputs_match_spec_shapes():
+    for name in MODELS:
+        spec = model_spec(name)
+        inputs = data.model_inputs(name, jax.random.PRNGKey(2))
+        for iname, shape in spec["inputs"].items():
+            assert tuple(inputs[iname].shape) == tuple(shape), (name, iname)

@@ -1,0 +1,87 @@
+"""Pooling and elementwise Pallas kernels vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import (maxpool2d, maxpool3d, avgpool3d,
+                             relu, leaky_relu, sigmoid, bias_add)
+from compile.kernels import ref
+
+even = st.sampled_from([2, 4, 8, 16])
+chans = st.integers(1, 8)
+
+
+@given(h=even, w=even, c=chans, seed=st.integers(0, 2**31 - 1))
+def test_maxpool2d(h, w, c, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, h, w, c))
+    np.testing.assert_array_equal(maxpool2d(x), ref.maxpool2d(x))
+
+
+@given(d=even, h=even, w=even, c=st.integers(1, 4),
+       win=st.sampled_from([(2, 2, 2)]), seed=st.integers(0, 2**31 - 1))
+def test_maxpool3d(d, h, w, c, win, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, d, h, w, c))
+    np.testing.assert_array_equal(maxpool3d(x, win), ref.maxpool3d(x, win))
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_avgpool3d(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 8, 4, 8, 3))
+    np.testing.assert_allclose(avgpool3d(x), ref.avgpool3d(x),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_maxpool3d_window4_mms_shape():
+    """ReducedNet pools 4x4x4 on the 32x16x32 FPI grid."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 32, 16, 32, 17))
+    got = maxpool3d(x, (4, 4, 4))
+    assert got.shape == (1, 8, 4, 8, 17)
+    np.testing.assert_array_equal(got, ref.maxpool3d(x, (4, 4, 4)))
+
+
+def test_avgpool3d_logisticnet_front():
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 16, 32, 1))
+    got = avgpool3d(x, (2, 2, 2))
+    assert got.shape == (1, 16, 8, 16, 1)
+
+
+def test_pool_nondivisible_raises():
+    x = jnp.zeros((1, 5, 4, 1))
+    with pytest.raises(ValueError):
+        maxpool2d(x)
+    with pytest.raises(ValueError):
+        maxpool3d(jnp.zeros((1, 6, 6, 6, 1)), (4, 2, 2))
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       shape=st.sampled_from([(7,), (3, 5), (2, 3, 4), (1, 2, 3, 4)]))
+def test_relu_sigmoid_leaky(seed, shape):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape) * 5
+    np.testing.assert_array_equal(relu(x), ref.relu(x))
+    np.testing.assert_allclose(sigmoid(x), ref.sigmoid(x), rtol=1e-6)
+    np.testing.assert_allclose(leaky_relu(x, 0.1), ref.leaky_relu(x, 0.1),
+                               rtol=1e-6)
+
+
+def test_sigmoid_saturation():
+    x = jnp.asarray([-100.0, 0.0, 100.0])
+    s = np.asarray(sigmoid(x))
+    assert s[0] == pytest.approx(0.0, abs=1e-30)
+    assert s[1] == pytest.approx(0.5)
+    assert s[2] == pytest.approx(1.0)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_bias_add(seed):
+    kx, kb = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (4, 9))
+    b = jax.random.normal(kb, (9,))
+    np.testing.assert_array_equal(bias_add(x, b), ref.bias_add(x, b))
+
+
+def test_bias_add_mismatch_raises():
+    with pytest.raises(ValueError):
+        bias_add(jnp.zeros((2, 3)), jnp.zeros((4,)))

@@ -1,0 +1,79 @@
+//! Bench target: coordinator hot paths in isolation — router, batcher,
+//! bounded queue, downlink manager, decision logic, full timing-only
+//! pipeline.  §Perf L3 requires coordinator overhead << model execute
+//! time; this bench proves it.
+
+use spaceinfer::board::Calibration;
+use spaceinfer::coordinator::backpressure::OverflowPolicy;
+use spaceinfer::coordinator::decision::decide;
+use spaceinfer::coordinator::{
+    Batcher, BoundedQueue, DownlinkManager, Pipeline, PipelineConfig, Router,
+};
+use spaceinfer::model::catalog::Catalog;
+use spaceinfer::sensors::SensorStream;
+use spaceinfer::util::benchkit::{bench, throughput};
+use spaceinfer::util::prng::Prng;
+
+fn main() {
+    let router = Router::default();
+    let s = bench("router.route", 100, 1000, || {
+        router.route("mms", 3).unwrap();
+    });
+    println!("{}", s.report());
+
+    let mut stream = SensorStream::new("esperta", 1, 0.001);
+    let events: Vec<_> = stream.take(4096);
+    let s = bench("batcher offer+flush x4096 (esperta)", 2, 50, || {
+        let mut b = Batcher::new("esperta", 8, 0.5);
+        for (i, ev) in events.iter().cloned().enumerate() {
+            let _ = b.offer(ev, i as f64 * 0.001);
+        }
+        let _ = b.flush(10.0);
+    });
+    println!("{} -> {:.0} events/s", s.report(),
+             throughput(4096, s.median()));
+
+    let s = bench("bounded queue push/pop x4096", 2, 50, || {
+        let mut q = BoundedQueue::new(512, OverflowPolicy::DropOldest);
+        for i in 0..4096u32 {
+            q.push(i);
+            if i % 2 == 0 {
+                q.pop();
+            }
+        }
+    });
+    println!("{}", s.report());
+
+    let mut rng = Prng::new(5);
+    let outputs: Vec<Vec<f32>> = (0..1024)
+        .map(|_| (0..12).map(|_| rng.f32()).collect())
+        .collect();
+    let s = bench("decide+downlink x1024 (esperta)", 2, 50, || {
+        let mut dl = DownlinkManager::new(1 << 20);
+        let mut r = Prng::new(9);
+        for out in &outputs {
+            let d = decide("esperta", out, &mut r);
+            dl.offer(&d, 12);
+        }
+    });
+    println!("{} -> {:.0} decisions/s", s.report(),
+             throughput(1024, s.median()));
+
+    // full timing-only pipeline (sim clock, surrogate outputs)
+    if let Ok(catalog) = Catalog::load(std::path::Path::new("artifacts")) {
+        let calib = Calibration::default();
+        let cfg = PipelineConfig {
+            use_case: "mms",
+            n_events: 1000,
+            ..Default::default()
+        };
+        let pipeline = Pipeline::new(cfg, &catalog, &calib).unwrap();
+        let s = bench("pipeline 1000 events (sim-only, mms)", 1, 20, || {
+            pipeline.run(None).unwrap();
+        });
+        println!("{} -> {:.0} events/s simulated pipeline", s.report(),
+                 throughput(1000, s.median()));
+    } else {
+        eprintln!("(skipping pipeline bench: run `make artifacts` first)");
+    }
+}

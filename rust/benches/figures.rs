@@ -1,0 +1,33 @@
+//! Bench target: regenerate Figures 9–13 (power traces), write CSVs to
+//! reports/, and time the trace generator.
+
+use spaceinfer::board::Calibration;
+use spaceinfer::model::catalog::Catalog;
+use spaceinfer::report::figures;
+use spaceinfer::util::benchkit::bench;
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    let catalog = match Catalog::load(dir) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("bench figures: {e:#}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let calib = Calibration::default();
+    std::fs::create_dir_all("reports").unwrap();
+
+    for (name, csv, ascii) in figures::all_figures(&catalog, &calib).unwrap() {
+        std::fs::write(format!("reports/{name}.csv"), &csv).unwrap();
+        println!("== {name} == ({} samples -> reports/{name}.csv)",
+                 csv.lines().count() - 1);
+        println!("{ascii}");
+    }
+
+    println!("-- harness timings --");
+    let s = bench("all five figures", 1, 10, || {
+        figures::all_figures(&catalog, &calib).unwrap();
+    });
+    println!("{}", s.report());
+}

@@ -1,0 +1,47 @@
+//! Bench target: the PJRT execute hot path — per-model inference
+//! wall-clock through the compiled HLO (host numbers; the ZCU104 numbers
+//! come from the simulators).  This is the coordinator's real serving
+//! cost and the perf-pass (§Perf L3) primary probe.
+
+use spaceinfer::model::catalog::Catalog;
+use spaceinfer::model::Precision;
+use spaceinfer::runtime::{Engine, GoldenIo};
+use spaceinfer::util::benchkit::{bench, throughput};
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    let catalog = match Catalog::load(dir) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("bench runtime: {e:#}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let engine = Engine::new(dir).expect("PJRT CPU client");
+    println!("platform: {}\n", engine.platform());
+
+    // compile cost first (paid once at startup)
+    for tag in &catalog.executable {
+        let (name, prec) = tag.rsplit_once('.').unwrap();
+        let prec = Precision::parse(prec).unwrap();
+        let t0 = std::time::Instant::now();
+        engine.load(name, prec).expect("load");
+        println!("compile {tag:<22} {:>10.1?}", t0.elapsed());
+    }
+    println!();
+
+    // execute hot path (fewer samples for the heavyweights)
+    for tag in &catalog.executable {
+        let (name, prec) = tag.rsplit_once('.').unwrap();
+        let prec = Precision::parse(prec).unwrap();
+        let model = engine.load(name, prec).unwrap();
+        let io = GoldenIo::load(&catalog.io_path(tag)).expect("golden io");
+        let inputs = io.input_slices();
+        let n = if model.manifest.total_macs > 100_000_000 { 5 } else { 30 };
+        let s = bench(&format!("execute {tag}"), 2, n, || {
+            model.run(&inputs).expect("run");
+        });
+        let med = s.median();
+        println!("{}  -> {:.1} inf/s host", s.report(), throughput(1, med));
+    }
+}

@@ -1,0 +1,63 @@
+//! Bench target: the analytic simulators themselves (DPU schedule, HLS
+//! synthesis, BRAM allocation, CPU model, power traces).  These run per
+//! coordinator decision, so they must be microsecond-cheap.
+
+use spaceinfer::board::{Calibration, Zcu104};
+use spaceinfer::cpu::A53Model;
+use spaceinfer::dpu::{DpuArch, DpuSchedule};
+use spaceinfer::hls::{BramAllocator, HlsDesign};
+use spaceinfer::model::catalog::{Catalog, MODELS};
+use spaceinfer::model::Precision;
+use spaceinfer::power::{PowerModel, TraceBuilder, Implementation};
+use spaceinfer::util::benchkit::bench;
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    let catalog = match Catalog::load(dir) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("bench simulators: {e:#}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let calib = Calibration::default();
+    let board = Zcu104::default();
+
+    let cnet = catalog.manifest("cnet", Precision::Int8).unwrap();
+    let s = bench("DpuSchedule::new(cnet)", 10, 200, || {
+        DpuSchedule::new(
+            cnet,
+            DpuArch::b4096(&calib, board.dpu_clock_hz),
+            &calib,
+            board.axi_bandwidth,
+        )
+        .unwrap();
+    });
+    println!("{}", s.report());
+
+    let baseline = catalog.manifest("baseline", Precision::Fp32).unwrap();
+    let s = bench("HlsDesign::synthesize(baseline)", 10, 200, || {
+        HlsDesign::synthesize(baseline, &board, &calib);
+    });
+    println!("{}", s.report());
+
+    let s = bench("BramAllocator::allocate(baseline)", 10, 500, || {
+        BramAllocator::new(&board.pl).allocate(baseline);
+    });
+    println!("{}", s.report());
+
+    let s = bench("A53Model::calibrated x6", 10, 200, || {
+        for info in MODELS {
+            let man = catalog.manifest(info.name, Precision::Fp32).unwrap();
+            A53Model::calibrated(man, &calib, info.paper.cpu_fps);
+        }
+    });
+    println!("{}", s.report());
+
+    let s = bench("power trace (standard_run, 1000 inputs)", 2, 50, || {
+        let b = TraceBuilder::new(PowerModel::new(calib.clone()), 1);
+        b.standard_run(&Implementation::Dpu { mac_duty: 0.3 }, 2.75, 1000,
+                       0.04, 1e-4, 1.6e-3);
+    });
+    println!("{}", s.report());
+}

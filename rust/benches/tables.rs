@@ -1,0 +1,50 @@
+//! Bench target: regenerate Tables I–V end-to-end and time the harness.
+//!
+//! `cargo bench --bench tables` prints every paper table (ours | paper)
+//! and reports how long each regeneration takes (criterion is absent
+//! offline; util::benchkit provides the measurement kit).
+
+use spaceinfer::board::Calibration;
+use spaceinfer::model::catalog::Catalog;
+use spaceinfer::report::{related, tables};
+use spaceinfer::util::benchkit::bench;
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    let catalog = match Catalog::load(dir) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("bench tables: {e:#}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let calib = Calibration::default();
+
+    println!("{}", tables::table1(&catalog).unwrap().render());
+    println!("{}", tables::table2(&catalog, &calib).unwrap().render());
+    println!("{}", tables::table3(&catalog, &calib).unwrap().render());
+    println!("{}", tables::dpu_utilization_note(&catalog, &calib).unwrap());
+    println!("{}", tables::hls_spill_note(&catalog, &calib).unwrap());
+    println!("{}", related::table4(&catalog, &calib).unwrap().render());
+    println!("{}", related::table5(&catalog, &calib).unwrap().render());
+    print!("{}", tables::table3_shape_check(&catalog, &calib).unwrap());
+
+    println!("\n-- harness timings --");
+    for s in [
+        bench("table1", 2, 20, || {
+            tables::table1(&catalog).unwrap();
+        }),
+        bench("table2 (bram alloc + estimate)", 2, 20, || {
+            tables::table2(&catalog, &calib).unwrap();
+        }),
+        bench("table3 (all simulators)", 2, 20, || {
+            tables::table3(&catalog, &calib).unwrap();
+        }),
+        bench("table4+5", 2, 20, || {
+            related::table4(&catalog, &calib).unwrap();
+            related::table5(&catalog, &calib).unwrap();
+        }),
+    ] {
+        println!("{}", s.report());
+    }
+}

@@ -1,0 +1,226 @@
+//! Calibration constants — the knobs that map the paper's physical
+//! testbed onto the analytic simulators.
+//!
+//! Calibration discipline (DESIGN.md §4): the **CPU baseline rows** of
+//! Table III anchor the per-model A53 efficiency (the paper's PyTorch
+//! numbers cannot be derived ab initio), and the **VAE DPU power row**
+//! anchors the DPU static draw.  Everything else — all accelerator
+//! latencies, the CNet DPU power, every HLS row, every energy figure — is
+//! *predicted* by the mechanism models and compared against the paper in
+//! EXPERIMENTS.md.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::{num, obj, Json};
+
+/// All tunable constants, with physically-motivated defaults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    // ---- A53 CPU timing ----
+    /// Peak single-core NEON fp32 throughput (ops/s): 1.2 GHz x 8.
+    pub cpu_peak_ops: f64,
+    /// PyTorch per-layer dispatch overhead by kind (seconds).
+    pub dispatch_conv2d: f64,
+    pub dispatch_conv3d: f64,
+    pub dispatch_pool: f64,
+    pub dispatch_dense: f64,
+    pub dispatch_misc: f64,
+
+    // ---- DPU B4096 timing ----
+    /// Parallelism of the MAC array: pixel / input-channel / output-channel.
+    pub dpu_pp: u64,
+    pub dpu_icp: u64,
+    pub dpu_ocp: u64,
+    /// Fixed runner-invocation overhead per inference (s) — the PYNQ/VART
+    /// submit-wait path the paper measured through.
+    pub dpu_invoke_s: f64,
+    /// Per-layer instruction fetch/dispatch (s).
+    pub dpu_layer_s: f64,
+    /// Misc-engine elements per cycle (pooling / elementwise).
+    pub dpu_misc_elems_per_cycle: f64,
+    /// Feature-map DDR streaming bandwidth (bytes per MAC-array cycle):
+    /// ~4 GB/s at 300 MHz.  Intermediate activations do not fit the DPU's
+    /// on-chip store for the big CNNs and stream through DDR.
+    pub dpu_ddr_bytes_per_cycle: f64,
+
+    // ---- HLS naive-dataflow timing ----
+    /// AXI-Lite setup + start + done-poll cycles per inference.
+    pub hls_axi_setup_cycles: f64,
+    /// Initiation interval of the un-pipelined fp32 datapath (cycles/op).
+    pub hls_ii: f64,
+    /// Pipeline fill cycles per layer.
+    pub hls_layer_fill_cycles: f64,
+
+    // ---- power (W) ----
+    /// Board peripheral floor (fans, PHYs, VRM losses).
+    pub p_periph: f64,
+    /// Extra board draw while the PS hammers DDR (CPU inference).
+    pub p_ddr_cpu: f64,
+    /// PS idle draw.
+    pub p_ps_idle: f64,
+    /// PS draw while polling an accelerator.
+    pub p_ps_poll: f64,
+    /// DPU design static+poll base (calibrated on the VAE row).
+    pub p_dpu_base: f64,
+    /// DPU dynamic swing at 100% MAC duty.
+    pub p_dpu_dyn: f64,
+    /// HLS design power: base + per-kLUT + per-BRAM terms.
+    pub p_hls_base: f64,
+    pub p_hls_per_kilolut: f64,
+    pub p_hls_per_bram: f64,
+    /// MPSoC power spike during bitstream configuration.
+    pub p_config_spike: f64,
+    /// Bitstream configuration time (s).
+    pub t_config: f64,
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        Calibration {
+            cpu_peak_ops: 9.6e9,
+            dispatch_conv2d: 400e-6,
+            dispatch_conv3d: 700e-6,
+            dispatch_pool: 150e-6,
+            dispatch_dense: 80e-6,
+            dispatch_misc: 30e-6,
+
+            dpu_pp: 8,
+            dpu_icp: 16,
+            dpu_ocp: 16,
+            dpu_invoke_s: 1.0e-3,
+            dpu_layer_s: 20e-6,
+            dpu_misc_elems_per_cycle: 64.0,
+            dpu_ddr_bytes_per_cycle: 13.0,
+
+            hls_axi_setup_cycles: 2600.0,
+            hls_ii: 5.0,
+            hls_layer_fill_cycles: 64.0,
+
+            p_periph: 8.95,
+            p_ddr_cpu: 0.5,
+            p_ps_idle: 1.30,
+            p_ps_poll: 1.35,
+            p_dpu_base: 5.31,
+            p_dpu_dyn: 1.7,
+            p_hls_base: 1.35,
+            p_hls_per_kilolut: 0.019,
+            p_hls_per_bram: 0.0028,
+            p_config_spike: 2.5,
+            t_config: 0.8,
+        }
+    }
+}
+
+macro_rules! calib_fields {
+    ($($field:ident),* $(,)?) => {
+        const FIELDS: &[&str] = &[$(stringify!($field)),*];
+
+        impl Calibration {
+            fn get_field(&self, name: &str) -> Option<f64> {
+                match name {
+                    $(stringify!($field) => Some(self.$field as f64),)*
+                    _ => None,
+                }
+            }
+
+            fn set_field(&mut self, name: &str, v: f64) -> bool {
+                match name {
+                    $(stringify!($field) => { self.$field = v as _; true },)*
+                    _ => false,
+                }
+            }
+        }
+    };
+}
+
+calib_fields!(
+    cpu_peak_ops, dispatch_conv2d, dispatch_conv3d, dispatch_pool,
+    dispatch_dense, dispatch_misc, dpu_invoke_s, dpu_layer_s,
+    dpu_misc_elems_per_cycle, dpu_ddr_bytes_per_cycle, hls_axi_setup_cycles,
+    hls_ii,
+    hls_layer_fill_cycles, p_periph, p_ddr_cpu, p_ps_idle, p_ps_poll,
+    p_dpu_base, p_dpu_dyn, p_hls_base, p_hls_per_kilolut, p_hls_per_bram,
+    p_config_spike, t_config,
+);
+
+impl Calibration {
+    /// Serialize the float fields to JSON (integer parallelism constants
+    /// are architectural, not calibration, and stay fixed).
+    pub fn to_json(&self) -> Json {
+        obj(FIELDS
+            .iter()
+            .map(|f| (*f, num(self.get_field(f).unwrap())))
+            .collect())
+    }
+
+    /// Load from JSON, starting from defaults (missing keys keep default).
+    pub fn from_json(j: &Json) -> Result<Calibration> {
+        let mut c = Calibration::default();
+        for (k, v) in j.as_obj()? {
+            if !c.set_field(k, v.as_f64()?) {
+                anyhow::bail!("unknown calibration key {k:?}");
+            }
+        }
+        Ok(c)
+    }
+
+    pub fn load(path: &Path) -> Result<Calibration> {
+        let text = std::fs::read_to_string(path)?;
+        Calibration::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Per-layer dispatch overhead for the A53 model.
+    pub fn dispatch_for(&self, kind: crate::model::LayerKind) -> f64 {
+        use crate::model::LayerKind::*;
+        match kind {
+            Conv2d => self.dispatch_conv2d,
+            Conv3d => self.dispatch_conv3d,
+            MaxPool2d | MaxPool3d | AvgPool3d => self.dispatch_pool,
+            Dense | DenseHeads => self.dispatch_dense,
+            // bank = linear + sigmoid + compare + concat: 4 small kernels
+            EspertaBank => 4.0 * self.dispatch_misc,
+            Flatten | ConcatScalar => self.dispatch_misc,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_roundtrip_json() {
+        let c = Calibration::default();
+        let j = c.to_json();
+        let c2 = Calibration::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let j = Json::parse(r#"{"hls_ii": 7.5}"#).unwrap();
+        let c = Calibration::from_json(&j).unwrap();
+        assert_eq!(c.hls_ii, 7.5);
+        assert_eq!(c.p_periph, Calibration::default().p_periph);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let j = Json::parse(r#"{"not_a_knob": 1}"#).unwrap();
+        assert!(Calibration::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn dpu_array_is_b4096() {
+        let c = Calibration::default();
+        // B4096 = 4096 INT8 ops/cycle = 2048 MACs = PP x ICP x OCP
+        assert_eq!(c.dpu_pp * c.dpu_icp * c.dpu_ocp, 2048);
+    }
+}

@@ -1,0 +1,8 @@
+//! The simulated testbed: ZCU104 board description and the calibration
+//! constants that translate the paper's physical testbed onto it.
+
+pub mod calib;
+pub mod zcu104;
+
+pub use calib::Calibration;
+pub use zcu104::Zcu104;

@@ -1,0 +1,85 @@
+//! AMD ZCU104 / ZU7EV MPSoC device model (paper §II-A, Table II).
+
+/// Programmable-logic resource pool of the ZU7EV (Table II, "Available
+/// Resources" row).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlResources {
+    pub luts: u64,
+    pub ffs: u64,
+    pub dsps: u64,
+    /// BRAM36 blocks (half units allowed — the paper counts an 18 Kb block
+    /// as 0.5, e.g. ESPERTA's 1.5).
+    pub brams: f64,
+    pub urams: u64,
+}
+
+/// Bytes in one BRAM36 block (36 Kbit).
+pub const BRAM36_BYTES: u64 = 4608;
+/// Bytes in one UltraRAM block (288 Kbit).
+pub const URAM_BYTES: u64 = 36_864;
+
+/// The ZCU104 board: PS (2x A53 cluster as used by PYNQ) + PL + DDR.
+#[derive(Debug, Clone, Copy)]
+pub struct Zcu104 {
+    pub pl: PlResources,
+    /// A53 clock (Hz).
+    pub ps_clock_hz: f64,
+    /// Default PL clock for naive HLS designs (Hz) — paper: 100 MHz.
+    pub hls_clock_hz: f64,
+    /// DPU clock (Hz) — paper Table II: 300 MHz MAC array (600 MHz DSP).
+    pub dpu_clock_hz: f64,
+    /// PS<->PL / DDR streaming bandwidth for input staging (bytes/s).
+    pub axi_bandwidth: f64,
+    /// Random-access DDR penalty for spilled weight words (PL clock
+    /// cycles per 32-bit word, un-pipelined AXI master — the naive HLS
+    /// access pattern).
+    pub ddr_word_cycles: f64,
+}
+
+impl Default for Zcu104 {
+    fn default() -> Self {
+        Zcu104 {
+            pl: PlResources {
+                luts: 230_000,
+                ffs: 461_000,
+                dsps: 1_728,
+                brams: 312.0,
+                urams: 96,
+            },
+            ps_clock_hz: 1.2e9,
+            hls_clock_hz: 100.0e6,
+            dpu_clock_hz: 300.0e6,
+            axi_bandwidth: 2.0e9,
+            ddr_word_cycles: 12.0,
+        }
+    }
+}
+
+impl Zcu104 {
+    /// Total on-chip PL memory in bytes (38 Mb: BRAM + URAM).
+    pub fn onchip_bytes(&self) -> u64 {
+        (self.pl.brams as u64) * BRAM36_BYTES + self.pl.urams * URAM_BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn onchip_is_about_38mbit() {
+        let z = Zcu104::default();
+        let bits = z.onchip_bytes() * 8;
+        // paper §II-A: 38 Mb of on-chip SRAM (4.75 MB)
+        assert!((bits as f64 - 38.0e6).abs() / 38.0e6 < 0.06, "{bits}");
+    }
+
+    #[test]
+    fn table2_available_row() {
+        let z = Zcu104::default();
+        assert_eq!(z.pl.luts, 230_000);
+        assert_eq!(z.pl.dsps, 1_728);
+        assert_eq!(z.pl.brams, 312.0);
+        assert_eq!(z.pl.urams, 96);
+    }
+}

@@ -1,0 +1,134 @@
+//! Bounded queues with explicit overflow policy.
+//!
+//! When the accelerator cannot keep up with a sensor (the exact situation
+//! the paper's BaselineNet-on-HLS row ends in), the coordinator must shed
+//! load deterministically rather than buffer without bound — the
+//! spacecraft has neither the RAM nor the downlink for a backlog.
+
+use std::collections::VecDeque;
+
+/// What to do when a bounded queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverflowPolicy {
+    /// Drop the incoming item (sensor decimation).
+    DropNewest,
+    /// Drop the oldest queued item (freshness priority).
+    DropOldest,
+}
+
+/// A bounded FIFO with drop accounting.
+#[derive(Debug)]
+pub struct BoundedQueue<T> {
+    items: VecDeque<T>,
+    pub capacity: usize,
+    pub policy: OverflowPolicy,
+    pub dropped: u64,
+    pub accepted: u64,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize, policy: OverflowPolicy) -> BoundedQueue<T> {
+        assert!(capacity > 0, "queue capacity must be > 0");
+        BoundedQueue {
+            items: VecDeque::with_capacity(capacity),
+            capacity,
+            policy,
+            dropped: 0,
+            accepted: 0,
+        }
+    }
+
+    /// Push with the configured overflow policy. Returns false iff the
+    /// *incoming* item was shed.
+    pub fn push(&mut self, item: T) -> bool {
+        if self.items.len() < self.capacity {
+            self.items.push_back(item);
+            self.accepted += 1;
+            return true;
+        }
+        self.dropped += 1;
+        match self.policy {
+            OverflowPolicy::DropNewest => false,
+            OverflowPolicy::DropOldest => {
+                self.items.pop_front();
+                self.items.push_back(item);
+                self.accepted += 1;
+                true
+            }
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        self.items.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Fraction of offered items shed.
+    pub fn drop_rate(&self) -> f64 {
+        let offered = self.accepted + self.dropped;
+        if offered == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / offered as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut q = BoundedQueue::new(3, OverflowPolicy::DropNewest);
+        q.push(1);
+        q.push(2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn drop_newest_sheds_incoming() {
+        let mut q = BoundedQueue::new(2, OverflowPolicy::DropNewest);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert!(!q.push(3));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.dropped, 1);
+    }
+
+    #[test]
+    fn drop_oldest_keeps_freshest() {
+        let mut q = BoundedQueue::new(2, OverflowPolicy::DropOldest);
+        q.push(1);
+        q.push(2);
+        assert!(q.push(3));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.dropped, 1);
+    }
+
+    #[test]
+    fn drop_rate_accounting() {
+        let mut q = BoundedQueue::new(1, OverflowPolicy::DropNewest);
+        q.push(1);
+        q.push(2);
+        q.push(3);
+        assert!((q.drop_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn zero_capacity_rejected() {
+        BoundedQueue::<u8>::new(0, OverflowPolicy::DropNewest);
+    }
+}

@@ -1,0 +1,143 @@
+//! Dynamic batching under a latency budget.
+//!
+//! The DPU (and each HLS IP) executes inferences sequentially, but every
+//! submission pays a fixed invoke overhead (the dominant term for small
+//! nets — see the DPU timing model).  The batcher accumulates same-model
+//! requests and flushes when either the batch is full or the oldest
+//! request's latency budget is about to expire, amortizing the overhead
+//! across the batch exactly like queued DPU jobs on the real runner.
+
+use crate::sensors::SensorEvent;
+
+/// A flushed batch of same-route requests.
+#[derive(Debug)]
+pub struct Batch {
+    pub model: String,
+    pub events: Vec<SensorEvent>,
+    /// Virtual time when the batch was flushed.
+    pub flushed_at_s: f64,
+}
+
+/// Per-route batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    pub model: String,
+    pub max_batch: usize,
+    /// Max time the oldest request may wait before a forced flush (s).
+    pub max_wait_s: f64,
+    pending: Vec<SensorEvent>,
+    oldest_arrival_s: f64,
+}
+
+impl Batcher {
+    pub fn new(model: &str, max_batch: usize, max_wait_s: f64) -> Batcher {
+        assert!(max_batch >= 1, "batch size must be >= 1");
+        Batcher {
+            model: model.to_string(),
+            max_batch,
+            max_wait_s,
+            pending: Vec::new(),
+            oldest_arrival_s: 0.0,
+        }
+    }
+
+    /// Offer an event at virtual time `now_s`; returns a batch if the
+    /// offer filled it.
+    pub fn offer(&mut self, ev: SensorEvent, now_s: f64) -> Option<Batch> {
+        if self.pending.is_empty() {
+            self.oldest_arrival_s = now_s;
+        }
+        self.pending.push(ev);
+        if self.pending.len() >= self.max_batch {
+            return self.flush(now_s);
+        }
+        None
+    }
+
+    /// Called on clock ticks: flush if the oldest request's budget is up.
+    pub fn poll(&mut self, now_s: f64) -> Option<Batch> {
+        if !self.pending.is_empty() && now_s - self.oldest_arrival_s >= self.max_wait_s {
+            return self.flush(now_s);
+        }
+        None
+    }
+
+    /// Unconditional flush (shutdown / drain).
+    pub fn flush(&mut self, now_s: f64) -> Option<Batch> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        Some(Batch {
+            model: self.model.clone(),
+            events: std::mem::take(&mut self.pending),
+            flushed_at_s: now_s,
+        })
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Age of the oldest pending request.
+    pub fn oldest_wait_s(&self, now_s: f64) -> f64 {
+        if self.pending.is_empty() {
+            0.0
+        } else {
+            now_s - self.oldest_arrival_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sensors::SensorStream;
+
+    fn ev(stream: &mut SensorStream) -> SensorEvent {
+        stream.next_event()
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let mut s = SensorStream::new("esperta", 1, 0.1);
+        let mut b = Batcher::new("esperta", 3, 10.0);
+        assert!(b.offer(ev(&mut s), 0.0).is_none());
+        assert!(b.offer(ev(&mut s), 0.1).is_none());
+        let batch = b.offer(ev(&mut s), 0.2).expect("full batch");
+        assert_eq!(batch.events.len(), 3);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut s = SensorStream::new("esperta", 2, 0.1);
+        let mut b = Batcher::new("esperta", 100, 0.5);
+        b.offer(ev(&mut s), 0.0);
+        assert!(b.poll(0.4).is_none());
+        let batch = b.poll(0.51).expect("deadline flush");
+        assert_eq!(batch.events.len(), 1);
+    }
+
+    #[test]
+    fn empty_poll_is_none() {
+        let mut b = Batcher::new("vae", 4, 1.0);
+        assert!(b.poll(100.0).is_none());
+        assert!(b.flush(100.0).is_none());
+        assert_eq!(b.oldest_wait_s(5.0), 0.0);
+    }
+
+    #[test]
+    fn oldest_wait_tracks_first_arrival() {
+        let mut s = SensorStream::new("mms", 3, 0.1);
+        let mut b = Batcher::new("baseline", 10, 99.0);
+        b.offer(ev(&mut s), 2.0);
+        b.offer(ev(&mut s), 3.0);
+        assert!((b.oldest_wait_s(4.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch size")]
+    fn zero_batch_rejected() {
+        Batcher::new("vae", 0, 1.0);
+    }
+}

@@ -1,0 +1,210 @@
+//! Per-use-case decision logic: turn raw model outputs into the
+//! downlink-relevant verdicts the paper's §III motivates.
+//!
+//! * **MMS** — argmax over the 4 region logits; IF (ion foreshock) and
+//!   MSH (magnetosheath) mark a region of interest for high-rate capture;
+//!   all labels drive selective downlink.
+//! * **ESPERTA** — outputs are `[probs(6) | alerts(6)]`; any alert bit
+//!   set raises the SEP warning.
+//! * **VAE** — the HLO emits `[mu(6) | logvar(6)]`; the sampling +
+//!   exponent the paper moved off-FPGA happen *here* (rust post-
+//!   processing on the "CPU"), producing the 6-float latent to downlink.
+//! * **CNet** — the scalar forecast, with an M-class threshold alert.
+
+use crate::sensors::generators::Region;
+use crate::util::prng::Prng;
+
+/// A decision produced from one inference.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Decision {
+    /// MMS: classified region + ROI flag.
+    MmsRegion { region: Region, roi: bool, logits: [f32; 4] },
+    /// ESPERTA: SEP warning with per-model alert mask.
+    SepAlert { warning: bool, mask: [bool; 6], max_prob: f32 },
+    /// VAE: sampled 6-float latent (the 1:16384 compression product).
+    Latent { z: [f32; 6] },
+    /// CNet: predicted log X-ray flux + alert above threshold.
+    FluxForecast { log_flux: f32, alert: bool },
+}
+
+/// log10 flux above which CNet raises an alert (M-class: 1e-5 W/m^2).
+pub const FLUX_ALERT_THRESHOLD: f32 = -5.0;
+
+/// Decide from a model's raw output vector.
+pub fn decide(use_case: &str, output: &[f32], rng: &mut Prng) -> Decision {
+    match use_case {
+        "mms" => {
+            assert_eq!(output.len(), 4, "MMS nets emit 4 logits");
+            let mut logits = [0f32; 4];
+            logits.copy_from_slice(output);
+            let arg = argmax(output);
+            let region = Region::ALL[arg];
+            Decision::MmsRegion {
+                region,
+                roi: matches!(region, Region::If | Region::Msh),
+                logits,
+            }
+        }
+        "esperta" => {
+            assert_eq!(output.len(), 12, "multi-ESPERTA emits probs|alerts");
+            let mut mask = [false; 6];
+            let mut max_prob = 0f32;
+            for i in 0..6 {
+                mask[i] = output[6 + i] > 0.5;
+                max_prob = max_prob.max(output[i]);
+            }
+            Decision::SepAlert { warning: mask.iter().any(|&b| b), mask, max_prob }
+        }
+        "vae" => {
+            assert_eq!(output.len(), 12, "VAE encoder emits mu|logvar");
+            // reparameterization on the PS: z = mu + exp(0.5*logvar)*eps
+            let mut z = [0f32; 6];
+            for i in 0..6 {
+                let sigma = (0.5 * output[6 + i]).exp();
+                z[i] = output[i] + sigma * rng.normal() as f32;
+            }
+            Decision::Latent { z }
+        }
+        "cnet" => {
+            assert_eq!(output.len(), 1, "CNet emits one flux value");
+            Decision::FluxForecast {
+                log_flux: output[0],
+                alert: output[0] > FLUX_ALERT_THRESHOLD,
+            }
+        }
+        other => panic!("no decision logic for use case {other:?}"),
+    }
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, x) in v.iter().enumerate() {
+        if *x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+impl Decision {
+    /// Bytes this decision puts on the downlink if kept.
+    pub fn downlink_bytes(&self) -> u64 {
+        match self {
+            // label + logits
+            Decision::MmsRegion { .. } => 1 + 16,
+            // mask byte + max prob
+            Decision::SepAlert { .. } => 1 + 4,
+            // 6 f32 latents
+            Decision::Latent { .. } => 24,
+            // flux f32 + alert bit
+            Decision::FluxForecast { .. } => 5,
+        }
+    }
+
+    /// Downlink priority (higher = more urgent).
+    pub fn priority(&self) -> u8 {
+        match self {
+            Decision::SepAlert { warning: true, .. } => 255,
+            Decision::FluxForecast { alert: true, .. } => 200,
+            Decision::MmsRegion { roi: true, .. } => 150,
+            Decision::Latent { .. } => 100,
+            Decision::MmsRegion { .. } => 50,
+            Decision::SepAlert { .. } => 40,
+            Decision::FluxForecast { .. } => 40,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mms_argmax_and_roi() {
+        let mut rng = Prng::new(1);
+        let d = decide("mms", &[0.1, 3.0, -1.0, 0.2], &mut rng);
+        match d {
+            Decision::MmsRegion { region, roi, .. } => {
+                assert_eq!(region, Region::If);
+                assert!(roi);
+            }
+            _ => panic!("wrong decision kind"),
+        }
+        let d = decide("mms", &[9.0, 3.0, -1.0, 0.2], &mut rng);
+        match d {
+            Decision::MmsRegion { region, roi, .. } => {
+                assert_eq!(region, Region::Sw);
+                assert!(!roi);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn esperta_warning_on_any_alert() {
+        let mut rng = Prng::new(2);
+        let mut out = vec![0.2; 12];
+        out[6 + 3] = 1.0;
+        match decide("esperta", &out, &mut rng) {
+            Decision::SepAlert { warning, mask, .. } => {
+                assert!(warning);
+                assert!(mask[3]);
+                assert_eq!(mask.iter().filter(|&&b| b).count(), 1);
+            }
+            _ => panic!(),
+        }
+        let quiet = vec![0.2; 12];
+        match decide("esperta", &quiet, &mut rng) {
+            Decision::SepAlert { warning, .. } => assert!(!warning),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn vae_sampling_uses_logvar() {
+        let mut rng = Prng::new(3);
+        // logvar -> -inf means sigma -> 0: z == mu exactly
+        let mut out = vec![0.0; 12];
+        for i in 0..6 {
+            out[i] = i as f32;
+            out[6 + i] = -80.0;
+        }
+        match decide("vae", &out, &mut rng) {
+            Decision::Latent { z } => {
+                for i in 0..6 {
+                    assert!((z[i] - i as f32).abs() < 1e-6);
+                }
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn cnet_alert_threshold() {
+        let mut rng = Prng::new(4);
+        match decide("cnet", &[-4.2], &mut rng) {
+            Decision::FluxForecast { alert, .. } => assert!(alert),
+            _ => panic!(),
+        }
+        match decide("cnet", &[-6.5], &mut rng) {
+            Decision::FluxForecast { alert, .. } => assert!(!alert),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn priorities_rank_alerts_first() {
+        let sep = Decision::SepAlert { warning: true, mask: [true; 6], max_prob: 0.9 };
+        let lat = Decision::Latent { z: [0.0; 6] };
+        let sw = Decision::MmsRegion { region: Region::Sw, roi: false, logits: [0.0; 4] };
+        assert!(sep.priority() > lat.priority());
+        assert!(lat.priority() > sw.priority());
+    }
+
+    #[test]
+    fn downlink_bytes_are_tiny_vs_raw() {
+        // MMS raw input: 32*16*32 f32 = 65536 B; decision: 17 B
+        let d = Decision::MmsRegion { region: Region::Sw, roi: false, logits: [0.0; 4] };
+        assert!(d.downlink_bytes() * 1000 < 32 * 16 * 32 * 4);
+    }
+}

@@ -1,0 +1,150 @@
+//! Downlink budget management — the resource the whole paper exists to
+//! conserve ("easing downlink pressure in future missions", abstract).
+//!
+//! A daily byte budget is spent by kept decisions; low-priority items are
+//! shed first when the budget tightens.  The manager also tracks the
+//! *avoided* bytes (raw sensor data that did NOT need downlinking because
+//! inference ran onboard) — the headline compression statistic.
+
+use crate::coordinator::decision::Decision;
+
+/// Verdict for one decision offered to the downlink.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DownlinkVerdict {
+    Sent,
+    /// Shed: priority below the current floor given remaining budget.
+    Shed,
+}
+
+/// The downlink budget manager.
+#[derive(Debug)]
+pub struct DownlinkManager {
+    /// Total byte budget for the observation window.
+    pub budget_bytes: u64,
+    pub sent_bytes: u64,
+    pub shed_count: u64,
+    pub sent_count: u64,
+    /// Raw sensor bytes represented by everything offered (what a
+    /// no-onboard-inference mission would have had to send).
+    pub raw_bytes_represented: u64,
+}
+
+impl DownlinkManager {
+    pub fn new(budget_bytes: u64) -> DownlinkManager {
+        DownlinkManager {
+            budget_bytes,
+            sent_bytes: 0,
+            shed_count: 0,
+            sent_count: 0,
+            raw_bytes_represented: 0,
+        }
+    }
+
+    /// Remaining budget fraction.
+    pub fn remaining_frac(&self) -> f64 {
+        if self.budget_bytes == 0 {
+            return 0.0;
+        }
+        1.0 - (self.sent_bytes as f64 / self.budget_bytes as f64).min(1.0)
+    }
+
+    /// Priority floor: as the budget drains, only higher-priority items
+    /// pass.  Full budget -> floor 0 (everything passes); empty ->
+    /// floor 200 (only alerts).
+    pub fn priority_floor(&self) -> u8 {
+        let spent = 1.0 - self.remaining_frac();
+        if spent < 0.5 {
+            0
+        } else if spent < 0.8 {
+            60
+        } else if spent < 0.95 {
+            120
+        } else {
+            200
+        }
+    }
+
+    /// Offer a decision; `raw_bytes` is the sensor data it distills.
+    pub fn offer(&mut self, decision: &Decision, raw_bytes: u64) -> DownlinkVerdict {
+        self.raw_bytes_represented += raw_bytes;
+        let bytes = decision.downlink_bytes();
+        let over_budget = self.sent_bytes + bytes > self.budget_bytes;
+        if decision.priority() < self.priority_floor()
+            || (over_budget && decision.priority() < 200)
+        {
+            self.shed_count += 1;
+            return DownlinkVerdict::Shed;
+        }
+        self.sent_bytes += bytes;
+        self.sent_count += 1;
+        DownlinkVerdict::Sent
+    }
+
+    /// Effective compression ratio: raw bytes represented per byte sent.
+    pub fn compression_ratio(&self) -> f64 {
+        if self.sent_bytes == 0 {
+            return 0.0;
+        }
+        self.raw_bytes_represented as f64 / self.sent_bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sensors::generators::Region;
+
+    fn label() -> Decision {
+        Decision::MmsRegion { region: Region::Sw, roi: false, logits: [0.0; 4] }
+    }
+
+    fn alert() -> Decision {
+        Decision::SepAlert { warning: true, mask: [true; 6], max_prob: 0.99 }
+    }
+
+    #[test]
+    fn sends_within_budget() {
+        let mut d = DownlinkManager::new(10_000);
+        assert_eq!(d.offer(&label(), 65536), DownlinkVerdict::Sent);
+        assert_eq!(d.sent_count, 1);
+        assert!(d.compression_ratio() > 3000.0);
+    }
+
+    #[test]
+    fn sheds_low_priority_when_tight() {
+        let mut d = DownlinkManager::new(100);
+        // drain most of the budget with alerts (they always pass)
+        while d.remaining_frac() > 0.15 {
+            assert_eq!(d.offer(&alert(), 1000), DownlinkVerdict::Sent);
+        }
+        // now routine labels are shed, alerts still pass
+        assert_eq!(d.offer(&label(), 1000), DownlinkVerdict::Shed);
+        assert_eq!(d.offer(&alert(), 1000), DownlinkVerdict::Sent);
+    }
+
+    #[test]
+    fn alerts_pass_even_over_budget() {
+        let mut d = DownlinkManager::new(8);
+        d.offer(&label(), 100); // eats the budget (17 bytes > 8)
+        assert_eq!(d.offer(&alert(), 100), DownlinkVerdict::Sent);
+    }
+
+    #[test]
+    fn priority_floor_monotone_in_spend() {
+        let mut d = DownlinkManager::new(1000);
+        let mut last = 0;
+        for _ in 0..100 {
+            d.offer(&label(), 10);
+            let f = d.priority_floor();
+            assert!(f >= last, "floor must not decrease");
+            last = f;
+        }
+    }
+
+    #[test]
+    fn zero_budget_edge() {
+        let d = DownlinkManager::new(0);
+        assert_eq!(d.remaining_frac(), 0.0);
+        assert_eq!(d.priority_floor(), 200);
+    }
+}

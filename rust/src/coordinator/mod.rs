@@ -1,0 +1,32 @@
+//! The on-board inference coordinator — Layer 3.
+//!
+//! The paper's motivation (§I) is the system this module implements:
+//! high-fidelity sensors produce more data than the spacecraft can buffer
+//! or downlink, so inference runs *in situ* and only distilled results —
+//! region labels, SEP alerts, flux forecasts, latent vectors — reach the
+//! radio.  The pipeline is:
+//!
+//! ```text
+//! sensors -> router -> batcher -> accel executor -> decision -> downlink
+//!                (CPU fallback)   (PJRT numerics +    (per use case)
+//!                                  simulated timing)
+//! ```
+//!
+//! Numerics are real (the AOT HLO runs on PJRT); time and energy are the
+//! calibrated ZCU104 simulators' outputs, advanced on a virtual clock.
+
+pub mod backpressure;
+pub mod batcher;
+pub mod decision;
+pub mod downlink;
+pub mod pipeline;
+pub mod router;
+pub mod scheduler;
+
+pub use backpressure::BoundedQueue;
+pub use batcher::{Batch, Batcher};
+pub use decision::{decide, Decision};
+pub use downlink::{DownlinkManager, DownlinkVerdict};
+pub use pipeline::{Pipeline, PipelineConfig, PipelineReport};
+pub use router::{Route, Router, Slot};
+pub use scheduler::{AccelTimeline, ScheduledRun};

@@ -1,0 +1,361 @@
+//! The end-to-end on-board pipeline: wires sensors, router, batcher,
+//! executor (real PJRT numerics), the timing/power simulators (virtual
+//! ZCU104 clock), decision logic, and the downlink manager.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::board::{Calibration, Zcu104};
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::decision::{decide, Decision};
+use crate::coordinator::downlink::{DownlinkManager, DownlinkVerdict};
+use crate::coordinator::router::{Route, Router, Slot};
+use crate::coordinator::scheduler::{AccelTimeline, ScheduledRun};
+use crate::cpu::A53Model;
+use crate::dpu::{DpuArch, DpuSchedule};
+use crate::hls::HlsDesign;
+use crate::model::catalog::{model_info, Catalog};
+use crate::power::{Implementation, PowerModel};
+use crate::resources::estimate_hls;
+use crate::runtime::ExecutorPool;
+use crate::sensors::SensorStream;
+use crate::telemetry::Metrics;
+use crate::util::prng::Prng;
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// "vae" | "cnet" | "esperta" | "mms"
+    pub use_case: &'static str,
+    /// Events to process.
+    pub n_events: usize,
+    /// Sensor cadence (s).
+    pub cadence_s: f64,
+    pub max_batch: usize,
+    pub max_wait_s: f64,
+    /// Downlink budget for the run (bytes).
+    pub downlink_budget: u64,
+    /// MMS sub-model ("baseline" | "reduced" | "logistic").
+    pub mms_model: String,
+    pub seed: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            use_case: "mms",
+            n_events: 100,
+            cadence_s: 0.15,
+            max_batch: 8,
+            max_wait_s: 0.5,
+            downlink_budget: 64 * 1024,
+            mms_model: "baseline".into(),
+            seed: 7,
+        }
+    }
+}
+
+/// Summary of a pipeline run.
+#[derive(Debug)]
+pub struct PipelineReport {
+    pub use_case: String,
+    pub model: String,
+    pub slot: Slot,
+    pub events: u64,
+    /// Simulated wall time of the run (s).
+    pub sim_elapsed_s: f64,
+    /// Simulated mean end-to-end latency (arrival -> decision, s).
+    pub mean_latency_s: f64,
+    pub p95_latency_s: f64,
+    /// Simulated accelerator throughput (inferences/s while busy).
+    pub busy_fps: f64,
+    pub accel_utilization: f64,
+    /// Simulated MPSoC energy spent on inference (J).
+    pub energy_j: f64,
+    pub downlink_sent: u64,
+    pub downlink_shed: u64,
+    pub downlink_sent_bytes: u64,
+    pub compression_ratio: f64,
+    /// Decision accuracy vs ground truth, when truth exists.
+    pub accuracy: Option<f64>,
+    pub decisions: BTreeMap<String, u64>,
+    pub metrics: Metrics,
+}
+
+impl PipelineReport {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "pipeline [{}] model={} slot={:?}\n",
+            self.use_case, self.model, self.slot
+        ));
+        out.push_str(&format!(
+            "  events {}  sim_elapsed {:.3}s  mean_latency {:.4}s  p95 {:.4}s\n",
+            self.events, self.sim_elapsed_s, self.mean_latency_s, self.p95_latency_s
+        ));
+        out.push_str(&format!(
+            "  busy_fps {:.1}  util {:.1}%  energy {:.3}J\n",
+            self.busy_fps,
+            100.0 * self.accel_utilization,
+            self.energy_j
+        ));
+        out.push_str(&format!(
+            "  downlink: sent {} ({} B) shed {}  compression {:.0}:1\n",
+            self.downlink_sent, self.downlink_sent_bytes, self.downlink_shed,
+            self.compression_ratio
+        ));
+        if let Some(acc) = self.accuracy {
+            out.push_str(&format!("  decision accuracy vs truth: {:.1}%\n", 100.0 * acc));
+        }
+        for (k, v) in &self.decisions {
+            out.push_str(&format!("  decision[{k}] = {v}\n"));
+        }
+        out
+    }
+}
+
+/// The pipeline itself.
+pub struct Pipeline {
+    pub config: PipelineConfig,
+    pub route: Route,
+    run_params: ScheduledRun,
+    input_bytes: u64,
+}
+
+impl Pipeline {
+    /// Resolve routing and simulated timing for the configured use case.
+    pub fn new(config: PipelineConfig, catalog: &Catalog, calib: &Calibration) -> Result<Pipeline> {
+        let mut router = Router::default();
+        router.mms_model = config.mms_model.clone();
+        let route = router.route(config.use_case, 0)?;
+        let board = Zcu104::default();
+        let info = model_info(&route.model)?;
+        let man = catalog
+            .manifest(&route.model, route.precision)
+            .context("pipeline needs `make artifacts` output")?;
+        let power = PowerModel::new(calib.clone());
+        let run_params = match route.slot {
+            Slot::Dpu => {
+                let sched = DpuSchedule::new(
+                    man,
+                    DpuArch::b4096(calib, board.dpu_clock_hz),
+                    calib,
+                    board.axi_bandwidth,
+                )?;
+                let per_item = sched.latency_s() - sched.invoke_s;
+                ScheduledRun {
+                    setup_s: sched.invoke_s,
+                    per_item_s: per_item,
+                    power_w: power.mpsoc_w(&PowerModel::dpu_impl(&sched)),
+                }
+            }
+            Slot::Hls => {
+                let design = HlsDesign::synthesize(man, &board, calib);
+                let setup = design.axi_setup_cycles / design.clock_hz;
+                let util = estimate_hls(man, &design.plan);
+                ScheduledRun {
+                    setup_s: setup,
+                    per_item_s: design.latency_s() - setup,
+                    power_w: power.mpsoc_w(&Implementation::Hls {
+                        kiloluts: util.luts as f64 / 1000.0,
+                        brams: design.plan.brams(),
+                        duty: 1.0,
+                    }),
+                }
+            }
+            Slot::Cpu => {
+                let a53 = A53Model::calibrated(man, calib, info.paper.cpu_fps);
+                ScheduledRun {
+                    setup_s: 0.0,
+                    per_item_s: a53.latency_s(),
+                    power_w: info.paper.cpu_p_mpsoc,
+                }
+            }
+        };
+        Ok(Pipeline {
+            config,
+            route,
+            run_params,
+            input_bytes: man.input_bytes(),
+        })
+    }
+
+    /// Run the pipeline.  `executor` supplies real PJRT numerics; pass
+    /// `None` for a timing-only (simulated outputs) run — decisions then
+    /// come from a deterministic surrogate so downstream stages still
+    /// exercise.
+    pub fn run(&self, executor: Option<&ExecutorPool>) -> Result<PipelineReport> {
+        let cfg = &self.config;
+        let mut stream = SensorStream::new(cfg.use_case, cfg.seed, cfg.cadence_s);
+        let mut batcher = Batcher::new(&self.route.model, cfg.max_batch, cfg.max_wait_s);
+        let mut timeline = AccelTimeline::new(self.route.slot_name());
+        let mut downlink = DownlinkManager::new(cfg.downlink_budget);
+        let mut metrics = Metrics::default();
+        let mut rng = Prng::new(cfg.seed ^ DECISION_RNG_SALT);
+        let mut latencies: Vec<f64> = Vec::with_capacity(cfg.n_events);
+        let mut decisions: BTreeMap<String, u64> = BTreeMap::new();
+        let mut correct = 0u64;
+        let mut with_truth = 0u64;
+        let mut sim_end = 0.0f64;
+
+        let process_batch = |batch: crate::coordinator::batcher::Batch,
+                                 timeline: &mut AccelTimeline,
+                                 downlink: &mut DownlinkManager,
+                                 metrics: &mut Metrics,
+                                 rng: &mut Prng,
+                                 latencies: &mut Vec<f64>,
+                                 decisions: &mut BTreeMap<String, u64>,
+                                 correct: &mut u64,
+                                 with_truth: &mut u64,
+                                 sim_end: &mut f64|
+         -> Result<()> {
+            let n = batch.events.len() as u64;
+            let (_start, done) =
+                timeline.schedule(batch.flushed_at_s, n, self.run_params);
+            *sim_end = sim_end.max(done);
+            metrics.add("batches", 1);
+            metrics.add("inferences", n);
+            for ev in &batch.events {
+                latencies.push(done - ev.t_s);
+                let output = match executor {
+                    Some(pool) => pool.run_sync(
+                        &self.route.model,
+                        self.route.precision,
+                        ev.inputs.clone(),
+                    )?,
+                    None => surrogate_output(cfg.use_case, ev, rng),
+                };
+                let d = decide(cfg.use_case, &output, rng);
+                if let Some(truth) = ev.truth {
+                    *with_truth += 1;
+                    if decision_matches_truth(&d, truth) {
+                        *correct += 1;
+                    }
+                }
+                *decisions.entry(decision_key(&d)).or_insert(0) += 1;
+                match downlink.offer(&d, self.input_bytes) {
+                    DownlinkVerdict::Sent => metrics.inc("downlink_sent"),
+                    DownlinkVerdict::Shed => metrics.inc("downlink_shed"),
+                }
+            }
+            Ok(())
+        };
+
+        for _ in 0..cfg.n_events {
+            let ev = stream.next_event();
+            let now = ev.t_s;
+            if let Some(b) = batcher.poll(now) {
+                process_batch(b, &mut timeline, &mut downlink, &mut metrics,
+                              &mut rng, &mut latencies, &mut decisions,
+                              &mut correct, &mut with_truth, &mut sim_end)?;
+            }
+            if let Some(b) = batcher.offer(ev, now) {
+                process_batch(b, &mut timeline, &mut downlink, &mut metrics,
+                              &mut rng, &mut latencies, &mut decisions,
+                              &mut correct, &mut with_truth, &mut sim_end)?;
+            }
+        }
+        let drain_t = cfg.n_events as f64 * cfg.cadence_s + cfg.max_wait_s;
+        if let Some(b) = batcher.flush(drain_t) {
+            process_batch(b, &mut timeline, &mut downlink, &mut metrics,
+                          &mut rng, &mut latencies, &mut decisions,
+                          &mut correct, &mut with_truth, &mut sim_end)?;
+        }
+
+        latencies.sort_by(f64::total_cmp);
+        let mean = latencies.iter().sum::<f64>() / latencies.len().max(1) as f64;
+        let p95 = latencies
+            .get(((latencies.len() as f64 * 0.95) as usize).min(latencies.len().saturating_sub(1)))
+            .copied()
+            .unwrap_or(0.0);
+        let busy_fps = if timeline.busy_s > 0.0 {
+            timeline.completed as f64 / timeline.busy_s
+        } else {
+            0.0
+        };
+        Ok(PipelineReport {
+            use_case: cfg.use_case.to_string(),
+            model: self.route.model.clone(),
+            slot: self.route.slot,
+            events: timeline.completed,
+            sim_elapsed_s: sim_end,
+            mean_latency_s: mean,
+            p95_latency_s: p95,
+            busy_fps,
+            accel_utilization: timeline.utilization(sim_end.max(1e-9)),
+            energy_j: timeline.energy_j,
+            downlink_sent: downlink.sent_count,
+            downlink_shed: downlink.shed_count,
+            downlink_sent_bytes: downlink.sent_bytes,
+            compression_ratio: downlink.compression_ratio(),
+            accuracy: if with_truth > 0 {
+                Some(correct as f64 / with_truth as f64)
+            } else {
+                None
+            },
+            decisions,
+            metrics,
+        })
+    }
+}
+
+impl Route {
+    fn slot_name(&self) -> &'static str {
+        match self.slot {
+            Slot::Dpu => "dpu",
+            Slot::Hls => "hls",
+            Slot::Cpu => "cpu",
+        }
+    }
+}
+
+/// Salt separating the decision RNG stream from the sensor stream.
+const DECISION_RNG_SALT: u64 = 0xD01E_57A7;
+
+/// Deterministic surrogate outputs for timing-only runs (no PJRT).
+fn surrogate_output(use_case: &str, ev: &crate::sensors::SensorEvent, rng: &mut Prng) -> Vec<f32> {
+    match use_case {
+        "mms" => {
+            let mut v = vec![0.0f32; 4];
+            if let Some(t) = ev.truth {
+                v[t] = 1.0 + rng.f32();
+            }
+            v
+        }
+        "esperta" => {
+            let mut v = vec![0.2f32; 12];
+            if ev.truth == Some(1) {
+                for i in 0..6 {
+                    v[i] = 0.9;
+                    v[6 + i] = 1.0;
+                }
+            }
+            v
+        }
+        "vae" => (0..12).map(|_| rng.normal() as f32).collect(),
+        "cnet" => vec![-6.0 + 2.0 * rng.f32()],
+        _ => unreachable!(),
+    }
+}
+
+fn decision_key(d: &Decision) -> String {
+    match d {
+        Decision::MmsRegion { region, .. } => format!("region_{}", region.label()),
+        Decision::SepAlert { warning, .. } => {
+            format!("sep_{}", if *warning { "alert" } else { "quiet" })
+        }
+        Decision::Latent { .. } => "latent".into(),
+        Decision::FluxForecast { alert, .. } => {
+            format!("flux_{}", if *alert { "alert" } else { "nominal" })
+        }
+    }
+}
+
+fn decision_matches_truth(d: &Decision, truth: usize) -> bool {
+    match d {
+        Decision::MmsRegion { region, .. } => region.index() == truth,
+        Decision::SepAlert { warning, .. } => (*warning as usize) == truth,
+        _ => false,
+    }
+}

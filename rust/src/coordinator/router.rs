@@ -1,0 +1,108 @@
+//! Request routing: use case -> accelerator slot.
+//!
+//! Mirrors the paper's deployment matrix (§III-B): DPU-compatible CNNs go
+//! to the Vitis-AI slot (INT8), operator-incompatible models to their HLS
+//! IP (fp32), with the A53 as fallback when a slot's queue exceeds its
+//! backpressure bound.  MMS traffic carries a sub-model selector
+//! (Baseline / Reduced / Logistic) so the upload-minimization strategy of
+//! Ekelund et al. can be exercised.
+
+use anyhow::{bail, Result};
+
+use crate::model::catalog::{model_info, Target};
+use crate::model::Precision;
+
+/// An execution slot on the simulated MPSoC.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Slot {
+    /// The (single) DPU instance.
+    Dpu,
+    /// A per-model HLS IP.
+    Hls,
+    /// A53 software fallback.
+    Cpu,
+}
+
+/// A routed request: which model variant on which slot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Route {
+    pub model: String,
+    pub precision: Precision,
+    pub slot: Slot,
+}
+
+/// The router configuration.
+#[derive(Debug, Clone)]
+pub struct Router {
+    /// MMS sub-model to deploy ("baseline" | "reduced" | "logistic").
+    pub mms_model: String,
+    /// Queue depth beyond which traffic falls back to the CPU.
+    pub fallback_depth: usize,
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Router { mms_model: "baseline".into(), fallback_depth: 64 }
+    }
+}
+
+impl Router {
+    /// Route one use case given the current queue depth of its primary
+    /// slot.
+    pub fn route(&self, use_case: &str, queue_depth: usize) -> Result<Route> {
+        let model = match use_case {
+            "vae" => "vae".to_string(),
+            "cnet" => "cnet".to_string(),
+            "esperta" => "esperta".to_string(),
+            "mms" => self.mms_model.clone(),
+            other => bail!("unroutable use case {other:?}"),
+        };
+        let info = model_info(&model)?;
+        let (slot, precision) = match info.target {
+            Target::Dpu => (Slot::Dpu, Precision::Int8),
+            Target::Hls => (Slot::Hls, Precision::Fp32),
+        };
+        if queue_depth >= self.fallback_depth {
+            // paper's CPU baseline doubles as the overload escape hatch
+            return Ok(Route { model, precision: Precision::Fp32, slot: Slot::Cpu });
+        }
+        Ok(Route { model, precision, slot })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deployment_matrix_matches_paper() {
+        let r = Router::default();
+        assert_eq!(r.route("vae", 0).unwrap().slot, Slot::Dpu);
+        assert_eq!(r.route("vae", 0).unwrap().precision, Precision::Int8);
+        assert_eq!(r.route("cnet", 0).unwrap().slot, Slot::Dpu);
+        let e = r.route("esperta", 0).unwrap();
+        assert_eq!(e.slot, Slot::Hls);
+        assert_eq!(e.precision, Precision::Fp32);
+        assert_eq!(r.route("mms", 0).unwrap().model, "baseline");
+    }
+
+    #[test]
+    fn mms_submodel_selector() {
+        let mut r = Router::default();
+        r.mms_model = "logistic".into();
+        assert_eq!(r.route("mms", 0).unwrap().model, "logistic");
+    }
+
+    #[test]
+    fn overload_falls_back_to_cpu() {
+        let r = Router::default();
+        let route = r.route("vae", 64).unwrap();
+        assert_eq!(route.slot, Slot::Cpu);
+        assert_eq!(route.precision, Precision::Fp32);
+    }
+
+    #[test]
+    fn unknown_use_case_rejected() {
+        assert!(Router::default().route("lidar", 0).is_err());
+    }
+}

@@ -1,0 +1,5 @@
+//! ARM Cortex-A53 baseline timing model.
+
+pub mod a53;
+
+pub use a53::A53Model;

@@ -1,0 +1,87 @@
+//! DPUCZDX8G B4096 architecture description (paper §II-B.1, PG338).
+//!
+//! The B4096 configuration executes 4096 INT8 ops (2048 MACs) per MAC-array
+//! clock, organized as *pixel parallelism × input-channel parallelism ×
+//! output-channel parallelism* = 8 × 16 × 16.  Work that does not fill a
+//! dimension is padded to it — the mechanism behind the paper's
+//! observation that CNetPlusScalar (wide channels) speeds up more than the
+//! VAE encoder (3-channel input layer wastes 13/16 of ICP).
+
+use crate::board::Calibration;
+use crate::board::zcu104::PlResources;
+
+/// Fixed architectural description of the instantiated DPU IP.
+#[derive(Debug, Clone, Copy)]
+pub struct DpuArch {
+    /// Pixel parallelism (output pixels per cycle).
+    pub pp: u64,
+    /// Input-channel parallelism.
+    pub icp: u64,
+    /// Output-channel parallelism.
+    pub ocp: u64,
+    /// MAC-array clock (Hz).
+    pub clock_hz: f64,
+    /// Misc-engine throughput (elements/cycle) for pool / elementwise.
+    pub misc_elems_per_cycle: f64,
+    /// Feature-map DDR streaming bandwidth (bytes/cycle).
+    pub ddr_bytes_per_cycle: f64,
+    /// On-chip weight/activation store (bytes) — BRAM + URAM of the IP.
+    pub onchip_bytes: u64,
+}
+
+impl DpuArch {
+    pub fn b4096(calib: &Calibration, clock_hz: f64) -> DpuArch {
+        DpuArch {
+            pp: calib.dpu_pp,
+            icp: calib.dpu_icp,
+            ocp: calib.dpu_ocp,
+            clock_hz,
+            misc_elems_per_cycle: calib.dpu_misc_elems_per_cycle,
+            ddr_bytes_per_cycle: calib.dpu_ddr_bytes_per_cycle,
+            // 165 BRAM36 + 92 URAM (Table II) ~= 3.92 MB
+            onchip_bytes: 165 * 4608 + 92 * 36_864,
+        }
+    }
+
+    /// MACs retired per cycle when every dimension is filled.
+    pub fn macs_per_cycle(&self) -> u64 {
+        self.pp * self.icp * self.ocp
+    }
+
+    /// Table II row: the B4096 IP's PL footprint (fixed property of the
+    /// IP configuration, from the paper's implementation).
+    pub fn resources(&self) -> PlResources {
+        PlResources {
+            luts: 102_154,
+            ffs: 199_192,
+            dsps: 1_420,
+            brams: 165.0,
+            urams: 92,
+        }
+    }
+
+    /// Peak INT8 TOPS (2 ops per MAC).
+    pub fn peak_tops(&self) -> f64 {
+        2.0 * self.macs_per_cycle() as f64 * self.clock_hz / 1e12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn b4096_peak() {
+        let a = DpuArch::b4096(&Calibration::default(), 300e6);
+        assert_eq!(a.macs_per_cycle(), 2048);
+        // ~1.23 TOPS INT8 at 300 MHz — the commonly quoted B4096 figure
+        assert!((a.peak_tops() - 1.2288).abs() < 1e-6);
+    }
+
+    #[test]
+    fn onchip_store_about_3_92_mb() {
+        let a = DpuArch::b4096(&Calibration::default(), 300e6);
+        let mb = a.onchip_bytes as f64 / (1024.0 * 1024.0);
+        assert!((mb - 3.92).abs() < 0.1, "{mb}");
+    }
+}

@@ -1,0 +1,129 @@
+//! DPU instruction-stream generation.
+//!
+//! The real Vitis-AI flow compiles an `.xmodel` into DPU instructions
+//! (LOAD / CONV / POOL / ELEW / SAVE) that the IP fetches over AXI.  The
+//! coordinator uses this program form for two things: the per-layer
+//! instruction-dispatch overhead in the timing model, and the `inspect`
+//! subcommand's human-readable program dump (the analogue of
+//! `xdputil xmodel -l`).
+
+use anyhow::Result;
+
+use super::arch::DpuArch;
+use super::schedule::DpuSchedule;
+use crate::model::{LayerKind, Manifest};
+
+/// One DPU instruction (coarse, layer-granular like the real compiler's
+/// superinstructions).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DpuInstr {
+    /// Stage input feature map: bytes.
+    Load { bytes: u64 },
+    /// Convolution layer: output channels, kernel volume, cycles.
+    Conv { cout: u64, kvol: u64, cycles: u64 },
+    /// Fully-connected layer (1x1 conv path).
+    Fc { din: u64, dout: u64, cycles: u64 },
+    /// Misc engine: pooling / reshape.
+    Misc { kind: &'static str, cycles: u64 },
+    /// Write output back: bytes.
+    Save { bytes: u64 },
+}
+
+/// A compiled DPU program.
+#[derive(Debug, Clone)]
+pub struct DpuProgram {
+    pub model: String,
+    pub instrs: Vec<DpuInstr>,
+}
+
+impl DpuProgram {
+    /// Compile a manifest + schedule into the instruction stream.
+    pub fn compile(man: &Manifest, sched: &DpuSchedule) -> Result<DpuProgram> {
+        let mut instrs = vec![DpuInstr::Load { bytes: man.input_bytes() }];
+        for (l, t) in man.layers.iter().zip(&sched.layers) {
+            let instr = match l.kind {
+                LayerKind::Conv2d => {
+                    let cout = *l.out_shape.last().unwrap() as u64;
+                    DpuInstr::Conv { cout, kvol: l.params / cout - 1, cycles: t.cycles }
+                }
+                LayerKind::Dense | LayerKind::DenseHeads => DpuInstr::Fc {
+                    din: l.in_shape[1] as u64,
+                    dout: l.out_shape[1] as u64,
+                    cycles: t.cycles,
+                },
+                LayerKind::MaxPool2d => DpuInstr::Misc { kind: "maxpool", cycles: t.cycles },
+                LayerKind::Flatten => DpuInstr::Misc { kind: "reshape", cycles: t.cycles },
+                LayerKind::ConcatScalar => DpuInstr::Misc { kind: "concat", cycles: t.cycles },
+                other => anyhow::bail!("DPU ISA has no encoding for {other:?}"),
+            };
+            instrs.push(instr);
+        }
+        instrs.push(DpuInstr::Save { bytes: man.output_elems() * 4 });
+        Ok(DpuProgram { model: man.name.clone(), instrs })
+    }
+
+    /// Pretty listing (for `spaceinfer inspect`).
+    pub fn listing(&self) -> String {
+        let mut out = format!("DPU program for {:?}:\n", self.model);
+        for (i, ins) in self.instrs.iter().enumerate() {
+            out.push_str(&format!("  {i:3}: {ins:?}\n"));
+        }
+        out
+    }
+
+    /// Total compute cycles in the stream.
+    pub fn cycles(&self) -> u64 {
+        self.instrs
+            .iter()
+            .map(|i| match i {
+                DpuInstr::Conv { cycles, .. }
+                | DpuInstr::Fc { cycles, .. }
+                | DpuInstr::Misc { cycles, .. } => *cycles,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+/// Check a manifest fits the DPU's on-chip weight store (the paper notes
+/// both DPU models "fit on chip" — this is the gate that verified it).
+pub fn weights_fit_onchip(man: &Manifest, arch: &DpuArch) -> bool {
+    man.weight_bytes <= arch.onchip_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::board::Calibration;
+    use crate::util::json::Json;
+
+    fn mini() -> Manifest {
+        Manifest::from_json(
+            &Json::parse(crate::model::manifest::testdata::MINI).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn program_shape() {
+        let c = Calibration::default();
+        let man = mini();
+        let arch = DpuArch::b4096(&c, 300e6);
+        let sched = DpuSchedule::new(&man, arch, &c, 2e9).unwrap();
+        let prog = DpuProgram::compile(&man, &sched).unwrap();
+        // load + 3 layers + save
+        assert_eq!(prog.instrs.len(), 5);
+        assert!(matches!(prog.instrs[0], DpuInstr::Load { .. }));
+        assert!(matches!(prog.instrs[4], DpuInstr::Save { .. }));
+        assert_eq!(prog.cycles(), sched.total_cycles());
+        assert!(prog.listing().contains("Conv"));
+    }
+
+    #[test]
+    fn onchip_gate() {
+        let c = Calibration::default();
+        let arch = DpuArch::b4096(&c, 300e6);
+        let man = mini();
+        assert!(weights_fit_onchip(&man, &arch));
+    }
+}

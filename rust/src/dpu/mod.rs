@@ -1,0 +1,9 @@
+//! Vitis-AI DPUCZDX8G B4096 simulator (the paper's high-throughput path).
+
+pub mod arch;
+pub mod isa;
+pub mod schedule;
+
+pub use arch::DpuArch;
+pub use isa::{DpuInstr, DpuProgram};
+pub use schedule::{DpuSchedule, LayerTiming};

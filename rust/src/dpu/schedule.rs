@@ -1,0 +1,256 @@
+//! Per-layer DPU scheduling / cycle model.
+//!
+//! For each manifest layer the scheduler computes MAC-array cycles with
+//! dimension padding (PP/ICP/OCP), weight-stream cycles from the on-chip
+//! store, and misc-engine cycles for pooling; the layer takes the max
+//! (the engines overlap).  A fixed runner-invocation overhead plus a
+//! per-layer instruction-dispatch cost models the PYNQ/VART submit path
+//! the paper measured through.
+
+use anyhow::{bail, Result};
+
+use super::arch::DpuArch;
+use crate::board::Calibration;
+use crate::model::{Layer, LayerKind, Manifest};
+
+/// Timing breakdown for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerTiming {
+    pub kind: LayerKind,
+    /// MAC-array cycles (dimension-padded).
+    pub mac_cycles: u64,
+    /// Weight-stream cycles from BRAM/URAM.
+    pub weight_cycles: u64,
+    /// Misc-engine cycles (pool / elementwise).
+    pub misc_cycles: u64,
+    /// Feature-map DDR streaming cycles (in + out, int8).
+    pub act_cycles: u64,
+    /// Effective cycles = max(engines) + activation streaming.
+    pub cycles: u64,
+    /// Useful MACs (un-padded) — for utilization reporting.
+    pub useful_macs: u64,
+}
+
+/// A scheduled model: per-layer timings + per-inference overheads.
+#[derive(Debug, Clone)]
+pub struct DpuSchedule {
+    pub model: String,
+    pub layers: Vec<LayerTiming>,
+    pub arch: DpuArch,
+    /// Fixed runner overhead (s).
+    pub invoke_s: f64,
+    /// Per-layer instruction overhead (s).
+    pub layer_s: f64,
+    /// Input DMA time (s).
+    pub input_dma_s: f64,
+}
+
+fn ceil_div(a: u64, b: u64) -> u64 {
+    a.div_ceil(b)
+}
+
+impl DpuSchedule {
+    /// Schedule a manifest onto the DPU.  Errors if any layer uses an
+    /// operator outside the DPU's set (the paper's Vitis-AI inspector
+    /// gate, §III-B.1).
+    pub fn new(
+        man: &Manifest,
+        arch: DpuArch,
+        calib: &Calibration,
+        axi_bandwidth: f64,
+    ) -> Result<DpuSchedule> {
+        if !man.dpu_compatible() {
+            bail!(
+                "model {:?} uses operators unsupported by the DPU \
+                 (sigmoid / comparator / 3-D layers) — paper routes such \
+                 models to HLS",
+                man.name
+            );
+        }
+        let mut layers = Vec::with_capacity(man.layers.len());
+        for l in &man.layers {
+            layers.push(Self::schedule_layer(l, &arch)?);
+        }
+        Ok(DpuSchedule {
+            model: man.name.clone(),
+            layers,
+            arch,
+            invoke_s: calib.dpu_invoke_s,
+            layer_s: calib.dpu_layer_s,
+            input_dma_s: man.input_bytes() as f64 / axi_bandwidth,
+        })
+    }
+
+    fn schedule_layer(l: &Layer, arch: &DpuArch) -> Result<LayerTiming> {
+        let in_elems: u64 = l.in_shape.iter().skip(1).product::<usize>() as u64;
+        let mut t = LayerTiming {
+            kind: l.kind,
+            mac_cycles: 0,
+            weight_cycles: 0,
+            misc_cycles: 0,
+            // int8 feature maps stream through DDR (they exceed the
+            // on-chip store for the big CNNs): 1 byte per element
+            act_cycles: ((in_elems + l.out_elems()) as f64
+                / arch.ddr_bytes_per_cycle)
+                .ceil() as u64,
+            cycles: 0,
+            useful_macs: l.macs,
+        };
+        match l.kind {
+            LayerKind::Conv2d => {
+                let cin = *l.in_shape.last().unwrap() as u64;
+                let cout = *l.out_shape.last().unwrap() as u64;
+                let out_px: u64 =
+                    l.out_shape[1..l.out_shape.len() - 1].iter().product::<usize>() as u64;
+                let kvol = l.params / cout - 1; // k*k*cin
+                let kspatial = kvol / cin;
+                t.mac_cycles = ceil_div(out_px, arch.pp)
+                    * kspatial
+                    * ceil_div(cin, arch.icp)
+                    * ceil_div(cout, arch.ocp);
+                // int8 weights streamed ICP*OCP bytes/cycle
+                t.weight_cycles = ceil_div(l.weight_bytes, arch.icp * arch.ocp);
+            }
+            LayerKind::Dense | LayerKind::DenseHeads => {
+                let din = l.in_shape[1] as u64;
+                let dout = l.out_shape[1] as u64;
+                // dense = 1x1 conv on a single output pixel
+                t.mac_cycles = ceil_div(din, arch.icp) * ceil_div(dout, arch.ocp);
+                t.weight_cycles = ceil_div(l.weight_bytes, arch.icp * arch.ocp);
+            }
+            LayerKind::MaxPool2d | LayerKind::Flatten | LayerKind::ConcatScalar => {
+                t.misc_cycles =
+                    (l.out_elems() as f64 / arch.misc_elems_per_cycle).ceil() as u64;
+            }
+            other => bail!("DPU cannot schedule {other:?}"),
+        }
+        t.cycles = t.mac_cycles.max(t.weight_cycles).max(t.misc_cycles)
+            + t.act_cycles;
+        Ok(t)
+    }
+
+    /// Array cycles for the whole model.
+    pub fn total_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.cycles).sum()
+    }
+
+    /// Per-inference latency (s), excluding input DMA (the paper excludes
+    /// input staging from inference time, §IV / Fig 11 discussion).
+    pub fn latency_s(&self) -> f64 {
+        self.total_cycles() as f64 / self.arch.clock_hz
+            + self.invoke_s
+            + self.layers.len() as f64 * self.layer_s
+    }
+
+    /// Latency including input DMA (what the power trace shows).
+    pub fn latency_with_dma_s(&self) -> f64 {
+        self.latency_s() + self.input_dma_s
+    }
+
+    pub fn fps(&self) -> f64 {
+        1.0 / self.latency_s()
+    }
+
+    /// MAC-array duty cycle during an inference — drives dynamic power.
+    pub fn mac_duty(&self) -> f64 {
+        let mac: u64 = self.layers.iter().map(|l| l.mac_cycles).sum();
+        let wall = self.latency_s() * self.arch.clock_hz;
+        (mac as f64 / wall).clamp(0.0, 1.0)
+    }
+
+    /// Achieved / peak MAC utilization (useful MACs over array capacity).
+    pub fn mac_utilization(&self) -> f64 {
+        let useful: u64 = self.layers.iter().map(|l| l.useful_macs).sum();
+        let capacity =
+            self.latency_s() * self.arch.clock_hz * self.arch.macs_per_cycle() as f64;
+        useful as f64 / capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::Manifest;
+    use crate::util::json::Json;
+
+    fn conv_manifest(cin: usize, cout: usize, px: usize) -> Manifest {
+        let kvol = 9 * cin;
+        let params = cout * (kvol + 1);
+        let macs = (px * kvol * cout) as u64;
+        let side = (px as f64).sqrt() as usize;
+        let src = format!(
+            r#"{{"name":"c","precision":"int8",
+              "inputs":{{"x":[1,{side},{side},{cin}]}},"input_order":["x"],
+              "output_shape":[1,{side},{side},{cout}],
+              "layers":[{{"kind":"conv2d",
+                "in_shape":[1,{side},{side},{cin}],
+                "out_shape":[1,{side},{side},{cout}],
+                "macs":{macs},"ops":{ops},"params":{params},
+                "weight_bytes":{params},"act_bytes":4,"act":"relu"}}],
+              "total_macs":{macs},"total_ops":{ops},
+              "total_params":{params},"weight_bytes":{params}}}"#,
+            ops = 2 * macs + 2 * (px * cout) as u64,
+        );
+        Manifest::from_json(&Json::parse(&src).unwrap()).unwrap()
+    }
+
+    fn sched(man: &Manifest) -> DpuSchedule {
+        let c = Calibration::default();
+        DpuSchedule::new(man, DpuArch::b4096(&c, 300e6), &c, 2e9).unwrap()
+    }
+
+    #[test]
+    fn aligned_conv_is_fully_utilized() {
+        // 16-ch in, 16-ch out, 64 px: no padding waste
+        let man = conv_manifest(16, 16, 64);
+        let s = sched(&man);
+        let t = &s.layers[0];
+        // cycles = 64/8 * 9 * 1 * 1 = 72
+        assert_eq!(t.mac_cycles, 72);
+        assert_eq!(t.useful_macs, 64 * 9 * 16 * 16);
+        // useful macs == padded macs
+        assert_eq!(t.useful_macs, t.mac_cycles * 2048);
+    }
+
+    #[test]
+    fn narrow_input_wastes_icp() {
+        // 3-ch input (VAE conv1 situation): ICP padded 3 -> 16
+        let man = conv_manifest(3, 16, 64);
+        let s = sched(&man);
+        let t = &s.layers[0];
+        let padded = t.mac_cycles * 2048;
+        assert!(t.useful_macs * 5 < padded, "padding waste must exceed 5x");
+    }
+
+    #[test]
+    fn rejects_3d_models() {
+        let src = r#"{"name":"m3","precision":"fp32",
+          "inputs":{"x":[1,4,4,4,1]},"input_order":["x"],
+          "output_shape":[1,4,4,4,2],
+          "layers":[{"kind":"conv3d","in_shape":[1,4,4,4,1],
+            "out_shape":[1,4,4,4,2],"macs":3456,"ops":7040,"params":56,
+            "weight_bytes":224,"act_bytes":512,"act":"none"}],
+          "total_macs":3456,"total_ops":7040,"total_params":56,
+          "weight_bytes":224}"#;
+        let man = Manifest::from_json(&Json::parse(src).unwrap()).unwrap();
+        let c = Calibration::default();
+        assert!(DpuSchedule::new(&man, DpuArch::b4096(&c, 300e6), &c, 2e9).is_err());
+    }
+
+    #[test]
+    fn latency_includes_invoke_overhead() {
+        let man = conv_manifest(16, 16, 64);
+        let s = sched(&man);
+        // 72 cycles @300MHz = 0.24us; invoke (1ms) dominates
+        assert!(s.latency_s() > 1.0e-3);
+        assert!(s.latency_s() < 1.2e-3);
+    }
+
+    #[test]
+    fn duty_and_utilization_bounded() {
+        let man = conv_manifest(32, 64, 4096);
+        let s = sched(&man);
+        assert!(s.mac_duty() > 0.0 && s.mac_duty() <= 1.0);
+        assert!(s.mac_utilization() > 0.0 && s.mac_utilization() <= 1.0);
+    }
+}

@@ -1,0 +1,69 @@
+//! AXI master model for DRAM-resident weights.
+//!
+//! The paper's HLS designs expose an AXI4 master that fetches spilled
+//! weights word-by-word — un-pipelined in the naive (no-pragma) mapping,
+//! so every 32-bit read pays the full DDR round trip.  This is the
+//! mechanism behind BaselineNet's collapse (paper §IV: "Fetching these
+//! parameters from external memory can further increase inference time").
+
+/// AXI4 master with un-pipelined single-beat reads.
+#[derive(Debug, Clone, Copy)]
+pub struct AxiMaster {
+    /// PL clock cycles per 32-bit read (address phase + DDR latency).
+    pub cycles_per_word: f64,
+    /// Burst length the design achieves (1 = naive, no burst inference).
+    pub burst_len: u64,
+}
+
+impl AxiMaster {
+    /// The naive no-pragma configuration.
+    pub fn naive(cycles_per_word: f64) -> AxiMaster {
+        AxiMaster { cycles_per_word, burst_len: 1 }
+    }
+
+    /// An optimized configuration with burst inference (used by the
+    /// ablation bench to show what pragmas would buy).
+    pub fn bursting(cycles_per_word: f64, burst_len: u64) -> AxiMaster {
+        AxiMaster { cycles_per_word, burst_len: burst_len.max(1) }
+    }
+
+    /// Cycles to stream `bytes` of weights from DRAM.
+    pub fn fetch_cycles(&self, bytes: u64) -> f64 {
+        let words = bytes.div_ceil(4);
+        // a burst amortizes the address/latency cost over burst_len beats
+        let bursts = words.div_ceil(self.burst_len);
+        bursts as f64 * self.cycles_per_word
+            + (words.saturating_sub(bursts)) as f64 // 1 cycle/extra beat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_pays_full_latency_per_word() {
+        let axi = AxiMaster::naive(12.0);
+        assert_eq!(axi.fetch_cycles(4000), 12.0 * 1000.0);
+    }
+
+    #[test]
+    fn bursts_amortize() {
+        let naive = AxiMaster::naive(12.0);
+        let burst = AxiMaster::bursting(12.0, 16);
+        let n = naive.fetch_cycles(64 * 1024);
+        let b = burst.fetch_cycles(64 * 1024);
+        assert!(b < n / 5.0, "burst {b} vs naive {n}");
+    }
+
+    #[test]
+    fn zero_bytes_zero_cycles() {
+        assert_eq!(AxiMaster::naive(12.0).fetch_cycles(0), 0.0);
+    }
+
+    #[test]
+    fn rounds_partial_words_up() {
+        let axi = AxiMaster::naive(10.0);
+        assert_eq!(axi.fetch_cycles(5), 2.0 * 10.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Naive HLS dataflow timing model (paper §III-B.2 / §IV).
+//!
+//! The paper's HLS designs are deliberately *unoptimized*: ONNX2C output
+//! compiled with no performance pragmas, so "the tool defaults to a safe
+//! method for mapping the C code to RTL ... executing tasks sequentially".
+//! The resulting datapath retires roughly one floating-point operation per
+//! initiation interval (~5 cycles: the un-pipelined fp32 add/mul latency)
+//! at 100 MHz, layer after layer, plus:
+//!
+//! * AXI-Lite setup / start / done-poll cycles per inference (dominates
+//!   ESPERTA: 2,686 total cycles for a 60-op network);
+//! * pipeline fill per layer;
+//! * DRAM fetch cycles for weights the BRAM allocator spilled
+//!   (BaselineNet's collapse).
+//!
+//! This is why shallow nets win (ESPERTA 5.33x, LogisticNet 2.03x) and
+//! deep 3-D CNNs lose (ReducedNet 0.16x, BaselineNet 0.01x) — the
+//! crossover emerges from the mechanism, not from fitting each row.
+
+use super::axi::AxiMaster;
+use super::bram::{BramAllocator, BramPlan, WeightPlacement};
+use crate::board::{Calibration, Zcu104};
+use crate::model::Manifest;
+
+/// One synthesized HLS accelerator.
+#[derive(Debug, Clone)]
+pub struct HlsDesign {
+    pub model: String,
+    pub plan: BramPlan,
+    /// Compute cycles per layer (ops x II + fill).
+    pub layer_cycles: Vec<f64>,
+    /// DRAM weight-fetch cycles per layer (0 if on-chip).
+    pub fetch_cycles: Vec<f64>,
+    pub axi_setup_cycles: f64,
+    pub clock_hz: f64,
+    /// Input staging time over AXI (s) — *excluded* from inference time,
+    /// like the paper's Fig 11 treatment, but shown in power traces.
+    pub input_stage_s: f64,
+}
+
+impl HlsDesign {
+    /// Synthesize (i.e., model) a manifest as a naive HLS accelerator.
+    pub fn synthesize(man: &Manifest, board: &Zcu104, calib: &Calibration) -> HlsDesign {
+        let plan = BramAllocator::new(&board.pl).allocate(man);
+        let axi = AxiMaster::naive(board.ddr_word_cycles);
+        let mut layer_cycles = Vec::with_capacity(man.layers.len());
+        let mut fetch_cycles = Vec::with_capacity(man.layers.len());
+        for (l, place) in man.layers.iter().zip(&plan.placement) {
+            let compute = l.ops as f64 * calib.hls_ii
+                + if l.ops > 0 { calib.hls_layer_fill_cycles } else { 0.0 };
+            layer_cycles.push(compute);
+            fetch_cycles.push(match place {
+                WeightPlacement::Dram => axi.fetch_cycles(l.weight_bytes),
+                WeightPlacement::OnChip => 0.0,
+            });
+        }
+        // feature maps that exceeded the BRAM budget round-trip DRAM
+        // (write + read) once per inference
+        let act_spill = axi.fetch_cycles(2 * plan.dram_act_bytes);
+        if act_spill > 0.0 {
+            if let Some(last) = fetch_cycles.last_mut() {
+                *last += act_spill;
+            }
+        }
+        HlsDesign {
+            model: man.name.clone(),
+            plan,
+            layer_cycles,
+            fetch_cycles,
+            axi_setup_cycles: calib.hls_axi_setup_cycles,
+            clock_hz: board.hls_clock_hz,
+            input_stage_s: man.input_bytes() as f64 / board.axi_bandwidth
+                // MMIO staging from a PYNQ notebook is much slower than
+                // raw AXI: per-word driver overhead dominates (Fig 11
+                // shows input loading exceeding ESPERTA inference time).
+                + man.input_elems() as f64 * 0.4e-6,
+        }
+    }
+
+    /// Total cycles per inference.
+    pub fn total_cycles(&self) -> f64 {
+        self.axi_setup_cycles
+            + self.layer_cycles.iter().sum::<f64>()
+            + self.fetch_cycles.iter().sum::<f64>()
+    }
+
+    /// Inference latency (s), input staging excluded (paper convention).
+    pub fn latency_s(&self) -> f64 {
+        self.total_cycles() / self.clock_hz
+    }
+
+    pub fn fps(&self) -> f64 {
+        1.0 / self.latency_s()
+    }
+
+    /// Fraction of time stalled on DRAM weight fetches.
+    pub fn fetch_stall_fraction(&self) -> f64 {
+        self.fetch_cycles.iter().sum::<f64>() / self.total_cycles()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::Manifest;
+    use crate::util::json::Json;
+
+    fn mini() -> Manifest {
+        Manifest::from_json(
+            &Json::parse(crate::model::manifest::testdata::MINI).unwrap(),
+        )
+        .unwrap()
+    }
+
+    fn design(man: &Manifest) -> HlsDesign {
+        HlsDesign::synthesize(man, &Zcu104::default(), &Calibration::default())
+    }
+
+    #[test]
+    fn cycle_model_components() {
+        let man = mini();
+        let d = design(&man);
+        let c = Calibration::default();
+        // layer 0: 608 ops * 5 + 64 fill; layer 1: flatten 0 ops -> 0;
+        // layer 2: 130 * 5 + 64
+        assert_eq!(d.layer_cycles[0], 640.0 * c.hls_ii + 64.0);
+        assert_eq!(d.layer_cycles[1], 0.0);
+        assert!(!d.plan.spills());
+        assert_eq!(d.fetch_cycles.iter().sum::<f64>(), 0.0);
+    }
+
+    #[test]
+    fn tiny_model_is_setup_dominated() {
+        let mut man = mini();
+        // strip to just the dense layer: ESPERTA-like
+        man.layers[0].ops = 0;
+        man.layers[0].macs = 0;
+        man.layers[0].params = 0;
+        man.layers[0].weight_bytes = 0;
+        man.total_ops = 130;
+        man.total_macs = 64;
+        man.total_params = 66;
+        man.weight_bytes = 264;
+        let d = design(&man);
+        let setup_frac = d.axi_setup_cycles / d.total_cycles();
+        assert!(setup_frac > 0.7, "setup fraction {setup_frac}");
+    }
+
+    #[test]
+    fn spill_adds_fetch_stall() {
+        let mut man = mini();
+        man.layers[2].weight_bytes = 4 * 1024 * 1024;
+        let d = design(&man);
+        assert!(d.plan.spills());
+        assert!(d.fetch_stall_fraction() > 0.9);
+    }
+
+    #[test]
+    fn latency_at_100mhz() {
+        let d = design(&mini());
+        let expected = d.total_cycles() / 100.0e6;
+        assert!((d.latency_s() - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn input_staging_excluded_from_latency() {
+        let d = design(&mini());
+        assert!(d.input_stage_s > 0.0);
+        // latency doesn't include staging
+        assert!((d.latency_s() - d.total_cycles() / d.clock_hz).abs() < 1e-15);
+    }
+}

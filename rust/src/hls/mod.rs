@@ -1,0 +1,10 @@
+//! Vitis-HLS custom-IP simulator (the paper's flexibility path: fp32,
+//! sigmoid/comparator/3-D operators, naive sequential dataflow).
+
+pub mod axi;
+pub mod bram;
+pub mod dataflow;
+
+pub use axi::AxiMaster;
+pub use bram::{BramAllocator, BramPlan, WeightPlacement};
+pub use dataflow::HlsDesign;

@@ -1,0 +1,29 @@
+//! `spaceinfer` — reproduction of *"Evaluating Four FPGA-accelerated Space
+//! Use Cases based on Neural Network Algorithms for On-board Inference"*
+//! (Antunes et al., MCSoC 2025).
+//!
+//! Layer 3 of the rust + JAX + Pallas stack: the on-board inference
+//! coordinator, the simulated ZCU104 testbed (ARM A53 / Vitis-AI DPU /
+//! Vitis-HLS custom IP), the power and resource models, and the report
+//! harness that regenerates every table and figure of the paper's
+//! evaluation section.  Numerics run for real (AOT-lowered HLO on the PJRT
+//! CPU client); latency and power come from the calibrated analytic
+//! simulators — see DESIGN.md §2 for the substitution table.
+
+pub mod util;
+pub mod model;
+pub mod board;
+pub mod cpu;
+pub mod dpu;
+pub mod hls;
+pub mod power;
+pub mod rad;
+pub mod resources;
+pub mod runtime;
+pub mod sensors;
+pub mod telemetry;
+pub mod coordinator;
+pub mod report;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

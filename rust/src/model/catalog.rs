@@ -1,0 +1,265 @@
+//! The model catalog: the six paper networks, their deployment targets,
+//! and the paper's published reference numbers (Tables I–III) used for
+//! calibration and for the paper-vs-measured columns in EXPERIMENTS.md.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Manifest, Precision};
+use crate::util::json::Json;
+
+/// Which accelerator the paper deploys a model on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// Vitis-AI DPU (INT8) — VAE encoder, CNetPlusScalar.
+    Dpu,
+    /// Vitis-HLS custom IP (fp32) — ESPERTA + MMS networks.
+    Hls,
+}
+
+impl Target {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Target::Dpu => "vitis-ai",
+            Target::Hls => "hls",
+        }
+    }
+}
+
+/// Paper Table III row (the published measurements we reproduce).
+#[derive(Debug, Clone, Copy)]
+pub struct PaperRow {
+    pub cpu_fps: f64,
+    pub accel_fps: f64,
+    pub speedup: f64,
+    pub cpu_p_board: f64,
+    pub cpu_p_mpsoc: f64,
+    pub accel_p_board: f64,
+    pub accel_p_mpsoc: f64,
+    pub cpu_energy_mj: f64,
+    pub accel_energy_mj: f64,
+}
+
+/// Static description of one use-case network.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    /// Catalog name ("vae", "cnet", "esperta", "logistic", "reduced",
+    /// "baseline").
+    pub name: &'static str,
+    /// Paper's display name.
+    pub display: &'static str,
+    pub target: Target,
+    /// Table I parameter count (ground truth; manifests must match).
+    pub table1_params: u64,
+    /// Table I operation count (paper's Netron convention).
+    pub table1_ops: u64,
+    pub paper: PaperRow,
+}
+
+/// The six evaluated networks, Table I + Table III of the paper.
+pub const MODELS: &[ModelInfo] = &[
+    ModelInfo {
+        name: "vae",
+        display: "VAE Encoder",
+        target: Target::Dpu,
+        table1_params: 395_692,
+        table1_ops: 83_417_100,
+        paper: PaperRow {
+            cpu_fps: 25.21, accel_fps: 606.65, speedup: 24.06,
+            cpu_p_board: 12.125, cpu_p_mpsoc: 2.75,
+            accel_p_board: 15.337, accel_p_mpsoc: 5.75,
+            cpu_energy_mj: 109.08, accel_energy_mj: 9.48,
+        },
+    },
+    ModelInfo {
+        name: "cnet",
+        display: "CNetPlusScalar",
+        target: Target::Dpu,
+        table1_params: 3_061_966,
+        table1_ops: 918_241_400,
+        paper: PaperRow {
+            cpu_fps: 4.79, accel_fps: 163.51, speedup: 34.16,
+            cpu_p_board: 12.862, cpu_p_mpsoc: 2.75,
+            accel_p_board: 15.987, accel_p_mpsoc: 6.75,
+            cpu_energy_mj: 574.11, accel_energy_mj: 41.28,
+        },
+    },
+    ModelInfo {
+        name: "esperta",
+        display: "ESPERTA",
+        target: Target::Hls,
+        table1_params: 24,
+        table1_ops: 60,
+        paper: PaperRow {
+            cpu_fps: 6932.0, accel_fps: 37231.0, speedup: 5.33,
+            cpu_p_board: 11.725, cpu_p_mpsoc: 2.0,
+            accel_p_board: 10.6, accel_p_mpsoc: 1.5,
+            cpu_energy_mj: 0.29, accel_energy_mj: 0.04,
+        },
+    },
+    ModelInfo {
+        name: "logistic",
+        display: "LogisticNet",
+        target: Target::Hls,
+        table1_params: 8_196,
+        table1_ops: 30_720,
+        paper: PaperRow {
+            cpu_fps: 319.0, accel_fps: 646.0, speedup: 2.03,
+            cpu_p_board: 11.725, cpu_p_mpsoc: 2.25,
+            accel_p_board: 10.7, accel_p_mpsoc: 1.75,
+            cpu_energy_mj: 7.03, accel_energy_mj: 2.71,
+        },
+    },
+    ModelInfo {
+        name: "reduced",
+        display: "ReducedNet",
+        target: Target::Hls,
+        table1_params: 44_624,
+        table1_ops: 502_961,
+        paper: PaperRow {
+            cpu_fps: 186.0, accel_fps: 30.0, speedup: 0.16,
+            cpu_p_board: 11.9, cpu_p_mpsoc: 2.25,
+            accel_p_board: 10.512, accel_p_mpsoc: 1.5,
+            cpu_energy_mj: 12.05, accel_energy_mj: 49.73,
+        },
+    },
+    ModelInfo {
+        name: "baseline",
+        display: "BaselineNet",
+        target: Target::Hls,
+        table1_params: 915_492,
+        table1_ops: 110_541_696,
+        paper: PaperRow {
+            cpu_fps: 42.0, accel_fps: 0.21, speedup: 0.01,
+            cpu_p_board: 12.725, cpu_p_mpsoc: 2.75,
+            accel_p_board: 10.537, accel_p_mpsoc: 1.75,
+            cpu_energy_mj: 63.45, accel_energy_mj: 8467.82,
+        },
+    },
+];
+
+/// Look up a catalog entry by name.
+pub fn model_info(name: &str) -> Result<&'static ModelInfo> {
+    MODELS
+        .iter()
+        .find(|m| m.name == name)
+        .with_context(|| format!("unknown model {name:?}"))
+}
+
+/// The artifact catalog on disk: manifests (+ HLO paths) under `artifacts/`.
+#[derive(Debug)]
+pub struct Catalog {
+    pub dir: PathBuf,
+    /// tag ("vae.fp32") -> manifest
+    pub manifests: BTreeMap<String, Manifest>,
+    /// tags that also have an executable `.hlo.txt`
+    pub executable: Vec<String>,
+}
+
+impl Catalog {
+    /// Load `artifacts/index.json` and every referenced manifest.
+    pub fn load(dir: &Path) -> Result<Catalog> {
+        let index_path = dir.join("index.json");
+        let text = std::fs::read_to_string(&index_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                index_path.display()
+            )
+        })?;
+        let index = Json::parse(&text)?;
+        let mut manifests = BTreeMap::new();
+        let mut executable = Vec::new();
+        for tag in index.req("artifacts")?.as_arr()? {
+            executable.push(tag.as_str()?.to_string());
+        }
+        let mut tags: Vec<String> = executable.clone();
+        for tag in index.req("manifests")?.as_arr()? {
+            tags.push(tag.as_str()?.to_string());
+        }
+        tags.sort();
+        tags.dedup();
+        for tag in tags {
+            let path = dir.join(format!("{tag}.manifest.json"));
+            let man = Manifest::load(&path)?;
+            manifests.insert(tag, man);
+        }
+        Ok(Catalog { dir: dir.to_path_buf(), manifests, executable })
+    }
+
+    /// Manifest for `name` at `precision`.
+    pub fn manifest(&self, name: &str, precision: Precision) -> Result<&Manifest> {
+        let tag = format!("{name}.{}", precision.as_str());
+        match self.manifests.get(&tag) {
+            Some(m) => Ok(m),
+            None => bail!("no manifest {tag:?} in {}", self.dir.display()),
+        }
+    }
+
+    /// Manifest for a model's *deployed* variant (DPU models are int8,
+    /// HLS models fp32 — paper §III-B).
+    pub fn deployed(&self, info: &ModelInfo) -> Result<&Manifest> {
+        let prec = match info.target {
+            Target::Dpu => Precision::Int8,
+            Target::Hls => Precision::Fp32,
+        };
+        self.manifest(info.name, prec)
+    }
+
+    /// Path of the executable HLO for a tag, if present.
+    pub fn hlo_path(&self, tag: &str) -> Option<PathBuf> {
+        if self.executable.iter().any(|t| t == tag) {
+            Some(self.dir.join(format!("{tag}.hlo.txt")))
+        } else {
+            None
+        }
+    }
+
+    /// Path of the golden-IO JSON for a tag.
+    pub fn io_path(&self, tag: &str) -> PathBuf {
+        self.dir.join(format!("{tag}.io.json"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_models_with_paper_rows() {
+        assert_eq!(MODELS.len(), 6);
+        for m in MODELS {
+            assert!(m.paper.cpu_fps > 0.0);
+            assert!(m.paper.accel_fps > 0.0);
+            // E = P * t must hold for the published rows within rounding
+            let t_cpu_ms = 1000.0 / m.paper.cpu_fps;
+            let e = m.paper.cpu_p_mpsoc * t_cpu_ms;
+            // 5% slack: the paper's FPS column is rounded (42 FPS x
+            // 2.75 W gives 65.5 mJ vs the printed 63.45)
+            let rel = (e - m.paper.cpu_energy_mj).abs() / m.paper.cpu_energy_mj;
+            assert!(rel < 0.05, "{}: E=P*t violated ({e} vs {})",
+                    m.name, m.paper.cpu_energy_mj);
+        }
+    }
+
+    #[test]
+    fn speedups_consistent_with_fps() {
+        for m in MODELS {
+            let s = m.paper.accel_fps / m.paper.cpu_fps;
+            // BaselineNet: the paper prints 0.01x for a 0.005 fps ratio
+            // (one significant digit); allow that rounding.
+            let rel = (s - m.paper.speedup).abs() / m.paper.speedup;
+            assert!(rel < 0.55, "{}: speedup {} vs fps ratio {s}",
+                    m.name, m.paper.speedup);
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(model_info("vae").is_ok());
+        assert!(model_info("nope").is_err());
+        assert_eq!(model_info("cnet").unwrap().target, Target::Dpu);
+        assert_eq!(model_info("baseline").unwrap().target, Target::Hls);
+    }
+}

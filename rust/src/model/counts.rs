@@ -1,0 +1,149 @@
+//! Cross-language count validation.
+//!
+//! Recomputes MAC/op/param counts from layer dimensions alone, under the
+//! DESIGN.md §8 convention, and checks them against what the python side
+//! wrote into the manifest.  Any drift between the two implementations of
+//! the convention fails loudly (used by integration tests and `inspect`).
+
+use anyhow::{bail, Result};
+
+use super::manifest::{Layer, LayerKind, Manifest};
+
+/// Recomputed counts for one layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Counts {
+    pub macs: u64,
+    pub ops: u64,
+    pub params: u64,
+}
+
+/// Recompute counts for a layer from its shapes (DESIGN §8 convention).
+pub fn recount(layer: &Layer) -> Result<Counts> {
+    let out_elems = layer.out_elems();
+    let has_act = layer.act != "none";
+    let counts = match layer.kind {
+        LayerKind::Conv2d | LayerKind::Conv3d => {
+            let cin = *layer.in_shape.last().unwrap() as u64;
+            let cout = *layer.out_shape.last().unwrap() as u64;
+            // kernel volume from params: params = cout*(k^d*cin + 1)
+            if layer.params == 0 || layer.params % cout != 0 {
+                bail!("conv params {} not divisible by cout {cout}", layer.params);
+            }
+            let kvol = layer.params / cout - 1;
+            if kvol % cin != 0 {
+                bail!("conv kernel volume {kvol} not divisible by cin {cin}");
+            }
+            let macs = out_elems * kvol;
+            let mut ops = 2 * macs + out_elems;
+            if has_act {
+                ops += out_elems;
+            }
+            Counts { macs, ops, params: cout * (kvol + 1) }
+        }
+        LayerKind::Dense => {
+            let din = layer.in_shape[1] as u64;
+            let dout = layer.out_shape[1] as u64;
+            let macs = din * dout;
+            let mut ops = 2 * macs + dout;
+            if has_act {
+                ops += dout;
+            }
+            Counts { macs, ops, params: dout * (din + 1) }
+        }
+        LayerKind::DenseHeads => {
+            let din = layer.in_shape[1] as u64;
+            let width = layer.out_shape[1] as u64; // heads * dout
+            let macs = din * width;
+            let ops = 2 * macs + width;
+            Counts { macs, ops, params: width * (din + 1) }
+        }
+        LayerKind::EspertaBank => {
+            let din = layer.in_shape[1] as u64;
+            let n = layer.out_shape[1] as u64 / 2;
+            let macs = n * din;
+            Counts { macs, ops: 2 * macs + 3 * n, params: n * (din + 1) }
+        }
+        LayerKind::MaxPool2d | LayerKind::MaxPool3d => {
+            let in_elems: u64 = layer.in_shape.iter().skip(1).product::<usize>() as u64;
+            let win = in_elems / out_elems;
+            Counts { macs: 0, ops: out_elems * (win - 1), params: 0 }
+        }
+        LayerKind::AvgPool3d => {
+            let in_elems: u64 = layer.in_shape.iter().skip(1).product::<usize>() as u64;
+            let win = in_elems / out_elems;
+            Counts { macs: 0, ops: out_elems * win, params: 0 }
+        }
+        LayerKind::Flatten | LayerKind::ConcatScalar => {
+            Counts { macs: 0, ops: 0, params: 0 }
+        }
+    };
+    Ok(counts)
+}
+
+/// Validate every layer of a manifest against the recomputation.
+pub fn validate_manifest(man: &Manifest) -> Result<()> {
+    for (i, layer) in man.layers.iter().enumerate() {
+        let c = recount(layer)?;
+        if c.macs != layer.macs || c.ops != layer.ops || c.params != layer.params {
+            bail!(
+                "manifest {:?} layer {i} ({:?}): python says \
+                 macs={} ops={} params={}, rust recount says \
+                 macs={} ops={} params={}",
+                man.name, layer.kind, layer.macs, layer.ops, layer.params,
+                c.macs, c.ops, c.params
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn mini() -> Manifest {
+        let src = r#"{
+          "name":"mini","precision":"fp32",
+          "inputs":{"x":[1,4,4,1]},
+          "input_order":["x"],
+          "output_shape":[1,2],
+          "layers":[
+            {"kind":"conv2d","in_shape":[1,4,4,1],"out_shape":[1,4,4,2],
+             "macs":288,"ops":640,"params":20,"weight_bytes":80,
+             "act_bytes":128,"act":"relu"},
+            {"kind":"flatten","in_shape":[1,4,4,2],"out_shape":[1,32],
+             "macs":0,"ops":0,"params":0,"weight_bytes":0,
+             "act_bytes":128,"act":"none"},
+            {"kind":"dense","in_shape":[1,32],"out_shape":[1,2],
+             "macs":64,"ops":130,"params":66,"weight_bytes":264,
+             "act_bytes":8,"act":"none"}],
+          "total_macs":352,"total_ops":770,"total_params":86,
+          "weight_bytes":344}"#;
+        Manifest::from_json(&Json::parse(src).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn conv_recount_matches() {
+        let m = mini();
+        // conv2d 1->2 k3 on 4x4: macs = 32 out * 9 = 288
+        let c = recount(&m.layers[0]).unwrap();
+        assert_eq!(c, Counts { macs: 288, ops: 640, params: 20 });
+        validate_manifest(&m).unwrap();
+    }
+
+    #[test]
+    fn detects_drift() {
+        let mut m = mini();
+        m.layers[2].macs = 63;
+        assert!(validate_manifest(&m).is_err());
+    }
+
+    #[test]
+    fn dense_recount() {
+        let m = mini();
+        let c = recount(&m.layers[2]).unwrap();
+        assert_eq!(c.macs, 64);
+        assert_eq!(c.params, 66);
+    }
+}

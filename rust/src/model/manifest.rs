@@ -1,0 +1,336 @@
+//! Model manifests — the hw-codesign interchange format.
+//!
+//! The python compile path (`python -m compile.aot`) emits one manifest
+//! JSON per model variant: per-layer kind, shapes, MAC/op/param counts and
+//! byte footprints.  Every analytic simulator (A53, DPU, HLS) and the
+//! resource estimator consume this structure; the PJRT runtime pairs it
+//! with the matching `.hlo.txt` executable.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Numeric precision of a deployed variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// IEEE-754 binary32 — the CPU baseline and Vitis-HLS path.
+    Fp32,
+    /// INT8 post-training quantization — the Vitis-AI DPU path.
+    Int8,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s {
+            "fp32" => Ok(Precision::Fp32),
+            "int8" => Ok(Precision::Int8),
+            _ => bail!("unknown precision {s:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+/// Layer taxonomy shared with `python/compile/models/graph.py`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv2d,
+    Conv3d,
+    MaxPool2d,
+    MaxPool3d,
+    AvgPool3d,
+    Flatten,
+    ConcatScalar,
+    Dense,
+    DenseHeads,
+    EspertaBank,
+}
+
+impl LayerKind {
+    pub fn parse(s: &str) -> Result<LayerKind> {
+        Ok(match s {
+            "conv2d" => LayerKind::Conv2d,
+            "conv3d" => LayerKind::Conv3d,
+            "maxpool2d" => LayerKind::MaxPool2d,
+            "maxpool3d" => LayerKind::MaxPool3d,
+            "avgpool3d" => LayerKind::AvgPool3d,
+            "flatten" => LayerKind::Flatten,
+            "concat_scalar" => LayerKind::ConcatScalar,
+            "dense" => LayerKind::Dense,
+            "dense_heads" => LayerKind::DenseHeads,
+            "esperta_bank" => LayerKind::EspertaBank,
+            _ => bail!("unknown layer kind {s:?}"),
+        })
+    }
+
+    /// Does this layer run MACs (vs pure data movement / reduction)?
+    pub fn is_compute(&self) -> bool {
+        matches!(
+            self,
+            LayerKind::Conv2d
+                | LayerKind::Conv3d
+                | LayerKind::Dense
+                | LayerKind::DenseHeads
+                | LayerKind::EspertaBank
+        )
+    }
+
+    /// Operators the Vitis-AI DPU supports (paper §III-B: no sigmoid /
+    /// comparators / 3-D convolution / 3-D pooling).
+    pub fn dpu_supported(&self) -> bool {
+        matches!(
+            self,
+            LayerKind::Conv2d
+                | LayerKind::MaxPool2d
+                | LayerKind::Flatten
+                | LayerKind::ConcatScalar
+                | LayerKind::Dense
+                | LayerKind::DenseHeads
+        )
+    }
+}
+
+/// One layer of a model manifest.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub kind: LayerKind,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub macs: u64,
+    pub ops: u64,
+    pub params: u64,
+    pub weight_bytes: u64,
+    pub act_bytes: u64,
+    /// Activation function name ("none" | "relu" | "leaky_relu" | "sigmoid").
+    pub act: String,
+}
+
+impl Layer {
+    fn from_json(j: &Json) -> Result<Layer> {
+        Ok(Layer {
+            kind: LayerKind::parse(j.req("kind")?.as_str()?)?,
+            in_shape: j.req("in_shape")?.as_shape()?,
+            out_shape: j.req("out_shape")?.as_shape()?,
+            macs: j.req("macs")?.as_i64()? as u64,
+            ops: j.req("ops")?.as_i64()? as u64,
+            params: j.req("params")?.as_i64()? as u64,
+            weight_bytes: j.req("weight_bytes")?.as_i64()? as u64,
+            act_bytes: j.req("act_bytes")?.as_i64()? as u64,
+            act: j.req("act")?.as_str()?.to_string(),
+        })
+    }
+
+    /// Elements in the output activation.
+    pub fn out_elems(&self) -> u64 {
+        self.out_shape.iter().skip(1).product::<usize>() as u64
+    }
+}
+
+/// A parsed model manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub precision: Precision,
+    /// Input name -> shape, in HLO parameter order.
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub output_shape: Vec<usize>,
+    pub layers: Vec<Layer>,
+    pub total_macs: u64,
+    pub total_ops: u64,
+    pub total_params: u64,
+    pub weight_bytes: u64,
+}
+
+impl Manifest {
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let order: Vec<String> = j
+            .req("input_order")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+        let shapes = j.req("inputs")?.as_obj()?;
+        let inputs = order
+            .iter()
+            .map(|n| {
+                let shape = shapes
+                    .get(n)
+                    .with_context(|| format!("input {n} missing from shapes"))?
+                    .as_shape()?;
+                Ok((n.clone(), shape))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let layers = j
+            .req("layers")?
+            .as_arr()?
+            .iter()
+            .map(Layer::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let m = Manifest {
+            name: j.req("name")?.as_str()?.to_string(),
+            precision: Precision::parse(j.req("precision")?.as_str()?)?,
+            inputs,
+            output_shape: j.req("output_shape")?.as_shape()?,
+            layers,
+            total_macs: j.req("total_macs")?.as_i64()? as u64,
+            total_ops: j.req("total_ops")?.as_i64()? as u64,
+            total_params: j.req("total_params")?.as_i64()? as u64,
+            weight_bytes: j.req("weight_bytes")?.as_i64()? as u64,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Manifest::from_json(&Json::parse(&text)?)
+    }
+
+    /// Internal consistency: totals match layer sums, shapes chain.
+    pub fn validate(&self) -> Result<()> {
+        let macs: u64 = self.layers.iter().map(|l| l.macs).sum();
+        let ops: u64 = self.layers.iter().map(|l| l.ops).sum();
+        let params: u64 = self.layers.iter().map(|l| l.params).sum();
+        if macs != self.total_macs || ops != self.total_ops || params != self.total_params {
+            bail!(
+                "manifest {:?}: totals disagree with layer sums \
+                 (macs {} vs {}, ops {} vs {}, params {} vs {})",
+                self.name, self.total_macs, macs, self.total_ops, ops,
+                self.total_params, params
+            );
+        }
+        for (a, b) in self.layers.iter().zip(self.layers.iter().skip(1)) {
+            if a.out_shape != b.in_shape {
+                bail!(
+                    "manifest {:?}: layer shape chain broken ({:?} -> {:?})",
+                    self.name, a.out_shape, b.in_shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Total input elements (all inputs).
+    pub fn input_elems(&self) -> u64 {
+        self.inputs
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>() as u64)
+            .sum()
+    }
+
+    /// Input bytes at fp32 (what the sensor DMA stages).
+    pub fn input_bytes(&self) -> u64 {
+        self.input_elems() * 4
+    }
+
+    /// Output elements.
+    pub fn output_elems(&self) -> u64 {
+        self.output_shape.iter().product::<usize>() as u64
+    }
+
+    /// Is every layer DPU-mappable? (paper §III-B gate for Vitis AI)
+    pub fn dpu_compatible(&self) -> bool {
+        self.layers.iter().all(|l| l.kind.dpu_supported())
+            && !self.layers.iter().any(|l| l.act == "sigmoid" || l.act == "leaky_relu")
+    }
+}
+
+/// Shared test fixture (used by several modules' unit tests).
+#[cfg(test)]
+pub(crate) mod testdata {
+    pub(crate) const MINI: &str = r#"{
+      "name":"mini","precision":"fp32",
+      "inputs":{"x":[1,4,4,1]},
+      "input_order":["x"],
+      "output_shape":[1,2],
+      "layers":[
+        {"kind":"conv2d","in_shape":[1,4,4,1],"out_shape":[1,4,4,2],
+         "macs":288,"ops":640,"params":20,"weight_bytes":80,
+         "act_bytes":128,"act":"relu"},
+        {"kind":"flatten","in_shape":[1,4,4,2],"out_shape":[1,32],
+         "macs":0,"ops":0,"params":0,"weight_bytes":0,
+         "act_bytes":128,"act":"none"},
+        {"kind":"dense","in_shape":[1,32],"out_shape":[1,2],
+         "macs":64,"ops":130,"params":66,"weight_bytes":264,
+         "act_bytes":8,"act":"none"}],
+      "total_macs":352,"total_ops":770,"total_params":86,
+      "weight_bytes":344}"#;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "name":"mini","precision":"fp32",
+      "inputs":{"x":[1,4,4,1]},
+      "input_order":["x"],
+      "output_shape":[1,2],
+      "layers":[
+        {"kind":"conv2d","in_shape":[1,4,4,1],"out_shape":[1,4,4,2],
+         "macs":288,"ops":640,"params":20,"weight_bytes":80,
+         "act_bytes":128,"act":"relu"},
+        {"kind":"flatten","in_shape":[1,4,4,2],"out_shape":[1,32],
+         "macs":0,"ops":0,"params":0,"weight_bytes":0,
+         "act_bytes":128,"act":"none"},
+        {"kind":"dense","in_shape":[1,32],"out_shape":[1,2],
+         "macs":64,"ops":130,"params":66,"weight_bytes":264,
+         "act_bytes":8,"act":"none"}],
+      "total_macs":352,"total_ops":770,"total_params":86,
+      "weight_bytes":344}"#;
+
+    #[test]
+    fn parses_mini() {
+        let m = Manifest::from_json(&Json::parse(MINI).unwrap()).unwrap();
+        assert_eq!(m.name, "mini");
+        assert_eq!(m.layers.len(), 3);
+        assert_eq!(m.total_params, 86);
+        assert!(m.dpu_compatible());
+        assert_eq!(m.input_bytes(), 64);
+        assert_eq!(m.output_elems(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_totals() {
+        let bad = MINI.replace("\"total_macs\":352", "\"total_macs\":999");
+        assert!(Manifest::from_json(&Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn rejects_broken_chain() {
+        let bad = MINI.replace(
+            "\"kind\":\"flatten\",\"in_shape\":[1,4,4,2]",
+            "\"kind\":\"flatten\",\"in_shape\":[1,9,9,2]",
+        );
+        assert!(Manifest::from_json(&Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn sigmoid_blocks_dpu() {
+        let s = MINI.replace("\"act\":\"relu\"", "\"act\":\"sigmoid\"");
+        let m = Manifest::from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert!(!m.dpu_compatible());
+    }
+
+    #[test]
+    fn conv3d_blocks_dpu() {
+        assert!(!LayerKind::Conv3d.dpu_supported());
+        assert!(!LayerKind::MaxPool3d.dpu_supported());
+        assert!(LayerKind::Conv2d.dpu_supported());
+    }
+
+    #[test]
+    fn precision_roundtrip() {
+        assert_eq!(Precision::parse("fp32").unwrap(), Precision::Fp32);
+        assert_eq!(Precision::Int8.as_str(), "int8");
+        assert!(Precision::parse("fp16").is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Model metadata: manifests (the python->rust interchange), the model
+//! catalog, and count cross-checks.
+
+pub mod catalog;
+pub mod counts;
+pub mod manifest;
+
+pub use catalog::{Catalog, ModelInfo};
+pub use manifest::{Layer, LayerKind, Manifest, Precision};

@@ -1,0 +1,27 @@
+//! Energy-per-inference accounting (paper convention: E = P_MPSoC × t).
+
+/// Millijoules for one inference: MPSoC watts × latency seconds × 1000.
+pub fn energy_mj(p_mpsoc_w: f64, latency_s: f64) -> f64 {
+    p_mpsoc_w * latency_s * 1000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_rows_reproduce() {
+        // VAE CPU: 2.75 W at 25.21 FPS -> 109.08 mJ (Table III)
+        let e = energy_mj(2.75, 1.0 / 25.21);
+        assert!((e - 109.08).abs() < 0.05, "{e}");
+        // ESPERTA HLS: 1.5 W at 37231 FPS -> 0.04 mJ
+        let e = energy_mj(1.5, 1.0 / 37231.0);
+        assert!((e - 0.04).abs() < 0.001, "{e}");
+    }
+
+    #[test]
+    fn linear_in_both_factors() {
+        assert_eq!(energy_mj(2.0, 0.5), 2.0 * energy_mj(1.0, 0.5));
+        assert_eq!(energy_mj(2.0, 0.5), 2.0 * energy_mj(2.0, 0.25));
+    }
+}

@@ -1,0 +1,10 @@
+//! Power and energy models: rails, per-implementation draw, time-series
+//! traces (Figures 9–13), and energy-per-inference accounting.
+
+pub mod energy;
+pub mod model;
+pub mod trace;
+
+pub use energy::energy_mj;
+pub use model::{Implementation, PowerModel};
+pub use trace::{Phase, TracePoint, TraceBuilder};

@@ -1,0 +1,133 @@
+//! Steady-state power model per implementation (Table III's P columns).
+//!
+//! `P_MPSoC = P_PS + P_PL_static(design) + P_PL_dyn(design, activity)`;
+//! `P_board = P_MPSoC + peripheral floor (+ DDR activity when the PS is
+//! the one computing)`.
+//!
+//! Calibration scope (DESIGN.md §4): CPU-row MPSoC power comes straight
+//! from the paper (baseline anchoring); the DPU *static* base is anchored
+//! on the single VAE row; every other accelerator figure — CNet DPU power,
+//! all HLS rows, all board rows, all energies — is predicted.
+
+use crate::board::Calibration;
+use crate::dpu::DpuSchedule;
+use crate::hls::HlsDesign;
+
+/// What is executing on the MPSoC.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Implementation {
+    /// PS runs the network (PyTorch-equivalent); PL unconfigured.
+    Cpu { p_mpsoc_paper: f64 },
+    /// DPU configured and running; PS polls.
+    Dpu { mac_duty: f64 },
+    /// HLS IP configured and running; PS polls.
+    Hls { kiloluts: f64, brams: f64, duty: f64 },
+}
+
+/// Power model bound to a calibration.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    pub calib: Calibration,
+}
+
+impl PowerModel {
+    pub fn new(calib: Calibration) -> PowerModel {
+        PowerModel { calib }
+    }
+
+    /// MPSoC (INT-rail) power during inference.
+    pub fn mpsoc_w(&self, imp: &Implementation) -> f64 {
+        let c = &self.calib;
+        match imp {
+            Implementation::Cpu { p_mpsoc_paper } => *p_mpsoc_paper,
+            Implementation::Dpu { mac_duty } => c.p_dpu_base + c.p_dpu_dyn * mac_duty,
+            Implementation::Hls { kiloluts, brams, duty } => {
+                c.p_hls_base
+                    + c.p_hls_per_kilolut * kiloluts
+                    + c.p_hls_per_bram * brams
+                    + 0.05 * duty // datapath toggle, small by construction
+            }
+        }
+    }
+
+    /// MPSoC power when idle (after reboot, before any bitstream).
+    pub fn mpsoc_idle_w(&self) -> f64 {
+        self.calib.p_ps_idle
+    }
+
+    /// Board (12 V rail) power during inference.
+    pub fn board_w(&self, imp: &Implementation) -> f64 {
+        let ddr = match imp {
+            Implementation::Cpu { .. } => self.calib.p_ddr_cpu,
+            _ => 0.15, // accelerator DMA keeps DDR mildly active
+        };
+        self.mpsoc_w(imp) + self.calib.p_periph + ddr
+    }
+
+    /// MPSoC power during bitstream configuration (the Fig 13 spike).
+    pub fn config_spike_w(&self) -> f64 {
+        self.calib.p_ps_idle + self.calib.p_config_spike
+    }
+
+    /// Convenience constructors from scheduled designs.
+    pub fn dpu_impl(sched: &DpuSchedule) -> Implementation {
+        Implementation::Dpu { mac_duty: sched.mac_duty() }
+    }
+
+    pub fn hls_impl(design: &HlsDesign, luts: u64, duty: f64) -> Implementation {
+        Implementation::Hls {
+            kiloluts: luts as f64 / 1000.0,
+            brams: design.plan.brams(),
+            duty,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pm() -> PowerModel {
+        PowerModel::new(Calibration::default())
+    }
+
+    #[test]
+    fn cpu_rows_are_anchored() {
+        let p = pm().mpsoc_w(&Implementation::Cpu { p_mpsoc_paper: 2.75 });
+        assert_eq!(p, 2.75);
+    }
+
+    #[test]
+    fn dpu_power_scales_with_duty() {
+        let lo = pm().mpsoc_w(&Implementation::Dpu { mac_duty: 0.26 });
+        let hi = pm().mpsoc_w(&Implementation::Dpu { mac_duty: 0.85 });
+        assert!(hi > lo);
+        // paper range: 5.75 (VAE) .. 6.75 (CNet)
+        assert!((5.2..6.2).contains(&lo), "{lo}");
+        assert!((6.2..7.2).contains(&hi), "{hi}");
+    }
+
+    #[test]
+    fn hls_power_in_paper_band() {
+        // ESPERTA-like: 8.1 kLUT, 1.5 BRAM
+        let p = pm().mpsoc_w(&Implementation::Hls {
+            kiloluts: 8.1, brams: 1.5, duty: 1.0,
+        });
+        assert!((1.3..2.0).contains(&p), "{p}");
+        // all HLS designs must draw less than any CPU row (>= 2.0 W)
+        assert!(p < 2.0);
+    }
+
+    #[test]
+    fn board_exceeds_mpsoc_by_peripheral_floor() {
+        let m = pm();
+        let imp = Implementation::Dpu { mac_duty: 0.5 };
+        assert!(m.board_w(&imp) - m.mpsoc_w(&imp) > 8.5);
+    }
+
+    #[test]
+    fn config_spike_above_idle() {
+        let m = pm();
+        assert!(m.config_spike_w() > m.mpsoc_idle_w() + 2.0);
+    }
+}

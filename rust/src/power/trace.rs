@@ -1,0 +1,269 @@
+//! Power-vs-time trace generation (Figures 9–13).
+//!
+//! The paper's figures plot the MPSoC INT-rail (Figs 9–12) or total board
+//! power (Fig 13) sampled over a run: reboot → CPU inference window →
+//! bitstream configuration spike → input staging → FPGA inference window.
+//! `TraceBuilder` composes those phases from the power model and the
+//! timing simulators; the report harness renders them as CSV + ASCII.
+
+use crate::power::model::{Implementation, PowerModel};
+use crate::util::prng::Prng;
+
+/// Phases of a measurement run (the grey/blue/orange bands of Figs 9–12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Idle,
+    CpuInference,
+    BitstreamLoad,
+    InputStaging,
+    FpgaInference,
+    Readback,
+}
+
+impl Phase {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::Idle => "idle",
+            Phase::CpuInference => "cpu",
+            Phase::BitstreamLoad => "bitstream",
+            Phase::InputStaging => "staging",
+            Phase::FpgaInference => "fpga",
+            Phase::Readback => "readback",
+        }
+    }
+}
+
+/// One sample of the trace.
+#[derive(Debug, Clone)]
+pub struct TracePoint {
+    pub t_s: f64,
+    pub power_w: f64,
+    pub phase: Phase,
+}
+
+/// Builds phase-structured traces with measurement-like jitter.
+pub struct TraceBuilder {
+    pub model: PowerModel,
+    pub sample_hz: f64,
+    /// Gaussian measurement noise (W, 1σ) — the INA226-style ripple
+    /// visible in the paper's figures.
+    pub noise_w: f64,
+    points: Vec<TracePoint>,
+    t: f64,
+    rng: Prng,
+}
+
+impl TraceBuilder {
+    pub fn new(model: PowerModel, seed: u64) -> TraceBuilder {
+        TraceBuilder {
+            model,
+            sample_hz: 100.0,
+            noise_w: 0.045,
+            points: Vec::new(),
+            t: 0.0,
+            rng: Prng::new(seed),
+        }
+    }
+
+    /// Append a constant-power phase of `dur_s`.
+    pub fn phase(&mut self, phase: Phase, power_w: f64, dur_s: f64) -> &mut Self {
+        let n = ((dur_s * self.sample_hz).ceil() as usize).max(1);
+        for _ in 0..n {
+            let noise = self.rng.normal() * self.noise_w;
+            self.points.push(TracePoint {
+                t_s: self.t,
+                power_w: (power_w + noise).max(0.0),
+                phase,
+            });
+            self.t += 1.0 / self.sample_hz;
+        }
+        self
+    }
+
+    /// Append an inference window: `n` inferences of `t_inf` seconds at
+    /// `p_active`, with the dynamic component visibly toggling (the
+    /// min/max swing the paper reads dynamic power from).
+    pub fn inference_window(
+        &mut self,
+        phase: Phase,
+        p_active: f64,
+        p_swing: f64,
+        n: u64,
+        t_inf_s: f64,
+    ) -> &mut Self {
+        let total = n as f64 * t_inf_s;
+        let samples = ((total * self.sample_hz).ceil() as usize).max(2);
+        for i in 0..samples {
+            let toggle = if i % 2 == 0 { 0.0 } else { -p_swing };
+            let noise = self.rng.normal() * self.noise_w;
+            self.points.push(TracePoint {
+                t_s: self.t,
+                power_w: (p_active + toggle + noise).max(0.0),
+                phase,
+            });
+            self.t += total / samples as f64;
+        }
+        self
+    }
+
+    pub fn build(&mut self) -> Vec<TracePoint> {
+        std::mem::take(&mut self.points)
+    }
+
+    /// Standard Fig 9–12 run: reboot-idle, CPU window (blue), idle,
+    /// bitstream (grey spike), staging, FPGA window (orange).
+    pub fn standard_run(
+        mut self,
+        imp: &Implementation,
+        cpu_p_mpsoc: f64,
+        n_inputs: u64,
+        t_cpu_s: f64,
+        t_stage_s: f64,
+        t_fpga_s: f64,
+    ) -> Vec<TracePoint> {
+        let idle = self.model.mpsoc_idle_w();
+        let p_fpga = self.model.mpsoc_w(imp);
+        let spike = self.model.config_spike_w();
+        let t_config = self.model.calib.t_config;
+        // compress long windows so every figure renders at a useful scale
+        let window = |t: f64| (t * n_inputs as f64).clamp(2.0, 40.0);
+        self.phase(Phase::Idle, idle, 2.0);
+        self.inference_window(Phase::CpuInference, cpu_p_mpsoc, 0.25, 1,
+                              window(t_cpu_s));
+        self.phase(Phase::Idle, idle, 2.0);
+        self.phase(Phase::BitstreamLoad, spike, t_config);
+        self.phase(Phase::Idle, idle, 1.0);
+        self.inference_window(Phase::InputStaging, idle + 0.35, 0.1, 1,
+                              (t_stage_s * n_inputs as f64).clamp(0.5, 20.0));
+        self.inference_window(Phase::FpgaInference, p_fpga, 0.3, 1,
+                              window(t_fpga_s));
+        self.phase(Phase::Idle, idle, 2.0);
+        self.build()
+    }
+}
+
+/// Render a trace as CSV (t_s, power_w, phase).
+pub fn to_csv(points: &[TracePoint]) -> String {
+    let mut out = String::from("t_s,power_w,phase\n");
+    for p in points {
+        out.push_str(&format!("{:.4},{:.4},{}\n", p.t_s, p.power_w, p.phase.label()));
+    }
+    out
+}
+
+/// Render a coarse ASCII plot (for terminal inspection of the figure).
+pub fn to_ascii(points: &[TracePoint], width: usize, height: usize) -> String {
+    if points.is_empty() {
+        return String::new();
+    }
+    let t_max = points.last().unwrap().t_s.max(1e-9);
+    let p_max = points.iter().map(|p| p.power_w).fold(0.0, f64::max) * 1.05;
+    let mut grid = vec![vec![b' '; width]; height];
+    for p in points {
+        let x = ((p.t_s / t_max) * (width - 1) as f64) as usize;
+        let y = ((p.power_w / p_max) * (height - 1) as f64) as usize;
+        let row = height - 1 - y.min(height - 1);
+        let ch = match p.phase {
+            Phase::CpuInference => b'b',
+            Phase::FpgaInference => b'o',
+            Phase::BitstreamLoad => b'#',
+            Phase::InputStaging => b's',
+            _ => b'.',
+        };
+        grid[row][x.min(width - 1)] = ch;
+    }
+    let mut out = String::new();
+    for row in grid {
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "0 .. {:.1}s   peak {:.2} W   (b=cpu o=fpga #=bitstream s=staging)\n",
+        t_max, p_max / 1.05
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::board::Calibration;
+
+    fn builder() -> TraceBuilder {
+        TraceBuilder::new(PowerModel::new(Calibration::default()), 7)
+    }
+
+    #[test]
+    fn phases_are_ordered_in_time() {
+        let tr = builder().standard_run(
+            &Implementation::Dpu { mac_duty: 0.3 }, 2.75, 1000, 0.040,
+            0.0001, 0.0016,
+        );
+        assert!(!tr.is_empty());
+        for w in tr.windows(2) {
+            assert!(w[1].t_s >= w[0].t_s);
+        }
+    }
+
+    #[test]
+    fn bitstream_spike_is_peak_mpsoc() {
+        let tr = builder().standard_run(
+            &Implementation::Hls { kiloluts: 6.5, brams: 150.5, duty: 1.0 },
+            2.75, 10, 0.024, 0.001, 4.76,
+        );
+        let peak = tr.iter().max_by(|a, b| a.power_w.total_cmp(&b.power_w)).unwrap();
+        assert_eq!(peak.phase, Phase::BitstreamLoad);
+    }
+
+    #[test]
+    fn hls_window_below_cpu_window() {
+        let tr = builder().standard_run(
+            &Implementation::Hls { kiloluts: 8.1, brams: 1.5, duty: 1.0 },
+            2.0, 1_000_000, 0.000144, 0.00002, 0.0000269,
+        );
+        let avg = |ph: Phase| {
+            let v: Vec<f64> = tr.iter().filter(|p| p.phase == ph)
+                .map(|p| p.power_w).collect();
+            v.iter().sum::<f64>() / v.len() as f64
+        };
+        assert!(avg(Phase::FpgaInference) < avg(Phase::CpuInference));
+    }
+
+    #[test]
+    fn dpu_window_above_cpu_window() {
+        let tr = builder().standard_run(
+            &Implementation::Dpu { mac_duty: 0.85 }, 2.75, 1000, 0.2087,
+            0.0002, 0.0061,
+        );
+        let avg = |ph: Phase| {
+            let v: Vec<f64> = tr.iter().filter(|p| p.phase == ph)
+                .map(|p| p.power_w).collect();
+            v.iter().sum::<f64>() / v.len() as f64
+        };
+        assert!(avg(Phase::FpgaInference) > avg(Phase::CpuInference));
+    }
+
+    #[test]
+    fn csv_and_ascii_render() {
+        let tr = builder().standard_run(
+            &Implementation::Dpu { mac_duty: 0.3 }, 2.75, 100, 0.04, 0.0001,
+            0.0016,
+        );
+        let csv = to_csv(&tr);
+        assert!(csv.starts_with("t_s,power_w,phase\n"));
+        assert_eq!(csv.lines().count(), tr.len() + 1);
+        let art = to_ascii(&tr, 80, 16);
+        assert!(art.contains('#'));
+        assert!(art.contains('o'));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = builder().standard_run(&Implementation::Dpu { mac_duty: 0.3 },
+                                       2.75, 10, 0.04, 1e-4, 1.6e-3);
+        let b = builder().standard_run(&Implementation::Dpu { mac_duty: 0.3 },
+                                       2.75, 10, 0.04, 1e-4, 1.6e-3);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.power_w == y.power_w));
+    }
+}

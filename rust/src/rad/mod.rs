@@ -1,0 +1,22 @@
+//! Radiation effects & mitigation — the paper's future-work axis made
+//! concrete (§VI: "evaluating the impact of ... radiation-induced fault
+//! mitigation techniques on performance and reliability"; §IV/Fig 13:
+//! "particularly relevant when FPGA scrubbing is used to periodically
+//! reprogram the device").
+//!
+//! * `seu`   — single-event-upset environment model: orbit class ->
+//!   configuration-memory upset rate for the ZU7EV's CRAM.
+//! * `scrub` — scrubbing scheduler: periodic bitstream reload, its energy
+//!   cost (the Fig 13 spike, repeated), duty lost to reconfiguration, and
+//!   the resulting probability an inference runs on corrupted
+//!   configuration.
+//! * `tmr`   — triple-modular-redundancy what-if: area/power overhead vs
+//!   masked-fault coverage for the HLS designs.
+
+pub mod scrub;
+pub mod seu;
+pub mod tmr;
+
+pub use scrub::{ScrubPlan, ScrubPolicy};
+pub use seu::{Orbit, SeuEnvironment};
+pub use tmr::TmrOverhead;

@@ -1,0 +1,115 @@
+//! Single-event-upset environment model.
+//!
+//! Configuration-memory (CRAM) upset rates for a 16-nm UltraScale+ part,
+//! scaled by orbit environment.  Rates are order-of-magnitude figures from
+//! the radiation-test literature for this device class (Xilinx XCZU
+//! proton/heavy-ion data): LEO ~1e-7 upsets/bit/day quiet-sun, rising
+//! ~30x through GTO belts, ~3x for deep space GCR background, with a
+//! solar-event multiplier on top.
+
+/// Mission orbit regimes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Orbit {
+    /// Low Earth orbit (ISS-like, partly shielded by the magnetosphere).
+    Leo,
+    /// Geostationary transfer / outer-belt crossing.
+    Gto,
+    /// Interplanetary cruise (GCR-dominated).
+    DeepSpace,
+}
+
+/// SEU environment bound to an orbit and solar condition.
+#[derive(Debug, Clone, Copy)]
+pub struct SeuEnvironment {
+    pub orbit: Orbit,
+    /// Multiplier for solar energetic particle events (1.0 = quiet sun).
+    pub solar_activity: f64,
+}
+
+/// ZU7EV configuration-memory size (bits) — the scrub target.
+pub const ZU7EV_CRAM_BITS: u64 = 205_000_000;
+
+impl SeuEnvironment {
+    pub fn new(orbit: Orbit) -> SeuEnvironment {
+        SeuEnvironment { orbit, solar_activity: 1.0 }
+    }
+
+    /// Upsets per bit per day in CRAM.
+    pub fn upsets_per_bit_day(&self) -> f64 {
+        let base = match self.orbit {
+            Orbit::Leo => 1.0e-7,
+            Orbit::Gto => 3.0e-6,
+            Orbit::DeepSpace => 3.0e-7,
+        };
+        base * self.solar_activity.max(0.0)
+    }
+
+    /// Expected device CRAM upsets per day.
+    pub fn device_upsets_per_day(&self) -> f64 {
+        self.upsets_per_bit_day() * ZU7EV_CRAM_BITS as f64
+    }
+
+    /// Expected upsets in the *essential* bits of one design during an
+    /// interval.  `essential_bits` is the design-sensitive fraction of
+    /// CRAM (typically 5–25% for these accelerator footprints).
+    pub fn design_upsets(&self, essential_bits: u64, interval_s: f64) -> f64 {
+        self.upsets_per_bit_day() * essential_bits as f64 * interval_s / 86_400.0
+    }
+
+    /// Probability >= 1 upset hits the essential bits within an interval
+    /// (Poisson).
+    pub fn p_fault(&self, essential_bits: u64, interval_s: f64) -> f64 {
+        1.0 - (-self.design_upsets(essential_bits, interval_s)).exp()
+    }
+}
+
+/// Essential-bit estimate for a design from its PL footprint: each LUT
+/// configures ~200 CRAM bits, each FF ~10, each DSP ~1,200, each BRAM36
+/// ~2,000 control bits (contents are ECC-protected separately).
+pub fn essential_bits(luts: u64, ffs: u64, dsps: u64, brams: f64) -> u64 {
+    luts * 200 + ffs * 10 + dsps * 1_200 + (brams * 2_000.0) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gto_is_harshest() {
+        let leo = SeuEnvironment::new(Orbit::Leo);
+        let gto = SeuEnvironment::new(Orbit::Gto);
+        let deep = SeuEnvironment::new(Orbit::DeepSpace);
+        assert!(gto.device_upsets_per_day() > deep.device_upsets_per_day());
+        assert!(deep.device_upsets_per_day() > leo.device_upsets_per_day());
+        // LEO quiet sun: O(10) CRAM upsets/day for a 205 Mbit device
+        let u = leo.device_upsets_per_day();
+        assert!((5.0..100.0).contains(&u), "{u}");
+    }
+
+    #[test]
+    fn solar_event_scales_linearly() {
+        let mut env = SeuEnvironment::new(Orbit::DeepSpace);
+        let quiet = env.device_upsets_per_day();
+        env.solar_activity = 100.0; // large SEP event
+        assert!((env.device_upsets_per_day() / quiet - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p_fault_poisson_properties() {
+        let env = SeuEnvironment::new(Orbit::Gto);
+        let bits = 10_000_000;
+        let p1 = env.p_fault(bits, 600.0);
+        let p2 = env.p_fault(bits, 6_000.0);
+        assert!(p1 > 0.0 && p1 < p2 && p2 < 1.0);
+        assert_eq!(env.p_fault(0, 600.0), 0.0);
+    }
+
+    #[test]
+    fn essential_bits_scale_with_footprint() {
+        // ESPERTA-ish vs DPU-ish designs
+        let small = essential_bits(9_240, 10_440, 35, 0.5);
+        let dpu = essential_bits(102_154, 199_192, 1_420, 165.0);
+        assert!(dpu > 10 * small);
+        assert!(small > 1_000_000); // ~2 Mbit
+    }
+}

@@ -1,0 +1,95 @@
+//! Triple-modular-redundancy what-if for the HLS designs.
+//!
+//! TMR triplicates the datapath and votes: ~3.2x logic (voters included),
+//! ~3x dynamic power, and masks any single-module configuration fault
+//! between scrubs.  Combined with the scrub model this answers the
+//! paper's future-work question quantitatively: what does
+//! radiation-hardening a lightweight HLS accelerator actually cost on
+//! the ZCU104's resource and power budget?
+
+use crate::board::zcu104::PlResources;
+use crate::resources::Utilization;
+
+/// TMR overhead factors (logic triplication + majority voters).
+const LOGIC_FACTOR: f64 = 3.2;
+const DSP_FACTOR: f64 = 3.0;
+const BRAM_FACTOR: f64 = 3.0;
+const POWER_FACTOR: f64 = 3.05;
+
+/// A TMR'd design evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct TmrOverhead {
+    pub base: Utilization,
+    pub tmr: Utilization,
+    /// Power multiplier to apply to the design's PL power term.
+    pub power_factor: f64,
+    /// Does the TMR'd design still fit the device?
+    pub fits: bool,
+    /// Residual fault probability factor: TMR masks single faults, so the
+    /// unmasked probability goes from p to ~3p^2 (two modules hit within
+    /// one scrub period).
+    pub residual_fault_exponent: u32,
+}
+
+/// Apply TMR to a utilization estimate.
+pub fn apply_tmr(base: Utilization, pl: &PlResources) -> TmrOverhead {
+    let tmr = Utilization {
+        luts: (base.luts as f64 * LOGIC_FACTOR) as u64,
+        ffs: (base.ffs as f64 * LOGIC_FACTOR) as u64,
+        dsps: (base.dsps as f64 * DSP_FACTOR) as u64,
+        brams: base.brams * BRAM_FACTOR,
+        urams: base.urams * 3,
+    };
+    TmrOverhead {
+        base,
+        fits: tmr.fits(pl),
+        tmr,
+        power_factor: POWER_FACTOR,
+        residual_fault_exponent: 2,
+    }
+}
+
+/// Residual (unmasked) fault probability under TMR given the single-module
+/// fault probability `p` within one scrub period.
+pub fn residual_p_fault(p: f64) -> f64 {
+    // any 2-of-3 modules faulted
+    3.0 * p * p * (1.0 - p) + p * p * p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::board::zcu104::Zcu104;
+
+    fn esperta_util() -> Utilization {
+        Utilization { luts: 9_240, ffs: 10_440, dsps: 35, brams: 0.5, urams: 0 }
+    }
+
+    #[test]
+    fn small_designs_fit_tmr() {
+        let z = Zcu104::default();
+        let t = apply_tmr(esperta_util(), &z.pl);
+        assert!(t.fits, "TMR'd ESPERTA must fit the ZU7EV");
+        assert!(t.tmr.luts > 3 * t.base.luts);
+    }
+
+    #[test]
+    fn dpu_class_design_does_not_fit_tmr() {
+        let z = Zcu104::default();
+        let dpu = Utilization {
+            luts: 102_154, ffs: 199_192, dsps: 1_420, brams: 165.0, urams: 92,
+        };
+        let t = apply_tmr(dpu, &z.pl);
+        assert!(!t.fits, "triplicated B4096 cannot fit — HLS-class designs \
+                          are the TMR candidates");
+    }
+
+    #[test]
+    fn residual_fault_is_quadratic() {
+        let p = 1e-3;
+        let r = residual_p_fault(p);
+        assert!(r < 3.1e-6 && r > 2.9e-6, "{r}");
+        assert_eq!(residual_p_fault(0.0), 0.0);
+        assert!((residual_p_fault(1.0) - 1.0).abs() < 1e-12);
+    }
+}

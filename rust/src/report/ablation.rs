@@ -1,0 +1,125 @@
+//! A1/A2 ablations (paper §IV):
+//!
+//! * **A1 — CNet modifications**: pooling removed, parameters reduced to
+//!   VAE-like levels, scalar input removed — the paper observes the CPU
+//!   benefits more than the DPU from the shrink, so the *speedup*
+//!   shrinks.
+//! * **HLS what-if**: burst-capable AXI (the pragma the naive flow
+//!   omits) against BaselineNet's DRAM-bound collapse.
+
+use anyhow::Result;
+
+use crate::board::{Calibration, Zcu104};
+use crate::cpu::A53Model;
+use crate::dpu::{DpuArch, DpuSchedule};
+use crate::hls::{AxiMaster, BramAllocator, HlsDesign};
+use crate::model::catalog::{model_info, Catalog};
+use crate::model::Precision;
+use crate::util::table::{commas, eng, Table};
+
+/// A1: CNet variants on CPU + DPU.
+///
+/// The CPU baseline for the variants scales the calibrated full-CNet
+/// efficiency (same framework, same kernel mix); the DPU numbers come
+/// from the mechanism model directly.
+pub fn cnet_ablation(catalog: &Catalog, calib: &Calibration) -> Result<Table> {
+    let board = Zcu104::default();
+    let info = model_info("cnet")?;
+    let full_cpu_man = catalog.manifest("cnet", Precision::Fp32)?;
+    let anchored = A53Model::calibrated(full_cpu_man, calib, info.paper.cpu_fps);
+
+    let mut t = Table::new(
+        "A1: CNetPlusScalar ablations (paper §IV)",
+        &["Variant", "Params", "Ops", "CPU FPS", "DPU FPS", "Speedup"],
+    );
+    for (tag, label) in [
+        ("cnet.int8", "full (deployed)"),
+        ("cnet_nopool.int8", "(i) pooling removed"),
+        ("cnet_small.int8", "(ii) VAE-sized"),
+        ("cnet_noscalar.int8", "(iii) scalar removed"),
+    ] {
+        let man = catalog
+            .manifests
+            .get(tag)
+            .ok_or_else(|| anyhow::anyhow!("missing manifest {tag}"))?;
+        let cpu = A53Model::with_util(man, calib, anchored.util);
+        let sched = DpuSchedule::new(
+            man,
+            DpuArch::b4096(calib, board.dpu_clock_hz),
+            calib,
+            board.axi_bandwidth,
+        )?;
+        t.row(vec![
+            label.to_string(),
+            commas(man.total_params),
+            commas(man.total_ops),
+            eng(cpu.fps()),
+            eng(sched.fps()),
+            format!("{}x", eng(sched.fps() / cpu.fps())),
+        ]);
+    }
+    Ok(t)
+}
+
+/// ESPERTA packing ablation: sequential six single models vs the fused
+/// parallel multi-ESPERTA (paper §III-A.3: "reduces control overhead").
+pub fn esperta_packing(catalog: &Catalog, calib: &Calibration) -> Result<Table> {
+    let board = Zcu104::default();
+    let multi = catalog.manifest("esperta", Precision::Fp32)?;
+    let single = catalog.manifest("esperta_single", Precision::Fp32)?;
+    let d_multi = HlsDesign::synthesize(multi, &board, calib);
+    let d_single = HlsDesign::synthesize(single, &board, calib);
+    let t_multi = d_multi.latency_s();
+    let t_seq = 6.0 * d_single.latency_s(); // six sequential invocations
+    let mut t = Table::new(
+        "ESPERTA packing: parallel multi-model vs 6x sequential",
+        &["Configuration", "Latency (us)", "FPS(all six)", "vs sequential"],
+    );
+    t.row(vec![
+        "6x sequential single".into(),
+        eng(1e6 * t_seq),
+        eng(1.0 / t_seq),
+        "1x".into(),
+    ]);
+    t.row(vec![
+        "multi-ESPERTA (fused)".into(),
+        eng(1e6 * t_multi),
+        eng(1.0 / t_multi),
+        format!("{}x", eng(t_seq / t_multi)),
+    ]);
+    Ok(t)
+}
+
+/// HLS what-if: AXI burst inference against the naive single-beat master
+/// (what one pragma would have bought BaselineNet).
+pub fn axi_burst_whatif(catalog: &Catalog, calib: &Calibration) -> Result<Table> {
+    let board = Zcu104::default();
+    let man = catalog.manifest("baseline", Precision::Fp32)?;
+    let design = HlsDesign::synthesize(man, &board, calib);
+    let plan = BramAllocator::new(&board.pl).allocate(man);
+    let spilled = plan.dram_weight_bytes;
+    let mut t = Table::new(
+        "What-if: AXI burst length vs BaselineNet weight-fetch stall",
+        &["Burst", "Fetch cycles", "Total latency (s)", "FPS"],
+    );
+    for burst in [1u64, 4, 16, 64, 256] {
+        let axi = AxiMaster::bursting(board.ddr_word_cycles, burst);
+        let fetch = axi.fetch_cycles(spilled);
+        let base_cycles = design.total_cycles()
+            - design.fetch_cycles.iter().sum::<f64>();
+        let total = base_cycles + fetch;
+        let lat = total / board.hls_clock_hz;
+        t.row(vec![
+            format!("{burst}"),
+            eng(fetch),
+            eng(lat),
+            eng(1.0 / lat),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    // exercised end-to-end by tests/integration.rs (requires artifacts/)
+}

@@ -1,0 +1,127 @@
+//! Model evaluation: one place that produces the CPU-vs-accelerator
+//! numbers every table/figure cites (Table III's columns).
+
+use anyhow::Result;
+
+use crate::board::{Calibration, Zcu104};
+use crate::cpu::A53Model;
+use crate::dpu::{DpuArch, DpuSchedule};
+use crate::hls::HlsDesign;
+use crate::model::catalog::{ModelInfo, Target};
+use crate::model::Manifest;
+use crate::power::{energy_mj, Implementation, PowerModel};
+use crate::resources::{estimate_hls, Utilization};
+
+/// Everything Table III reports for one model, CPU + accelerator.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    pub name: String,
+    pub display: String,
+    pub target: Target,
+    // CPU baseline (calibrated to the paper's CPU rows)
+    pub cpu_fps: f64,
+    pub cpu_mops: f64,
+    pub cpu_p_board: f64,
+    pub cpu_p_mpsoc: f64,
+    pub cpu_energy_mj: f64,
+    // Accelerator (predicted by the mechanism models)
+    pub accel_fps: f64,
+    pub accel_mops: f64,
+    pub accel_p_board: f64,
+    pub accel_p_mpsoc: f64,
+    pub accel_energy_mj: f64,
+    pub speedup: f64,
+    /// Accelerator resource estimate (None for the DPU — fixed IP row).
+    pub hls_util: Option<Utilization>,
+    /// DPU MAC-array duty (drives its dynamic power), if DPU.
+    pub dpu_duty: Option<f64>,
+    /// Input staging time (s) — the Fig 11 effect.
+    pub input_stage_s: f64,
+    pub accel_latency_s: f64,
+    pub cpu_latency_s: f64,
+}
+
+/// Evaluate one model on CPU + its deployed accelerator.
+///
+/// `man` must be the *deployed* variant's manifest (int8 for DPU models,
+/// fp32 for HLS models); `cpu_man` the fp32 manifest for the CPU baseline
+/// (op counts are identical, weight bytes differ).
+pub fn evaluate_model(
+    info: &ModelInfo,
+    man: &Manifest,
+    cpu_man: &Manifest,
+    calib: &Calibration,
+) -> Result<Evaluation> {
+    let board = Zcu104::default();
+    let power = PowerModel::new(calib.clone());
+
+    // --- CPU baseline (anchored on the paper's CPU rows) ---
+    let a53 = A53Model::calibrated(cpu_man, calib, info.paper.cpu_fps);
+    let cpu_latency = a53.latency_s();
+    let cpu_imp = Implementation::Cpu { p_mpsoc_paper: info.paper.cpu_p_mpsoc };
+    let cpu_p_mpsoc = power.mpsoc_w(&cpu_imp);
+    let cpu_p_board = power.board_w(&cpu_imp);
+
+    // --- accelerator (predicted) ---
+    let (accel_latency, accel_p_mpsoc, accel_p_board, hls_util, dpu_duty, stage) =
+        match info.target {
+            Target::Dpu => {
+                let sched = DpuSchedule::new(
+                    man,
+                    DpuArch::b4096(calib, board.dpu_clock_hz),
+                    calib,
+                    board.axi_bandwidth,
+                )?;
+                let imp = PowerModel::dpu_impl(&sched);
+                (
+                    sched.latency_s(),
+                    power.mpsoc_w(&imp),
+                    power.board_w(&imp),
+                    None,
+                    Some(sched.mac_duty()),
+                    sched.input_dma_s,
+                )
+            }
+            Target::Hls => {
+                let design = HlsDesign::synthesize(man, &board, calib);
+                let util = estimate_hls(man, &design.plan);
+                let imp = Implementation::Hls {
+                    kiloluts: util.luts as f64 / 1000.0,
+                    brams: design.plan.brams(),
+                    duty: 1.0,
+                };
+                (
+                    design.latency_s(),
+                    power.mpsoc_w(&imp),
+                    power.board_w(&imp),
+                    Some(util),
+                    None,
+                    design.input_stage_s,
+                )
+            }
+        };
+
+    let cpu_fps = 1.0 / cpu_latency;
+    let accel_fps = 1.0 / accel_latency;
+    Ok(Evaluation {
+        name: info.name.to_string(),
+        display: info.display.to_string(),
+        target: info.target,
+        cpu_fps,
+        cpu_mops: cpu_man.total_ops as f64 * cpu_fps / 1e6,
+        cpu_p_board,
+        cpu_p_mpsoc,
+        cpu_energy_mj: energy_mj(cpu_p_mpsoc, cpu_latency),
+        accel_fps,
+        accel_mops: man.total_ops as f64 * accel_fps / 1e6,
+        accel_p_board,
+        accel_p_mpsoc,
+        accel_energy_mj: energy_mj(accel_p_mpsoc, accel_latency),
+        speedup: accel_fps / cpu_fps,
+        hls_util,
+        dpu_duty,
+        input_stage_s: stage,
+        accel_latency_s: accel_latency,
+        cpu_latency_s: cpu_latency,
+    })
+}

@@ -1,0 +1,131 @@
+//! Figures 9–13: power-vs-time traces.
+//!
+//! Each figure function regenerates the paper's trace for the matching
+//! run (same input counts: 1000 for Figs 9/10/12, 10^6 for Fig 11,
+//! BaselineNet limited to 10, single inference for Fig 13), returning
+//! (CSV, ASCII art) so the CLI can print and persist both.
+
+use anyhow::Result;
+
+use crate::board::Calibration;
+use crate::model::catalog::{model_info, Catalog};
+use crate::model::Precision;
+use crate::power::trace::{to_ascii, to_csv, Phase, TraceBuilder, TracePoint};
+use crate::power::{Implementation, PowerModel};
+
+use super::evaluate::evaluate_model;
+
+fn eval(catalog: &Catalog, calib: &Calibration, name: &str)
+        -> Result<super::evaluate::Evaluation> {
+    let info = model_info(name)?;
+    let man = catalog.deployed(info)?;
+    let cpu_man = catalog.manifest(name, Precision::Fp32)?;
+    evaluate_model(info, man, cpu_man, calib)
+}
+
+fn implementation(e: &super::evaluate::Evaluation) -> Implementation {
+    match (e.dpu_duty, &e.hls_util) {
+        (Some(duty), _) => Implementation::Dpu { mac_duty: duty },
+        (None, Some(u)) => Implementation::Hls {
+            kiloluts: u.luts as f64 / 1000.0,
+            brams: u.brams,
+            duty: 1.0,
+        },
+        _ => unreachable!("evaluation must be DPU or HLS"),
+    }
+}
+
+fn run_trace(
+    catalog: &Catalog,
+    calib: &Calibration,
+    name: &str,
+    n_inputs: u64,
+    seed: u64,
+) -> Result<Vec<TracePoint>> {
+    let e = eval(catalog, calib, name)?;
+    let b = TraceBuilder::new(PowerModel::new(calib.clone()), seed);
+    Ok(b.standard_run(
+        &implementation(&e),
+        e.cpu_p_mpsoc,
+        n_inputs,
+        e.cpu_latency_s,
+        e.input_stage_s,
+        e.accel_latency_s,
+    ))
+}
+
+/// Fig 9: VAE encoder, 1000 inputs.
+pub fn fig9(catalog: &Catalog, calib: &Calibration) -> Result<(String, String)> {
+    let tr = run_trace(catalog, calib, "vae", 1000, 9)?;
+    Ok((to_csv(&tr), to_ascii(&tr, 100, 18)))
+}
+
+/// Fig 10: CNetPlusScalar, 1000 inputs.
+pub fn fig10(catalog: &Catalog, calib: &Calibration) -> Result<(String, String)> {
+    let tr = run_trace(catalog, calib, "cnet", 1000, 10)?;
+    Ok((to_csv(&tr), to_ascii(&tr, 100, 18)))
+}
+
+/// Fig 11: multi-ESPERTA, 10^6 inputs (input staging dominates).
+pub fn fig11(catalog: &Catalog, calib: &Calibration) -> Result<(String, String)> {
+    let tr = run_trace(catalog, calib, "esperta", 1_000_000, 11)?;
+    Ok((to_csv(&tr), to_ascii(&tr, 100, 18)))
+}
+
+/// Fig 12: the three MMS networks back to back (1000/1000/10 inputs).
+pub fn fig12(catalog: &Catalog, calib: &Calibration) -> Result<(String, String)> {
+    let mut all: Vec<TracePoint> = Vec::new();
+    let mut t_off = 0.0;
+    for (name, n) in [("logistic", 1000u64), ("reduced", 1000), ("baseline", 10)] {
+        let tr = run_trace(catalog, calib, name, n, 12)?;
+        let end = tr.last().map(|p| p.t_s).unwrap_or(0.0);
+        all.extend(tr.into_iter().map(|mut p| {
+            p.t_s += t_off;
+            p
+        }));
+        t_off += end;
+    }
+    Ok((to_csv(&all), to_ascii(&all, 120, 18)))
+}
+
+/// Fig 13: board-power phase decomposition, one BaselineNet inference.
+pub fn fig13(catalog: &Catalog, calib: &Calibration) -> Result<(String, String)> {
+    let e = eval(catalog, calib, "baseline")?;
+    let pm = PowerModel::new(calib.clone());
+    let imp = implementation(&e);
+    let periph = calib.p_periph;
+    let mut b = TraceBuilder::new(PowerModel::new(calib.clone()), 13);
+    // board-level trace: add the peripheral floor to every phase
+    b.phase(Phase::Idle, pm.mpsoc_idle_w() + periph, 2.0);
+    b.phase(Phase::BitstreamLoad, pm.config_spike_w() + periph + 0.4,
+            calib.t_config);
+    b.phase(Phase::Idle, pm.mpsoc_idle_w() + periph, 1.0);
+    b.phase(Phase::InputStaging, pm.mpsoc_idle_w() + periph + 0.35,
+            e.input_stage_s.max(0.2));
+    // CPU waits for the accelerator: the paper's lowest draw
+    b.phase(Phase::FpgaInference, pm.mpsoc_w(&imp) + periph - 0.25,
+            e.accel_latency_s.min(10.0));
+    b.phase(Phase::Readback, pm.mpsoc_idle_w() + periph + 0.15, 0.3);
+    b.phase(Phase::Idle, pm.mpsoc_idle_w() + periph, 1.0);
+    let tr = b.build();
+    Ok((to_csv(&tr), to_ascii(&tr, 100, 18)))
+}
+
+/// Every figure, for the bench harness: (name, csv, ascii).
+pub fn all_figures(
+    catalog: &Catalog,
+    calib: &Calibration,
+) -> Result<Vec<(&'static str, String, String)>> {
+    let mut out = Vec::new();
+    for (name, f) in [
+        ("fig9", fig9 as fn(&Catalog, &Calibration) -> Result<(String, String)>),
+        ("fig10", fig10),
+        ("fig11", fig11),
+        ("fig12", fig12),
+        ("fig13", fig13),
+    ] {
+        let (csv, ascii) = f(catalog, calib)?;
+        out.push((name, csv, ascii));
+    }
+    Ok(out)
+}

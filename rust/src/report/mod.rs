@@ -1,0 +1,11 @@
+//! Report harness: regenerates every table and figure of the paper's
+//! evaluation section from the simulators + runtime.
+
+pub mod ablation;
+pub mod evaluate;
+pub mod figures;
+pub mod related;
+pub mod whatif;
+pub mod tables;
+
+pub use evaluate::{evaluate_model, Evaluation};

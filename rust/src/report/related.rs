@@ -1,0 +1,98 @@
+//! Tables IV & V: comparison with related work.  Literature rows are
+//! published constants from the cited papers; our rows come from the
+//! evaluation harness.
+
+use anyhow::Result;
+
+use crate::board::Calibration;
+use crate::model::catalog::{model_info, Catalog};
+use crate::model::Precision;
+use crate::util::table::{commas, eng, Table};
+
+use super::evaluate::evaluate_model;
+
+struct LitRow {
+    network: &'static str,
+    board: &'static str,
+    params: Option<u64>,
+    fps: f64,
+    power_w: Option<f64>,
+}
+
+const TABLE4_LIT: &[LitRow] = &[
+    LitRow { network: "LD-UNet [13]", board: "ZCU104", params: Some(5_652), fps: 632.0, power_w: Some(14.1) },
+    LitRow { network: "CAE [11]", board: "ZCU104", params: Some(2_950_000), fps: 250.0, power_w: Some(5.3) },
+    LitRow { network: "ResNet-50 [28]", board: "ZCU102", params: None, fps: 68.0, power_w: Some(30.0) },
+    LitRow { network: "mod. YOLOv4 [27]", board: "KV260", params: None, fps: 3.8, power_w: None },
+    LitRow { network: "YOLOv4-Mobv3 [26]", board: "KV260", params: Some(5_690_000), fps: 48.0, power_w: Some(7.2) },
+    LitRow { network: "Pixel-Net [25]", board: "Ultra96-V2", params: Some(17_430), fps: 0.051, power_w: Some(2.4) },
+    LitRow { network: "Patch-Net [25]", board: "Ultra96-V2", params: Some(13_000), fps: 0.049, power_w: Some(2.5) },
+    LitRow { network: "Scene-Net [25]", board: "Ultra96-V2", params: Some(3_320_000), fps: 57.0, power_w: Some(2.5) },
+    LitRow { network: "U-Net [25]", board: "Ultra96-V2", params: Some(26_620), fps: 37.0, power_w: Some(2.4) },
+];
+
+const TABLE5_LIT: &[LitRow] = &[
+    LitRow { network: "CNN [12]", board: "ZCU104", params: Some(245_000), fps: 3_676.0, power_w: Some(9.493) },
+    LitRow { network: "TCN+U-Net [29]", board: "Z-7020", params: Some(2_000), fps: 0.98, power_w: Some(0.196) },
+];
+
+fn lit_cells(r: &LitRow) -> Vec<String> {
+    vec![
+        r.network.to_string(),
+        r.board.to_string(),
+        r.params.map(commas).unwrap_or_else(|| "-".into()),
+        eng(r.fps),
+        r.power_w.map(|p| format!("{p} W")).unwrap_or_else(|| "-".into()),
+    ]
+}
+
+/// Table IV: Vitis-AI implementations vs related work.
+pub fn table4(catalog: &Catalog, calib: &Calibration) -> Result<Table> {
+    let mut t = Table::new(
+        "Table IV: Vitis AI performance vs related work",
+        &["Network", "Board", "# Param.", "FPS", "Power"],
+    );
+    for name in ["vae", "cnet"] {
+        let info = model_info(name)?;
+        let man = catalog.deployed(info)?;
+        let cpu_man = catalog.manifest(name, Precision::Fp32)?;
+        let e = evaluate_model(info, man, cpu_man, calib)?;
+        t.row(vec![
+            format!("{} (ours)", info.display),
+            "ZCU104 (sim)".into(),
+            commas(man.total_params),
+            eng(e.accel_fps),
+            format!("{:.2} W", e.accel_p_mpsoc),
+        ]);
+    }
+    for r in TABLE4_LIT {
+        t.row(lit_cells(r));
+    }
+    Ok(t)
+}
+
+/// Table V: HLS implementations vs related work.
+pub fn table5(catalog: &Catalog, calib: &Calibration) -> Result<Table> {
+    let mut t = Table::new(
+        "Table V: HLS performance vs related work",
+        &["Network", "Board", "# Param.", "FPS", "Power"],
+    );
+    for name in ["esperta", "logistic"] {
+        let info = model_info(name)?;
+        let man = catalog.deployed(info)?;
+        let cpu_man = catalog.manifest(name, Precision::Fp32)?;
+        let e = evaluate_model(info, man, cpu_man, calib)?;
+        let display = if name == "esperta" { "multi-ESPERTA" } else { "LogisticNet" };
+        t.row(vec![
+            format!("{display} (ours)"),
+            "ZCU104 (sim)".into(),
+            commas(man.total_params),
+            eng(e.accel_fps),
+            format!("{:.2} W", e.accel_p_mpsoc),
+        ]);
+    }
+    for r in TABLE5_LIT {
+        t.row(lit_cells(r));
+    }
+    Ok(t)
+}

@@ -1,0 +1,188 @@
+//! Tables I–III regeneration (paper-vs-measured side by side).
+
+use anyhow::Result;
+
+use crate::board::{Calibration, Zcu104};
+use crate::dpu::DpuArch;
+use crate::hls::{BramAllocator, HlsDesign};
+use crate::model::catalog::{Catalog, Target, MODELS};
+use crate::model::Precision;
+use crate::resources::estimate_hls;
+use crate::util::table::{commas, eng, Table};
+
+use super::evaluate::evaluate_model;
+
+/// Table I: parameters and operations per model.
+pub fn table1(catalog: &Catalog) -> Result<Table> {
+    let mut t = Table::new(
+        "Table I: Summary of parameters and operations",
+        &["Model", "# Params (paper)", "# Params (ours)", "match",
+          "# Ops (paper)", "# Ops (ours, DESIGN §8)"],
+    );
+    for info in MODELS {
+        let man = catalog.manifest(info.name, Precision::Fp32)?;
+        t.row(vec![
+            info.display.to_string(),
+            commas(info.table1_params),
+            commas(man.total_params),
+            if man.total_params == info.table1_params { "EXACT" } else { "DIFF" }
+                .to_string(),
+            commas(info.table1_ops),
+            commas(man.total_ops),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Table II: resource utilization and clock frequency.
+pub fn table2(catalog: &Catalog, calib: &Calibration) -> Result<Table> {
+    let board = Zcu104::default();
+    let pl = board.pl;
+    let mut t = Table::new(
+        "Table II: Resource Utilization and Clock Frequency (ZCU104)",
+        &["Design", "LUTs", "FFs", "DSPs", "BRAMs", "URAMs", "Clock"],
+    );
+    t.row(vec![
+        "Available".into(),
+        commas(pl.luts),
+        commas(pl.ffs),
+        commas(pl.dsps),
+        format!("{}", pl.brams),
+        commas(pl.urams),
+        "-".into(),
+    ]);
+    let dpu = DpuArch::b4096(calib, board.dpu_clock_hz).resources();
+    t.row(vec![
+        "B4096 DPU (Vitis AI)".into(),
+        format!("{} ({:.0}%)", commas(dpu.luts), 100.0 * dpu.luts as f64 / pl.luts as f64),
+        format!("{} ({:.0}%)", commas(dpu.ffs), 100.0 * dpu.ffs as f64 / pl.ffs as f64),
+        format!("{} ({:.0}%)", commas(dpu.dsps), 100.0 * dpu.dsps as f64 / pl.dsps as f64),
+        format!("{} ({:.0}%)", dpu.brams, 100.0 * dpu.brams / pl.brams),
+        format!("{} ({:.0}%)", dpu.urams, 100.0 * dpu.urams as f64 / pl.urams as f64),
+        "300/600 MHz".into(),
+    ]);
+    for info in MODELS.iter().filter(|m| m.target == Target::Hls) {
+        let man = catalog.manifest(info.name, Precision::Fp32)?;
+        let plan = BramAllocator::new(&pl).allocate(man);
+        let u = estimate_hls(man, &plan);
+        let (l, f, d, b, _) = u.percent(&pl);
+        t.row(vec![
+            format!("{} HLS", info.display),
+            format!("{} ({:.0}%)", commas(u.luts), l),
+            format!("{} ({:.0}%)", commas(u.ffs), f),
+            format!("{} ({:.1}%)", u.dsps, d),
+            format!("{} ({:.0}%)", u.brams, b),
+            "-".into(),
+            "100 MHz".into(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Table III: performance metrics, ours vs paper.
+pub fn table3(catalog: &Catalog, calib: &Calibration) -> Result<Table> {
+    let mut t = Table::new(
+        "Table III: Performance metrics (ours | paper)",
+        &["Implementation", "Speedup", "FPS", "MOP/s", "P_Board (W)",
+          "P_MPSoC (W)", "E/inf (mJ)"],
+    );
+    for info in MODELS {
+        let man = catalog.deployed(info)?;
+        let cpu_man = catalog.manifest(info.name, Precision::Fp32)?;
+        let e = evaluate_model(info, man, cpu_man, calib)?;
+        t.row(vec![
+            format!("{} - CPU", e.display),
+            "1x | 1x".into(),
+            format!("{} | {}", eng(e.cpu_fps), eng(info.paper.cpu_fps)),
+            eng(e.cpu_mops),
+            format!("{} | {}", eng(e.cpu_p_board), eng(info.paper.cpu_p_board)),
+            format!("{} | {}", eng(e.cpu_p_mpsoc), eng(info.paper.cpu_p_mpsoc)),
+            format!("{} | {}", eng(e.cpu_energy_mj), eng(info.paper.cpu_energy_mj)),
+        ]);
+        let accel = match e.target {
+            Target::Dpu => "Vitis AI",
+            Target::Hls => "HLS",
+        };
+        t.row(vec![
+            format!("{} - {}", e.display, accel),
+            format!("{}x | {}x", eng(e.speedup), eng(info.paper.speedup)),
+            format!("{} | {}", eng(e.accel_fps), eng(info.paper.accel_fps)),
+            eng(e.accel_mops),
+            format!("{} | {}", eng(e.accel_p_board), eng(info.paper.accel_p_board)),
+            format!("{} | {}", eng(e.accel_p_mpsoc), eng(info.paper.accel_p_mpsoc)),
+            format!("{} | {}", eng(e.accel_energy_mj), eng(info.paper.accel_energy_mj)),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Sanity harness for EXPERIMENTS.md: per-row relative error + the shape
+/// criteria (who wins, crossovers).
+pub fn table3_shape_check(catalog: &Catalog, calib: &Calibration) -> Result<String> {
+    let mut out = String::new();
+    let mut ok = true;
+    for info in MODELS {
+        let man = catalog.deployed(info)?;
+        let cpu_man = catalog.manifest(info.name, Precision::Fp32)?;
+        let e = evaluate_model(info, man, cpu_man, calib)?;
+        let same_side = (e.speedup > 1.0) == (info.paper.speedup > 1.0);
+        let factor = e.speedup / info.paper.speedup;
+        let energy_side = (e.accel_energy_mj < e.cpu_energy_mj)
+            == (info.paper.accel_energy_mj < info.paper.cpu_energy_mj);
+        ok &= same_side && energy_side;
+        out.push_str(&format!(
+            "{:<16} speedup ours {:>8.3}x paper {:>7.2}x (ratio {:>5.2}) \
+             winner-match={} energy-match={}\n",
+            info.name, e.speedup, info.paper.speedup, factor, same_side,
+            energy_side
+        ));
+    }
+    out.push_str(if ok {
+        "SHAPE OK: every accelerator wins/loses on the same side as the paper\n"
+    } else {
+        "SHAPE MISMATCH — see rows above\n"
+    });
+    Ok(out)
+}
+
+/// DPU utilization context (paper discusses why CNet > VAE speedup).
+pub fn dpu_utilization_note(catalog: &Catalog, calib: &Calibration) -> Result<String> {
+    let board = Zcu104::default();
+    let mut out = String::new();
+    for name in ["vae", "cnet"] {
+        let man = catalog.manifest(name, Precision::Int8)?;
+        let sched = crate::dpu::DpuSchedule::new(
+            man,
+            DpuArch::b4096(calib, board.dpu_clock_hz),
+            calib,
+            board.axi_bandwidth,
+        )?;
+        out.push_str(&format!(
+            "{name}: DPU MAC utilization {:.1}%  duty {:.1}%  latency {:.3} ms\n",
+            100.0 * sched.mac_utilization(),
+            100.0 * sched.mac_duty(),
+            1e3 * sched.latency_s()
+        ));
+    }
+    Ok(out)
+}
+
+/// HLS spill context (paper attributes BaselineNet's collapse to DRAM).
+pub fn hls_spill_note(catalog: &Catalog, calib: &Calibration) -> Result<String> {
+    let board = Zcu104::default();
+    let mut out = String::new();
+    for info in MODELS.iter().filter(|m| m.target == Target::Hls) {
+        let man = catalog.manifest(info.name, Precision::Fp32)?;
+        let d = HlsDesign::synthesize(man, &board, calib);
+        out.push_str(&format!(
+            "{:<10} brams {:>6.1}  spill {:>9} B  fetch-stall {:>5.1}%  \
+             latency {:.4} s\n",
+            info.name,
+            d.plan.brams(),
+            d.plan.dram_weight_bytes,
+            100.0 * d.fetch_stall_fraction(),
+            d.latency_s()
+        ));
+    }
+    Ok(out)
+}

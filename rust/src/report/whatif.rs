@@ -1,0 +1,186 @@
+//! Extension what-ifs from the paper's §VI future-work list:
+//! frequency scaling, pruning/sparsity, and scrubbing/TMR hardening.
+
+use anyhow::Result;
+
+use crate::board::{Calibration, Zcu104};
+use crate::hls::{BramAllocator, HlsDesign};
+use crate::model::catalog::{model_info, Catalog, Target, MODELS};
+use crate::model::{Manifest, Precision};
+use crate::power::{energy_mj, Implementation, PowerModel};
+use crate::rad::scrub::ScrubPolicy;
+use crate::rad::seu::{essential_bits, Orbit, SeuEnvironment};
+use crate::rad::tmr::{apply_tmr, residual_p_fault};
+use crate::resources::estimate_hls;
+use crate::util::table::{eng, Table};
+
+/// Frequency-scaling what-if for the HLS designs (paper §VI: "headroom
+/// for further power optimization through frequency scaling").
+///
+/// Naive HLS latency is cycle-bound, so latency scales 1/f while the PL
+/// dynamic power term scales ~f (and a small voltage co-scaling term
+/// below nominal); energy per inference therefore has a shallow optimum.
+pub fn frequency_scaling(catalog: &Catalog, calib: &Calibration) -> Result<Table> {
+    let board = Zcu104::default();
+    let mut t = Table::new(
+        "What-if: HLS clock scaling (LogisticNet)",
+        &["Clock (MHz)", "FPS", "P_MPSoC (W)", "E/inf (mJ)", "vs 100 MHz"],
+    );
+    let man = catalog.manifest("logistic", Precision::Fp32)?;
+    let base_design = HlsDesign::synthesize(man, &board, calib);
+    let util = estimate_hls(man, &base_design.plan);
+    let pm = PowerModel::new(calib.clone());
+    let base_p = pm.mpsoc_w(&Implementation::Hls {
+        kiloluts: util.luts as f64 / 1000.0,
+        brams: base_design.plan.brams(),
+        duty: 1.0,
+    });
+    // split static vs frequency-scaled part of the design's power
+    let p_static = calib.p_hls_base;
+    let p_dyn_100 = base_p - p_static;
+    let e_100 = energy_mj(base_p, base_design.total_cycles() / 100.0e6);
+    for mhz in [25.0, 50.0, 100.0, 150.0, 200.0] {
+        let latency = base_design.total_cycles() / (mhz * 1e6);
+        // dynamic power ~ f * V(f)^2; below nominal Vmin limits savings
+        let v = (0.72 + 0.0014 * mhz) / (0.72 + 0.14);
+        let p = p_static + p_dyn_100 * (mhz / 100.0) * v * v;
+        let e = energy_mj(p, latency);
+        t.row(vec![
+            format!("{mhz:.0}"),
+            eng(1.0 / latency),
+            format!("{p:.2}"),
+            format!("{e:.3}"),
+            format!("{:.2}x", e / e_100),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Pruning / sparsity what-if (paper §VI: "sparse computation, pruning").
+///
+/// Structured pruning removes a fraction of MACs.  The CPU and a
+/// sparsity-aware HLS datapath skip pruned MACs (time ~ (1-s)); the dense
+/// DPU array does not (its time is shape-padded, so pruning buys nothing
+/// until channels are physically removed) — the architectural contrast
+/// the paper hints at.
+pub fn pruning_sweep(catalog: &Catalog, calib: &Calibration) -> Result<Table> {
+    let board = Zcu104::default();
+    let mut t = Table::new(
+        "What-if: structured pruning (BaselineNet on HLS, CNet on DPU)",
+        &["Sparsity", "BaselineNet HLS FPS", "speedup vs CPU",
+          "CNet DPU FPS (dense array)"],
+    );
+    let base_info = model_info("baseline")?;
+    let base_man = catalog.manifest("baseline", Precision::Fp32)?;
+    let cnet_man = catalog.manifest("cnet", Precision::Int8)?;
+    let cnet_sched = crate::dpu::DpuSchedule::new(
+        cnet_man,
+        crate::dpu::DpuArch::b4096(calib, board.dpu_clock_hz),
+        calib,
+        board.axi_bandwidth,
+    )?;
+    for sparsity in [0.0, 0.5, 0.75, 0.9, 0.95] {
+        let pruned = prune_manifest(base_man, sparsity);
+        let design = HlsDesign::synthesize(&pruned, &board, calib);
+        let cpu = crate::cpu::A53Model::calibrated(
+            base_man, calib, base_info.paper.cpu_fps);
+        // CPU also skips structurally-pruned MACs
+        let cpu_latency = cpu.latency_s() * (1.0 - sparsity).max(0.05);
+        t.row(vec![
+            format!("{:.0}%", 100.0 * sparsity),
+            eng(design.fps()),
+            format!("{:.3}x", design.fps() * cpu_latency),
+            eng(cnet_sched.fps()), // dense array: unchanged
+        ]);
+    }
+    Ok(t)
+}
+
+fn prune_manifest(man: &Manifest, sparsity: f64) -> Manifest {
+    let keep = 1.0 - sparsity;
+    let mut m = man.clone();
+    for l in &mut m.layers {
+        if l.kind.is_compute() {
+            l.macs = (l.macs as f64 * keep) as u64;
+            l.ops = (l.ops as f64 * keep) as u64;
+            l.weight_bytes = (l.weight_bytes as f64 * keep) as u64;
+        }
+    }
+    m.total_macs = m.layers.iter().map(|l| l.macs).sum();
+    m.total_ops = m.layers.iter().map(|l| l.ops).sum();
+    m.weight_bytes = m.layers.iter().map(|l| l.weight_bytes).sum();
+    m
+}
+
+/// Scrubbing / TMR hardening report (paper §IV Fig 13 discussion + §VI).
+pub fn hardening(catalog: &Catalog, calib: &Calibration, orbit: Orbit) -> Result<Table> {
+    let board = Zcu104::default();
+    let env = SeuEnvironment::new(orbit);
+    let mut t = Table::new(
+        &format!("Radiation hardening on {orbit:?}: scrub period for p_fault<=1e-3, TMR cost"),
+        &["Design", "Essential bits", "Scrub period (s)", "Scrub J/day",
+          "TMR fits?", "TMR residual p"],
+    );
+    for info in MODELS.iter().filter(|m| m.target == Target::Hls) {
+        let man = catalog.manifest(info.name, Precision::Fp32)?;
+        let plan = BramAllocator::new(&board.pl).allocate(man);
+        let util = estimate_hls(man, &plan);
+        let bits = essential_bits(util.luts, util.ffs, util.dsps, util.brams);
+        let period = ScrubPolicy::period_for_target(&env, bits, 1e-3);
+        let plan_eval = ScrubPolicy { period_s: period }
+            .evaluate(&env, bits, calib);
+        let tmr = apply_tmr(util, &board.pl);
+        let p_single = env.p_fault(bits, period);
+        t.row(vec![
+            info.display.to_string(),
+            eng(bits as f64),
+            eng(period),
+            eng(plan_eval.energy_per_day_j),
+            format!("{}", tmr.fits),
+            format!("{:.2e}", residual_p_fault(p_single)),
+        ]);
+    }
+    // the DPU for contrast
+    let dpu = crate::dpu::DpuArch::b4096(calib, board.dpu_clock_hz).resources();
+    let bits = essential_bits(dpu.luts, dpu.ffs, dpu.dsps, dpu.brams);
+    let period = ScrubPolicy::period_for_target(&env, bits, 1e-3);
+    let plan_eval = ScrubPolicy { period_s: period }.evaluate(&env, bits, calib);
+    let tmr_fits = apply_tmr(
+        crate::resources::Utilization {
+            luts: dpu.luts, ffs: dpu.ffs, dsps: dpu.dsps, brams: dpu.brams,
+            urams: dpu.urams,
+        },
+        &board.pl,
+    )
+    .fits;
+    t.row(vec![
+        "B4096 DPU".into(),
+        eng(bits as f64),
+        eng(period),
+        eng(plan_eval.energy_per_day_j),
+        format!("{tmr_fits}"),
+        "-".into(),
+    ]);
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    // exercised end-to-end via tests/integration.rs (requires artifacts/)
+    use super::prune_manifest;
+    use crate::model::manifest::Manifest;
+    use crate::util::json::Json;
+
+    #[test]
+    fn pruning_scales_compute_layers_only() {
+        let man = Manifest::from_json(
+            &Json::parse(crate::model::manifest::testdata::MINI).unwrap(),
+        )
+        .unwrap();
+        let p = prune_manifest(&man, 0.5);
+        assert_eq!(p.layers[0].macs, man.layers[0].macs / 2);
+        assert_eq!(p.layers[1].macs, 0); // flatten untouched
+        assert!(p.total_ops < man.total_ops);
+        p.validate().unwrap();
+    }
+}

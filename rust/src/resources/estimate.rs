@@ -1,0 +1,177 @@
+//! LUT/FF/DSP/BRAM estimation for naive HLS designs (Table II).
+//!
+//! The estimator mirrors how Vitis maps un-pragma'd ONNX2C code:
+//!
+//! * a fixed control/AXI shell (state machine, AXI-Lite regs, AXI master);
+//! * one shared fp32 datapath per layer *kind* present (the naive flow
+//!   does not replicate MACs): multiplier 3 DSP + adder 2 DSP;
+//! * sigmoid/exp from LUT-heavy polynomial cores (why ESPERTA's 8k LUTs
+//!   top the HLS designs despite 24 parameters);
+//! * BRAM from the allocator in `hls::bram` (weights + buffers).
+//!
+//! The DPU row of Table II is the IP's fixed footprint
+//! (`dpu::arch::DpuArch::resources`).
+
+use crate::board::zcu104::PlResources;
+use crate::hls::BramPlan;
+use crate::model::{LayerKind, Manifest};
+
+/// Estimated utilization of one design.
+#[derive(Debug, Clone, Copy)]
+pub struct Utilization {
+    pub luts: u64,
+    pub ffs: u64,
+    pub dsps: u64,
+    pub brams: f64,
+    pub urams: u64,
+}
+
+impl Utilization {
+    /// Percentage strings against the device pool (Table II formatting).
+    pub fn percent(&self, pl: &PlResources) -> (f64, f64, f64, f64, f64) {
+        (
+            100.0 * self.luts as f64 / pl.luts as f64,
+            100.0 * self.ffs as f64 / pl.ffs as f64,
+            100.0 * self.dsps as f64 / pl.dsps as f64,
+            100.0 * self.brams / pl.brams,
+            100.0 * self.urams as f64 / pl.urams as f64,
+        )
+    }
+
+    /// Does the design fit the device?
+    pub fn fits(&self, pl: &PlResources) -> bool {
+        self.luts <= pl.luts
+            && self.ffs <= pl.ffs
+            && self.dsps <= pl.dsps
+            && self.brams <= pl.brams
+            && self.urams <= pl.urams
+    }
+}
+
+// Shell: AXI-Lite slave + AXI master + FSM control.
+const SHELL_LUTS: u64 = 3_900;
+const SHELL_FFS: u64 = 5_200;
+
+// One shared fp32 MAC datapath (mul 3 DSP + add 2 DSP).
+const FP32_MAC_DSPS: u64 = 5;
+const FP32_MAC_LUTS: u64 = 800;
+const FP32_MAC_FFS: u64 = 900;
+
+// Sigmoid/exp polynomial core (per parallel instance).
+const SIGMOID_LUTS: u64 = 450;
+const SIGMOID_FFS: u64 = 380;
+const SIGMOID_DSPS: u64 = 5;
+
+// Comparator bank + misc per layer.
+const PER_LAYER_LUTS: u64 = 240;
+const PER_LAYER_FFS: u64 = 260;
+
+/// Estimate a naive HLS design's PL footprint from its manifest + BRAM
+/// plan.
+pub fn estimate_hls(man: &Manifest, plan: &BramPlan) -> Utilization {
+    let mut luts = SHELL_LUTS;
+    let mut ffs = SHELL_FFS;
+    let mut dsps = 0u64;
+
+    let mut mac_kinds = std::collections::BTreeSet::new();
+    for l in &man.layers {
+        luts += PER_LAYER_LUTS;
+        ffs += PER_LAYER_FFS;
+        match l.kind {
+            LayerKind::Conv2d | LayerKind::Conv3d | LayerKind::Dense
+            | LayerKind::DenseHeads => {
+                mac_kinds.insert(format!("{:?}", l.kind));
+            }
+            LayerKind::EspertaBank => {
+                // n parallel single-MAC models + sigmoid + comparator each
+                let n = (l.out_shape[1] / 2) as u64;
+                dsps += n * FP32_MAC_DSPS + n * SIGMOID_DSPS / 6;
+                luts += n * (FP32_MAC_LUTS / 2 + SIGMOID_LUTS);
+                ffs += n * (FP32_MAC_FFS / 2 + SIGMOID_FFS);
+            }
+            _ => {}
+        }
+        if l.act == "sigmoid" {
+            luts += SIGMOID_LUTS;
+            ffs += SIGMOID_FFS;
+            dsps += SIGMOID_DSPS;
+        }
+    }
+    // one shared fp32 datapath per distinct compute-layer kind
+    let k = mac_kinds.len() as u64;
+    dsps += k * FP32_MAC_DSPS;
+    luts += k * FP32_MAC_LUTS;
+    ffs += k * FP32_MAC_FFS;
+    // AXI master data staging logic when weights spill to DRAM
+    if plan.spills() {
+        luts += 900;
+        ffs += 700;
+    }
+
+    Utilization { luts, ffs, dsps, brams: plan.brams(), urams: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::board::zcu104::Zcu104;
+    use crate::hls::BramAllocator;
+    use crate::model::manifest::Manifest;
+    use crate::util::json::Json;
+
+    fn mini() -> Manifest {
+        Manifest::from_json(
+            &Json::parse(crate::model::manifest::testdata::MINI).unwrap(),
+        )
+        .unwrap()
+    }
+
+    fn util(man: &Manifest) -> Utilization {
+        let z = Zcu104::default();
+        let plan = BramAllocator::new(&z.pl).allocate(man);
+        estimate_hls(man, &plan)
+    }
+
+    #[test]
+    fn small_design_small_footprint() {
+        let u = util(&mini());
+        let z = Zcu104::default();
+        assert!(u.fits(&z.pl));
+        // naive designs sit in the paper's 2-4% LUT band
+        let (lut_pct, ..) = u.percent(&z.pl);
+        assert!(lut_pct < 5.0, "{lut_pct}");
+        // conv2d + dense datapaths -> 10 DSPs
+        assert_eq!(u.dsps, 10);
+    }
+
+    #[test]
+    fn sigmoid_costs_luts_and_dsps() {
+        let mut man = mini();
+        man.layers[2].act = "sigmoid".into();
+        let base = util(&mini());
+        let sig = util(&man);
+        assert!(sig.luts > base.luts);
+        assert!(sig.dsps > base.dsps);
+    }
+
+    #[test]
+    fn spill_adds_axi_logic() {
+        let mut man = mini();
+        man.layers[2].weight_bytes = 8 * 1024 * 1024;
+        let spilled = util(&man);
+        let base = util(&mini());
+        assert!(spilled.luts > base.luts);
+    }
+
+    #[test]
+    fn percent_math() {
+        let z = Zcu104::default();
+        let u = Utilization { luts: 23_000, ffs: 0, dsps: 864, brams: 156.0,
+                              urams: 48 };
+        let (l, _, d, b, ur) = u.percent(&z.pl);
+        assert!((l - 10.0).abs() < 1e-9);
+        assert!((d - 50.0).abs() < 1e-9);
+        assert!((b - 50.0).abs() < 1e-9);
+        assert!((ur - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,5 @@
+//! PL resource estimation (Table II reproduction).
+
+pub mod estimate;
+
+pub use estimate::{estimate_hls, Utilization};

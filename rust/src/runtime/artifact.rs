@@ -1,0 +1,97 @@
+//! Golden input/output pairs emitted by the AOT path
+//! (`<tag>.io.json`): the runtime's startup self-check and the
+//! integration tests' ground truth (python-executed outputs must match
+//! rust-executed outputs on the same HLO).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One named input tensor.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Golden IO pair for one artifact.
+#[derive(Debug, Clone)]
+pub struct GoldenIo {
+    pub inputs: Vec<IoSpec>,
+    pub expected_shape: Vec<usize>,
+    pub expected: Vec<f32>,
+}
+
+impl GoldenIo {
+    pub fn load(path: &Path) -> Result<GoldenIo> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading golden IO {}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let inputs = j
+            .req("inputs")?
+            .as_arr()?
+            .iter()
+            .map(|inp| {
+                Ok(IoSpec {
+                    name: inp.req("name")?.as_str()?.to_string(),
+                    shape: inp.req("shape")?.as_shape()?,
+                    data: inp
+                        .req("data")?
+                        .as_f64_vec()?
+                        .into_iter()
+                        .map(|v| v as f32)
+                        .collect(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let exp = j.req("expected")?;
+        Ok(GoldenIo {
+            inputs,
+            expected_shape: exp.req("shape")?.as_shape()?,
+            expected: exp
+                .req("data")?
+                .as_f64_vec()?
+                .into_iter()
+                .map(|v| v as f32)
+                .collect(),
+        })
+    }
+
+    /// Input slices in manifest order, for `LoadedModel::run`.
+    pub fn input_slices(&self) -> Vec<&[f32]> {
+        self.inputs.iter().map(|i| i.data.as_slice()).collect()
+    }
+
+    /// Max |a-b| against the expected output.
+    pub fn max_abs_err(&self, got: &[f32]) -> f64 {
+        self.expected
+            .iter()
+            .zip(got)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_golden_io() {
+        let src = r#"{
+          "inputs":[{"name":"x","shape":[1,2],"data":[1.5,-2.0]}],
+          "expected":{"shape":[1,1],"data":[3.25]}}"#;
+        let dir = std::env::temp_dir().join("spaceinfer_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.io.json");
+        std::fs::write(&p, src).unwrap();
+        let io = GoldenIo::load(&p).unwrap();
+        assert_eq!(io.inputs.len(), 1);
+        assert_eq!(io.inputs[0].data, vec![1.5, -2.0]);
+        assert_eq!(io.expected, vec![3.25]);
+        assert_eq!(io.max_abs_err(&[3.0]), 0.25);
+    }
+}

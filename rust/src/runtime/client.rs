@@ -1,0 +1,135 @@
+//! PJRT CPU client wrapper: compile HLO text once, execute many times.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! `HloModuleProto::from_text_file` reassigns ids (see
+//! /opt/xla-example/README.md and DESIGN.md §3).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::{Manifest, Precision};
+
+/// A compiled, executable model.
+pub struct LoadedModel {
+    pub tag: String,
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+    /// Input element counts per HLO parameter (manifest order).
+    input_elems: Vec<usize>,
+    input_shapes: Vec<Vec<usize>>,
+    output_elems: usize,
+}
+
+impl LoadedModel {
+    /// Execute with flat f32 buffers (one per model input, manifest
+    /// order).  Returns the flat f32 output.
+    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        if inputs.len() != self.input_elems.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.tag,
+                self.input_elems.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (buf, shape)) in inputs.iter().zip(&self.input_shapes).enumerate() {
+            if buf.len() != self.input_elems[i] {
+                bail!(
+                    "{}: input {i} has {} elements, expected {}",
+                    self.tag,
+                    buf.len(),
+                    self.input_elems[i]
+                );
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // lowered with return_tuple=True -> 1-tuple
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        if values.len() != self.output_elems {
+            bail!(
+                "{}: output has {} elements, expected {}",
+                self.tag,
+                values.len(),
+                self.output_elems
+            );
+        }
+        Ok(values)
+    }
+}
+
+/// The inference engine: one PJRT CPU client + a cache of compiled models.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts_dir: std::path::PathBuf,
+    models: Mutex<BTreeMap<String, std::sync::Arc<LoadedModel>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Engine {
+            client,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            models: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (or fetch cached) a model variant.
+    pub fn load(&self, name: &str, precision: Precision) -> Result<std::sync::Arc<LoadedModel>> {
+        let tag = format!("{name}.{}", precision.as_str());
+        if let Some(m) = self.models.lock().unwrap().get(&tag) {
+            return Ok(m.clone());
+        }
+        let hlo_path = self.artifacts_dir.join(format!("{tag}.hlo.txt"));
+        let man_path = self.artifacts_dir.join(format!("{tag}.manifest.json"));
+        let manifest = Manifest::load(&man_path)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .with_context(|| format!("non-utf8 path {hlo_path:?}"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {tag}: {e}"))?;
+        let input_shapes: Vec<Vec<usize>> =
+            manifest.inputs.iter().map(|(_, s)| s.clone()).collect();
+        let input_elems = input_shapes
+            .iter()
+            .map(|s| s.iter().product())
+            .collect();
+        let output_elems = manifest.output_elems() as usize;
+        let model = std::sync::Arc::new(LoadedModel {
+            tag: tag.clone(),
+            manifest,
+            exe,
+            input_elems,
+            input_shapes,
+            output_elems,
+        });
+        self.models.lock().unwrap().insert(tag, model.clone());
+        Ok(model)
+    }
+
+    /// Tags currently compiled.
+    pub fn loaded_tags(&self) -> Vec<String> {
+        self.models.lock().unwrap().keys().cloned().collect()
+    }
+}

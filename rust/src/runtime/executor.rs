@@ -1,0 +1,140 @@
+//! Threaded executor: a dedicated worker thread owns the PJRT engine and
+//! serves inference requests over channels (std::sync::mpsc — tokio is
+//! not in the offline registry, and PJRT-CPU execution is internally
+//! multi-threaded anyway, so one submission thread is the right shape:
+//! it mirrors the single DPU runner the paper drives from PYNQ).
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::model::Precision;
+
+use super::client::Engine;
+
+/// A request to execute one model on one input set.
+pub struct ExecRequest {
+    pub model: String,
+    pub precision: Precision,
+    /// Flat f32 buffers, manifest input order.
+    pub inputs: Vec<Vec<f32>>,
+    /// Where to send the result.
+    pub reply: mpsc::Sender<ExecResult>,
+    /// Opaque request id (round-trips to the reply).
+    pub id: u64,
+}
+
+/// The outcome of one execution.
+pub struct ExecResult {
+    pub id: u64,
+    pub model: String,
+    pub output: Result<Vec<f32>>,
+    /// Host wall-clock spent inside PJRT execute (for coordinator
+    /// telemetry; *not* the simulated ZCU104 latency).
+    pub host_elapsed: Duration,
+}
+
+enum Msg {
+    Exec(ExecRequest),
+    Shutdown,
+}
+
+/// The executor pool (single worker owning the engine).
+pub struct ExecutorPool {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ExecutorPool {
+    /// Spawn the worker. `preload` compiles the given (name, precision)
+    /// variants up front so the request path never hits the compiler.
+    pub fn spawn(
+        artifacts_dir: std::path::PathBuf,
+        preload: Vec<(String, Precision)>,
+    ) -> Result<ExecutorPool> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || {
+                let engine = match Engine::new(&artifacts_dir) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for (name, prec) in &preload {
+                    if let Err(e) = engine.load(name, *prec) {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                }
+                let _ = ready_tx.send(Ok(()));
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Shutdown => break,
+                        Msg::Exec(req) => {
+                            let t0 = Instant::now();
+                            let output = engine
+                                .load(&req.model, req.precision)
+                                .and_then(|m| {
+                                    let slices: Vec<&[f32]> =
+                                        req.inputs.iter().map(|v| v.as_slice()).collect();
+                                    m.run(&slices)
+                                });
+                            let _ = req.reply.send(ExecResult {
+                                id: req.id,
+                                model: req.model,
+                                output,
+                                host_elapsed: t0.elapsed(),
+                            });
+                        }
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor worker died during startup"))??;
+        Ok(ExecutorPool { tx, handle: Some(handle) })
+    }
+
+    /// Submit a request (non-blocking).
+    pub fn submit(&self, req: ExecRequest) -> Result<()> {
+        self.tx
+            .send(Msg::Exec(req))
+            .map_err(|_| anyhow!("executor worker gone"))
+    }
+
+    /// Convenience: synchronous round trip.
+    pub fn run_sync(
+        &self,
+        model: &str,
+        precision: Precision,
+        inputs: Vec<Vec<f32>>,
+    ) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(ExecRequest {
+            model: model.to_string(),
+            precision,
+            inputs,
+            reply,
+            id: 0,
+        })?;
+        let res = rx
+            .recv()
+            .map_err(|_| anyhow!("executor dropped the reply channel"))?;
+        res.output
+    }
+}
+
+impl Drop for ExecutorPool {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them on the CPU PJRT client from the request path.
+//!
+//! Python never appears here — the HLO text was produced once by
+//! `make artifacts`; this module compiles it at startup and serves
+//! `Vec<f32> -> Vec<f32>` inference calls.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{GoldenIo, IoSpec};
+pub use client::{Engine, LoadedModel};
+pub use executor::{ExecRequest, ExecResult, ExecutorPool};

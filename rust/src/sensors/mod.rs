@@ -1,0 +1,12 @@
+//! Synthetic on-board sensor sources (the flight-data substitution,
+//! DESIGN.md §2): magnetogram tiles (VAE), AIA/HMI image pairs + GOES
+//! background flux (CNet), flare feature vectors (ESPERTA), and FPI ion
+//! energy distributions (MMS nets).  Mirrors `python/compile/data.py` so
+//! both layers exercise the same input structure.
+
+pub mod generators;
+pub mod stream;
+
+pub use generators::{aia_hmi_pair, flare_features, ion_distribution,
+                     magnetogram_tile, Region};
+pub use stream::{SensorEvent, SensorStream};

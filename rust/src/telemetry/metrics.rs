@@ -1,0 +1,155 @@
+//! Lightweight metrics: monotonically-increasing counters and log-bucket
+//! latency histograms, rendered as a flat text report.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Log2-bucketed latency histogram (1 µs .. ~17 s).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// bucket i counts samples in [2^i, 2^(i+1)) microseconds.
+    buckets: [u64; 25],
+    count: u64,
+    sum_us: u128,
+    max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: [0; 25], count: 0, sum_us: 0, max_us: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = (d.as_micros() as u64).max(1);
+        let bucket = (63 - us.leading_zeros() as usize).min(24);
+        self.buckets[bucket] += 1;
+        self.count += 1;
+        self.sum_us += us as u128;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_us as f64 / self.count as f64
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Named counters + histograms.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl Metrics {
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn observe(&mut self, name: &str, d: Duration) {
+        self.histograms.entry(name.to_string()).or_default().record(d);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Flat text dump.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        for (k, h) in &self.histograms {
+            out.push_str(&format!(
+                "{k}: n={} mean={:.0}us p50<={}us p99<={}us max={}us\n",
+                h.count(),
+                h.mean_us(),
+                h.quantile_us(0.5),
+                h.quantile_us(0.99),
+                h.max_us()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::default();
+        m.inc("req");
+        m.add("req", 4);
+        assert_eq!(m.counter("req"), 5);
+        assert_eq!(m.counter("absent"), 0);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::default();
+        for us in [10u64, 100, 1000, 10_000, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert!(h.max_us() == 100_000);
+        assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn zero_duration_goes_to_first_bucket() {
+        let mut h = Histogram::default();
+        h.record(Duration::from_nanos(1));
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile_us(1.0) >= 1);
+    }
+
+    #[test]
+    fn report_contains_everything() {
+        let mut m = Metrics::default();
+        m.inc("a");
+        m.observe("lat", Duration::from_micros(500));
+        let r = m.report();
+        assert!(r.contains("a = 1"));
+        assert!(r.contains("lat:"));
+    }
+}

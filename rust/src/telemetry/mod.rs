@@ -1,0 +1,5 @@
+//! Coordinator telemetry: counters + latency histograms.
+
+pub mod metrics;
+
+pub use metrics::{Histogram, Metrics};

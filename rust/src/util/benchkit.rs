@@ -1,0 +1,89 @@
+//! Micro-benchmark kit (criterion is not in the offline registry).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: warmup,
+//! fixed sample count, median / p95 / mean reporting, and a trivial
+//! throughput helper.  Deliberately simple — the paper's quantitative
+//! claims come from the calibrated simulators, not from wall-clock on the
+//! dev box; these benches guard the *coordinator's own* hot paths.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl Sample {
+    fn sorted_nanos(&self) -> Vec<u128> {
+        let mut v: Vec<u128> = self.samples.iter().map(|d| d.as_nanos()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn median(&self) -> Duration {
+        let v = self.sorted_nanos();
+        Duration::from_nanos(v[v.len() / 2] as u64)
+    }
+
+    pub fn p95(&self) -> Duration {
+        let v = self.sorted_nanos();
+        let idx = ((v.len() as f64) * 0.95) as usize;
+        Duration::from_nanos(v[idx.min(v.len() - 1)] as u64)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let total: u128 = self.samples.iter().map(|d| d.as_nanos()).sum();
+        Duration::from_nanos((total / self.samples.len() as u128) as u64)
+    }
+
+    /// One-line report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} median {:>12?}  p95 {:>12?}  mean {:>12?}  (n={})",
+            self.name,
+            self.median(),
+            self.p95(),
+            self.mean(),
+            self.samples.len()
+        )
+    }
+}
+
+/// Run `f` with warmup and collect `n` timed samples.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, n: usize, mut f: F) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    Sample { name: name.to_string(), samples }
+}
+
+/// Items/second from a duration and item count.
+pub fn throughput(items: u64, d: Duration) -> f64 {
+    items as f64 / d.as_secs_f64().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_n_samples() {
+        let s = bench("noop", 2, 10, || {});
+        assert_eq!(s.samples.len(), 10);
+        assert!(s.median() <= s.p95());
+    }
+
+    #[test]
+    fn throughput_math() {
+        let t = throughput(1000, Duration::from_secs(2));
+        assert!((t - 500.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,140 @@
+//! Tiny subcommand/flag parser (clap is not in the offline registry).
+//!
+//! Grammar: `spaceinfer <subcommand> [--flag value] [--switch] [positional]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand).
+    pub command: String,
+    /// `--key value` pairs.
+    pub flags: BTreeMap<String, String>,
+    /// Bare `--switch` tokens.
+    pub switches: Vec<String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.command.is_empty() {
+                out.command = tok;
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process argv.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// String flag with default.
+    pub fn get<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flags.get(key).map(String::as_str).unwrap_or(default)
+    }
+
+    /// Required string flag.
+    pub fn require(&self, key: &str) -> Result<&str> {
+        match self.flags.get(key) {
+            Some(v) => Ok(v),
+            None => bail!("missing required flag --{key}"),
+        }
+    }
+
+    /// Numeric flag with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    /// Integer flag with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    /// Is `--name` present as a switch?
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("table3 --model vae --n 100 --verbose");
+        assert_eq!(a.command, "table3");
+        assert_eq!(a.get("model", ""), "vae");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 100);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --model=cnet");
+        assert_eq!(a.get("model", ""), "cnet");
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("inspect one two");
+        assert_eq!(a.positional, vec!["one", "two"]);
+    }
+
+    #[test]
+    fn required_missing() {
+        assert!(parse("run").require("model").is_err());
+    }
+
+    #[test]
+    fn default_values() {
+        let a = parse("run");
+        assert_eq!(a.get_f64("rate", 2.5).unwrap(), 2.5);
+        assert_eq!(a.get("model", "vae"), "vae");
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("run --fast");
+        assert!(a.has("fast"));
+        assert!(a.flags.is_empty());
+    }
+}

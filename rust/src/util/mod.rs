@@ -1,0 +1,9 @@
+//! Substrates the offline build image forces us to own: JSON, CLI parsing,
+//! PRNG, table rendering, and a micro-benchmark kit (no serde / clap /
+//! rand / criterion in the vendored registry).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod table;

@@ -1,0 +1,128 @@
+//! xorshift64* PRNG — deterministic, seedable, dependency-free.
+//!
+//! Drives the synthetic sensors, the coordinator's jitter models, and the
+//! hand-rolled property tests (`rand`/`proptest` are not in the offline
+//! registry).  Failing property tests print the seed so any case replays.
+
+/// xorshift64* generator (Vigna 2016); period 2^64 - 1.
+#[derive(Debug, Clone)]
+pub struct Prng {
+    state: u64,
+}
+
+impl Prng {
+    /// Seeded constructor; seed 0 is remapped (xorshift state must be != 0).
+    pub fn new(seed: u64) -> Self {
+        Prng { state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed } }
+    }
+
+    /// Next raw u64.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform usize in [0, n). Panics if n == 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "Prng::below(0)");
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Bernoulli(p).
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Split off an independent stream (for per-source sensor streams).
+    pub fn fork(&mut self) -> Prng {
+        Prng::new(self.next_u64() | 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn zero_seed_ok() {
+        let mut p = Prng::new(0);
+        assert_ne!(p.next_u64(), 0);
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut p = Prng::new(7);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = p.f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut p = Prng::new(11);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| p.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn below_covers_range() {
+        let mut p = Prng::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[p.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn forks_diverge() {
+        let mut p = Prng::new(5);
+        let mut a = p.fork();
+        let mut b = p.fork();
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,349 @@
+//! Hand-rolled property tests (proptest is not in the offline registry):
+//! randomized invariant checks over the coordinator and simulators, with
+//! the failing seed printed so any case replays exactly.
+
+use spaceinfer::board::{Calibration, Zcu104};
+use spaceinfer::coordinator::backpressure::OverflowPolicy;
+use spaceinfer::coordinator::{AccelTimeline, Batcher, BoundedQueue,
+                              DownlinkManager, ScheduledRun};
+use spaceinfer::coordinator::decision::{decide, Decision};
+use spaceinfer::hls::AxiMaster;
+use spaceinfer::sensors::SensorStream;
+use spaceinfer::util::json::Json;
+use spaceinfer::util::prng::Prng;
+
+/// Run `f` over `n` random seeds; print the seed on failure.
+fn for_seeds(n: u64, f: impl Fn(&mut Prng)) {
+    for seed in 1..=n {
+        let mut rng = Prng::new(seed * 0x9E37_79B9 + 1);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON parser
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Prng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => Json::Num((rng.range_f64(-1e6, 1e6) * 100.0).round() / 100.0),
+        3 => {
+            let len = rng.below(12);
+            Json::Str((0..len)
+                .map(|_| char::from_u32(32 + rng.below(90) as u32).unwrap())
+                .collect())
+        }
+        4 => Json::Arr((0..rng.below(5))
+            .map(|_| random_json(rng, depth - 1))
+            .collect()),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    for_seeds(200, |rng| {
+        let j = random_json(rng, 3);
+        let text = j.to_string();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("emitted JSON must parse: {e}\n{text}"));
+        assert_eq!(j, back, "roundtrip mismatch for {text}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// batcher: conservation + ordering
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_conserves_events() {
+    for_seeds(100, |rng| {
+        let n = 1 + rng.below(200);
+        let max_batch = 1 + rng.below(16);
+        let max_wait = rng.range_f64(0.01, 2.0);
+        let mut stream = SensorStream::new("esperta", rng.next_u64(), 0.05);
+        let mut b = Batcher::new("esperta", max_batch, max_wait);
+        let mut seen: Vec<u64> = Vec::new();
+        let mut now = 0.0;
+        for _ in 0..n {
+            now += rng.range_f64(0.0, 0.3);
+            if let Some(batch) = b.poll(now) {
+                seen.extend(batch.events.iter().map(|e| e.seq));
+            }
+            if let Some(batch) = b.offer(stream.next_event(), now) {
+                seen.extend(batch.events.iter().map(|e| e.seq));
+            }
+        }
+        if let Some(batch) = b.flush(now + 10.0) {
+            seen.extend(batch.events.iter().map(|e| e.seq));
+        }
+        // every event exactly once, in arrival order
+        assert_eq!(seen.len(), n);
+        let expect: Vec<u64> = (0..n as u64).collect();
+        assert_eq!(seen, expect);
+    });
+}
+
+#[test]
+fn prop_batcher_never_exceeds_max_batch() {
+    for_seeds(60, |rng| {
+        let max_batch = 1 + rng.below(8);
+        let mut stream = SensorStream::new("esperta", rng.next_u64(), 0.05);
+        let mut b = Batcher::new("esperta", max_batch, 100.0);
+        for i in 0..100 {
+            if let Some(batch) = b.offer(stream.next_event(), i as f64 * 0.01) {
+                assert!(batch.events.len() <= max_batch);
+            }
+            assert!(b.pending_len() < max_batch);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// bounded queue: capacity + accounting
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_bounded_queue_invariants() {
+    for_seeds(100, |rng| {
+        let cap = 1 + rng.below(32);
+        let policy = if rng.chance(0.5) {
+            OverflowPolicy::DropNewest
+        } else {
+            OverflowPolicy::DropOldest
+        };
+        let mut q = BoundedQueue::new(cap, policy);
+        let mut popped = 0u64;
+        for i in 0..500u64 {
+            if rng.chance(0.6) {
+                q.push(i);
+            } else if q.pop().is_some() {
+                popped += 1;
+            }
+            assert!(q.len() <= cap, "capacity violated");
+        }
+        // conservation: every accepted item is popped, still queued, or
+        // (DropOldest only) was evicted to make room
+        let evicted = match policy {
+            OverflowPolicy::DropOldest => q.dropped,
+            OverflowPolicy::DropNewest => 0, // shed items never accepted
+        };
+        assert_eq!(q.accepted, popped + q.len() as u64 + evicted);
+        assert!(q.drop_rate() >= 0.0 && q.drop_rate() <= 1.0);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// timeline: serialization + energy accounting
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_timeline_serializes_and_accounts() {
+    for_seeds(100, |rng| {
+        let run = ScheduledRun {
+            setup_s: rng.range_f64(0.0, 0.01),
+            per_item_s: rng.range_f64(1e-5, 0.01),
+            power_w: rng.range_f64(0.5, 8.0),
+        };
+        let mut t = AccelTimeline::new("x");
+        let mut now = 0.0;
+        let mut last_done = 0.0;
+        let mut total_items = 0u64;
+        let mut expect_busy = 0.0;
+        for _ in 0..50 {
+            now += rng.range_f64(0.0, 0.02);
+            let n = 1 + rng.below(10) as u64;
+            let (start, done) = t.schedule(now, n, run);
+            // no overlap: starts at max(now, previous completion)
+            assert!(start >= now - 1e-12);
+            assert!(start >= last_done - 1e-12);
+            assert!(done > start);
+            last_done = done;
+            total_items += n;
+            expect_busy += run.setup_s + n as f64 * run.per_item_s;
+        }
+        assert_eq!(t.completed, total_items);
+        assert!((t.busy_s - expect_busy).abs() < 1e-9);
+        assert!((t.energy_j - run.power_w * expect_busy).abs() < 1e-9);
+        // busy time can never exceed the span it ran over
+        assert!(t.busy_s <= last_done + 1e-9);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// downlink: budget + priority monotonicity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_downlink_budget_and_floor() {
+    for_seeds(100, |rng| {
+        let budget = 64 + rng.below(4096) as u64;
+        let mut d = DownlinkManager::new(budget);
+        let mut rng2 = Prng::new(rng.next_u64());
+        let mut last_floor = 0u8;
+        for _ in 0..300 {
+            let decision = match rng2.below(3) {
+                0 => Decision::Latent { z: [0.0; 6] },
+                1 => decide("mms", &[rng2.f32(), rng2.f32(), rng2.f32(),
+                                     rng2.f32()], &mut rng2),
+                _ => Decision::SepAlert {
+                    warning: rng2.chance(0.3),
+                    mask: [false; 6],
+                    max_prob: rng2.f32(),
+                },
+            };
+            d.offer(&decision, 1000);
+            // floor is monotone non-decreasing as budget drains
+            let f = d.priority_floor();
+            assert!(f >= last_floor);
+            last_floor = f;
+        }
+        // non-alert traffic can never materially exceed the budget
+        // (alerts may overshoot by design); allow one max-size overshoot
+        assert!(d.sent_bytes <= budget + 24 * (d.sent_count.min(300)),
+                "sent {} budget {budget}", d.sent_bytes);
+        assert_eq!(d.sent_count + d.shed_count, 300);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// simulators: monotonicity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_axi_fetch_monotone_in_bytes_and_antitone_in_burst() {
+    for_seeds(100, |rng| {
+        let lat = rng.range_f64(2.0, 40.0);
+        let a = AxiMaster::naive(lat);
+        let b1 = rng.below(1 << 20) as u64;
+        let b2 = b1 + rng.below(1 << 20) as u64;
+        assert!(a.fetch_cycles(b2) >= a.fetch_cycles(b1));
+        let burst = AxiMaster::bursting(lat, 2 + rng.below(64) as u64);
+        assert!(burst.fetch_cycles(b2) <= a.fetch_cycles(b2) + 1e-9);
+    });
+}
+
+#[test]
+fn prop_hls_latency_monotone_in_ops() {
+    // more ops in a layer -> more cycles, all else equal
+    let calib = Calibration::default();
+    for_seeds(50, |rng| {
+        let ops1 = 1 + rng.below(1_000_000) as u64;
+        let ops2 = ops1 + 1 + rng.below(1_000_000) as u64;
+        let c1 = ops1 as f64 * calib.hls_ii + calib.hls_layer_fill_cycles;
+        let c2 = ops2 as f64 * calib.hls_ii + calib.hls_layer_fill_cycles;
+        assert!(c2 > c1);
+    });
+}
+
+#[test]
+fn prop_power_trace_nonnegative_and_time_monotone() {
+    use spaceinfer::power::{Implementation, PowerModel, TraceBuilder};
+    let calib = Calibration::default();
+    for_seeds(40, |rng| {
+        let duty = rng.f64();
+        let b = TraceBuilder::new(PowerModel::new(calib.clone()),
+                                  rng.next_u64());
+        let tr = b.standard_run(
+            &Implementation::Dpu { mac_duty: duty },
+            rng.range_f64(2.0, 3.0),
+            1 + rng.below(1000) as u64,
+            rng.range_f64(1e-4, 0.3),
+            rng.range_f64(1e-6, 1e-2),
+            rng.range_f64(1e-4, 0.1),
+        );
+        assert!(!tr.is_empty());
+        for w in tr.windows(2) {
+            assert!(w[1].t_s >= w[0].t_s, "time must be monotone");
+        }
+        assert!(tr.iter().all(|p| p.power_w >= 0.0));
+    });
+}
+
+#[test]
+fn prop_sensor_streams_deterministic_and_labeled() {
+    for_seeds(30, |rng| {
+        let seed = rng.next_u64();
+        for uc in ["vae", "cnet", "esperta", "mms"] {
+            let mut a = SensorStream::new(uc, seed, 0.1);
+            let mut b = SensorStream::new(uc, seed, 0.1);
+            let (x, y) = (a.next_event(), b.next_event());
+            assert_eq!(x.inputs, y.inputs, "{uc} stream not deterministic");
+            if uc == "mms" {
+                assert!(x.truth.unwrap() < 4);
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// zcu104 board invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_bram_plan_within_device() {
+    use spaceinfer::hls::BramAllocator;
+    use spaceinfer::model::Manifest;
+    let z = Zcu104::default();
+    let alloc = BramAllocator::new(&z.pl);
+    for_seeds(60, |rng| {
+        // random dense-chain manifest
+        let layers = 1 + rng.below(6);
+        let mut dims = vec![1 + rng.below(2048)];
+        for _ in 0..layers {
+            dims.push(1 + rng.below(2048));
+        }
+        let mut layer_json = Vec::new();
+        let mut totals = (0u64, 0u64, 0u64, 0u64);
+        for i in 0..layers {
+            let (din, dout) = (dims[i] as u64, dims[i + 1] as u64);
+            let macs = din * dout;
+            let ops = 2 * macs + dout;
+            let params = dout * (din + 1);
+            totals.0 += macs;
+            totals.1 += ops;
+            totals.2 += params;
+            totals.3 += 4 * params;
+            layer_json.push(format!(
+                r#"{{"kind":"dense","in_shape":[1,{din}],"out_shape":[1,{dout}],
+                   "macs":{macs},"ops":{ops},"params":{params},
+                   "weight_bytes":{wb},"act_bytes":{ab},"act":"none"}}"#,
+                wb = 4 * params,
+                ab = 4 * dout
+            ));
+        }
+        let src = format!(
+            r#"{{"name":"rand","precision":"fp32",
+               "inputs":{{"x":[1,{d0}]}},"input_order":["x"],
+               "output_shape":[1,{dn}],
+               "layers":[{ls}],
+               "total_macs":{m},"total_ops":{o},"total_params":{p},
+               "weight_bytes":{w}}}"#,
+            d0 = dims[0],
+            dn = dims[layers],
+            ls = layer_json.join(","),
+            m = totals.0, o = totals.1, p = totals.2, w = totals.3
+        );
+        let man = Manifest::from_json(&Json::parse(&src).unwrap()).unwrap();
+        let plan = alloc.allocate(&man);
+        // on-chip bytes never exceed the allocator budget
+        let used = plan.onchip_weight_bytes + plan.act_buffer_bytes
+            + plan.io_buffer_bytes;
+        assert!(used as f64 <= alloc.budget_brams * 4608.0 + 4608.0);
+        // conservation: every weight byte is somewhere
+        assert_eq!(plan.onchip_weight_bytes + plan.dram_weight_bytes,
+                   man.weight_bytes);
+    });
+}
