@@ -10,6 +10,7 @@ use spaceinfer::coordinator::{
     Batcher, BoundedQueue, DownlinkManager, Pipeline, PipelineConfig, Router,
 };
 use spaceinfer::model::catalog::Catalog;
+use spaceinfer::runtime::{Backend, ExecutorPool, PoolConfig};
 use spaceinfer::sensors::SensorStream;
 use spaceinfer::util::benchkit::{bench, throughput};
 use spaceinfer::util::prng::Prng;
@@ -73,6 +74,62 @@ fn main() {
         });
         println!("{} -> {:.0} events/s simulated pipeline", s.report(),
                  throughput(1000, s.median()));
+
+        // batch-size sweep: per-batch dispatch means coordinator
+        // overhead scales with batches, not events
+        for max_batch in [1usize, 8] {
+            let cfg = PipelineConfig {
+                use_case: "mms",
+                mms_model: "logistic".into(),
+                n_events: 1000,
+                max_batch,
+                ..Default::default()
+            };
+            let p = Pipeline::new(cfg, &catalog, &calib).unwrap();
+            let s = bench(
+                &format!("pipeline 1000 events (sim-only, max_batch={max_batch})"),
+                1,
+                20,
+                || {
+                    p.run(None).unwrap();
+                },
+            );
+            println!("{} -> {:.0} events/s", s.report(),
+                     throughput(1000, s.median()));
+        }
+
+        // executor-backed pipeline: one ExecRequest per batch through
+        // the sharded pool (surrogate backend so the bench isolates
+        // dispatch + coordination cost from PJRT compute)
+        let cfg = PipelineConfig {
+            use_case: "mms",
+            mms_model: "logistic".into(),
+            n_events: 1000,
+            ..Default::default()
+        };
+        let p = Pipeline::new(cfg, &catalog, &calib).unwrap();
+        let pool = ExecutorPool::with_config(
+            std::path::PathBuf::from("artifacts"),
+            PoolConfig {
+                backend: Backend::Surrogate,
+                preload: vec![(p.route.model.clone(), p.route.precision)],
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let (warmup, samples) = (1, 20);
+        let s = bench("pipeline 1000 events (pool, surrogate engine)", warmup, samples, || {
+            p.run(Some(&pool)).unwrap();
+        });
+        println!("{} -> {:.0} events/s", s.report(),
+                 throughput(1000, s.median()));
+        let runs = (warmup + samples) as f64;
+        println!(
+            "  ({} batches dispatched over {} runs -> {:.1} events/request)",
+            pool.batches_submitted(),
+            warmup + samples,
+            1000.0 * runs / pool.batches_submitted().max(1) as f64
+        );
     } else {
         eprintln!("(skipping pipeline bench: run `make artifacts` first)");
     }

@@ -1,12 +1,31 @@
-//! Bench target: the PJRT execute hot path — per-model inference
-//! wall-clock through the compiled HLO (host numbers; the ZCU104 numbers
-//! come from the simulators).  This is the coordinator's real serving
-//! cost and the perf-pass (§Perf L3) primary probe.
+//! Bench target: the execute hot path — per-model inference wall-clock
+//! through the compiled HLO (host numbers; the ZCU104 numbers come from
+//! the simulators), plus the executor pool's dispatch-amortization
+//! claim: batch-N through one `ExecRequest` vs N single-event submits.
+//! Emits machine-readable `BENCH_runtime.json` at the repo root so the
+//! perf trajectory is comparable across PRs.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 
 use spaceinfer::model::catalog::Catalog;
 use spaceinfer::model::Precision;
-use spaceinfer::runtime::{Engine, GoldenIo};
+use spaceinfer::runtime::{Engine, ExecutorPool, GoldenIo, InputSet, PoolConfig};
 use spaceinfer::util::benchkit::{bench, throughput};
+use spaceinfer::util::json::Json;
+
+/// Batch size for the amortization comparison.
+const BATCH_N: usize = 8;
+
+fn repo_root() -> PathBuf {
+    let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    for dir in [cwd.clone(), cwd.join("..")] {
+        if dir.join("ROADMAP.md").exists() {
+            return dir;
+        }
+    }
+    cwd
+}
 
 fn main() {
     let dir = std::path::Path::new("artifacts");
@@ -17,7 +36,7 @@ fn main() {
             std::process::exit(1);
         }
     };
-    let engine = Engine::new(dir).expect("PJRT CPU client");
+    let engine = Engine::new(dir).expect("engine");
     println!("platform: {}\n", engine.platform());
 
     // compile cost first (paid once at startup)
@@ -43,5 +62,78 @@ fn main() {
         });
         let med = s.median();
         println!("{}  -> {:.1} inf/s host", s.report(), throughput(1, med));
+    }
+    println!();
+
+    // dispatch amortization through the pool: batch-1 submit-per-event
+    // (the old hot path: one channel round trip + input copy per event)
+    // vs one whole-batch ExecRequest with Arc-shared buffers
+    let pool = ExecutorPool::with_config(
+        dir.to_path_buf(),
+        PoolConfig::default(),
+    )
+    .expect("executor pool");
+    println!(
+        "pool: {} workers, backend {}\n",
+        pool.worker_count(),
+        pool.engine().backend().as_str()
+    );
+    let mut model_rows: BTreeMap<String, Json> = BTreeMap::new();
+    for tag in &catalog.executable {
+        let (name, prec) = tag.rsplit_once('.').unwrap();
+        let prec = Precision::parse(prec).unwrap();
+        let model = engine.load(name, prec).unwrap();
+        if model.manifest.total_macs > 100_000_000 {
+            continue; // amortization story is about the small nets
+        }
+        let io = GoldenIo::load(&catalog.io_path(tag)).expect("golden io");
+        let set = io.input_set();
+        let raw: Vec<Vec<f32>> = (*set).clone();
+        let items: Vec<InputSet> = vec![set; BATCH_N];
+
+        let samples = 20;
+        let s1 = bench(&format!("submit-per-event x{BATCH_N} {tag}"), 2, samples, || {
+            for _ in 0..BATCH_N {
+                // per-event dispatch pays the input clone + round trip,
+                // exactly what the pre-batch-native pipeline paid
+                pool.run_sync(name, prec, raw.clone()).expect("run_sync");
+            }
+        });
+        let s8 = bench(&format!("one batch-{BATCH_N} request {tag}"), 2, samples, || {
+            pool.run_batch_sync(name, prec, items.clone()).expect("run_batch");
+        });
+        let eps1 = throughput(BATCH_N as u64, s1.median());
+        let eps8 = throughput(BATCH_N as u64, s8.median());
+        println!("{} -> {:.0} events/s", s1.report(), eps1);
+        println!("{} -> {:.0} events/s", s8.report(), eps8);
+        println!("  amortization: {:.2}x\n", eps8 / eps1.max(1e-12));
+
+        let mut row = BTreeMap::new();
+        row.insert("batch1_events_per_s".to_string(), Json::Num(eps1));
+        row.insert(
+            format!("batch{BATCH_N}_events_per_s"),
+            Json::Num(eps8),
+        );
+        row.insert(
+            "amortization_x".to_string(),
+            Json::Num(eps8 / eps1.max(1e-12)),
+        );
+        model_rows.insert(tag.clone(), Json::Obj(row));
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("runtime".to_string()));
+    doc.insert("platform".to_string(), Json::Str(engine.platform()));
+    doc.insert(
+        "backend".to_string(),
+        Json::Str(pool.engine().backend().as_str().to_string()),
+    );
+    doc.insert("pool_workers".to_string(), Json::Num(pool.worker_count() as f64));
+    doc.insert("batch_n".to_string(), Json::Num(BATCH_N as f64));
+    doc.insert("models".to_string(), Json::Obj(model_rows));
+    let out = repo_root().join("BENCH_runtime.json");
+    match std::fs::write(&out, Json::Obj(doc).to_string()) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
     }
 }

@@ -7,6 +7,8 @@
 //! request's latency budget is about to expire, amortizing the overhead
 //! across the batch exactly like queued DPU jobs on the real runner.
 
+use std::sync::Arc;
+
 use crate::sensors::SensorEvent;
 
 /// A flushed batch of same-route requests.
@@ -16,6 +18,23 @@ pub struct Batch {
     pub events: Vec<SensorEvent>,
     /// Virtual time when the batch was flushed.
     pub flushed_at_s: f64,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The events' input sets in batch order, for one whole-batch
+    /// `ExecRequest`.  Refcount bumps only — the buffers stay where the
+    /// sensor stream allocated them.
+    pub fn input_sets(&self) -> Vec<Arc<Vec<Vec<f32>>>> {
+        self.events.iter().map(|ev| ev.inputs.clone()).collect()
+    }
 }
 
 /// Per-route batcher.
@@ -105,7 +124,22 @@ mod tests {
         assert!(b.offer(ev(&mut s), 0.1).is_none());
         let batch = b.offer(ev(&mut s), 0.2).expect("full batch");
         assert_eq!(batch.events.len(), 3);
+        assert_eq!(batch.len(), 3);
+        assert!(!batch.is_empty());
         assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn input_sets_share_event_buffers() {
+        let mut s = SensorStream::new("mms", 4, 0.1);
+        let mut b = Batcher::new("baseline", 2, 10.0);
+        b.offer(ev(&mut s), 0.0);
+        let batch = b.offer(ev(&mut s), 0.1).expect("full batch");
+        let sets = batch.input_sets();
+        assert_eq!(sets.len(), 2);
+        for (set, event) in sets.iter().zip(&batch.events) {
+            assert!(Arc::ptr_eq(set, &event.inputs), "must be zero-copy");
+        }
     }
 
     #[test]

@@ -1,13 +1,22 @@
 //! The end-to-end on-board pipeline: wires sensors, router, batcher,
 //! executor (real PJRT numerics), the timing/power simulators (virtual
 //! ZCU104 clock), decision logic, and the downlink manager.
+//!
+//! The serving hot path is batch-native: each flushed `Batch` becomes
+//! exactly one `ExecRequest` (input buffers `Arc`-shared, no per-event
+//! copies or channel round trips), and completions are reaped
+//! asynchronously so event generation, batching, and execution overlap.
+//! Completions are *processed* in submission order regardless of
+//! arrival order, which keeps the decision RNG stream — and therefore
+//! the whole `PipelineReport` — deterministic for a given seed.
 
 use std::collections::BTreeMap;
+use std::sync::mpsc;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::board::{Calibration, Zcu104};
-use crate::coordinator::batcher::Batcher;
+use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::decision::{decide, Decision};
 use crate::coordinator::downlink::{DownlinkManager, DownlinkVerdict};
 use crate::coordinator::router::{Route, Router, Slot};
@@ -18,8 +27,8 @@ use crate::hls::HlsDesign;
 use crate::model::catalog::{model_info, Catalog};
 use crate::power::{Implementation, PowerModel};
 use crate::resources::estimate_hls;
-use crate::runtime::ExecutorPool;
-use crate::sensors::SensorStream;
+use crate::runtime::{ExecRequest, ExecResult, ExecutorPool};
+use crate::sensors::{SensorEvent, SensorStream};
 use crate::telemetry::Metrics;
 use crate::util::prng::Prng;
 
@@ -115,6 +124,189 @@ impl PipelineReport {
     }
 }
 
+/// Mutable per-run state threaded through dispatch and reap.
+struct RunState {
+    timeline: AccelTimeline,
+    downlink: DownlinkManager,
+    metrics: Metrics,
+    rng: Prng,
+    latencies: Vec<f64>,
+    decisions: BTreeMap<String, u64>,
+    correct: u64,
+    with_truth: u64,
+    sim_end: f64,
+}
+
+impl RunState {
+    /// Post-inference stages for one event: decision, truth scoring,
+    /// downlink verdict.
+    fn decide_one(
+        &mut self,
+        use_case: &'static str,
+        ev: &SensorEvent,
+        output: &[f32],
+        input_bytes: u64,
+    ) {
+        let d = decide(use_case, output, &mut self.rng);
+        if let Some(truth) = ev.truth {
+            self.with_truth += 1;
+            if decision_matches_truth(&d, truth) {
+                self.correct += 1;
+            }
+        }
+        *self.decisions.entry(decision_key(&d)).or_insert(0) += 1;
+        match self.downlink.offer(&d, input_bytes) {
+            DownlinkVerdict::Sent => self.metrics.inc("downlink_sent"),
+            DownlinkVerdict::Shed => self.metrics.inc("downlink_shed"),
+        }
+    }
+}
+
+/// In-flight batches: submitted to the pool, awaiting reap.  Results
+/// may arrive out of order across workers; processing is forced back
+/// into submission order so runs are deterministic.
+struct Reaper<'a> {
+    pool: &'a ExecutorPool,
+    reply_tx: mpsc::Sender<ExecResult>,
+    reply_rx: mpsc::Receiver<ExecResult>,
+    /// Next batch id to assign at submit.
+    next_id: u64,
+    /// Next batch id to process (strict submission order).
+    next_done: u64,
+    /// Events of submitted batches, keyed by batch id.
+    pending: BTreeMap<u64, Vec<SensorEvent>>,
+    /// Completions that arrived ahead of `next_done`.
+    arrived: BTreeMap<u64, ExecResult>,
+}
+
+impl<'a> Reaper<'a> {
+    fn new(pool: &'a ExecutorPool) -> Reaper<'a> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        Reaper {
+            pool,
+            reply_tx,
+            reply_rx,
+            next_id: 0,
+            next_done: 0,
+            pending: BTreeMap::new(),
+            arrived: BTreeMap::new(),
+        }
+    }
+
+    /// One `ExecRequest` for the whole batch — the only executor
+    /// dispatch on this path.
+    fn submit(&mut self, route: &Route, batch: Batch) -> Result<()> {
+        let items = batch.input_sets(); // Arc clones, zero-copy
+        let id = self.next_id;
+        self.next_id += 1;
+        self.pending.insert(id, batch.events);
+        self.pool.submit(ExecRequest {
+            model: route.model.clone(),
+            precision: route.precision,
+            items,
+            reply: self.reply_tx.clone(),
+            id,
+        })
+    }
+
+    fn in_flight(&self) -> bool {
+        self.next_done < self.next_id
+    }
+
+    /// Process every completion whose turn has come.
+    fn process_arrived(
+        &mut self,
+        use_case: &'static str,
+        input_bytes: u64,
+        state: &mut RunState,
+    ) -> Result<()> {
+        while let Some(res) = self.arrived.remove(&self.next_done) {
+            let events = self
+                .pending
+                .remove(&res.id)
+                .ok_or_else(|| anyhow!("reaped unknown batch id {}", res.id))?;
+            let outputs = res
+                .outputs
+                .with_context(|| format!("executing batch {}", res.id))?;
+            if outputs.len() != events.len() {
+                bail!(
+                    "batch {}: {} outputs for {} events",
+                    res.id,
+                    outputs.len(),
+                    events.len()
+                );
+            }
+            state.metrics.inc("exec_batches_reaped");
+            state.metrics.observe("host_batch_execute", res.host_elapsed);
+            state.metrics.observe(
+                "host_per_inference",
+                res.host_elapsed / events.len().max(1) as u32,
+            );
+            state.metrics.inc(&format!("exec_worker_{}", res.worker));
+            for (ev, out) in events.iter().zip(&outputs) {
+                state.decide_one(use_case, ev, out, input_bytes);
+            }
+            self.next_done += 1;
+        }
+        Ok(())
+    }
+
+    /// Non-blocking reap: absorb whatever has completed, process what's
+    /// in order.  Called between submissions so the coordinator
+    /// overlaps with execution instead of stalling on each batch.
+    fn drain_ready(
+        &mut self,
+        use_case: &'static str,
+        input_bytes: u64,
+        state: &mut RunState,
+    ) -> Result<()> {
+        while let Ok(res) = self.reply_rx.try_recv() {
+            self.arrived.insert(res.id, res);
+        }
+        self.process_arrived(use_case, input_bytes, state)
+    }
+
+    /// Block until fewer than `cap` batches are in flight, so pending
+    /// events and their input buffers stay bounded even when the
+    /// backend is slower than event generation (the virtual clock
+    /// generates events faster than any real backend executes them).
+    fn throttle(
+        &mut self,
+        cap: u64,
+        use_case: &'static str,
+        input_bytes: u64,
+        state: &mut RunState,
+    ) -> Result<()> {
+        while self.next_id - self.next_done >= cap {
+            let res = self
+                .reply_rx
+                .recv()
+                .map_err(|_| anyhow!("executor dropped the reply channel"))?;
+            self.arrived.insert(res.id, res);
+            self.process_arrived(use_case, input_bytes, state)?;
+        }
+        Ok(())
+    }
+
+    /// Blocking reap of everything still in flight (end of run).
+    fn drain_all(
+        &mut self,
+        use_case: &'static str,
+        input_bytes: u64,
+        state: &mut RunState,
+    ) -> Result<()> {
+        while self.in_flight() {
+            let res = self
+                .reply_rx
+                .recv()
+                .map_err(|_| anyhow!("executor dropped the reply channel"))?;
+            self.arrived.insert(res.id, res);
+            self.process_arrived(use_case, input_bytes, state)?;
+        }
+        Ok(())
+    }
+}
+
 /// The pipeline itself.
 pub struct Pipeline {
     pub config: PipelineConfig,
@@ -181,94 +373,103 @@ impl Pipeline {
         })
     }
 
-    /// Run the pipeline.  `executor` supplies real PJRT numerics; pass
-    /// `None` for a timing-only (simulated outputs) run — decisions then
-    /// come from a deterministic surrogate so downstream stages still
-    /// exercise.
+    /// Advance the virtual clock for one batch, then hand it to the
+    /// executor (one request per batch) or run the surrogate inline.
+    fn dispatch(
+        &self,
+        batch: Batch,
+        state: &mut RunState,
+        reaper: &mut Option<Reaper<'_>>,
+    ) -> Result<()> {
+        let cfg = &self.config;
+        let n = batch.len() as u64;
+        let (_start, done) =
+            state.timeline.schedule(batch.flushed_at_s, n, self.run_params);
+        state.sim_end = state.sim_end.max(done);
+        state.metrics.add("batches", 1);
+        state.metrics.add("inferences", n);
+        for ev in &batch.events {
+            state.latencies.push(done - ev.t_s);
+        }
+        match reaper {
+            Some(r) => {
+                r.submit(&self.route, batch)?;
+                // overlap: absorb any batches that already finished,
+                // then apply backpressure so in-flight work is bounded
+                r.drain_ready(cfg.use_case, self.input_bytes, state)?;
+                r.throttle(
+                    MAX_INFLIGHT_BATCHES,
+                    cfg.use_case,
+                    self.input_bytes,
+                    state,
+                )
+            }
+            None => {
+                // timing-only run: deterministic surrogate numerics,
+                // processed inline (same RNG order as the PJRT path)
+                for ev in &batch.events {
+                    let out =
+                        surrogate_output(cfg.use_case, ev, &mut state.rng)?;
+                    state.decide_one(cfg.use_case, ev, &out, self.input_bytes);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Run the pipeline.  `executor` supplies real numerics through the
+    /// sharded pool; pass `None` for a timing-only (simulated outputs)
+    /// run — decisions then come from a deterministic surrogate so
+    /// downstream stages still exercise.
     pub fn run(&self, executor: Option<&ExecutorPool>) -> Result<PipelineReport> {
         let cfg = &self.config;
         let mut stream = SensorStream::new(cfg.use_case, cfg.seed, cfg.cadence_s);
         let mut batcher = Batcher::new(&self.route.model, cfg.max_batch, cfg.max_wait_s);
-        let mut timeline = AccelTimeline::new(self.route.slot_name());
-        let mut downlink = DownlinkManager::new(cfg.downlink_budget);
-        let mut metrics = Metrics::default();
-        let mut rng = Prng::new(cfg.seed ^ DECISION_RNG_SALT);
-        let mut latencies: Vec<f64> = Vec::with_capacity(cfg.n_events);
-        let mut decisions: BTreeMap<String, u64> = BTreeMap::new();
-        let mut correct = 0u64;
-        let mut with_truth = 0u64;
-        let mut sim_end = 0.0f64;
-
-        let process_batch = |batch: crate::coordinator::batcher::Batch,
-                                 timeline: &mut AccelTimeline,
-                                 downlink: &mut DownlinkManager,
-                                 metrics: &mut Metrics,
-                                 rng: &mut Prng,
-                                 latencies: &mut Vec<f64>,
-                                 decisions: &mut BTreeMap<String, u64>,
-                                 correct: &mut u64,
-                                 with_truth: &mut u64,
-                                 sim_end: &mut f64|
-         -> Result<()> {
-            let n = batch.events.len() as u64;
-            let (_start, done) =
-                timeline.schedule(batch.flushed_at_s, n, self.run_params);
-            *sim_end = sim_end.max(done);
-            metrics.add("batches", 1);
-            metrics.add("inferences", n);
-            for ev in &batch.events {
-                latencies.push(done - ev.t_s);
-                let output = match executor {
-                    Some(pool) => pool.run_sync(
-                        &self.route.model,
-                        self.route.precision,
-                        ev.inputs.clone(),
-                    )?,
-                    None => surrogate_output(cfg.use_case, ev, rng),
-                };
-                let d = decide(cfg.use_case, &output, rng);
-                if let Some(truth) = ev.truth {
-                    *with_truth += 1;
-                    if decision_matches_truth(&d, truth) {
-                        *correct += 1;
-                    }
-                }
-                *decisions.entry(decision_key(&d)).or_insert(0) += 1;
-                match downlink.offer(&d, self.input_bytes) {
-                    DownlinkVerdict::Sent => metrics.inc("downlink_sent"),
-                    DownlinkVerdict::Shed => metrics.inc("downlink_shed"),
-                }
-            }
-            Ok(())
+        let mut state = RunState {
+            timeline: AccelTimeline::new(self.route.slot_name()),
+            downlink: DownlinkManager::new(cfg.downlink_budget),
+            metrics: Metrics::default(),
+            rng: Prng::new(cfg.seed ^ DECISION_RNG_SALT),
+            latencies: Vec::with_capacity(cfg.n_events),
+            decisions: BTreeMap::new(),
+            correct: 0,
+            with_truth: 0,
+            sim_end: 0.0,
         };
+        let mut reaper = executor.map(Reaper::new);
 
         for _ in 0..cfg.n_events {
             let ev = stream.next_event();
             let now = ev.t_s;
             if let Some(b) = batcher.poll(now) {
-                process_batch(b, &mut timeline, &mut downlink, &mut metrics,
-                              &mut rng, &mut latencies, &mut decisions,
-                              &mut correct, &mut with_truth, &mut sim_end)?;
+                self.dispatch(b, &mut state, &mut reaper)?;
             }
             if let Some(b) = batcher.offer(ev, now) {
-                process_batch(b, &mut timeline, &mut downlink, &mut metrics,
-                              &mut rng, &mut latencies, &mut decisions,
-                              &mut correct, &mut with_truth, &mut sim_end)?;
+                self.dispatch(b, &mut state, &mut reaper)?;
             }
         }
         let drain_t = cfg.n_events as f64 * cfg.cadence_s + cfg.max_wait_s;
         if let Some(b) = batcher.flush(drain_t) {
-            process_batch(b, &mut timeline, &mut downlink, &mut metrics,
-                          &mut rng, &mut latencies, &mut decisions,
-                          &mut correct, &mut with_truth, &mut sim_end)?;
+            self.dispatch(b, &mut state, &mut reaper)?;
+        }
+        if let Some(r) = &mut reaper {
+            r.drain_all(cfg.use_case, self.input_bytes, &mut state)?;
         }
 
+        let RunState {
+            timeline,
+            downlink,
+            metrics,
+            mut latencies,
+            decisions,
+            correct,
+            with_truth,
+            sim_end,
+            ..
+        } = state;
         latencies.sort_by(f64::total_cmp);
         let mean = latencies.iter().sum::<f64>() / latencies.len().max(1) as f64;
-        let p95 = latencies
-            .get(((latencies.len() as f64 * 0.95) as usize).min(latencies.len().saturating_sub(1)))
-            .copied()
-            .unwrap_or(0.0);
+        let p95 = percentile_nearest_rank(&latencies, 0.95);
         let busy_fps = if timeline.busy_s > 0.0 {
             timeline.completed as f64 / timeline.busy_s
         } else {
@@ -300,6 +501,18 @@ impl Pipeline {
     }
 }
 
+/// Nearest-rank percentile over a sorted sample: the smallest value
+/// with at least `q` of the mass at or below it (`ceil(q*n)` as a
+/// 1-indexed rank).  Truncating the rank instead (`(n*q) as usize`)
+/// understates tail latency for small n.
+fn percentile_nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 impl Route {
     fn slot_name(&self) -> &'static str {
         match self.slot {
@@ -313,9 +526,18 @@ impl Route {
 /// Salt separating the decision RNG stream from the sensor stream.
 const DECISION_RNG_SALT: u64 = 0xD01E_57A7;
 
-/// Deterministic surrogate outputs for timing-only runs (no PJRT).
-fn surrogate_output(use_case: &str, ev: &crate::sensors::SensorEvent, rng: &mut Prng) -> Vec<f32> {
-    match use_case {
+/// Backpressure cap on batches submitted but not yet reaped: enough to
+/// keep every worker busy with headroom, small enough that pending
+/// input buffers stay O(cap * max_batch) rather than O(n_events).
+const MAX_INFLIGHT_BATCHES: u64 = 64;
+
+/// Deterministic surrogate outputs for timing-only runs (no executor).
+fn surrogate_output(
+    use_case: &str,
+    ev: &SensorEvent,
+    rng: &mut Prng,
+) -> Result<Vec<f32>> {
+    Ok(match use_case {
         "mms" => {
             let mut v = vec![0.0f32; 4];
             if let Some(t) = ev.truth {
@@ -335,8 +557,8 @@ fn surrogate_output(use_case: &str, ev: &crate::sensors::SensorEvent, rng: &mut 
         }
         "vae" => (0..12).map(|_| rng.normal() as f32).collect(),
         "cnet" => vec![-6.0 + 2.0 * rng.f32()],
-        _ => unreachable!(),
-    }
+        other => bail!("no surrogate for unknown use case {other:?}"),
+    })
 }
 
 fn decision_key(d: &Decision) -> String {
@@ -357,5 +579,41 @@ fn decision_matches_truth(d: &Decision, truth: usize) -> bool {
         Decision::MmsRegion { region, .. } => region.index() == truth,
         Decision::SepAlert { warning, .. } => (*warning as usize) == truth,
         _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_percentile() {
+        // n=10, q=0.95 -> rank ceil(9.5)=10 -> last element (truncation
+        // would pick index 9 too, but q=0.5 separates the conventions)
+        let v: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(percentile_nearest_rank(&v, 0.95), 10.0);
+        assert_eq!(percentile_nearest_rank(&v, 0.5), 5.0);
+        // small n: p95 of 3 samples must be the max, not the middle
+        let small = [1.0, 2.0, 3.0];
+        assert_eq!(percentile_nearest_rank(&small, 0.95), 3.0);
+        assert_eq!(percentile_nearest_rank(&[], 0.95), 0.0);
+        assert_eq!(percentile_nearest_rank(&[7.0], 0.95), 7.0);
+        // q=1.0 and beyond-clamp stay in bounds
+        assert_eq!(percentile_nearest_rank(&small, 1.0), 3.0);
+        assert_eq!(percentile_nearest_rank(&small, 0.0), 1.0);
+    }
+
+    #[test]
+    fn surrogate_rejects_unknown_use_case() {
+        let mut rng = Prng::new(1);
+        let ev = SensorEvent {
+            t_s: 0.0,
+            use_case: "mms",
+            inputs: std::sync::Arc::new(vec![vec![0.0; 4]]),
+            truth: Some(1),
+            seq: 0,
+        };
+        assert!(surrogate_output("mms", &ev, &mut rng).is_ok());
+        assert!(surrogate_output("radar", &ev, &mut rng).is_err());
     }
 }

@@ -24,7 +24,7 @@ use spaceinfer::coordinator::{Pipeline, PipelineConfig};
 use spaceinfer::model::catalog::{model_info, Catalog};
 use spaceinfer::model::Precision;
 use spaceinfer::report::{ablation, figures, related, tables, whatif};
-use spaceinfer::runtime::{Engine, ExecutorPool, GoldenIo};
+use spaceinfer::runtime::{Backend, Engine, ExecutorPool, GoldenIo, PoolConfig};
 use spaceinfer::util::cli::Args;
 
 fn main() {
@@ -220,19 +220,50 @@ fn pipeline_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
         seed: args.get_usize("seed", 7)? as u64,
     };
     let pipeline = Pipeline::new(cfg, &catalog, &calib)?;
+    if !args.has("real") {
+        for flag in ["workers", "exec-backend"] {
+            if args.flags.contains_key(flag) {
+                bail!("--{flag} only applies with --real (timing-only runs have no executor)");
+            }
+        }
+    }
     let executor;
     let exec_ref = if args.has("real") {
-        let preload = vec![(
-            pipeline.route.model.clone(),
-            pipeline.route.precision,
-        )];
-        executor = ExecutorPool::spawn(dir.to_path_buf(), preload)?;
+        let backend = match args.get("exec-backend", "default") {
+            "pjrt" => Backend::Pjrt,
+            "surrogate" => Backend::Surrogate,
+            "default" => Backend::default(),
+            other => bail!("unknown executor backend {other:?}"),
+        };
+        let pool_cfg = PoolConfig {
+            workers: args.get_usize("workers", ExecutorPool::default_workers())?,
+            backend,
+            preload: vec![(
+                pipeline.route.model.clone(),
+                pipeline.route.precision,
+            )],
+        };
+        executor = ExecutorPool::with_config(dir.to_path_buf(), pool_cfg)?;
+        println!(
+            "executor: {} worker(s), backend {}, model {} -> shard {}",
+            executor.worker_count(),
+            executor.engine().backend().as_str(),
+            pipeline.route.model,
+            executor.shard_of(&pipeline.route.model, pipeline.route.precision),
+        );
         Some(&executor)
     } else {
         None
     };
     let report = pipeline.run(exec_ref)?;
     print!("{}", report.render());
+    if let Some(pool) = exec_ref {
+        println!(
+            "executor: {} batch(es) dispatched ({} inferences)",
+            pool.batches_submitted(),
+            report.metrics.counter("inferences"),
+        );
+    }
     println!("--- telemetry ---\n{}", report.metrics.report());
     Ok(())
 }
@@ -284,6 +315,7 @@ usage: spaceinfer <subcommand> [--artifacts DIR] [--calib FILE]
   pipeline            end-to-end coordinator run
                       [--use-case mms|vae|cnet|esperta] [--n N] [--real]
                       [--batch B] [--budget BYTES] [--mms-model NAME]
+                      [--workers N] [--exec-backend pjrt|surrogate]
   inspect             model + DPU program listing  [--model NAME]
   calibrate           print or save calibration    [--save FILE]
 ";

@@ -65,6 +65,12 @@ impl GoldenIo {
         self.inputs.iter().map(|i| i.data.as_slice()).collect()
     }
 
+    /// Inputs as one shareable set in manifest order, for
+    /// `LoadedModel::run_batch` / `ExecRequest` items.
+    pub fn input_set(&self) -> std::sync::Arc<Vec<Vec<f32>>> {
+        std::sync::Arc::new(self.inputs.iter().map(|i| i.data.clone()).collect())
+    }
+
     /// Max |a-b| against the expected output.
     pub fn max_abs_err(&self, got: &[f32]) -> f64 {
         self.expected
@@ -93,5 +99,8 @@ mod tests {
         assert_eq!(io.inputs[0].data, vec![1.5, -2.0]);
         assert_eq!(io.expected, vec![3.25]);
         assert_eq!(io.max_abs_err(&[3.0]), 0.25);
+        let set = io.input_set();
+        assert_eq!(set.len(), 1);
+        assert_eq!(set[0], vec![1.5, -2.0]);
     }
 }

@@ -1,33 +1,90 @@
-//! PJRT CPU client wrapper: compile HLO text once, execute many times.
+//! Inference engine: compile each model once, execute many times.
 //!
-//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
-//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
-//! `HloModuleProto::from_text_file` reassigns ids (see
-//! /opt/xla-example/README.md and DESIGN.md §3).
+//! Two backends sit behind one `Engine` API:
+//!
+//! * `Backend::Pjrt` (feature `xla`, the default) — the real numerics
+//!   path.  Interchange is HLO *text* (not serialized protos): jax >=
+//!   0.5 emits protos with 64-bit instruction ids that xla_extension
+//!   0.5.1 rejects; `HloModuleProto::from_text_file` reassigns ids (see
+//!   /opt/xla-example/README.md and DESIGN.md §3).
+//! * `Backend::Surrogate` — a pure-Rust fallback that loads the same
+//!   manifests and serves deterministic stand-in outputs (a hash of the
+//!   input bits seeds an xorshift stream).  It keeps the timing-only
+//!   pipeline, the executor-pool tests, and `--no-default-features`
+//!   builds running without artifacts' HLO or the PJRT runtime.
+//!
+//! The model cache is read-mostly: the hot path clones an `Arc`
+//! snapshot of the whole map under a briefly-held read lock, so
+//! concurrent executor workers never serialize on each other's cache
+//! hits.  Compilation happens outside any lock; a racing load keeps the
+//! first inserted executable.
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, RwLock};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Result};
+#[cfg(feature = "xla")]
+use anyhow::{anyhow, Context};
 
 use crate::model::{Manifest, Precision};
+use crate::util::hash::{fnv1a, Fnv1a};
+use crate::util::prng::Prng;
+
+/// One event's input tensors (manifest input order), shared without
+/// copying between the batcher, the executor queue, and the workers.
+pub type InputSet = Arc<Vec<Vec<f32>>>;
+
+/// Which execution backend an `Engine` uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Real PJRT CPU execution of the AOT HLO (requires feature `xla`).
+    Pjrt,
+    /// Deterministic pure-Rust stand-in (timing-only runs, tests, CI).
+    Surrogate,
+}
+
+impl Default for Backend {
+    fn default() -> Backend {
+        if cfg!(feature = "xla") {
+            Backend::Pjrt
+        } else {
+            Backend::Surrogate
+        }
+    }
+}
+
+impl Backend {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Backend::Pjrt => "pjrt",
+            Backend::Surrogate => "surrogate",
+        }
+    }
+}
+
+enum Exec {
+    #[cfg(feature = "xla")]
+    Pjrt(xla::PjRtLoadedExecutable),
+    /// Seeded per model tag so different variants disagree.
+    Surrogate { seed: u64 },
+}
 
 /// A compiled, executable model.
 pub struct LoadedModel {
     pub tag: String,
     pub manifest: Manifest,
-    exe: xla::PjRtLoadedExecutable,
     /// Input element counts per HLO parameter (manifest order).
     input_elems: Vec<usize>,
-    input_shapes: Vec<Vec<usize>>,
+    /// Reshape dims per parameter, precomputed once at load.
+    #[cfg_attr(not(feature = "xla"), allow(dead_code))]
+    input_dims: Vec<Vec<i64>>,
     output_elems: usize,
+    exec: Exec,
 }
 
 impl LoadedModel {
-    /// Execute with flat f32 buffers (one per model input, manifest
-    /// order).  Returns the flat f32 output.
-    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+    fn check(&self, inputs: &[&[f32]]) -> Result<()> {
         if inputs.len() != self.input_elems.len() {
             bail!(
                 "{}: expected {} inputs, got {}",
@@ -36,8 +93,7 @@ impl LoadedModel {
                 inputs.len()
             );
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (i, (buf, shape)) in inputs.iter().zip(&self.input_shapes).enumerate() {
+        for (i, buf) in inputs.iter().enumerate() {
             if buf.len() != self.input_elems[i] {
                 bail!(
                     "{}: input {i} has {} elements, expected {}",
@@ -46,90 +102,290 @@ impl LoadedModel {
                     self.input_elems[i]
                 );
             }
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
         }
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()?;
-        // lowered with return_tuple=True -> 1-tuple
-        let out = result.to_tuple1()?;
-        let values = out.to_vec::<f32>()?;
-        if values.len() != self.output_elems {
-            bail!(
-                "{}: output has {} elements, expected {}",
-                self.tag,
-                values.len(),
-                self.output_elems
-            );
+        Ok(())
+    }
+
+    /// Execute pre-validated inputs.
+    fn execute(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        match &self.exec {
+            #[cfg(feature = "xla")]
+            Exec::Pjrt(exe) => {
+                let mut literals = Vec::with_capacity(inputs.len());
+                for (buf, dims) in inputs.iter().zip(&self.input_dims) {
+                    literals.push(xla::Literal::vec1(buf).reshape(dims)?);
+                }
+                let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+                    .to_literal_sync()?;
+                // lowered with return_tuple=True -> 1-tuple
+                let out = result.to_tuple1()?;
+                let values = out.to_vec::<f32>()?;
+                if values.len() != self.output_elems {
+                    bail!(
+                        "{}: output has {} elements, expected {}",
+                        self.tag,
+                        values.len(),
+                        self.output_elems
+                    );
+                }
+                Ok(values)
+            }
+            Exec::Surrogate { seed } => {
+                // FNV-1a over the input bits: same inputs -> same
+                // outputs, on any worker thread.
+                let mut h = Fnv1a::seeded(*seed);
+                for buf in inputs {
+                    for v in *buf {
+                        h.write_u64(v.to_bits() as u64);
+                    }
+                }
+                let mut rng = Prng::new(h.finish());
+                Ok((0..self.output_elems)
+                    .map(|_| rng.f32() * 2.0 - 1.0)
+                    .collect())
+            }
         }
-        Ok(values)
+    }
+
+    /// Execute with flat f32 buffers (one per model input, manifest
+    /// order).  Returns the flat f32 output.
+    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        self.check(inputs)?;
+        self.execute(inputs)
+    }
+
+    /// Execute a whole batch in one pass: every item is shape-checked
+    /// up front (a malformed item fails the batch before any compute),
+    /// then executed back to back against the hot executable with no
+    /// cache lookups or lock traffic in between.
+    ///
+    /// The AOT artifacts are lowered with a fixed leading batch dim of
+    /// 1, so a stacked `[N, ...]` literal would not match the
+    /// executable's parameter shapes; until batch-N artifact variants
+    /// exist this is the tight literal-reuse loop, and the one-dispatch
+    /// amortization lives at the executor-pool layer.
+    pub fn run_batch(&self, items: &[InputSet]) -> Result<Vec<Vec<f32>>> {
+        let mut slices: Vec<&[f32]> = Vec::with_capacity(self.input_elems.len());
+        for item in items {
+            slices.clear();
+            slices.extend(item.iter().map(|v| v.as_slice()));
+            self.check(&slices)?;
+        }
+        let mut outputs = Vec::with_capacity(items.len());
+        for item in items {
+            slices.clear();
+            slices.extend(item.iter().map(|v| v.as_slice()));
+            outputs.push(self.execute(&slices)?);
+        }
+        Ok(outputs)
     }
 }
 
-/// The inference engine: one PJRT CPU client + a cache of compiled models.
+type ModelMap = BTreeMap<String, Arc<LoadedModel>>;
+
+/// The inference engine: one backend + a read-mostly cache of compiled
+/// models shared by every executor worker.
 pub struct Engine {
-    client: xla::PjRtClient,
+    backend: Backend,
+    #[cfg(feature = "xla")]
+    client: Option<xla::PjRtClient>,
     artifacts_dir: std::path::PathBuf,
-    models: Mutex<BTreeMap<String, std::sync::Arc<LoadedModel>>>,
+    models: RwLock<Arc<ModelMap>>,
 }
 
 impl Engine {
-    /// Create a CPU PJRT client rooted at an artifacts directory.
+    /// Default backend (PJRT when built with the `xla` feature).
     pub fn new(artifacts_dir: &Path) -> Result<Engine> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Engine::with_backend(artifacts_dir, Backend::default())
+    }
+
+    /// Engine with an explicit backend.
+    pub fn with_backend(artifacts_dir: &Path, backend: Backend) -> Result<Engine> {
+        #[cfg(feature = "xla")]
+        let client = match backend {
+            Backend::Pjrt => Some(
+                xla::PjRtClient::cpu()
+                    .map_err(|e| anyhow!("PJRT CPU client: {e}"))?,
+            ),
+            Backend::Surrogate => None,
+        };
+        #[cfg(not(feature = "xla"))]
+        if backend == Backend::Pjrt {
+            bail!("PJRT backend requires building with the `xla` feature");
+        }
         Ok(Engine {
+            backend,
+            #[cfg(feature = "xla")]
             client,
             artifacts_dir: artifacts_dir.to_path_buf(),
-            models: Mutex::new(BTreeMap::new()),
+            models: RwLock::new(Arc::new(BTreeMap::new())),
         })
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    pub fn backend(&self) -> Backend {
+        self.backend
     }
 
-    /// Load + compile (or fetch cached) a model variant.
-    pub fn load(&self, name: &str, precision: Precision) -> Result<std::sync::Arc<LoadedModel>> {
+    pub fn platform(&self) -> String {
+        match self.backend {
+            #[cfg(feature = "xla")]
+            Backend::Pjrt => self.client.as_ref().unwrap().platform_name(),
+            #[cfg(not(feature = "xla"))]
+            Backend::Pjrt => unreachable!("constructor rejects Pjrt without xla"),
+            Backend::Surrogate => "surrogate-cpu (pure-rust fallback)".into(),
+        }
+    }
+
+    /// Load + compile (or fetch cached) a model variant.  The cache hit
+    /// path clones an `Arc` snapshot under a briefly-held read lock —
+    /// no serialization between concurrent callers.
+    pub fn load(&self, name: &str, precision: Precision) -> Result<Arc<LoadedModel>> {
         let tag = format!("{name}.{}", precision.as_str());
-        if let Some(m) = self.models.lock().unwrap().get(&tag) {
+        let snapshot = self.models.read().unwrap().clone();
+        if let Some(m) = snapshot.get(&tag) {
             return Ok(m.clone());
         }
-        let hlo_path = self.artifacts_dir.join(format!("{tag}.hlo.txt"));
+        self.load_slow(tag)
+    }
+
+    /// Cache miss: compile outside any lock, then publish a new map
+    /// snapshot.  If another thread won the race, keep its executable.
+    fn load_slow(&self, tag: String) -> Result<Arc<LoadedModel>> {
         let man_path = self.artifacts_dir.join(format!("{tag}.manifest.json"));
         let manifest = Manifest::load(&man_path)?;
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path
-                .to_str()
-                .with_context(|| format!("non-utf8 path {hlo_path:?}"))?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {tag}: {e}"))?;
-        let input_shapes: Vec<Vec<usize>> =
-            manifest.inputs.iter().map(|(_, s)| s.clone()).collect();
-        let input_elems = input_shapes
+        let exec = self.compile(&tag)?;
+        let input_dims: Vec<Vec<i64>> = manifest
+            .inputs
             .iter()
-            .map(|s| s.iter().product())
+            .map(|(_, s)| s.iter().map(|&d| d as i64).collect())
+            .collect();
+        let input_elems = manifest
+            .inputs
+            .iter()
+            .map(|(_, s)| s.iter().product())
             .collect();
         let output_elems = manifest.output_elems() as usize;
-        let model = std::sync::Arc::new(LoadedModel {
+        let model = Arc::new(LoadedModel {
             tag: tag.clone(),
             manifest,
-            exe,
             input_elems,
-            input_shapes,
+            input_dims,
             output_elems,
+            exec,
         });
-        self.models.lock().unwrap().insert(tag, model.clone());
+        let mut guard = self.models.write().unwrap();
+        if let Some(existing) = guard.get(&tag) {
+            return Ok(existing.clone());
+        }
+        let mut next = (**guard).clone();
+        next.insert(tag, model.clone());
+        *guard = Arc::new(next);
         Ok(model)
+    }
+
+    fn compile(&self, tag: &str) -> Result<Exec> {
+        match self.backend {
+            #[cfg(feature = "xla")]
+            Backend::Pjrt => {
+                let hlo_path = self.artifacts_dir.join(format!("{tag}.hlo.txt"));
+                let proto = xla::HloModuleProto::from_text_file(
+                    hlo_path
+                        .to_str()
+                        .with_context(|| format!("non-utf8 path {hlo_path:?}"))?,
+                )
+                .map_err(|e| anyhow!("parsing {}: {e}", hlo_path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .as_ref()
+                    .unwrap()
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling {tag}: {e}"))?;
+                Ok(Exec::Pjrt(exe))
+            }
+            #[cfg(not(feature = "xla"))]
+            Backend::Pjrt => unreachable!("constructor rejects Pjrt without xla"),
+            Backend::Surrogate => Ok(Exec::Surrogate { seed: fnv1a(tag.bytes()) }),
+        }
     }
 
     /// Tags currently compiled.
     pub fn loaded_tags(&self) -> Vec<String> {
-        self.models.lock().unwrap().keys().cloned().collect()
+        self.models.read().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::testdata::MINI;
+
+    fn mini_dir(label: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("spaceinfer_client_{label}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("mini.fp32.manifest.json"), MINI).unwrap();
+        dir
+    }
+
+    #[test]
+    fn surrogate_engine_loads_and_runs() {
+        let dir = mini_dir("basic");
+        let engine = Engine::with_backend(&dir, Backend::Surrogate).unwrap();
+        assert_eq!(engine.backend(), Backend::Surrogate);
+        assert!(engine.platform().contains("surrogate"));
+        let m = engine.load("mini", Precision::Fp32).unwrap();
+        let out = m.run(&[&[0.5; 16]]).unwrap();
+        assert_eq!(out.len(), 2); // mini output_shape [1,2]
+        // deterministic: same inputs, same outputs
+        assert_eq!(out, m.run(&[&[0.5; 16]]).unwrap());
+        // different inputs, (almost surely) different outputs
+        assert_ne!(out, m.run(&[&[0.25; 16]]).unwrap());
+        assert_eq!(engine.loaded_tags(), vec!["mini.fp32".to_string()]);
+    }
+
+    #[test]
+    fn surrogate_rejects_bad_shapes() {
+        let dir = mini_dir("shapes");
+        let engine = Engine::with_backend(&dir, Backend::Surrogate).unwrap();
+        let m = engine.load("mini", Precision::Fp32).unwrap();
+        assert!(m.run(&[&[0.0; 5]]).is_err());
+        assert!(m.run(&[]).is_err());
+        // a malformed item anywhere fails run_batch before any compute
+        let good: InputSet = Arc::new(vec![vec![0.0; 16]]);
+        let bad: InputSet = Arc::new(vec![vec![0.0; 3]]);
+        assert!(m.run_batch(&[good.clone(), bad]).is_err());
+        assert!(m.run_batch(&[good]).is_ok());
+    }
+
+    #[test]
+    fn run_batch_matches_single_runs() {
+        let dir = mini_dir("batch");
+        let engine = Engine::with_backend(&dir, Backend::Surrogate).unwrap();
+        let m = engine.load("mini", Precision::Fp32).unwrap();
+        let items: Vec<InputSet> = (0..5)
+            .map(|i| Arc::new(vec![vec![i as f32 * 0.1; 16]]))
+            .collect();
+        let batched = m.run_batch(&items).unwrap();
+        for (item, out) in items.iter().zip(&batched) {
+            let slices: Vec<&[f32]> = item.iter().map(|v| v.as_slice()).collect();
+            assert_eq!(out, &m.run(&slices).unwrap());
+        }
+    }
+
+    #[test]
+    fn cache_snapshot_is_shared() {
+        let dir = mini_dir("cache");
+        let engine = Engine::with_backend(&dir, Backend::Surrogate).unwrap();
+        let a = engine.load("mini", Precision::Fp32).unwrap();
+        let b = engine.load("mini", Precision::Fp32).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second load must hit the snapshot");
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn pjrt_backend_requires_feature() {
+        let dir = mini_dir("nofeat");
+        assert!(Engine::with_backend(&dir, Backend::Pjrt).is_err());
     }
 }

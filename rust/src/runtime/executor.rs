@@ -1,39 +1,57 @@
-//! Threaded executor: a dedicated worker thread owns the PJRT engine and
-//! serves inference requests over channels (std::sync::mpsc — tokio is
-//! not in the offline registry, and PJRT-CPU execution is internally
-//! multi-threaded anyway, so one submission thread is the right shape:
-//! it mirrors the single DPU runner the paper drives from PYNQ).
+//! Batch-native sharded executor pool.
+//!
+//! A `Batch` is the unit of execution end to end: the coordinator
+//! submits one `ExecRequest` per flushed batch (input buffers are
+//! `Arc`-shared — no per-event copies on the hot path) and reaps one
+//! `ExecResult` per batch, so event generation, batching, and execution
+//! overlap.  The pool runs N worker threads (std::sync::mpsc — tokio is
+//! not in the offline registry) over one shared `Engine`, whose
+//! read-mostly cache means cache hits never serialize on a lock.
+//!
+//! Requests shard by model tag (FNV-1a % workers): every batch of a
+//! given variant lands on the same worker, keeping that variant's
+//! dispatch strictly ordered — the semantics of the single DPU runner
+//! the paper drives from PYNQ — while different variants execute
+//! concurrently on their own workers.
 
-use std::sync::mpsc;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::model::Precision;
+use crate::util::hash::fnv1a;
 
-use super::client::Engine;
+use super::client::{Backend, Engine, InputSet};
 
-/// A request to execute one model on one input set.
+/// A request to execute one model on a whole batch of input sets.
 pub struct ExecRequest {
     pub model: String,
     pub precision: Precision,
-    /// Flat f32 buffers, manifest input order.
-    pub inputs: Vec<Vec<f32>>,
-    /// Where to send the result.
+    /// One entry per event, batch order; buffers `Arc`-shared with the
+    /// producer (zero-copy request path).
+    pub items: Vec<InputSet>,
+    /// Where to send the result (the caller's reap channel).
     pub reply: mpsc::Sender<ExecResult>,
-    /// Opaque request id (round-trips to the reply).
+    /// Opaque batch id (round-trips to the reply).
     pub id: u64,
 }
 
-/// The outcome of one execution.
+/// The outcome of one batch execution.
 pub struct ExecResult {
     pub id: u64,
     pub model: String,
-    pub output: Result<Vec<f32>>,
-    /// Host wall-clock spent inside PJRT execute (for coordinator
-    /// telemetry; *not* the simulated ZCU104 latency).
+    /// One flat f32 output per item, batch order; a batch fails as a
+    /// unit (the coordinator never half-processes a batch).
+    pub outputs: Result<Vec<Vec<f32>>>,
+    /// Host wall-clock for the whole batch inside the worker (for
+    /// coordinator telemetry; *not* the simulated ZCU104 latency).
     pub host_elapsed: Duration,
+    /// Index of the worker that executed the batch.
+    pub worker: usize,
 }
 
 enum Msg {
@@ -41,100 +59,319 @@ enum Msg {
     Shutdown,
 }
 
-/// The executor pool (single worker owning the engine).
-pub struct ExecutorPool {
+/// Pool construction knobs.
+pub struct PoolConfig {
+    /// Worker threads; `ExecutorPool::default_workers()` when 0.
+    pub workers: usize,
+    pub backend: Backend,
+    /// (name, precision) variants compiled before any request is served.
+    pub preload: Vec<(String, Precision)>,
+}
+
+impl Default for PoolConfig {
+    fn default() -> PoolConfig {
+        PoolConfig {
+            workers: ExecutorPool::default_workers(),
+            backend: Backend::default(),
+            preload: Vec::new(),
+        }
+    }
+}
+
+struct Worker {
     tx: mpsc::Sender<Msg>,
     handle: Option<JoinHandle<()>>,
 }
 
+/// The executor pool: N workers sharing one engine.
+pub struct ExecutorPool {
+    workers: Vec<Worker>,
+    engine: Arc<Engine>,
+    submitted: AtomicU64,
+}
+
 impl ExecutorPool {
-    /// Spawn the worker. `preload` compiles the given (name, precision)
-    /// variants up front so the request path never hits the compiler.
+    /// Default worker count: the machine's parallelism, capped — PJRT
+    /// CPU execution is internally multi-threaded, so a modest pool
+    /// (sharding + dispatch overlap) beats one thread per core.
+    pub fn default_workers() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2)
+            .clamp(1, 8)
+    }
+
+    /// Spawn with defaults.  `preload` compiles the given variants up
+    /// front so the request path never hits the compiler.
     pub fn spawn(
-        artifacts_dir: std::path::PathBuf,
+        artifacts_dir: PathBuf,
         preload: Vec<(String, Precision)>,
     ) -> Result<ExecutorPool> {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let handle = std::thread::Builder::new()
-            .name("pjrt-executor".into())
-            .spawn(move || {
-                let engine = match Engine::new(&artifacts_dir) {
-                    Ok(e) => e,
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                for (name, prec) in &preload {
-                    if let Err(e) = engine.load(name, *prec) {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                }
-                let _ = ready_tx.send(Ok(()));
-                while let Ok(msg) = rx.recv() {
-                    match msg {
-                        Msg::Shutdown => break,
-                        Msg::Exec(req) => {
-                            let t0 = Instant::now();
-                            let output = engine
-                                .load(&req.model, req.precision)
-                                .and_then(|m| {
-                                    let slices: Vec<&[f32]> =
-                                        req.inputs.iter().map(|v| v.as_slice()).collect();
-                                    m.run(&slices)
-                                });
-                            let _ = req.reply.send(ExecResult {
-                                id: req.id,
-                                model: req.model,
-                                output,
-                                host_elapsed: t0.elapsed(),
-                            });
-                        }
-                    }
-                }
-            })?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("executor worker died during startup"))??;
-        Ok(ExecutorPool { tx, handle: Some(handle) })
+        ExecutorPool::with_config(artifacts_dir, PoolConfig { preload, ..Default::default() })
     }
 
-    /// Submit a request (non-blocking).
+    /// Spawn with explicit worker count / backend.
+    pub fn with_config(artifacts_dir: PathBuf, cfg: PoolConfig) -> Result<ExecutorPool> {
+        let engine = Arc::new(Engine::with_backend(&artifacts_dir, cfg.backend)?);
+        for (name, prec) in &cfg.preload {
+            engine.load(name, *prec)?;
+        }
+        let n = if cfg.workers == 0 { ExecutorPool::default_workers() } else { cfg.workers };
+        let mut workers = Vec::with_capacity(n);
+        for idx in 0..n {
+            let (tx, rx) = mpsc::channel::<Msg>();
+            let eng = engine.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("executor-{idx}"))
+                .spawn(move || worker_loop(idx, eng, rx))?;
+            workers.push(Worker { tx, handle: Some(handle) });
+        }
+        Ok(ExecutorPool { workers, engine, submitted: AtomicU64::new(0) })
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Batches submitted so far (dispatch counter; the coordinator's
+    /// one-request-per-batch invariant is asserted against this).
+    pub fn batches_submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    /// The shared engine (platform queries, direct loads in benches).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Worker a model variant shards to.
+    pub fn shard_of(&self, model: &str, precision: Precision) -> usize {
+        let h = fnv1a(model.bytes().chain(precision.as_str().bytes()));
+        (h % self.workers.len() as u64) as usize
+    }
+
+    /// Submit a batch (non-blocking); the result arrives on
+    /// `req.reply`.  Routed by model affinity.
     pub fn submit(&self, req: ExecRequest) -> Result<()> {
-        self.tx
+        let w = self.shard_of(&req.model, req.precision);
+        self.workers[w]
+            .tx
             .send(Msg::Exec(req))
-            .map_err(|_| anyhow!("executor worker gone"))
+            .map_err(|_| anyhow!("executor worker {w} gone"))?;
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(())
     }
 
-    /// Convenience: synchronous round trip.
+    /// Synchronous whole-batch round trip.
+    pub fn run_batch_sync(
+        &self,
+        model: &str,
+        precision: Precision,
+        items: Vec<InputSet>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(ExecRequest {
+            model: model.to_string(),
+            precision,
+            items,
+            reply,
+            id: 0,
+        })?;
+        rx.recv()
+            .map_err(|_| anyhow!("executor dropped the reply channel"))?
+            .outputs
+    }
+
+    /// Convenience: synchronous single-event round trip.
     pub fn run_sync(
         &self,
         model: &str,
         precision: Precision,
         inputs: Vec<Vec<f32>>,
     ) -> Result<Vec<f32>> {
-        let (reply, rx) = mpsc::channel();
-        self.submit(ExecRequest {
-            model: model.to_string(),
-            precision,
-            inputs,
-            reply,
-            id: 0,
-        })?;
-        let res = rx
-            .recv()
-            .map_err(|_| anyhow!("executor dropped the reply channel"))?;
-        res.output
+        let mut outs =
+            self.run_batch_sync(model, precision, vec![Arc::new(inputs)])?;
+        outs.pop().ok_or_else(|| anyhow!("empty batch result"))
+    }
+}
+
+fn worker_loop(idx: usize, engine: Arc<Engine>, rx: mpsc::Receiver<Msg>) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Exec(req) => {
+                let t0 = Instant::now();
+                // a panic (poisoned lock, FFI abort) must still produce
+                // a reply — reapers block on exactly one result per
+                // submitted batch and hold their own sender, so a
+                // swallowed request would hang them forever
+                let outputs = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        engine
+                            .load(&req.model, req.precision)
+                            .and_then(|m| m.run_batch(&req.items))
+                    }),
+                )
+                .unwrap_or_else(|_| {
+                    Err(anyhow!(
+                        "executor worker {idx} panicked executing {}",
+                        req.model
+                    ))
+                });
+                let _ = req.reply.send(ExecResult {
+                    id: req.id,
+                    model: req.model,
+                    outputs,
+                    host_elapsed: t0.elapsed(),
+                    worker: idx,
+                });
+            }
+        }
     }
 }
 
 impl Drop for ExecutorPool {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        for w in &self.workers {
+            let _ = w.tx.send(Msg::Shutdown);
         }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::testdata::MINI;
+
+    /// Temp artifacts dir with surrogate-loadable manifests.
+    fn mini_dir(label: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("spaceinfer_pool_{label}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("mini.fp32.manifest.json"), MINI).unwrap();
+        std::fs::write(
+            dir.join("mini2.fp32.manifest.json"),
+            MINI.replace("\"name\":\"mini\"", "\"name\":\"mini2\""),
+        )
+        .unwrap();
+        dir
+    }
+
+    fn surrogate_pool(label: &str, workers: usize) -> ExecutorPool {
+        ExecutorPool::with_config(
+            mini_dir(label),
+            PoolConfig {
+                workers,
+                backend: Backend::Surrogate,
+                preload: vec![("mini".into(), Precision::Fp32)],
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn batch_round_trip_and_shutdown() {
+        let pool = surrogate_pool("roundtrip", 2);
+        assert_eq!(pool.worker_count(), 2);
+        let items: Vec<InputSet> =
+            (0..4).map(|i| Arc::new(vec![vec![i as f32; 16]])).collect();
+        let outs = pool
+            .run_batch_sync("mini", Precision::Fp32, items)
+            .unwrap();
+        assert_eq!(outs.len(), 4);
+        assert!(outs.iter().all(|o| o.len() == 2));
+        assert_eq!(pool.batches_submitted(), 1);
+        drop(pool); // clean shutdown must not hang
+    }
+
+    #[test]
+    fn affinity_keeps_model_on_one_worker() {
+        let pool = surrogate_pool("affinity", 4);
+        let (reply, rx) = mpsc::channel();
+        for id in 0..16 {
+            pool.submit(ExecRequest {
+                model: "mini".into(),
+                precision: Precision::Fp32,
+                items: vec![Arc::new(vec![vec![0.5; 16]])],
+                reply: reply.clone(),
+                id,
+            })
+            .unwrap();
+        }
+        let expect = pool.shard_of("mini", Precision::Fp32);
+        let mut seen_ids = Vec::new();
+        for _ in 0..16 {
+            let res = rx.recv().unwrap();
+            assert_eq!(res.worker, expect, "model must pin to its shard");
+            seen_ids.push(res.id);
+        }
+        // single shard -> FIFO completion order
+        assert_eq!(seen_ids, (0..16).collect::<Vec<u64>>());
+        assert_eq!(pool.batches_submitted(), 16);
+    }
+
+    #[test]
+    fn concurrent_submitters_get_matching_ids() {
+        let pool = Arc::new(surrogate_pool("concurrent", 4));
+        let threads: Vec<_> = (0..4u64)
+            .map(|t| {
+                let pool = pool.clone();
+                std::thread::spawn(move || {
+                    let (reply, rx) = mpsc::channel();
+                    let model = if t % 2 == 0 { "mini" } else { "mini2" };
+                    for k in 0..25u64 {
+                        pool.submit(ExecRequest {
+                            model: model.into(),
+                            precision: Precision::Fp32,
+                            items: vec![Arc::new(vec![vec![(t * 100 + k) as f32; 16]])],
+                            reply: reply.clone(),
+                            id: t * 1000 + k,
+                        })
+                        .unwrap();
+                    }
+                    let mut ids: Vec<u64> =
+                        (0..25).map(|_| rx.recv().unwrap().id).collect();
+                    ids.sort_unstable();
+                    let want: Vec<u64> =
+                        (0..25).map(|k| t * 1000 + k).collect();
+                    assert_eq!(ids, want, "thread {t} lost or crossed replies");
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        assert_eq!(pool.batches_submitted(), 100);
+    }
+
+    #[test]
+    fn batch_outputs_deterministic_across_paths() {
+        let pool = surrogate_pool("determinism", 3);
+        let item: InputSet = Arc::new(vec![vec![0.75; 16]]);
+        let via_batch = pool
+            .run_batch_sync("mini", Precision::Fp32, vec![item.clone(), item.clone()])
+            .unwrap();
+        let via_single = pool
+            .run_sync("mini", Precision::Fp32, vec![vec![0.75; 16]])
+            .unwrap();
+        assert_eq!(via_batch[0], via_single);
+        assert_eq!(via_batch[0], via_batch[1]);
+    }
+
+    #[test]
+    fn unknown_model_errors_without_killing_worker() {
+        let pool = surrogate_pool("unknown", 1);
+        assert!(pool
+            .run_sync("nope", Precision::Fp32, vec![vec![0.0; 16]])
+            .is_err());
+        // worker survives the error and serves the next request
+        assert!(pool
+            .run_sync("mini", Precision::Fp32, vec![vec![0.0; 16]])
+            .is_ok());
     }
 }

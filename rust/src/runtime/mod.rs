@@ -1,14 +1,17 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
-//! executes them on the CPU PJRT client from the request path.
+//! Runtime layer: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! manifests) and serves batch-native inference from the request path.
 //!
 //! Python never appears here — the HLO text was produced once by
-//! `make artifacts`; this module compiles it at startup and serves
-//! `Vec<f32> -> Vec<f32>` inference calls.
+//! `make artifacts`; the PJRT backend compiles it at startup and an
+//! N-worker, model-affinity-sharded pool serves whole batches
+//! (`Vec<InputSet> -> Vec<Vec<f32>>`) with `Arc`-shared input buffers.
+//! A pure-Rust surrogate backend covers timing-only runs and
+//! `--no-default-features` builds.
 
 pub mod artifact;
 pub mod client;
 pub mod executor;
 
 pub use artifact::{GoldenIo, IoSpec};
-pub use client::{Engine, LoadedModel};
-pub use executor::{ExecRequest, ExecResult, ExecutorPool};
+pub use client::{Backend, Engine, InputSet, LoadedModel};
+pub use executor::{ExecRequest, ExecResult, ExecutorPool, PoolConfig};

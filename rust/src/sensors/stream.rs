@@ -4,6 +4,8 @@
 //! annotation where one exists (MMS region, SEP event) so decision-logic
 //! accuracy can be scored downstream.
 
+use std::sync::Arc;
+
 use crate::util::prng::Prng;
 
 use super::generators;
@@ -16,8 +18,11 @@ pub struct SensorEvent {
     pub t_s: f64,
     /// "vae" | "cnet" | "esperta" | "mms"
     pub use_case: &'static str,
-    /// Flat input tensors (manifest input order of the target model).
-    pub inputs: Vec<Vec<f32>>,
+    /// Flat input tensors (manifest input order of the target model),
+    /// `Arc`-shared so the batcher -> executor path never copies the
+    /// buffers (cloning an event or building an `ExecRequest` is a
+    /// refcount bump).
+    pub inputs: Arc<Vec<Vec<f32>>>,
     /// Ground truth: MMS region index or SEP-event flag.
     pub truth: Option<usize>,
     pub seq: u64,
@@ -77,7 +82,7 @@ impl SensorStream {
         let ev = SensorEvent {
             t_s: self.t_s,
             use_case: self.use_case,
-            inputs,
+            inputs: Arc::new(inputs),
             truth,
             seq: self.seq,
         };

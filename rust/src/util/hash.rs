@@ -1,0 +1,83 @@
+//! FNV-1a 64-bit — the one non-cryptographic hash the crate needs
+//! (executor shard routing, surrogate-engine seeding).  Streaming so
+//! callers can fold strings, bytes, and raw f32 bits without
+//! intermediate buffers.
+
+/// FNV-1a offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// Streaming FNV-1a hasher.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv1a(pub u64);
+
+impl Default for Fnv1a {
+    fn default() -> Fnv1a {
+        Fnv1a(FNV_OFFSET)
+    }
+}
+
+impl Fnv1a {
+    /// Start from a custom state (e.g. a per-model seed).
+    pub fn seeded(seed: u64) -> Fnv1a {
+        Fnv1a(FNV_OFFSET ^ seed)
+    }
+
+    pub fn write_u8(&mut self, b: u8) -> &mut Self {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(FNV_PRIME);
+        self
+    }
+
+    pub fn write_bytes(&mut self, bytes: impl IntoIterator<Item = u8>) -> &mut Self {
+        for b in bytes {
+            self.write_u8(b);
+        }
+        self
+    }
+
+    /// Fold a whole u64 in (one multiply per word — used for f32 bit
+    /// patterns where byte granularity buys nothing).
+    pub fn write_u64(&mut self, v: u64) -> &mut Self {
+        self.0 ^= v;
+        self.0 = self.0.wrapping_mul(FNV_PRIME);
+        self
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot convenience over a byte stream.
+pub fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    Fnv1a::default().write_bytes(bytes).finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_vectors() {
+        // canonical FNV-1a 64 test vectors
+        assert_eq!(fnv1a("".bytes()), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a("a".bytes()), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a("foobar".bytes()), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn streaming_equals_oneshot() {
+        let mut h = Fnv1a::default();
+        h.write_bytes("foo".bytes()).write_bytes("bar".bytes());
+        assert_eq!(h.finish(), fnv1a("foobar".bytes()));
+    }
+
+    #[test]
+    fn seed_separates_streams() {
+        assert_ne!(
+            Fnv1a::seeded(1).write_u64(7).finish(),
+            Fnv1a::seeded(2).write_u64(7).finish()
+        );
+    }
+}

@@ -13,7 +13,7 @@ use spaceinfer::hls::HlsDesign;
 use spaceinfer::model::catalog::{Catalog, Target, MODELS};
 use spaceinfer::model::{counts, Precision};
 use spaceinfer::report::{ablation, evaluate_model, figures, related, tables};
-use spaceinfer::runtime::{Engine, ExecutorPool, GoldenIo};
+use spaceinfer::runtime::{Backend, Engine, ExecutorPool, GoldenIo, PoolConfig};
 
 fn catalog() -> Catalog {
     Catalog::load(Path::new("artifacts")).expect(
@@ -91,6 +91,7 @@ fn mms_models_are_dpu_incompatible() {
 // ---------------------------------------------------------------------------
 
 #[test]
+#[cfg_attr(not(feature = "xla"), ignore = "golden IO needs the PJRT backend")]
 fn pjrt_runs_small_artifacts_to_golden_io() {
     let c = catalog();
     let engine = Engine::new(&c.dir).unwrap();
@@ -127,12 +128,35 @@ fn executor_pool_round_trip_and_shutdown() {
         .run_sync("esperta", Precision::Fp32, vec![vec![0.5, 1.5, 1.5]])
         .unwrap();
     assert_eq!(out.len(), 12);
-    // strong flare must alert on at least one ESPERTA model
-    assert!(out[6..].iter().sum::<f32>() >= 1.0);
+    // strong flare must alert on at least one ESPERTA model (a real-
+    // numerics claim; the surrogate fallback emits stand-in values)
+    if cfg!(feature = "xla") {
+        assert!(out[6..].iter().sum::<f32>() >= 1.0);
+    }
     drop(pool); // clean shutdown must not hang
 }
 
 #[test]
+fn run_batch_matches_n_single_runs_on_golden_inputs() {
+    let c = catalog();
+    let engine = Engine::new(&c.dir).unwrap();
+    let model = engine.load("esperta", Precision::Fp32).unwrap();
+    let io = GoldenIo::load(&c.io_path("esperta.fp32")).unwrap();
+    let single = model.run(&io.input_slices()).unwrap();
+    let batched = model
+        .run_batch(&vec![io.input_set(); 4])
+        .unwrap();
+    assert_eq!(batched.len(), 4);
+    for out in &batched {
+        assert_eq!(out, &single, "batch path diverged from single path");
+    }
+    if cfg!(feature = "xla") {
+        assert!(io.max_abs_err(&batched[0]) < 1e-5, "golden IO broken");
+    }
+}
+
+#[test]
+#[cfg_attr(not(feature = "xla"), ignore = "bitwise claim needs the PJRT backend")]
 fn esperta_fp32_is_bit_identical_to_python() {
     // the paper's <=1e-10 HLS-fidelity claim; on identical HLO we get
     // bitwise equality
@@ -409,6 +433,142 @@ fn pipeline_real_pjrt_numerics_mms_logistic() {
     let total: u64 = r.decisions.values().sum();
     assert_eq!(total, 24);
     assert_eq!(r.downlink_sent + r.downlink_shed, 24);
+}
+
+#[test]
+fn pipeline_dispatches_exactly_one_request_per_batch() {
+    // the batch-native invariant: no per-event channel round trips —
+    // the executor sees one ExecRequest per flushed Batch
+    let c = catalog();
+    let calib = Calibration::default();
+    let cfg = PipelineConfig {
+        use_case: "mms",
+        n_events: 100,
+        mms_model: "logistic".into(),
+        max_batch: 8,
+        ..Default::default()
+    };
+    let pipeline = Pipeline::new(cfg, &c, &calib).unwrap();
+    // surrogate backend: exercises the identical dispatch/reap path
+    // without needing compiled HLO
+    let pool = ExecutorPool::with_config(
+        c.dir.clone(),
+        PoolConfig {
+            backend: Backend::Surrogate,
+            preload: vec![(pipeline.route.model.clone(), pipeline.route.precision)],
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let r = pipeline.run(Some(&pool)).unwrap();
+    let batches = r.metrics.counter("batches");
+    assert!(batches > 1, "run must produce multiple batches");
+    assert!(
+        batches < 100,
+        "batching must coalesce events ({} batches / 100 events)",
+        batches
+    );
+    assert_eq!(
+        pool.batches_submitted(),
+        batches,
+        "exactly one ExecRequest per Batch"
+    );
+    assert_eq!(r.metrics.counter("exec_batches_reaped"), batches);
+    assert_eq!(r.metrics.counter("inferences"), 100);
+    // per-batch host timings made it into telemetry
+    let h = r.metrics.histogram("host_batch_execute").unwrap();
+    assert_eq!(h.count(), batches);
+    assert!(r.metrics.histogram("host_per_inference").unwrap().count() == batches);
+}
+
+#[test]
+fn pipeline_same_seed_same_report() {
+    // async reap must not leak scheduling nondeterminism into results
+    let c = catalog();
+    let calib = Calibration::default();
+    let run = || {
+        let cfg = PipelineConfig {
+            use_case: "esperta",
+            n_events: 150,
+            cadence_s: 0.01,
+            seed: 42,
+            ..Default::default()
+        };
+        let pipeline = Pipeline::new(cfg, &c, &calib).unwrap();
+        let pool = ExecutorPool::with_config(
+            c.dir.clone(),
+            PoolConfig {
+                workers: 4,
+                backend: Backend::Surrogate,
+                preload: vec![(pipeline.route.model.clone(), pipeline.route.precision)],
+            },
+        )
+        .unwrap();
+        pipeline.run(Some(&pool)).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.decisions, b.decisions);
+    assert_eq!(a.downlink_sent, b.downlink_sent);
+    assert_eq!(a.downlink_shed, b.downlink_shed);
+    assert_eq!(a.downlink_sent_bytes, b.downlink_sent_bytes);
+    assert_eq!(a.accuracy, b.accuracy);
+    assert_eq!(a.mean_latency_s, b.mean_latency_s);
+    assert_eq!(a.p95_latency_s, b.p95_latency_s);
+    assert_eq!(a.sim_elapsed_s, b.sim_elapsed_s);
+    assert_eq!(a.energy_j, b.energy_j);
+    assert_eq!(
+        a.metrics.counter("batches"),
+        b.metrics.counter("batches")
+    );
+    assert_eq!(
+        a.metrics.counter("downlink_sent"),
+        b.metrics.counter("downlink_sent")
+    );
+}
+
+#[test]
+fn pipeline_timing_only_same_seed_same_report() {
+    // the surrogate (None-executor) path must be deterministic too
+    let c = catalog();
+    let calib = Calibration::default();
+    let run = || {
+        let cfg = PipelineConfig {
+            use_case: "mms",
+            n_events: 120,
+            mms_model: "logistic".into(),
+            seed: 9,
+            ..Default::default()
+        };
+        Pipeline::new(cfg, &c, &calib).unwrap().run(None).unwrap()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.decisions, b.decisions);
+    assert_eq!(a.accuracy, b.accuracy);
+    assert_eq!(a.p95_latency_s, b.p95_latency_s);
+    assert_eq!(a.downlink_sent_bytes, b.downlink_sent_bytes);
+}
+
+#[test]
+fn pipeline_p95_at_least_mean_tail() {
+    // nearest-rank p95 must never fall below the median for a skewed
+    // saturating run (the truncation bug understated the tail)
+    let c = catalog();
+    let calib = Calibration::default();
+    let cfg = PipelineConfig {
+        use_case: "mms",
+        n_events: 60,
+        mms_model: "baseline".into(),
+        ..Default::default()
+    };
+    let r = Pipeline::new(cfg, &c, &calib).unwrap().run(None).unwrap();
+    assert!(
+        r.p95_latency_s >= r.mean_latency_s,
+        "saturating run: p95 {} must sit in the tail (mean {})",
+        r.p95_latency_s,
+        r.mean_latency_s
+    );
 }
 
 #[test]

@@ -1,0 +1,188 @@
+//! Executor-pool tests that run without `make artifacts`: they
+//! provision a temp artifacts dir holding only manifests and drive the
+//! pool on the pure-Rust surrogate backend, so they cover the batching,
+//! sharding, and reaping machinery under every feature combination
+//! (CI runs them with `--no-default-features`).
+
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+
+use spaceinfer::model::Precision;
+use spaceinfer::runtime::{
+    Backend, Engine, ExecRequest, ExecutorPool, InputSet, PoolConfig,
+};
+
+/// Mirror of the crate-private `model::manifest::testdata::MINI`
+/// fixture (unit-test fixtures aren't visible across crate boundaries).
+const MINI: &str = r#"{
+  "name":"mini","precision":"fp32",
+  "inputs":{"x":[1,4,4,1]},
+  "input_order":["x"],
+  "output_shape":[1,2],
+  "layers":[
+    {"kind":"conv2d","in_shape":[1,4,4,1],"out_shape":[1,4,4,2],
+     "macs":288,"ops":640,"params":20,"weight_bytes":80,
+     "act_bytes":128,"act":"relu"},
+    {"kind":"flatten","in_shape":[1,4,4,2],"out_shape":[1,32],
+     "macs":0,"ops":0,"params":0,"weight_bytes":0,
+     "act_bytes":128,"act":"none"},
+    {"kind":"dense","in_shape":[1,32],"out_shape":[1,2],
+     "macs":64,"ops":130,"params":66,"weight_bytes":264,
+     "act_bytes":8,"act":"none"}],
+  "total_macs":352,"total_ops":770,"total_params":86,
+  "weight_bytes":344}"#;
+
+fn mini_dir(label: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("spaceinfer_itest_{label}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for name in ["mini", "mini2", "mini3"] {
+        std::fs::write(
+            dir.join(format!("{name}.fp32.manifest.json")),
+            MINI.replace("\"name\":\"mini\"", &format!("\"name\":\"{name}\"")),
+        )
+        .unwrap();
+    }
+    dir
+}
+
+fn pool(label: &str, workers: usize) -> ExecutorPool {
+    ExecutorPool::with_config(
+        mini_dir(label),
+        PoolConfig {
+            workers,
+            backend: Backend::Surrogate,
+            preload: vec![("mini".into(), Precision::Fp32)],
+        },
+    )
+    .unwrap()
+}
+
+fn item(fill: f32) -> InputSet {
+    Arc::new(vec![vec![fill; 16]])
+}
+
+#[test]
+fn m_threads_times_k_submits_results_match_ids() {
+    let pool = Arc::new(pool("mxk", 4));
+    let (reply, rx) = mpsc::channel();
+    let threads: Vec<_> = (0..5u64)
+        .map(|t| {
+            let pool = pool.clone();
+            let reply = reply.clone();
+            std::thread::spawn(move || {
+                let model = format!("mini{}", if t % 3 == 0 { "" } else { "2" });
+                for k in 0..20u64 {
+                    let id = t * 100 + k;
+                    pool.submit(ExecRequest {
+                        model: model.clone(),
+                        precision: Precision::Fp32,
+                        items: vec![item(id as f32), item(id as f32 + 0.5)],
+                        reply: reply.clone(),
+                        id,
+                    })
+                    .unwrap();
+                }
+            })
+        })
+        .collect();
+    for th in threads {
+        th.join().unwrap();
+    }
+    drop(reply);
+    let mut ids = Vec::new();
+    while let Ok(res) = rx.recv() {
+        let outputs = res.outputs.unwrap();
+        assert_eq!(outputs.len(), 2, "two items in, two outputs out");
+        assert!(outputs.iter().all(|o| o.len() == 2));
+        ids.push(res.id);
+        if ids.len() == 100 {
+            break;
+        }
+    }
+    ids.sort_unstable();
+    let want: Vec<u64> =
+        (0..5).flat_map(|t| (0..20).map(move |k| t * 100 + k)).collect();
+    assert_eq!(ids, want, "every submit must reap exactly once");
+    assert_eq!(pool.batches_submitted(), 100);
+}
+
+#[test]
+fn run_batch_equals_n_single_runs() {
+    let dir = mini_dir("equiv");
+    let engine = Engine::with_backend(&dir, Backend::Surrogate).unwrap();
+    let model = engine.load("mini", Precision::Fp32).unwrap();
+    let items: Vec<InputSet> = (0..6).map(|i| item(i as f32 * 0.3)).collect();
+    let batched = model.run_batch(&items).unwrap();
+    assert_eq!(batched.len(), 6);
+    for (set, out) in items.iter().zip(&batched) {
+        let slices: Vec<&[f32]> = set.iter().map(|v| v.as_slice()).collect();
+        assert_eq!(out, &model.run(&slices).unwrap(), "batch != single");
+    }
+    // and the same equivalence through the pool's sync entry points
+    let p = pool("equiv_pool", 2);
+    let via_batch = p
+        .run_batch_sync("mini", Precision::Fp32, vec![item(0.9), item(0.1)])
+        .unwrap();
+    assert_eq!(
+        via_batch[0],
+        p.run_sync("mini", Precision::Fp32, vec![vec![0.9; 16]]).unwrap()
+    );
+    assert_eq!(
+        via_batch[1],
+        p.run_sync("mini", Precision::Fp32, vec![vec![0.1; 16]]).unwrap()
+    );
+}
+
+#[test]
+fn sharding_is_stable_and_total() {
+    let p = pool("shard", 3);
+    for model in ["mini", "mini2", "mini3"] {
+        let s = p.shard_of(model, Precision::Fp32);
+        assert!(s < 3);
+        assert_eq!(s, p.shard_of(model, Precision::Fp32), "shard must be stable");
+    }
+    // int8 is a different variant and may shard elsewhere, but must be
+    // in range too
+    assert!(p.shard_of("mini", Precision::Int8) < 3);
+}
+
+#[test]
+fn submit_reap_is_async() {
+    let p = pool("async", 2);
+    let (reply, rx) = mpsc::channel();
+    // submit everything before reaping anything: the queue decouples
+    // producers from workers
+    for id in 0..10 {
+        p.submit(ExecRequest {
+            model: "mini".into(),
+            precision: Precision::Fp32,
+            items: vec![item(id as f32)],
+            reply: reply.clone(),
+            id,
+        })
+        .unwrap();
+    }
+    let mut got: Vec<u64> = (0..10).map(|_| rx.recv().unwrap().id).collect();
+    got.sort_unstable();
+    assert_eq!(got, (0..10).collect::<Vec<u64>>());
+}
+
+#[test]
+fn preload_compiles_up_front() {
+    let p = pool("preload", 1);
+    assert_eq!(
+        p.engine().loaded_tags(),
+        vec!["mini.fp32".to_string()],
+        "preload must compile before the first request"
+    );
+}
+
+#[test]
+fn default_backend_tracks_feature() {
+    if cfg!(feature = "xla") {
+        assert_eq!(Backend::default(), Backend::Pjrt);
+    } else {
+        assert_eq!(Backend::default(), Backend::Surrogate);
+    }
+}
