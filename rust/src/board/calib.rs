@@ -21,17 +21,23 @@ pub struct Calibration {
     // ---- A53 CPU timing ----
     /// Peak single-core NEON fp32 throughput (ops/s): 1.2 GHz x 8.
     pub cpu_peak_ops: f64,
-    /// PyTorch per-layer dispatch overhead by kind (seconds).
+    /// PyTorch per-layer dispatch overhead: 2-D convolution (s).
     pub dispatch_conv2d: f64,
+    /// Dispatch overhead: 3-D convolution (s).
     pub dispatch_conv3d: f64,
+    /// Dispatch overhead: pooling layers (s).
     pub dispatch_pool: f64,
+    /// Dispatch overhead: dense / dense-heads layers (s).
     pub dispatch_dense: f64,
+    /// Dispatch overhead: reshape / concat / misc kernels (s).
     pub dispatch_misc: f64,
 
     // ---- DPU B4096 timing ----
-    /// Parallelism of the MAC array: pixel / input-channel / output-channel.
+    /// MAC-array pixel parallelism (output pixels per cycle).
     pub dpu_pp: u64,
+    /// MAC-array input-channel parallelism.
     pub dpu_icp: u64,
+    /// MAC-array output-channel parallelism.
     pub dpu_ocp: u64,
     /// Fixed runner-invocation overhead per inference (s) — the PYNQ/VART
     /// submit-wait path the paper measured through.
@@ -66,9 +72,11 @@ pub struct Calibration {
     pub p_dpu_base: f64,
     /// DPU dynamic swing at 100% MAC duty.
     pub p_dpu_dyn: f64,
-    /// HLS design power: base + per-kLUT + per-BRAM terms.
+    /// HLS design power: static/poll base term (W).
     pub p_hls_base: f64,
+    /// HLS design power per 1000 LUTs (W).
     pub p_hls_per_kilolut: f64,
+    /// HLS design power per BRAM36 block (W).
     pub p_hls_per_bram: f64,
     /// MPSoC power spike during bitstream configuration.
     pub p_config_spike: f64,
@@ -166,11 +174,13 @@ impl Calibration {
         Ok(c)
     }
 
+    /// Load a calibration JSON file (missing keys keep defaults).
     pub fn load(path: &Path) -> Result<Calibration> {
         let text = std::fs::read_to_string(path)?;
         Calibration::from_json(&Json::parse(&text)?)
     }
 
+    /// Write the calibration as JSON.
     pub fn save(&self, path: &Path) -> Result<()> {
         std::fs::write(path, self.to_json().to_string())?;
         Ok(())

@@ -4,12 +4,16 @@
 /// Resources" row).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PlResources {
+    /// Lookup tables.
     pub luts: u64,
+    /// Flip-flops.
     pub ffs: u64,
+    /// DSP slices.
     pub dsps: u64,
     /// BRAM36 blocks (half units allowed — the paper counts an 18 Kb block
     /// as 0.5, e.g. ESPERTA's 1.5).
     pub brams: f64,
+    /// UltraRAM blocks.
     pub urams: u64,
 }
 
@@ -21,6 +25,7 @@ pub const URAM_BYTES: u64 = 36_864;
 /// The ZCU104 board: PS (2x A53 cluster as used by PYNQ) + PL + DDR.
 #[derive(Debug, Clone, Copy)]
 pub struct Zcu104 {
+    /// Programmable-logic resource pool.
     pub pl: PlResources,
     /// A53 clock (Hz).
     pub ps_clock_hz: f64,

@@ -20,13 +20,18 @@ pub enum OverflowPolicy {
 #[derive(Debug)]
 pub struct BoundedQueue<T> {
     items: VecDeque<T>,
+    /// Maximum queued items.
     pub capacity: usize,
+    /// What happens to overflow.
     pub policy: OverflowPolicy,
+    /// Items shed so far.
     pub dropped: u64,
+    /// Items accepted so far.
     pub accepted: u64,
 }
 
 impl<T> BoundedQueue<T> {
+    /// Empty queue with a capacity and overflow policy.
     pub fn new(capacity: usize, policy: OverflowPolicy) -> BoundedQueue<T> {
         assert!(capacity > 0, "queue capacity must be > 0");
         BoundedQueue {
@@ -58,14 +63,17 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Pop the oldest item.
     pub fn pop(&mut self) -> Option<T> {
         self.items.pop_front()
     }
 
+    /// Items currently queued.
     pub fn len(&self) -> usize {
         self.items.len()
     }
 
+    /// Is the queue empty?
     pub fn is_empty(&self) -> bool {
         self.items.is_empty()
     }

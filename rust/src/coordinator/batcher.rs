@@ -14,17 +14,22 @@ use crate::sensors::SensorEvent;
 /// A flushed batch of same-route requests.
 #[derive(Debug)]
 pub struct Batch {
+    /// Model the batch routes to.
     pub model: String,
+    /// Member events, arrival order.
     pub events: Vec<SensorEvent>,
     /// Virtual time when the batch was flushed.
     pub flushed_at_s: f64,
 }
 
 impl Batch {
+    /// Events in the batch.
     pub fn len(&self) -> usize {
         self.events.len()
     }
 
+    /// Is the batch empty? (flush never emits one, but the API is
+    /// complete)
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
     }
@@ -40,7 +45,9 @@ impl Batch {
 /// Per-route batcher.
 #[derive(Debug)]
 pub struct Batcher {
+    /// Model this batcher accumulates for.
     pub model: String,
+    /// Flush threshold (events).
     pub max_batch: usize,
     /// Max time the oldest request may wait before a forced flush (s).
     pub max_wait_s: f64,
@@ -49,6 +56,17 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Empty batcher (panics on `max_batch == 0`).
+    ///
+    /// ```
+    /// use spaceinfer::coordinator::Batcher;
+    /// use spaceinfer::sensors::SensorStream;
+    /// let mut stream = SensorStream::new("esperta", 1, 0.1);
+    /// let mut b = Batcher::new("esperta", 2, 10.0);
+    /// assert!(b.offer(stream.next_event(), 0.0).is_none());
+    /// let batch = b.offer(stream.next_event(), 0.1).expect("full at 2");
+    /// assert_eq!(batch.len(), 2);
+    /// ```
     pub fn new(model: &str, max_batch: usize, max_wait_s: f64) -> Batcher {
         assert!(max_batch >= 1, "batch size must be >= 1");
         Batcher {
@@ -74,9 +92,17 @@ impl Batcher {
     }
 
     /// Called on clock ticks: flush if the oldest request's budget is up.
+    ///
+    /// The flush is stamped at `oldest_arrival + max_wait` — the moment
+    /// a real timer would have fired — not at `now_s`.  The run loop
+    /// only polls when the *next* event arrives, so stamping at `now_s`
+    /// would charge every batch up to a full inter-arrival gap of
+    /// phantom wait at low event rates (cadence > max_wait), inflating
+    /// latencies and deadline misses with a simulation artifact.
     pub fn poll(&mut self, now_s: f64) -> Option<Batch> {
         if !self.pending.is_empty() && now_s - self.oldest_arrival_s >= self.max_wait_s {
-            return self.flush(now_s);
+            let fire_at = self.oldest_arrival_s + self.max_wait_s;
+            return self.flush(fire_at);
         }
         None
     }
@@ -93,6 +119,7 @@ impl Batcher {
         })
     }
 
+    /// Events waiting in the open batch.
     pub fn pending_len(&self) -> usize {
         self.pending.len()
     }
@@ -150,6 +177,19 @@ mod tests {
         assert!(b.poll(0.4).is_none());
         let batch = b.poll(0.51).expect("deadline flush");
         assert_eq!(batch.events.len(), 1);
+        // stamped when the timer would have fired, not when the poll
+        // happened to run (no phantom wait at low event rates)
+        assert!((batch.flushed_at_s - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn late_poll_does_not_inflate_wait() {
+        let mut s = SensorStream::new("esperta", 3, 0.1);
+        let mut b = Batcher::new("esperta", 100, 0.05);
+        b.offer(ev(&mut s), 1.0);
+        // next event arrives a long gap later: flush fires at 1.05
+        let batch = b.poll(2.0).expect("overdue flush");
+        assert!((batch.flushed_at_s - 1.05).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,532 @@
+//! Cost-model-driven dispatch: score every eligible target per batch.
+//!
+//! The paper's core result is a *trade-space*, not a fixed mapping: the
+//! DPU reaches up to 34.16× the A53 inference rate but draws 5.75–6.75 W,
+//! the naive HLS IPs add the operators the DPU lacks at 1.5–1.75 W, and
+//! the A53 is always available at 2.0–2.75 W.  Which target a workload
+//! belongs on therefore depends on latency, energy, and operator support
+//! — so the coordinator decides *at runtime*, per flushed batch, from the
+//! same calibrated simulators that reproduce Table III:
+//!
+//! * latency — `cpu::A53Model`, `dpu::DpuSchedule`, `hls::HlsDesign`
+//!   (per-item compute + per-batch setup), plus the target's current
+//!   queue backlog from its `AccelTimeline`;
+//! * energy — busy time × the `power::PowerModel` draw for that
+//!   implementation;
+//! * operator support — the DPU target only exists when the int8 variant
+//!   passes the paper's §III-B operator gate (`Manifest::dpu_compatible`).
+//!
+//! Policies ([`Policy`]): `static` reproduces the paper's deployment
+//! matrix, `min-latency` / `min-energy` optimize one axis, and `deadline`
+//! picks the cheapest target that still meets a per-use-case latency
+//! deadline.  An optional mission power budget (a cap on *active* MPSoC
+//! draw — what the spacecraft EPS must supply while inference runs)
+//! filters targets under every dynamic policy and sheds to the
+//! lowest-power target when nothing fits.
+
+use anyhow::{bail, Result};
+
+use crate::board::{Calibration, Zcu104};
+use crate::coordinator::router::Slot;
+use crate::coordinator::scheduler::{AccelTimeline, ScheduledRun};
+use crate::cpu::A53Model;
+use crate::dpu::{DpuArch, DpuSchedule};
+use crate::hls::HlsDesign;
+use crate::model::catalog::{model_info, Catalog, Target as PaperTarget};
+use crate::model::Precision;
+use crate::power::{Implementation, PowerModel};
+use crate::resources::estimate_hls;
+
+/// How the dispatcher picks a target for each flushed batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// The paper's static deployment matrix (§III-B): DPU-compatible
+    /// CNNs to Vitis AI, everything else to its HLS IP.  Default;
+    /// byte-identical to the pre-dispatcher pipeline.
+    Static,
+    /// Minimize predicted batch completion latency (queue + setup +
+    /// per-item compute).
+    MinLatency,
+    /// Minimize predicted batch energy (busy time × active power).
+    MinEnergy,
+    /// Meet the per-use-case latency deadline at minimum energy; fall
+    /// back to min-latency when no target can meet it.
+    Deadline,
+}
+
+impl Policy {
+    /// Parse a CLI policy name (`static` | `min-latency` | `min-energy`
+    /// | `deadline`).
+    ///
+    /// ```
+    /// use spaceinfer::coordinator::Policy;
+    /// assert_eq!(Policy::parse("min-energy").unwrap(), Policy::MinEnergy);
+    /// assert!(Policy::parse("fastest").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<Policy> {
+        Ok(match s {
+            "static" => Policy::Static,
+            "min-latency" => Policy::MinLatency,
+            "min-energy" => Policy::MinEnergy,
+            "deadline" => Policy::Deadline,
+            other => bail!(
+                "unknown policy {other:?} (static | min-latency | min-energy | deadline)"
+            ),
+        })
+    }
+
+    /// The CLI / report spelling of this policy.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Policy::Static => "static",
+            Policy::MinLatency => "min-latency",
+            Policy::MinEnergy => "min-energy",
+            Policy::Deadline => "deadline",
+        }
+    }
+}
+
+/// Default end-to-end deadline (event arrival → decision, seconds) per
+/// use case, used when the CLI does not override it.  SEP alerts are
+/// time-critical; flux forecasts ride a slow cadence.
+///
+/// The deadline races the batcher: a batch force-flushed after
+/// `max_wait_s` has already spent that long waiting, so a deadline is
+/// only meetable when the batcher wait is tightened below it.  The
+/// vae/mms/cnet defaults sit above the default 0.5 s wait; ESPERTA's
+/// 0.1 s alert deadline deliberately does not — pair it with
+/// `--max-wait` ≤ ~0.05 s (as the `sep_storm` example does) or every
+/// batch counts as late.
+pub fn default_deadline_s(use_case: &str) -> f64 {
+    match use_case {
+        "esperta" => 0.1,
+        "cnet" => 2.0,
+        _ => 1.0, // vae latents, MMS region labels
+    }
+}
+
+/// One dispatchable execution target: a slot plus the calibrated timing
+/// and power the cost model scores it with.
+#[derive(Debug, Clone)]
+pub struct DispatchTarget {
+    /// Which simulated slot this is.
+    pub slot: Slot,
+    /// Precision the deployed variant runs at (int8 on the DPU, fp32
+    /// elsewhere) — also what the executor pool loads.
+    pub precision: Precision,
+    /// Per-batch setup + per-item compute + active power.
+    pub run: ScheduledRun,
+}
+
+/// Predicted cost of one batch on one target.
+#[derive(Debug, Clone)]
+pub struct BatchCost {
+    /// Target slot this cost was scored for.
+    pub slot: Slot,
+    /// Flush → predicted completion (queue wait + setup + n·per-item), s.
+    pub latency_s: f64,
+    /// Oldest-event arrival → predicted completion, s (what the deadline
+    /// is checked against).
+    pub oldest_latency_s: f64,
+    /// Predicted busy energy for the batch, J.
+    pub energy_j: f64,
+    /// Active MPSoC draw while the batch runs, W.
+    pub power_w: f64,
+    /// Does `oldest_latency_s` meet the dispatcher's deadline?
+    pub meets_deadline: bool,
+}
+
+/// The dispatcher's verdict for one batch.
+#[derive(Debug, Clone)]
+pub struct Choice {
+    /// Index into `Dispatcher::targets` (and the run's timeline vector).
+    pub index: usize,
+    /// The predicted cost of the chosen target.
+    pub cost: BatchCost,
+    /// True when the power budget changed the decision (the batch was
+    /// shed away from the target the bare policy would have picked).
+    pub power_shed: bool,
+}
+
+/// Scores every eligible target for each batch and picks one under the
+/// configured policy.  Immutable once built — per-run queue state lives
+/// in the caller's `AccelTimeline` vector (index-aligned with
+/// `targets`), so one dispatcher can serve many runs.
+///
+/// ```
+/// use spaceinfer::board::Calibration;
+/// use spaceinfer::coordinator::{Dispatcher, Policy, Slot};
+/// use spaceinfer::model::Catalog;
+///
+/// let catalog = Catalog::synthetic();
+/// let d = Dispatcher::new("vae", &catalog, &Calibration::default(),
+///                         Policy::MinLatency, 0.5, None).unwrap();
+/// // VAE is DPU-compatible: CPU + DPU + HLS are all eligible
+/// assert_eq!(d.targets.len(), 3);
+/// let mut timelines = d.timelines();
+/// let choice = d.choose(&timelines, 0.0, 0.0, 8);
+/// assert_eq!(d.targets[choice.index].slot, Slot::Dpu);
+/// // commit the batch to the chosen target's queue
+/// timelines[choice.index].schedule(0.0, 8, d.targets[choice.index].run);
+/// ```
+#[derive(Debug, Clone)]
+pub struct Dispatcher {
+    /// Active policy.
+    pub policy: Policy,
+    /// Eligible targets (CPU always; DPU when the int8 variant passes
+    /// the operator gate; HLS always — any manifest synthesizes).
+    pub targets: Vec<DispatchTarget>,
+    /// The paper's deployment-matrix slot (what `Policy::Static` picks).
+    pub primary: Slot,
+    /// End-to-end deadline (oldest event arrival → completion), s.
+    pub deadline_s: f64,
+    /// Cap on active MPSoC draw (W); `None` disables the budget filter.
+    pub power_budget_w: Option<f64>,
+}
+
+impl Dispatcher {
+    /// Build the target table for one model from the catalog and the
+    /// calibrated simulators.  Errors when the paper's primary target
+    /// for the model cannot be built (missing manifest variant).
+    pub fn new(
+        model: &str,
+        catalog: &Catalog,
+        calib: &Calibration,
+        policy: Policy,
+        deadline_s: f64,
+        power_budget_w: Option<f64>,
+    ) -> Result<Dispatcher> {
+        let info = model_info(model)?;
+        let board = Zcu104::default();
+        let power = PowerModel::new(calib.clone());
+        let mut targets = Vec::with_capacity(3);
+
+        // A53 software path: always eligible (the paper's baseline and
+        // its overload escape hatch), calibrated on the CPU rows.
+        let cpu_man = catalog.manifest(model, Precision::Fp32)?;
+        let a53 = A53Model::calibrated(cpu_man, calib, info.paper.cpu_fps);
+        targets.push(DispatchTarget {
+            slot: Slot::Cpu,
+            precision: Precision::Fp32,
+            run: ScheduledRun {
+                setup_s: 0.0,
+                per_item_s: a53.latency_s(),
+                power_w: info.paper.cpu_p_mpsoc,
+            },
+        });
+
+        // Vitis-AI DPU: int8 variant present AND every operator inside
+        // the DPU's set (the paper's §III-B inspector gate).
+        if let Ok(man) = catalog.manifest(model, Precision::Int8) {
+            if man.dpu_compatible() {
+                let sched = DpuSchedule::new(
+                    man,
+                    DpuArch::b4096(calib, board.dpu_clock_hz),
+                    calib,
+                    board.axi_bandwidth,
+                )?;
+                let per_item = sched.latency_s() - sched.invoke_s;
+                targets.push(DispatchTarget {
+                    slot: Slot::Dpu,
+                    precision: Precision::Int8,
+                    run: ScheduledRun {
+                        setup_s: sched.invoke_s,
+                        per_item_s: per_item,
+                        power_w: power.mpsoc_w(&PowerModel::dpu_impl(&sched)),
+                    },
+                });
+            }
+        }
+
+        // Vitis-HLS custom IP: any manifest synthesizes (fp32, naive
+        // dataflow) — slow for deep CNNs, frugal for shallow nets.
+        let design = HlsDesign::synthesize(cpu_man, &board, calib);
+        let setup = design.axi_setup_cycles / design.clock_hz;
+        let util = estimate_hls(cpu_man, &design.plan);
+        targets.push(DispatchTarget {
+            slot: Slot::Hls,
+            precision: Precision::Fp32,
+            run: ScheduledRun {
+                setup_s: setup,
+                per_item_s: design.latency_s() - setup,
+                power_w: power.mpsoc_w(&Implementation::Hls {
+                    kiloluts: util.luts as f64 / 1000.0,
+                    brams: design.plan.brams(),
+                    duty: 1.0,
+                }),
+            },
+        });
+
+        let primary = match info.target {
+            PaperTarget::Dpu => Slot::Dpu,
+            PaperTarget::Hls => Slot::Hls,
+        };
+        if !targets.iter().any(|t| t.slot == primary) {
+            bail!(
+                "model {model:?}: paper's primary slot {primary:?} has no \
+                 dispatchable target (missing int8 manifest?)"
+            );
+        }
+        Ok(Dispatcher { policy, targets, primary, deadline_s, power_budget_w })
+    }
+
+    /// Fresh per-run queue state, index-aligned with `targets`.
+    pub fn timelines(&self) -> Vec<AccelTimeline> {
+        self.targets
+            .iter()
+            .map(|t| AccelTimeline::new(t.slot.name()))
+            .collect()
+    }
+
+    /// Index of the paper's deployment-matrix target.
+    pub fn primary_index(&self) -> usize {
+        self.targets
+            .iter()
+            .position(|t| t.slot == self.primary)
+            .unwrap_or(0)
+    }
+
+    /// Score one target for a batch of `n` events flushed at `now_s`
+    /// whose oldest event arrived at `oldest_t_s`.
+    pub fn cost(
+        &self,
+        target: &DispatchTarget,
+        timeline: &AccelTimeline,
+        now_s: f64,
+        oldest_t_s: f64,
+        n: u64,
+    ) -> BatchCost {
+        let queue_s = timeline.backlog_s(now_s);
+        let busy_s = target.run.setup_s + n as f64 * target.run.per_item_s;
+        let latency_s = queue_s + busy_s;
+        let oldest_latency_s = (now_s - oldest_t_s).max(0.0) + latency_s;
+        BatchCost {
+            slot: target.slot,
+            latency_s,
+            oldest_latency_s,
+            energy_j: target.run.power_w * busy_s,
+            power_w: target.run.power_w,
+            meets_deadline: oldest_latency_s <= self.deadline_s,
+        }
+    }
+
+    /// Pick a target for one batch.  `timelines` is the run's queue
+    /// state (from [`Dispatcher::timelines`]); the caller commits the
+    /// batch by calling `schedule` on the chosen entry.  Deterministic:
+    /// ties break toward the first target in table order.
+    pub fn choose(
+        &self,
+        timelines: &[AccelTimeline],
+        now_s: f64,
+        oldest_t_s: f64,
+        n: u64,
+    ) -> Choice {
+        let costs: Vec<BatchCost> = self
+            .targets
+            .iter()
+            .zip(timelines)
+            .map(|(t, tl)| self.cost(t, tl, now_s, oldest_t_s, n))
+            .collect();
+        if self.policy == Policy::Static {
+            let index = self.primary_index();
+            return Choice { index, cost: costs[index].clone(), power_shed: false };
+        }
+        let all: Vec<usize> = (0..costs.len()).collect();
+        let pick = |idxs: &[usize]| -> usize {
+            match self.policy {
+                Policy::MinLatency => argmin(idxs, &costs, |c| c.latency_s),
+                Policy::MinEnergy => argmin(idxs, &costs, |c| c.energy_j),
+                Policy::Deadline => {
+                    let meeting: Vec<usize> = idxs
+                        .iter()
+                        .copied()
+                        .filter(|&i| costs[i].meets_deadline)
+                        .collect();
+                    if meeting.is_empty() {
+                        // nothing meets the deadline: damage control,
+                        // finish as early as possible
+                        argmin(idxs, &costs, |c| c.latency_s)
+                    } else {
+                        argmin(&meeting, &costs, |c| c.energy_j)
+                    }
+                }
+                Policy::Static => unreachable!("handled above"),
+            }
+        };
+        let (index, power_shed) = match self.power_budget_w {
+            // no budget: one scoring pass, never a shed
+            None => (pick(&all), false),
+            Some(budget) => {
+                let fits: Vec<usize> = all
+                    .iter()
+                    .copied()
+                    .filter(|&i| costs[i].power_w <= budget)
+                    .collect();
+                let index = if fits.is_empty() {
+                    // nothing fits the budget: shed to the lowest-power
+                    // target outright
+                    argmin(&all, &costs, |c| c.power_w)
+                } else {
+                    pick(&fits)
+                };
+                (index, index != pick(&all))
+            }
+        };
+        Choice { index, cost: costs[index].clone(), power_shed }
+    }
+}
+
+/// First index minimizing `key` (strict-less fold: deterministic ties).
+fn argmin<F: Fn(&BatchCost) -> f64>(idxs: &[usize], costs: &[BatchCost], key: F) -> usize {
+    let mut best = idxs[0];
+    for &i in &idxs[1..] {
+        if key(&costs[i]) < key(&costs[best]) {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// fast-but-hot / slow-but-frugal / very-slow-middling table: the
+    /// constructed trade-space where every policy picks differently.
+    fn table(policy: Policy, deadline_s: f64, budget: Option<f64>) -> Dispatcher {
+        let t = |slot, per_item_s, power_w| DispatchTarget {
+            slot,
+            precision: Precision::Fp32,
+            run: ScheduledRun { setup_s: 0.0, per_item_s, power_w },
+        };
+        Dispatcher {
+            policy,
+            targets: vec![
+                t(Slot::Dpu, 0.001, 6.0),  // 6 mJ/item, fastest
+                t(Slot::Hls, 0.002, 1.5),  // 3 mJ/item, cheapest
+                t(Slot::Cpu, 0.040, 2.75), // 110 mJ/item, slowest
+            ],
+            primary: Slot::Dpu,
+            deadline_s,
+            power_budget_w: budget,
+        }
+    }
+
+    fn slot_of(d: &Dispatcher, tl: &[AccelTimeline]) -> Slot {
+        d.targets[d.choose(tl, 0.0, 0.0, 1).index].slot
+    }
+
+    #[test]
+    fn min_energy_and_min_latency_disagree() {
+        let lat = table(Policy::MinLatency, 1.0, None);
+        let en = table(Policy::MinEnergy, 1.0, None);
+        let tl = lat.timelines();
+        assert_eq!(slot_of(&lat, &tl), Slot::Dpu);
+        assert_eq!(slot_of(&en, &tl), Slot::Hls);
+    }
+
+    #[test]
+    fn static_always_picks_primary() {
+        let d = table(Policy::Static, 1.0, None);
+        let mut tl = d.timelines();
+        // pile work on the primary: static must not steer away
+        tl[0].schedule(0.0, 1000, d.targets[0].run);
+        assert_eq!(slot_of(&d, &tl), Slot::Dpu);
+    }
+
+    #[test]
+    fn deadline_prefers_cheapest_that_meets() {
+        // loose deadline: the frugal 2 ms target qualifies
+        let d = table(Policy::Deadline, 0.010, None);
+        assert_eq!(slot_of(&d, &d.timelines()), Slot::Hls);
+        // tight deadline: only the 1 ms target meets it
+        let d = table(Policy::Deadline, 0.0015, None);
+        assert_eq!(slot_of(&d, &d.timelines()), Slot::Dpu);
+    }
+
+    #[test]
+    fn deadline_violation_falls_back_to_min_latency() {
+        // nothing can meet 0.1 ms: fall back to the fastest target
+        let d = table(Policy::Deadline, 0.0001, None);
+        let tl = d.timelines();
+        let c = d.choose(&tl, 0.0, 0.0, 1);
+        assert_eq!(d.targets[c.index].slot, Slot::Dpu);
+        assert!(!c.cost.meets_deadline);
+    }
+
+    #[test]
+    fn power_budget_sheds_off_hot_target() {
+        // 4 W budget excludes the 6 W DPU: min-latency lands on HLS
+        let d = table(Policy::MinLatency, 1.0, Some(4.0));
+        let tl = d.timelines();
+        let c = d.choose(&tl, 0.0, 0.0, 1);
+        assert_eq!(d.targets[c.index].slot, Slot::Hls);
+        assert!(c.power_shed, "budget changed the decision");
+        // budget below every target: lowest-power wins outright
+        let d = table(Policy::MinLatency, 1.0, Some(1.0));
+        let c = d.choose(&tl, 0.0, 0.0, 1);
+        assert_eq!(d.targets[c.index].slot, Slot::Hls);
+        assert!(c.power_shed);
+    }
+
+    #[test]
+    fn backlog_steers_min_latency_but_not_min_energy() {
+        let lat = table(Policy::MinLatency, 1.0, None);
+        let en = table(Policy::MinEnergy, 1.0, None);
+        let mut tl = lat.timelines();
+        // 100 ms of queue on the fast target
+        tl[0].schedule(0.0, 100, lat.targets[0].run);
+        assert_eq!(slot_of(&lat, &tl), Slot::Hls, "latency policy routes around the queue");
+        assert_eq!(slot_of(&en, &tl), Slot::Hls);
+        // pile onto HLS too: min-latency goes to the CPU, min-energy stays
+        tl[1].schedule(0.0, 100, lat.targets[1].run);
+        assert_eq!(slot_of(&lat, &tl), Slot::Cpu);
+        assert_eq!(slot_of(&en, &tl), Slot::Hls, "energy policy ignores queues");
+    }
+
+    #[test]
+    fn cost_accounts_queue_and_batch_size() {
+        let d = table(Policy::MinLatency, 1.0, None);
+        let mut tl = d.timelines();
+        let c1 = d.cost(&d.targets[0], &tl[0], 0.0, 0.0, 1);
+        let c8 = d.cost(&d.targets[0], &tl[0], 0.0, 0.0, 8);
+        assert!((c8.latency_s - 8.0 * c1.latency_s).abs() < 1e-12);
+        assert!((c8.energy_j - 8.0 * c1.energy_j).abs() < 1e-12);
+        tl[0].schedule(0.0, 10, d.targets[0].run); // 10 ms backlog
+        let queued = d.cost(&d.targets[0], &tl[0], 0.0, 0.0, 1);
+        assert!((queued.latency_s - (0.010 + 0.001)).abs() < 1e-12);
+        // waiting already spent counts against the deadline
+        let waited = d.cost(&d.targets[0], &tl[0], 0.5, 0.0, 1);
+        assert!(waited.oldest_latency_s > 0.5);
+    }
+
+    #[test]
+    fn synthetic_catalog_builds_expected_targets() {
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        // DPU-compatible model: all three targets
+        let d = Dispatcher::new("vae", &catalog, &calib, Policy::Static, 0.5, None).unwrap();
+        assert_eq!(d.targets.len(), 3);
+        assert_eq!(d.primary, Slot::Dpu);
+        // conv3d model: no DPU target, primary HLS
+        let d = Dispatcher::new("baseline", &catalog, &calib, Policy::Static, 0.5, None)
+            .unwrap();
+        assert_eq!(d.targets.len(), 2);
+        assert!(d.targets.iter().all(|t| t.slot != Slot::Dpu));
+        assert_eq!(d.primary, Slot::Hls);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [Policy::Static, Policy::MinLatency, Policy::MinEnergy, Policy::Deadline] {
+            assert_eq!(Policy::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(Policy::parse("turbo").is_err());
+    }
+
+    #[test]
+    fn deadline_defaults_ranked_by_urgency() {
+        assert!(default_deadline_s("esperta") < default_deadline_s("mms"));
+        assert!(default_deadline_s("mms") < default_deadline_s("cnet"));
+    }
+}

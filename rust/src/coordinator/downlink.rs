@@ -11,6 +11,7 @@ use crate::coordinator::decision::Decision;
 /// Verdict for one decision offered to the downlink.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DownlinkVerdict {
+    /// Kept: bytes spent from the budget.
     Sent,
     /// Shed: priority below the current floor given remaining budget.
     Shed,
@@ -21,8 +22,11 @@ pub enum DownlinkVerdict {
 pub struct DownlinkManager {
     /// Total byte budget for the observation window.
     pub budget_bytes: u64,
+    /// Bytes spent so far (can exceed the budget: alerts always pass).
     pub sent_bytes: u64,
+    /// Decisions shed.
     pub shed_count: u64,
+    /// Decisions sent.
     pub sent_count: u64,
     /// Raw sensor bytes represented by everything offered (what a
     /// no-onboard-inference mission would have had to send).
@@ -30,6 +34,7 @@ pub struct DownlinkManager {
 }
 
 impl DownlinkManager {
+    /// Fresh manager with a byte budget.
     pub fn new(budget_bytes: u64) -> DownlinkManager {
         DownlinkManager {
             budget_bytes,
@@ -40,7 +45,10 @@ impl DownlinkManager {
         }
     }
 
-    /// Remaining budget fraction.
+    /// Remaining budget fraction, always a finite value in [0, 1]: a
+    /// zero-byte budget reads as fully spent (no 0/0 NaN), and
+    /// overspend (alerts pass even over budget) clamps at 0 rather than
+    /// going negative.
     pub fn remaining_frac(&self) -> f64 {
         if self.budget_bytes == 0 {
             return 0.0;
@@ -80,12 +88,23 @@ impl DownlinkManager {
         DownlinkVerdict::Sent
     }
 
-    /// Effective compression ratio: raw bytes represented per byte sent.
+    /// Effective compression ratio: raw bytes represented per byte
+    /// sent.  Always finite, so the pipeline summary never renders
+    /// NaN/inf at degenerate (e.g. zero-byte) budgets: with nothing
+    /// sent, raw bytes represented count against a floor of one sent
+    /// byte (`raw:1`), and with nothing offered at all the ratio is a
+    /// neutral 1:1.
+    ///
+    /// ```
+    /// use spaceinfer::coordinator::DownlinkManager;
+    /// let d = DownlinkManager::new(0);
+    /// assert_eq!(d.compression_ratio(), 1.0); // nothing offered yet
+    /// ```
     pub fn compression_ratio(&self) -> f64 {
-        if self.sent_bytes == 0 {
-            return 0.0;
+        if self.raw_bytes_represented == 0 {
+            return 1.0;
         }
-        self.raw_bytes_represented as f64 / self.sent_bytes as f64
+        self.raw_bytes_represented as f64 / self.sent_bytes.max(1) as f64
     }
 }
 
@@ -146,5 +165,33 @@ mod tests {
         let d = DownlinkManager::new(0);
         assert_eq!(d.remaining_frac(), 0.0);
         assert_eq!(d.priority_floor(), 200);
+        // fresh manager: neutral ratio, not 0/0
+        assert_eq!(d.compression_ratio(), 1.0);
+    }
+
+    #[test]
+    fn ratio_finite_when_everything_shed() {
+        // zero budget + routine traffic: all shed, nothing sent — the
+        // ratio must stay finite (raw:1 floor) for the summary line
+        let mut d = DownlinkManager::new(0);
+        for _ in 0..5 {
+            assert_eq!(d.offer(&label(), 1000), DownlinkVerdict::Shed);
+        }
+        assert_eq!(d.sent_bytes, 0);
+        let r = d.compression_ratio();
+        assert!(r.is_finite());
+        assert_eq!(r, 5000.0);
+    }
+
+    #[test]
+    fn over_budget_fractions_stay_bounded() {
+        // alerts pass even over budget: spent can exceed the budget but
+        // remaining_frac must clamp, not go negative
+        let mut d = DownlinkManager::new(3);
+        d.offer(&alert(), 100);
+        d.offer(&alert(), 100);
+        assert!(d.sent_bytes > d.budget_bytes);
+        assert_eq!(d.remaining_frac(), 0.0);
+        assert!(d.compression_ratio().is_finite());
     }
 }

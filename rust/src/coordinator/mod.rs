@@ -7,17 +7,22 @@
 //! radio.  The pipeline is:
 //!
 //! ```text
-//! sensors -> router -> batcher -> accel executor -> decision -> downlink
-//!                (CPU fallback)   (PJRT numerics +    (per use case)
-//!                                  simulated timing)
+//! sensors -> router -> batcher -> dispatcher -> executor -> decision -> downlink
+//!            (model      (flush    (cost model:   (PJRT       (per use case)
+//!             variant)    policy)   CPU|DPU|HLS)   numerics)
 //! ```
 //!
 //! Numerics are real (the AOT HLO runs on PJRT); time and energy are the
 //! calibrated ZCU104 simulators' outputs, advanced on a virtual clock.
+//! Per-batch target selection is cost-model-driven (`dispatch`): the
+//! router resolves the model variant and the paper's primary slot, the
+//! dispatcher scores every eligible slot under the configured policy.
+//! See `docs/ARCHITECTURE.md` for the full module map and lifecycle.
 
 pub mod backpressure;
 pub mod batcher;
 pub mod decision;
+pub mod dispatch;
 pub mod downlink;
 pub mod pipeline;
 pub mod router;
@@ -26,6 +31,9 @@ pub mod scheduler;
 pub use backpressure::BoundedQueue;
 pub use batcher::{Batch, Batcher};
 pub use decision::{decide, Decision};
+pub use dispatch::{
+    default_deadline_s, BatchCost, Choice, DispatchTarget, Dispatcher, Policy,
+};
 pub use downlink::{DownlinkManager, DownlinkVerdict};
 pub use pipeline::{Pipeline, PipelineConfig, PipelineReport};
 pub use router::{Route, Router, Slot};

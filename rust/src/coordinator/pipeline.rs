@@ -1,6 +1,7 @@
 //! The end-to-end on-board pipeline: wires sensors, router, batcher,
-//! executor (real PJRT numerics), the timing/power simulators (virtual
-//! ZCU104 clock), decision logic, and the downlink manager.
+//! cost-model dispatcher, executor (real PJRT numerics), the
+//! timing/power simulators (virtual ZCU104 clock), decision logic, and
+//! the downlink manager.
 //!
 //! The serving hot path is batch-native: each flushed `Batch` becomes
 //! exactly one `ExecRequest` (input buffers `Arc`-shared, no per-event
@@ -9,24 +10,29 @@
 //! Completions are *processed* in submission order regardless of
 //! arrival order, which keeps the decision RNG stream — and therefore
 //! the whole `PipelineReport` — deterministic for a given seed.
+//!
+//! Target selection is per batch: the [`Dispatcher`] scores every
+//! eligible slot (A53 / DPU / HLS) with the calibrated simulators and
+//! picks under the configured [`Policy`].  Each batch's predicted
+//! latency/energy land in telemetry next to the "measured" (virtual
+//! clock) values, so calibration drift between the cost model and the
+//! timeline shows up as a nonzero prediction error.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::board::{Calibration, Zcu104};
+use crate::board::Calibration;
 use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::decision::{decide, Decision};
+use crate::coordinator::dispatch::{default_deadline_s, Dispatcher, Policy};
 use crate::coordinator::downlink::{DownlinkManager, DownlinkVerdict};
 use crate::coordinator::router::{Route, Router, Slot};
-use crate::coordinator::scheduler::{AccelTimeline, ScheduledRun};
-use crate::cpu::A53Model;
-use crate::dpu::{DpuArch, DpuSchedule};
-use crate::hls::HlsDesign;
-use crate::model::catalog::{model_info, Catalog};
-use crate::power::{Implementation, PowerModel};
-use crate::resources::estimate_hls;
+use crate::coordinator::scheduler::AccelTimeline;
+use crate::model::catalog::Catalog;
+use crate::model::Precision;
 use crate::runtime::{ExecRequest, ExecResult, ExecutorPool};
 use crate::sensors::{SensorEvent, SensorStream};
 use crate::telemetry::Metrics;
@@ -41,13 +47,23 @@ pub struct PipelineConfig {
     pub n_events: usize,
     /// Sensor cadence (s).
     pub cadence_s: f64,
+    /// Batcher flush threshold (events).
     pub max_batch: usize,
+    /// Batcher latency budget before a forced flush (s).
     pub max_wait_s: f64,
     /// Downlink budget for the run (bytes).
     pub downlink_budget: u64,
     /// MMS sub-model ("baseline" | "reduced" | "logistic").
     pub mms_model: String,
+    /// Seed for the sensor + decision RNG streams.
     pub seed: u64,
+    /// Per-batch target-selection policy.
+    pub policy: Policy,
+    /// End-to-end deadline override (s); `None` uses the per-use-case
+    /// default (`dispatch::default_deadline_s`).
+    pub deadline_s: Option<f64>,
+    /// Mission power budget: cap on active MPSoC draw (W), `None` = off.
+    pub power_budget_w: Option<f64>,
 }
 
 impl Default for PipelineConfig {
@@ -61,6 +77,9 @@ impl Default for PipelineConfig {
             downlink_budget: 64 * 1024,
             mms_model: "baseline".into(),
             seed: 7,
+            policy: Policy::Static,
+            deadline_s: None,
+            power_budget_w: None,
         }
     }
 }
@@ -68,46 +87,97 @@ impl Default for PipelineConfig {
 /// Summary of a pipeline run.
 #[derive(Debug)]
 pub struct PipelineReport {
+    /// Use case the run served.
     pub use_case: String,
+    /// Model variant name.
     pub model: String,
+    /// Primary (paper deployment-matrix) slot.
     pub slot: Slot,
+    /// Dispatch policy the run used.
+    pub policy: String,
+    /// Batches dispatched per slot name ("cpu" / "dpu" / "hls").
+    pub target_mix: BTreeMap<String, u64>,
+    /// Events completed on the virtual clock.
     pub events: u64,
     /// Simulated wall time of the run (s).
     pub sim_elapsed_s: f64,
     /// Simulated mean end-to-end latency (arrival -> decision, s).
     pub mean_latency_s: f64,
+    /// Simulated p95 end-to-end latency (s).
     pub p95_latency_s: f64,
     /// Simulated accelerator throughput (inferences/s while busy).
     pub busy_fps: f64,
+    /// Aggregate busy time over the run window, summed across targets —
+    /// exceeds 1.0 when several targets run concurrently (each target's
+    /// own timeline is serial, so a single-target run stays ≤ 1.0).
     pub accel_utilization: f64,
-    /// Simulated MPSoC energy spent on inference (J).
+    /// Simulated MPSoC energy spent on inference (J), all targets.
     pub energy_j: f64,
+    /// Cost-model predicted energy (J) — equals `energy_j` while the
+    /// dispatcher and the timeline share calibration; drift is a bug.
+    pub predicted_energy_j: f64,
+    /// Batches whose oldest event missed the deadline.
+    pub deadline_misses: u64,
+    /// Batches the power budget steered away from the policy's pick.
+    pub power_sheds: u64,
+    /// Decisions the downlink kept.
     pub downlink_sent: u64,
+    /// Decisions the downlink shed.
     pub downlink_shed: u64,
+    /// Bytes actually downlinked.
     pub downlink_sent_bytes: u64,
+    /// Raw sensor bytes represented per byte downlinked.
     pub compression_ratio: f64,
     /// Decision accuracy vs ground truth, when truth exists.
     pub accuracy: Option<f64>,
+    /// Decision label -> count.
     pub decisions: BTreeMap<String, u64>,
+    /// Counters + histograms collected during the run.
     pub metrics: Metrics,
 }
 
 impl PipelineReport {
+    /// The target mix as `cpu:3 dpu:9` (`-` when no batch dispatched) —
+    /// the one formatting shared by the report, the policy table, and
+    /// the examples.
+    pub fn mix_str(mix: &BTreeMap<String, u64>) -> String {
+        if mix.is_empty() {
+            return "-".into();
+        }
+        mix.iter()
+            .map(|(k, v)| format!("{k}:{v}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// This run's target mix, formatted.
+    pub fn target_mix_str(&self) -> String {
+        PipelineReport::mix_str(&self.target_mix)
+    }
+
+    /// Human-readable multi-line summary.
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "pipeline [{}] model={} slot={:?}\n",
-            self.use_case, self.model, self.slot
+            "pipeline [{}] model={} slot={:?} policy={}\n",
+            self.use_case, self.model, self.slot, self.policy
+        ));
+        out.push_str(&format!(
+            "  target mix [{}]  deadline_misses {}  power_sheds {}\n",
+            self.target_mix_str(),
+            self.deadline_misses,
+            self.power_sheds
         ));
         out.push_str(&format!(
             "  events {}  sim_elapsed {:.3}s  mean_latency {:.4}s  p95 {:.4}s\n",
             self.events, self.sim_elapsed_s, self.mean_latency_s, self.p95_latency_s
         ));
         out.push_str(&format!(
-            "  busy_fps {:.1}  util {:.1}%  energy {:.3}J\n",
+            "  busy_fps {:.1}  util {:.1}%  energy {:.3}J (predicted {:.3}J)\n",
             self.busy_fps,
             100.0 * self.accel_utilization,
-            self.energy_j
+            self.energy_j,
+            self.predicted_energy_j
         ));
         out.push_str(&format!(
             "  downlink: sent {} ({} B) shed {}  compression {:.0}:1\n",
@@ -126,12 +196,17 @@ impl PipelineReport {
 
 /// Mutable per-run state threaded through dispatch and reap.
 struct RunState {
-    timeline: AccelTimeline,
+    /// Per-target queue state, index-aligned with `Dispatcher::targets`.
+    timelines: Vec<AccelTimeline>,
     downlink: DownlinkManager,
     metrics: Metrics,
     rng: Prng,
     latencies: Vec<f64>,
     decisions: BTreeMap<String, u64>,
+    target_batches: BTreeMap<String, u64>,
+    predicted_energy_j: f64,
+    deadline_misses: u64,
+    power_sheds: u64,
     correct: u64,
     with_truth: u64,
     sim_end: f64,
@@ -194,15 +269,16 @@ impl<'a> Reaper<'a> {
     }
 
     /// One `ExecRequest` for the whole batch — the only executor
-    /// dispatch on this path.
-    fn submit(&mut self, route: &Route, batch: Batch) -> Result<()> {
+    /// dispatch on this path.  `precision` follows the chosen target
+    /// (int8 on the DPU slot, fp32 elsewhere).
+    fn submit(&mut self, model: &str, precision: Precision, batch: Batch) -> Result<()> {
         let items = batch.input_sets(); // Arc clones, zero-copy
         let id = self.next_id;
         self.next_id += 1;
         self.pending.insert(id, batch.events);
         self.pool.submit(ExecRequest {
-            model: route.model.clone(),
-            precision: route.precision,
+            model: model.to_string(),
+            precision,
             items,
             reply: self.reply_tx.clone(),
             id,
@@ -309,72 +385,43 @@ impl<'a> Reaper<'a> {
 
 /// The pipeline itself.
 pub struct Pipeline {
+    /// Run configuration.
     pub config: PipelineConfig,
+    /// Primary route (paper deployment matrix) for the use case.
     pub route: Route,
-    run_params: ScheduledRun,
+    /// Per-batch target selection (cost model + policy).
+    pub dispatcher: Dispatcher,
     input_bytes: u64,
 }
 
 impl Pipeline {
-    /// Resolve routing and simulated timing for the configured use case.
+    /// Resolve routing, build the dispatcher's cost table, and bind the
+    /// simulated timing for the configured use case.
     pub fn new(config: PipelineConfig, catalog: &Catalog, calib: &Calibration) -> Result<Pipeline> {
         let mut router = Router::default();
         router.mms_model = config.mms_model.clone();
         let route = router.route(config.use_case, 0)?;
-        let board = Zcu104::default();
-        let info = model_info(&route.model)?;
         let man = catalog
             .manifest(&route.model, route.precision)
             .context("pipeline needs `make artifacts` output")?;
-        let power = PowerModel::new(calib.clone());
-        let run_params = match route.slot {
-            Slot::Dpu => {
-                let sched = DpuSchedule::new(
-                    man,
-                    DpuArch::b4096(calib, board.dpu_clock_hz),
-                    calib,
-                    board.axi_bandwidth,
-                )?;
-                let per_item = sched.latency_s() - sched.invoke_s;
-                ScheduledRun {
-                    setup_s: sched.invoke_s,
-                    per_item_s: per_item,
-                    power_w: power.mpsoc_w(&PowerModel::dpu_impl(&sched)),
-                }
-            }
-            Slot::Hls => {
-                let design = HlsDesign::synthesize(man, &board, calib);
-                let setup = design.axi_setup_cycles / design.clock_hz;
-                let util = estimate_hls(man, &design.plan);
-                ScheduledRun {
-                    setup_s: setup,
-                    per_item_s: design.latency_s() - setup,
-                    power_w: power.mpsoc_w(&Implementation::Hls {
-                        kiloluts: util.luts as f64 / 1000.0,
-                        brams: design.plan.brams(),
-                        duty: 1.0,
-                    }),
-                }
-            }
-            Slot::Cpu => {
-                let a53 = A53Model::calibrated(man, calib, info.paper.cpu_fps);
-                ScheduledRun {
-                    setup_s: 0.0,
-                    per_item_s: a53.latency_s(),
-                    power_w: info.paper.cpu_p_mpsoc,
-                }
-            }
-        };
-        Ok(Pipeline {
-            config,
-            route,
-            run_params,
-            input_bytes: man.input_bytes(),
-        })
+        let input_bytes = man.input_bytes();
+        let deadline_s = config
+            .deadline_s
+            .unwrap_or_else(|| default_deadline_s(config.use_case));
+        let dispatcher = Dispatcher::new(
+            &route.model,
+            catalog,
+            calib,
+            config.policy,
+            deadline_s,
+            config.power_budget_w,
+        )?;
+        Ok(Pipeline { config, route, dispatcher, input_bytes })
     }
 
-    /// Advance the virtual clock for one batch, then hand it to the
-    /// executor (one request per batch) or run the surrogate inline.
+    /// Pick a target for one batch, advance its virtual-clock timeline,
+    /// then hand the batch to the executor (one request per batch) or
+    /// run the surrogate inline.
     fn dispatch(
         &self,
         batch: Batch,
@@ -383,17 +430,47 @@ impl Pipeline {
     ) -> Result<()> {
         let cfg = &self.config;
         let n = batch.len() as u64;
+        let oldest_t_s = batch.events.first().map(|e| e.t_s).unwrap_or(batch.flushed_at_s);
+        let choice =
+            self.dispatcher
+                .choose(&state.timelines, batch.flushed_at_s, oldest_t_s, n);
+        let target = &self.dispatcher.targets[choice.index];
         let (_start, done) =
-            state.timeline.schedule(batch.flushed_at_s, n, self.run_params);
+            state.timelines[choice.index].schedule(batch.flushed_at_s, n, target.run);
         state.sim_end = state.sim_end.max(done);
         state.metrics.add("batches", 1);
         state.metrics.add("inferences", n);
+        state.metrics.inc(&format!("dispatch_{}", target.slot.name()));
+        *state
+            .target_batches
+            .entry(target.slot.name().to_string())
+            .or_insert(0) += 1;
+        // predicted-vs-"measured" (virtual clock) telemetry: equal while
+        // the cost model and the timeline share calibration; drift here
+        // means the dispatcher is optimizing against a stale model
+        state.predicted_energy_j += choice.cost.energy_j;
+        state.metrics.observe(
+            "predicted_batch_latency",
+            Duration::from_secs_f64(choice.cost.latency_s.max(0.0)),
+        );
+        state.metrics.observe(
+            "measured_batch_latency",
+            Duration::from_secs_f64((done - batch.flushed_at_s).max(0.0)),
+        );
+        if done - oldest_t_s > self.dispatcher.deadline_s {
+            state.deadline_misses += 1;
+            state.metrics.inc("deadline_miss_batches");
+        }
+        if choice.power_shed {
+            state.power_sheds += 1;
+            state.metrics.inc("power_shed_batches");
+        }
         for ev in &batch.events {
             state.latencies.push(done - ev.t_s);
         }
         match reaper {
             Some(r) => {
-                r.submit(&self.route, batch)?;
+                r.submit(&self.route.model, target.precision, batch)?;
                 // overlap: absorb any batches that already finished,
                 // then apply backpressure so in-flight work is bounded
                 r.drain_ready(cfg.use_case, self.input_bytes, state)?;
@@ -426,12 +503,16 @@ impl Pipeline {
         let mut stream = SensorStream::new(cfg.use_case, cfg.seed, cfg.cadence_s);
         let mut batcher = Batcher::new(&self.route.model, cfg.max_batch, cfg.max_wait_s);
         let mut state = RunState {
-            timeline: AccelTimeline::new(self.route.slot_name()),
+            timelines: self.dispatcher.timelines(),
             downlink: DownlinkManager::new(cfg.downlink_budget),
             metrics: Metrics::default(),
             rng: Prng::new(cfg.seed ^ DECISION_RNG_SALT),
             latencies: Vec::with_capacity(cfg.n_events),
             decisions: BTreeMap::new(),
+            target_batches: BTreeMap::new(),
+            predicted_energy_j: 0.0,
+            deadline_misses: 0,
+            power_sheds: 0,
             correct: 0,
             with_truth: 0,
             sim_end: 0.0,
@@ -449,6 +530,13 @@ impl Pipeline {
             }
         }
         let drain_t = cfg.n_events as f64 * cfg.cadence_s + cfg.max_wait_s;
+        // end-of-run drain: by drain_t the wait timer is always overdue,
+        // so poll() stamps the flush when that timer would have fired
+        // (oldest + max_wait) instead of charging the full drain gap;
+        // the unconditional flush below is only the empty-batcher no-op.
+        if let Some(b) = batcher.poll(drain_t) {
+            self.dispatch(b, &mut state, &mut reaper)?;
+        }
         if let Some(b) = batcher.flush(drain_t) {
             self.dispatch(b, &mut state, &mut reaper)?;
         }
@@ -457,11 +545,15 @@ impl Pipeline {
         }
 
         let RunState {
-            timeline,
+            timelines,
             downlink,
             metrics,
             mut latencies,
             decisions,
+            target_batches,
+            predicted_energy_j,
+            deadline_misses,
+            power_sheds,
             correct,
             with_truth,
             sim_end,
@@ -470,22 +562,26 @@ impl Pipeline {
         latencies.sort_by(f64::total_cmp);
         let mean = latencies.iter().sum::<f64>() / latencies.len().max(1) as f64;
         let p95 = percentile_nearest_rank(&latencies, 0.95);
-        let busy_fps = if timeline.busy_s > 0.0 {
-            timeline.completed as f64 / timeline.busy_s
-        } else {
-            0.0
-        };
+        let completed: u64 = timelines.iter().map(|t| t.completed).sum();
+        let busy_s: f64 = timelines.iter().map(|t| t.busy_s).sum();
+        let energy_j: f64 = timelines.iter().map(|t| t.energy_j).sum();
+        let busy_fps = if busy_s > 0.0 { completed as f64 / busy_s } else { 0.0 };
         Ok(PipelineReport {
             use_case: cfg.use_case.to_string(),
             model: self.route.model.clone(),
             slot: self.route.slot,
-            events: timeline.completed,
+            policy: cfg.policy.as_str().to_string(),
+            target_mix: target_batches,
+            events: completed,
             sim_elapsed_s: sim_end,
             mean_latency_s: mean,
             p95_latency_s: p95,
             busy_fps,
-            accel_utilization: timeline.utilization(sim_end.max(1e-9)),
-            energy_j: timeline.energy_j,
+            accel_utilization: busy_s / sim_end.max(1e-9),
+            energy_j,
+            predicted_energy_j,
+            deadline_misses,
+            power_sheds,
             downlink_sent: downlink.sent_count,
             downlink_shed: downlink.shed_count,
             downlink_sent_bytes: downlink.sent_bytes,
@@ -511,16 +607,6 @@ fn percentile_nearest_rank(sorted: &[f64], q: f64) -> f64 {
     }
     let rank = (q * sorted.len() as f64).ceil() as usize;
     sorted[rank.clamp(1, sorted.len()) - 1]
-}
-
-impl Route {
-    fn slot_name(&self) -> &'static str {
-        match self.slot {
-            Slot::Dpu => "dpu",
-            Slot::Hls => "hls",
-            Slot::Cpu => "cpu",
-        }
-    }
 }
 
 /// Salt separating the decision RNG stream from the sensor stream.
@@ -615,5 +701,13 @@ mod tests {
         };
         assert!(surrogate_output("mms", &ev, &mut rng).is_ok());
         assert!(surrogate_output("radar", &ev, &mut rng).is_err());
+    }
+
+    #[test]
+    fn default_config_is_static_policy() {
+        let cfg = PipelineConfig::default();
+        assert_eq!(cfg.policy, Policy::Static);
+        assert!(cfg.deadline_s.is_none());
+        assert!(cfg.power_budget_w.is_none());
     }
 }

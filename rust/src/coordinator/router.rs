@@ -1,4 +1,4 @@
-//! Request routing: use case -> accelerator slot.
+//! Request routing: use case -> model variant + primary accelerator slot.
 //!
 //! Mirrors the paper's deployment matrix (§III-B): DPU-compatible CNNs go
 //! to the Vitis-AI slot (INT8), operator-incompatible models to their HLS
@@ -6,6 +6,11 @@
 //! backpressure bound.  MMS traffic carries a sub-model selector
 //! (Baseline / Reduced / Logistic) so the upload-minimization strategy of
 //! Ekelund et al. can be exercised.
+//!
+//! The static matrix is only the *primary* mapping: per-batch target
+//! selection is owned by [`crate::coordinator::dispatch::Dispatcher`],
+//! which scores every eligible slot with the calibrated cost models and
+//! reduces to this table under `Policy::Static`.
 
 use anyhow::{bail, Result};
 
@@ -23,11 +28,30 @@ pub enum Slot {
     Cpu,
 }
 
+impl Slot {
+    /// Short lower-case name used in telemetry keys and reports.
+    ///
+    /// ```
+    /// use spaceinfer::coordinator::Slot;
+    /// assert_eq!(Slot::Dpu.name(), "dpu");
+    /// ```
+    pub fn name(&self) -> &'static str {
+        match self {
+            Slot::Dpu => "dpu",
+            Slot::Hls => "hls",
+            Slot::Cpu => "cpu",
+        }
+    }
+}
+
 /// A routed request: which model variant on which slot.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Route {
+    /// Model variant name.
     pub model: String,
+    /// Deployed precision on the primary slot.
     pub precision: Precision,
+    /// Primary slot (paper deployment matrix).
     pub slot: Slot,
 }
 

@@ -23,16 +23,22 @@ pub struct ScheduledRun {
 /// A slot's busy timeline.
 #[derive(Debug, Clone)]
 pub struct AccelTimeline {
+    /// Slot name ("dpu" / "hls" / "cpu").
     pub name: String,
     /// Virtual time the slot becomes free.
     free_at_s: f64,
+    /// Accumulated busy time (s).
     pub busy_s: f64,
+    /// Accumulated energy (J) at the slot's active power.
     pub energy_j: f64,
+    /// Inferences completed.
     pub completed: u64,
+    /// Batches executed.
     pub batches: u64,
 }
 
 impl AccelTimeline {
+    /// Fresh, idle timeline.
     pub fn new(name: &str) -> AccelTimeline {
         AccelTimeline {
             name: name.to_string(),

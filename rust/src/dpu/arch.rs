@@ -30,6 +30,7 @@ pub struct DpuArch {
 }
 
 impl DpuArch {
+    /// The B4096 configuration the paper instantiates (8×16×16).
     pub fn b4096(calib: &Calibration, clock_hz: f64) -> DpuArch {
         DpuArch {
             pp: calib.dpu_pp,

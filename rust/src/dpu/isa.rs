@@ -32,7 +32,9 @@ pub enum DpuInstr {
 /// A compiled DPU program.
 #[derive(Debug, Clone)]
 pub struct DpuProgram {
+    /// Model the program was compiled from.
     pub model: String,
+    /// Layer-granular instruction stream (load, per-layer ops, save).
     pub instrs: Vec<DpuInstr>,
 }
 

@@ -16,6 +16,7 @@ use crate::model::{Layer, LayerKind, Manifest};
 /// Timing breakdown for one layer.
 #[derive(Debug, Clone)]
 pub struct LayerTiming {
+    /// Layer kind the timing was derived for.
     pub kind: LayerKind,
     /// MAC-array cycles (dimension-padded).
     pub mac_cycles: u64,
@@ -34,8 +35,11 @@ pub struct LayerTiming {
 /// A scheduled model: per-layer timings + per-inference overheads.
 #[derive(Debug, Clone)]
 pub struct DpuSchedule {
+    /// Scheduled model name.
     pub model: String,
+    /// Per-layer timing breakdown, manifest order.
     pub layers: Vec<LayerTiming>,
+    /// Architecture the schedule targets.
     pub arch: DpuArch,
     /// Fixed runner overhead (s).
     pub invoke_s: f64,
@@ -147,6 +151,7 @@ impl DpuSchedule {
         self.latency_s() + self.input_dma_s
     }
 
+    /// Inferences per second (input DMA excluded, like the paper).
     pub fn fps(&self) -> f64 {
         1.0 / self.latency_s()
     }

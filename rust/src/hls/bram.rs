@@ -14,7 +14,9 @@ use crate::model::{LayerKind, Manifest};
 /// Where one layer's weights live.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WeightPlacement {
+    /// Weights resident in BRAM (streamed at datapath speed).
     OnChip,
+    /// Spilled to DRAM (word-by-word AXI fetches — the slow path).
     Dram,
 }
 
@@ -49,6 +51,7 @@ pub struct BramAllocator {
 }
 
 impl BramAllocator {
+    /// Allocator with the routable fraction of the device's BRAM.
     pub fn new(pl: &PlResources) -> BramAllocator {
         // Vitis keeps utilization routable; paper's biggest HLS design
         // sits at 48% of device BRAM.

@@ -25,13 +25,17 @@ use crate::model::Manifest;
 /// One synthesized HLS accelerator.
 #[derive(Debug, Clone)]
 pub struct HlsDesign {
+    /// Synthesized model name.
     pub model: String,
+    /// Memory allocation (weight placement, buffers, spill).
     pub plan: BramPlan,
     /// Compute cycles per layer (ops x II + fill).
     pub layer_cycles: Vec<f64>,
     /// DRAM weight-fetch cycles per layer (0 if on-chip).
     pub fetch_cycles: Vec<f64>,
+    /// AXI-Lite setup/start/poll cycles per inference.
     pub axi_setup_cycles: f64,
+    /// PL clock of the design (Hz) — paper: 100 MHz.
     pub clock_hz: f64,
     /// Input staging time over AXI (s) — *excluded* from inference time,
     /// like the paper's Fig 11 treatment, but shown in power traces.
@@ -89,6 +93,7 @@ impl HlsDesign {
         self.total_cycles() / self.clock_hz
     }
 
+    /// Inferences per second (input staging excluded, like the paper).
     pub fn fps(&self) -> f64 {
         1.0 / self.latency_s()
     }

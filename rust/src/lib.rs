@@ -9,6 +9,11 @@
 //! evaluation section.  Numerics run for real (AOT-lowered HLO on the PJRT
 //! CPU client); latency and power come from the calibrated analytic
 //! simulators — see DESIGN.md §2 for the substitution table.
+//!
+//! Start with `docs/ARCHITECTURE.md` for the module map, the
+//! batch-native dispatch lifecycle, and the cost-model dispatch flow.
+
+#![warn(missing_docs)]
 
 pub mod util;
 pub mod model;

@@ -11,6 +11,9 @@
 //! spaceinfer quantization                         A2 PTQ error (real PJRT)
 //! spaceinfer selfcheck                            golden-IO over PJRT
 //! spaceinfer pipeline --use-case mms [--real]     end-to-end coordinator
+//!     [--policy static|min-latency|min-energy|deadline]
+//!     [--power-budget W] [--deadline-ms MS]
+//! spaceinfer policies [--use-case vae]            policy comparison table
 //! spaceinfer inspect --model vae                  manifests, DPU program
 //! spaceinfer calibrate [--save calib.json]        dump calibration
 //! ```
@@ -20,10 +23,10 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use spaceinfer::board::Calibration;
-use spaceinfer::coordinator::{Pipeline, PipelineConfig};
+use spaceinfer::coordinator::{Pipeline, PipelineConfig, Policy};
 use spaceinfer::model::catalog::{model_info, Catalog};
 use spaceinfer::model::Precision;
-use spaceinfer::report::{ablation, figures, related, tables, whatif};
+use spaceinfer::report::{ablation, figures, policy, related, tables, whatif};
 use spaceinfer::runtime::{Backend, Engine, ExecutorPool, GoldenIo, PoolConfig};
 use spaceinfer::util::cli::Args;
 
@@ -124,6 +127,7 @@ fn run() -> Result<()> {
         "quantization" => quantization(&dir),
         "selfcheck" => selfcheck(&dir),
         "pipeline" => pipeline_cmd(&args, &dir, calib),
+        "policies" => policies_cmd(&args, &dir, calib),
         "inspect" => inspect(&args, &dir, &calib),
         "calibrate" => {
             if let Some(path) = args.flags.get("save") {
@@ -200,15 +204,48 @@ fn selfcheck(dir: &Path) -> Result<()> {
     Ok(())
 }
 
-fn pipeline_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
-    let catalog = Catalog::load(dir)?;
-    let use_case: &'static str = match args.get("use-case", "mms") {
+fn parse_use_case(s: &str) -> Result<&'static str> {
+    Ok(match s {
         "vae" => "vae",
         "cnet" => "cnet",
         "esperta" => "esperta",
         "mms" => "mms",
         other => bail!("unknown use case {other:?}"),
-    };
+    })
+}
+
+/// `--deadline-ms N` -> seconds; absent -> per-use-case default.
+fn parse_deadline_s(args: &Args) -> Result<Option<f64>> {
+    Ok(match args.flags.get("deadline-ms") {
+        Some(_) => Some(args.get_f64("deadline-ms", 0.0)? / 1000.0),
+        None => None,
+    })
+}
+
+/// `--power-budget W` -> active MPSoC power cap; absent -> off.
+fn parse_power_budget_w(args: &Args) -> Result<Option<f64>> {
+    Ok(match args.flags.get("power-budget") {
+        Some(_) => Some(args.get_f64("power-budget", 0.0)?),
+        None => None,
+    })
+}
+
+/// Catalog from `--artifacts`, or the synthetic stand-in catalog when
+/// the artifacts directory does not exist (policy exploration works
+/// without `make artifacts`; simulated numbers are stand-ins then).
+fn catalog_or_synthetic(dir: &Path) -> Result<Catalog> {
+    if !Catalog::is_present(dir) {
+        eprintln!(
+            "note: no artifacts at {} — using the synthetic stand-in catalog",
+            dir.display()
+        );
+    }
+    Catalog::load_or_synthetic(dir)
+}
+
+fn pipeline_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
+    let catalog = catalog_or_synthetic(dir)?;
+    let use_case = parse_use_case(args.get("use-case", "mms"))?;
     let cfg = PipelineConfig {
         use_case,
         n_events: args.get_usize("n", 200)?,
@@ -218,7 +255,17 @@ fn pipeline_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
         downlink_budget: args.get_usize("budget", 64 * 1024)? as u64,
         mms_model: args.get("mms-model", "baseline").to_string(),
         seed: args.get_usize("seed", 7)? as u64,
+        policy: Policy::parse(args.get("policy", "static"))?,
+        deadline_s: parse_deadline_s(args)?,
+        power_budget_w: parse_power_budget_w(args)?,
     };
+    if cfg.policy == Policy::Static && cfg.power_budget_w.is_some() {
+        bail!(
+            "--power-budget only applies to dynamic policies (static \
+             reproduces the paper's fixed mapping; try --policy min-energy \
+             or deadline)"
+        );
+    }
     let pipeline = Pipeline::new(cfg, &catalog, &calib)?;
     if !args.has("real") {
         for flag in ["workers", "exec-backend"] {
@@ -226,6 +273,8 @@ fn pipeline_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
                 bail!("--{flag} only applies with --real (timing-only runs have no executor)");
             }
         }
+    } else if !Catalog::is_present(dir) {
+        bail!("--real needs `make artifacts` output in {}", dir.display());
     }
     let executor;
     let exec_ref = if args.has("real") {
@@ -265,6 +314,25 @@ fn pipeline_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
         );
     }
     println!("--- telemetry ---\n{}", report.metrics.report());
+    Ok(())
+}
+
+/// `spaceinfer policies` — the dispatch-policy comparison table: the
+/// same workload under static / min-latency / min-energy / deadline.
+fn policies_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
+    let catalog = catalog_or_synthetic(dir)?;
+    let run = policy::PolicyRun {
+        use_case: parse_use_case(args.get("use-case", "mms"))?,
+        n_events: args.get_usize("n", 200)?,
+        cadence_s: args.get_f64("cadence", 0.15)?,
+        max_batch: args.get_usize("batch", 8)?,
+        max_wait_s: args.get_f64("max-wait", 0.5)?,
+        power_budget_w: parse_power_budget_w(args)?,
+        deadline_s: parse_deadline_s(args)?,
+        mms_model: args.get("mms-model", "baseline").to_string(),
+        seed: args.get_usize("seed", 7)? as u64,
+    };
+    println!("{}", policy::policy_comparison(&catalog, &calib, &run)?.render());
     Ok(())
 }
 
@@ -316,6 +384,12 @@ usage: spaceinfer <subcommand> [--artifacts DIR] [--calib FILE]
                       [--use-case mms|vae|cnet|esperta] [--n N] [--real]
                       [--batch B] [--budget BYTES] [--mms-model NAME]
                       [--workers N] [--exec-backend pjrt|surrogate]
+                      [--policy static|min-latency|min-energy|deadline]
+                      [--power-budget W] [--deadline-ms MS]
+  policies            dispatch-policy comparison table (all policies)
+                      [--use-case ...] [--n N] [--cadence S]
+                      [--batch B] [--max-wait S]
+                      [--power-budget W] [--deadline-ms MS]
   inspect             model + DPU program listing  [--model NAME]
   calibrate           print or save calibration    [--save FILE]
 ";

@@ -7,7 +7,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use super::manifest::{Manifest, Precision};
+use super::manifest::{Layer, LayerKind, Manifest, Precision};
 use crate::util::json::Json;
 
 /// Which accelerator the paper deploys a model on.
@@ -20,6 +20,7 @@ pub enum Target {
 }
 
 impl Target {
+    /// Report spelling of the target.
     pub fn as_str(&self) -> &'static str {
         match self {
             Target::Dpu => "vitis-ai",
@@ -31,14 +32,23 @@ impl Target {
 /// Paper Table III row (the published measurements we reproduce).
 #[derive(Debug, Clone, Copy)]
 pub struct PaperRow {
+    /// Published CPU inferences/s.
     pub cpu_fps: f64,
+    /// Published accelerator inferences/s.
     pub accel_fps: f64,
+    /// Published speedup column (accel over CPU).
     pub speedup: f64,
+    /// Published CPU board power (W).
     pub cpu_p_board: f64,
+    /// Published CPU MPSoC power (W).
     pub cpu_p_mpsoc: f64,
+    /// Published accelerator board power (W).
     pub accel_p_board: f64,
+    /// Published accelerator MPSoC power (W).
     pub accel_p_mpsoc: f64,
+    /// Published CPU energy per inference (mJ).
     pub cpu_energy_mj: f64,
+    /// Published accelerator energy per inference (mJ).
     pub accel_energy_mj: f64,
 }
 
@@ -50,11 +60,13 @@ pub struct ModelInfo {
     pub name: &'static str,
     /// Paper's display name.
     pub display: &'static str,
+    /// Accelerator the paper deploys this model on.
     pub target: Target,
     /// Table I parameter count (ground truth; manifests must match).
     pub table1_params: u64,
     /// Table I operation count (paper's Netron convention).
     pub table1_ops: u64,
+    /// Published Table III measurements for the model.
     pub paper: PaperRow,
 }
 
@@ -151,6 +163,7 @@ pub fn model_info(name: &str) -> Result<&'static ModelInfo> {
 /// The artifact catalog on disk: manifests (+ HLO paths) under `artifacts/`.
 #[derive(Debug)]
 pub struct Catalog {
+    /// Artifact directory the catalog was loaded from.
     pub dir: PathBuf,
     /// tag ("vae.fp32") -> manifest
     pub manifests: BTreeMap<String, Manifest>,
@@ -220,6 +233,352 @@ impl Catalog {
     pub fn io_path(&self, tag: &str) -> PathBuf {
         self.dir.join(format!("{tag}.io.json"))
     }
+
+    /// Does `dir` hold a loadable catalog (`index.json` present)?
+    pub fn is_present(dir: &Path) -> bool {
+        dir.join("index.json").exists()
+    }
+
+    /// Load the artifact catalog from `dir`, falling back to
+    /// [`Catalog::synthetic`] when no artifacts exist there — the one
+    /// place that knows the on-disk marker, shared by the CLI and the
+    /// examples.
+    pub fn load_or_synthetic(dir: &Path) -> Result<Catalog> {
+        if Catalog::is_present(dir) {
+            Catalog::load(dir)
+        } else {
+            Ok(Catalog::synthetic())
+        }
+    }
+
+    /// An in-memory catalog of miniature stand-in manifests for all six
+    /// networks — no `make artifacts` required.
+    ///
+    /// Input/output shapes match the real sensor streams and decision
+    /// logic (so the surrogate executor path works end to end), layer
+    /// structure and counts are scaled-down stand-ins (so the analytic
+    /// simulators produce *plausible*, not paper-accurate, timings).
+    /// DPU models carry both fp32 and int8 variants; MMS/ESPERTA models
+    /// are fp32-only, exactly like the deployed matrix.  Used by the
+    /// dispatcher tests, the policy examples, and any artifact-less run.
+    ///
+    /// ```
+    /// use spaceinfer::model::{Catalog, Precision};
+    /// let c = Catalog::synthetic();
+    /// assert!(c.manifest("vae", Precision::Int8).unwrap().dpu_compatible());
+    /// assert!(c.manifest("baseline", Precision::Int8).is_err()); // HLS-only
+    /// ```
+    pub fn synthetic() -> Catalog {
+        let mut manifests = BTreeMap::new();
+        for prec in [Precision::Fp32, Precision::Int8] {
+            for man in [synthetic_vae(prec), synthetic_cnet(prec)] {
+                manifests.insert(format!("{}.{}", man.name, prec.as_str()), man);
+            }
+        }
+        for man in [
+            synthetic_esperta(),
+            synthetic_logistic(),
+            synthetic_reduced(),
+            synthetic_baseline(),
+        ] {
+            manifests.insert(format!("{}.fp32", man.name), man);
+        }
+        Catalog {
+            dir: PathBuf::from("<synthetic>"),
+            manifests,
+            executable: Vec::new(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// synthetic stand-in manifests (Catalog::synthetic)
+// ---------------------------------------------------------------------------
+
+fn syn_layer(
+    kind: LayerKind,
+    in_shape: &[usize],
+    out_shape: &[usize],
+    macs: u64,
+    ops: u64,
+    params: u64,
+    weight_bytes: u64,
+    act: &str,
+) -> Layer {
+    Layer {
+        kind,
+        in_shape: in_shape.to_vec(),
+        out_shape: out_shape.to_vec(),
+        macs,
+        ops,
+        params,
+        weight_bytes,
+        act_bytes: out_shape.iter().skip(1).product::<usize>() as u64 * 4,
+        act: act.to_string(),
+    }
+}
+
+fn syn_manifest(
+    name: &str,
+    precision: Precision,
+    inputs: Vec<(&str, Vec<usize>)>,
+    output_shape: Vec<usize>,
+    layers: Vec<Layer>,
+) -> Manifest {
+    Manifest {
+        name: name.to_string(),
+        precision,
+        inputs: inputs
+            .into_iter()
+            .map(|(n, s)| (n.to_string(), s))
+            .collect(),
+        output_shape,
+        total_macs: layers.iter().map(|l| l.macs).sum(),
+        total_ops: layers.iter().map(|l| l.ops).sum(),
+        total_params: layers.iter().map(|l| l.params).sum(),
+        weight_bytes: layers.iter().map(|l| l.weight_bytes).sum(),
+        layers,
+    }
+}
+
+fn bytes_per_param(prec: Precision) -> u64 {
+    match prec {
+        Precision::Fp32 => 4,
+        Precision::Int8 => 1,
+    }
+}
+
+/// Miniature VAE encoder: conv2d + dense over the 128x256x3 magnetogram
+/// tile; every operator DPU-mappable.
+fn synthetic_vae(prec: Precision) -> Manifest {
+    let bp = bytes_per_param(prec);
+    let conv_out = (64 * 128 * 8) as u64;
+    let conv_macs = conv_out * 27; // k=3, cin=3
+    let dense_macs = 65_536u64 * 12;
+    syn_manifest(
+        "vae",
+        prec,
+        vec![("x", vec![1, 128, 256, 3])],
+        vec![1, 12],
+        vec![
+            syn_layer(
+                LayerKind::Conv2d,
+                &[1, 128, 256, 3],
+                &[1, 64, 128, 8],
+                conv_macs,
+                2 * conv_macs + 2 * conv_out,
+                8 * 28,
+                8 * 28 * bp,
+                "relu",
+            ),
+            syn_layer(LayerKind::Flatten, &[1, 64, 128, 8], &[1, 65536], 0, 0, 0, 0, "none"),
+            syn_layer(
+                LayerKind::Dense,
+                &[1, 65536],
+                &[1, 12],
+                dense_macs,
+                2 * dense_macs + 12,
+                12 * 65_537,
+                12 * 65_537 * bp,
+                "none",
+            ),
+        ],
+    )
+}
+
+/// Miniature CNetPlusScalar: conv2d + pool + flatten + scalar concat +
+/// dense over the AIA/HMI pair; DPU-mappable.
+fn synthetic_cnet(prec: Precision) -> Manifest {
+    let bp = bytes_per_param(prec);
+    let conv_out = (128 * 128 * 4) as u64;
+    let conv_macs = conv_out * 18; // k=3, cin=2
+    syn_manifest(
+        "cnet",
+        prec,
+        vec![("img", vec![1, 256, 256, 2]), ("flux", vec![1, 1])],
+        vec![1, 1],
+        vec![
+            syn_layer(
+                LayerKind::Conv2d,
+                &[1, 256, 256, 2],
+                &[1, 128, 128, 4],
+                conv_macs,
+                2 * conv_macs + 2 * conv_out,
+                4 * 19,
+                4 * 19 * bp,
+                "relu",
+            ),
+            syn_layer(
+                LayerKind::MaxPool2d,
+                &[1, 128, 128, 4],
+                &[1, 64, 64, 4],
+                0,
+                16_384 * 3,
+                0,
+                0,
+                "none",
+            ),
+            syn_layer(LayerKind::Flatten, &[1, 64, 64, 4], &[1, 16384], 0, 0, 0, 0, "none"),
+            syn_layer(
+                LayerKind::ConcatScalar,
+                &[1, 16384],
+                &[1, 16385],
+                0,
+                0,
+                0,
+                0,
+                "none",
+            ),
+            syn_layer(
+                LayerKind::Dense,
+                &[1, 16385],
+                &[1, 1],
+                16_385,
+                2 * 16_385 + 1,
+                16_386,
+                16_386 * bp,
+                "none",
+            ),
+        ],
+    )
+}
+
+/// Multi-ESPERTA bank: six single-MAC sigmoid models over the 3-feature
+/// flare descriptor (sigmoid + comparator keep it off the DPU).
+fn synthetic_esperta() -> Manifest {
+    syn_manifest(
+        "esperta",
+        Precision::Fp32,
+        vec![("x", vec![1, 3])],
+        vec![1, 12],
+        vec![syn_layer(
+            LayerKind::EspertaBank,
+            &[1, 3],
+            &[1, 12],
+            18,
+            2 * 18 + 3 * 6,
+            24,
+            96,
+            "sigmoid",
+        )],
+    )
+}
+
+/// MMS LogisticNet stand-in: one dense layer over the flattened ion
+/// distribution.
+fn synthetic_logistic() -> Manifest {
+    let macs = 16_384u64 * 4;
+    syn_manifest(
+        "logistic",
+        Precision::Fp32,
+        vec![("x", vec![1, 32, 16, 32, 1])],
+        vec![1, 4],
+        vec![
+            syn_layer(
+                LayerKind::Flatten,
+                &[1, 32, 16, 32, 1],
+                &[1, 16384],
+                0,
+                0,
+                0,
+                0,
+                "none",
+            ),
+            syn_layer(
+                LayerKind::Dense,
+                &[1, 16384],
+                &[1, 4],
+                macs,
+                2 * macs + 4,
+                4 * 16_385,
+                4 * 16_385 * 4,
+                "none",
+            ),
+        ],
+    )
+}
+
+/// MMS ReducedNet stand-in: one 3-D conv + dense (conv3d keeps it off
+/// the DPU, like the real network).
+fn synthetic_reduced() -> Manifest {
+    let conv_out = (16 * 8 * 16 * 2) as u64;
+    let conv_macs = conv_out * 27;
+    let dense_macs = 4_096u64 * 4;
+    syn_manifest(
+        "reduced",
+        Precision::Fp32,
+        vec![("x", vec![1, 32, 16, 32, 1])],
+        vec![1, 4],
+        vec![
+            syn_layer(
+                LayerKind::Conv3d,
+                &[1, 32, 16, 32, 1],
+                &[1, 16, 8, 16, 2],
+                conv_macs,
+                2 * conv_macs + 2 * conv_out,
+                2 * 28,
+                2 * 28 * 4,
+                "relu",
+            ),
+            syn_layer(LayerKind::Flatten, &[1, 16, 8, 16, 2], &[1, 4096], 0, 0, 0, 0, "none"),
+            syn_layer(
+                LayerKind::Dense,
+                &[1, 4096],
+                &[1, 4],
+                dense_macs,
+                2 * dense_macs + 4,
+                4 * 4_097,
+                4 * 4_097 * 4,
+                "none",
+            ),
+        ],
+    )
+}
+
+/// MMS BaselineNet stand-in: 3-D conv + pool + dense.
+fn synthetic_baseline() -> Manifest {
+    let conv_out = (16 * 8 * 16 * 4) as u64;
+    let conv_macs = conv_out * 27;
+    let dense_macs = 1_024u64 * 4;
+    syn_manifest(
+        "baseline",
+        Precision::Fp32,
+        vec![("x", vec![1, 32, 16, 32, 1])],
+        vec![1, 4],
+        vec![
+            syn_layer(
+                LayerKind::Conv3d,
+                &[1, 32, 16, 32, 1],
+                &[1, 16, 8, 16, 4],
+                conv_macs,
+                2 * conv_macs + 2 * conv_out,
+                4 * 28,
+                4 * 28 * 4,
+                "relu",
+            ),
+            syn_layer(
+                LayerKind::MaxPool3d,
+                &[1, 16, 8, 16, 4],
+                &[1, 8, 4, 8, 4],
+                0,
+                1_024 * 7,
+                0,
+                0,
+                "none",
+            ),
+            syn_layer(LayerKind::Flatten, &[1, 8, 4, 8, 4], &[1, 1024], 0, 0, 0, 0, "none"),
+            syn_layer(
+                LayerKind::Dense,
+                &[1, 1024],
+                &[1, 4],
+                dense_macs,
+                2 * dense_macs + 4,
+                4 * 1_025,
+                4 * 1_025 * 4,
+                "none",
+            ),
+        ],
+    )
 }
 
 #[cfg(test)]
@@ -253,6 +612,26 @@ mod tests {
             assert!(rel < 0.55, "{}: speedup {} vs fps ratio {s}",
                     m.name, m.paper.speedup);
         }
+    }
+
+    #[test]
+    fn synthetic_catalog_is_internally_consistent() {
+        let c = Catalog::synthetic();
+        // vae + cnet in both precisions, four HLS models fp32-only
+        assert_eq!(c.manifests.len(), 8);
+        for man in c.manifests.values() {
+            man.validate().unwrap();
+        }
+        assert!(c.manifest("vae", Precision::Int8).unwrap().dpu_compatible());
+        assert!(c.manifest("cnet", Precision::Int8).unwrap().dpu_compatible());
+        assert!(!c.manifest("baseline", Precision::Fp32).unwrap().dpu_compatible());
+        assert!(c.manifest("baseline", Precision::Int8).is_err());
+        assert!(c.executable.is_empty());
+        // output shapes match what the decision logic asserts per use case
+        assert_eq!(c.manifest("vae", Precision::Fp32).unwrap().output_elems(), 12);
+        assert_eq!(c.manifest("cnet", Precision::Fp32).unwrap().output_elems(), 1);
+        assert_eq!(c.manifest("esperta", Precision::Fp32).unwrap().output_elems(), 12);
+        assert_eq!(c.manifest("logistic", Precision::Fp32).unwrap().output_elems(), 4);
     }
 
     #[test]

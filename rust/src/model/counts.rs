@@ -12,8 +12,11 @@ use super::manifest::{Layer, LayerKind, Manifest};
 /// Recomputed counts for one layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Counts {
+    /// Multiply-accumulates.
     pub macs: u64,
+    /// Total operations (DESIGN §8 convention).
     pub ops: u64,
+    /// Learnable parameters.
     pub params: u64,
 }
 

@@ -22,6 +22,7 @@ pub enum Precision {
 }
 
 impl Precision {
+    /// Parse the manifest spelling ("fp32" | "int8").
     pub fn parse(s: &str) -> Result<Precision> {
         match s {
             "fp32" => Ok(Precision::Fp32),
@@ -30,6 +31,7 @@ impl Precision {
         }
     }
 
+    /// Artifact-tag spelling.
     pub fn as_str(&self) -> &'static str {
         match self {
             Precision::Fp32 => "fp32",
@@ -41,19 +43,30 @@ impl Precision {
 /// Layer taxonomy shared with `python/compile/models/graph.py`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LayerKind {
+    /// 2-D convolution (DPU-mappable).
     Conv2d,
+    /// 3-D convolution (HLS-only; the DPU has no 3-D operators).
     Conv3d,
+    /// 2-D max pooling.
     MaxPool2d,
+    /// 3-D max pooling (HLS-only).
     MaxPool3d,
+    /// 3-D average pooling (HLS-only).
     AvgPool3d,
+    /// Reshape to a vector (pure data movement).
     Flatten,
+    /// Append a scalar input to a feature vector (CNet's flux input).
     ConcatScalar,
+    /// Fully-connected layer.
     Dense,
+    /// Parallel dense heads sharing one input (multi-output).
     DenseHeads,
+    /// Six single-MAC sigmoid+comparator models (multi-ESPERTA).
     EspertaBank,
 }
 
 impl LayerKind {
+    /// Parse the manifest spelling ("conv2d", "dense", ...).
     pub fn parse(s: &str) -> Result<LayerKind> {
         Ok(match s {
             "conv2d" => LayerKind::Conv2d,
@@ -100,13 +113,21 @@ impl LayerKind {
 /// One layer of a model manifest.
 #[derive(Debug, Clone)]
 pub struct Layer {
+    /// Operator kind.
     pub kind: LayerKind,
+    /// Input activation shape (leading batch dim of 1).
     pub in_shape: Vec<usize>,
+    /// Output activation shape.
     pub out_shape: Vec<usize>,
+    /// Multiply-accumulates per inference.
     pub macs: u64,
+    /// Total operations per inference (DESIGN §8 convention).
     pub ops: u64,
+    /// Learnable parameters.
     pub params: u64,
+    /// Bytes of weights at the manifest's precision.
     pub weight_bytes: u64,
+    /// Bytes of the output activation.
     pub act_bytes: u64,
     /// Activation function name ("none" | "relu" | "leaky_relu" | "sigmoid").
     pub act: String,
@@ -136,19 +157,29 @@ impl Layer {
 /// A parsed model manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Model name (catalog key).
     pub name: String,
+    /// Numeric precision of this variant.
     pub precision: Precision,
     /// Input name -> shape, in HLO parameter order.
     pub inputs: Vec<(String, Vec<usize>)>,
+    /// Output tensor shape.
     pub output_shape: Vec<usize>,
+    /// Per-layer descriptions, execution order.
     pub layers: Vec<Layer>,
+    /// Sum of layer MACs (validated).
     pub total_macs: u64,
+    /// Sum of layer ops (validated).
     pub total_ops: u64,
+    /// Sum of layer params (validated).
     pub total_params: u64,
+    /// Total weight bytes at this precision.
     pub weight_bytes: u64,
 }
 
 impl Manifest {
+    /// Parse a manifest from its JSON document (validates totals and
+    /// the layer shape chain).
     pub fn from_json(j: &Json) -> Result<Manifest> {
         let order: Vec<String> = j
             .req("input_order")?
@@ -188,6 +219,7 @@ impl Manifest {
         Ok(m)
     }
 
+    /// Load and parse a `<tag>.manifest.json` file.
     pub fn load(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading manifest {}", path.display()))?;

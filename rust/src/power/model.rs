@@ -27,10 +27,12 @@ pub enum Implementation {
 /// Power model bound to a calibration.
 #[derive(Debug, Clone)]
 pub struct PowerModel {
+    /// Calibration constants the rail terms come from.
     pub calib: Calibration,
 }
 
 impl PowerModel {
+    /// Bind a calibration.
     pub fn new(calib: Calibration) -> PowerModel {
         PowerModel { calib }
     }
@@ -74,6 +76,7 @@ impl PowerModel {
         Implementation::Dpu { mac_duty: sched.mac_duty() }
     }
 
+    /// `Implementation::Hls` from a synthesized design + LUT estimate.
     pub fn hls_impl(design: &HlsDesign, luts: u64, duty: f64) -> Implementation {
         Implementation::Hls {
             kiloluts: luts as f64 / 1000.0,

@@ -12,15 +12,22 @@ use crate::util::prng::Prng;
 /// Phases of a measurement run (the grey/blue/orange bands of Figs 9–12).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
+    /// Nothing computing; PS idle draw.
     Idle,
+    /// PyTorch-equivalent inference on the A53 (the blue band).
     CpuInference,
+    /// Bitstream configuration (the grey spike).
     BitstreamLoad,
+    /// Input staging over AXI / MMIO.
     InputStaging,
+    /// Accelerator inference window (the orange band).
     FpgaInference,
+    /// Output readback to the PS.
     Readback,
 }
 
 impl Phase {
+    /// Short label used in CSV and plot legends.
     pub fn label(&self) -> &'static str {
         match self {
             Phase::Idle => "idle",
@@ -36,14 +43,19 @@ impl Phase {
 /// One sample of the trace.
 #[derive(Debug, Clone)]
 pub struct TracePoint {
+    /// Sample time (s).
     pub t_s: f64,
+    /// Sampled power (W).
     pub power_w: f64,
+    /// Which run phase the sample belongs to.
     pub phase: Phase,
 }
 
 /// Builds phase-structured traces with measurement-like jitter.
 pub struct TraceBuilder {
+    /// Power model the phases draw from.
     pub model: PowerModel,
+    /// Sampling rate (Hz).
     pub sample_hz: f64,
     /// Gaussian measurement noise (W, 1σ) — the INA226-style ripple
     /// visible in the paper's figures.
@@ -54,6 +66,7 @@ pub struct TraceBuilder {
 }
 
 impl TraceBuilder {
+    /// Builder with the figures' default sample rate and noise floor.
     pub fn new(model: PowerModel, seed: u64) -> TraceBuilder {
         TraceBuilder {
             model,
@@ -106,6 +119,7 @@ impl TraceBuilder {
         self
     }
 
+    /// Take the accumulated samples.
     pub fn build(&mut self) -> Vec<TracePoint> {
         std::mem::take(&mut self.points)
     }

@@ -19,6 +19,7 @@ pub struct ScrubPolicy {
 /// Evaluated scrub plan for one design in one environment.
 #[derive(Debug, Clone, Copy)]
 pub struct ScrubPlan {
+    /// Seconds between scrubs (copied from the policy).
     pub period_s: f64,
     /// Fraction of wall time lost to reconfiguration.
     pub duty_lost: f64,

@@ -21,6 +21,7 @@ pub enum Orbit {
 /// SEU environment bound to an orbit and solar condition.
 #[derive(Debug, Clone, Copy)]
 pub struct SeuEnvironment {
+    /// Orbit regime setting the baseline upset rate.
     pub orbit: Orbit,
     /// Multiplier for solar energetic particle events (1.0 = quiet sun).
     pub solar_activity: f64,
@@ -30,6 +31,7 @@ pub struct SeuEnvironment {
 pub const ZU7EV_CRAM_BITS: u64 = 205_000_000;
 
 impl SeuEnvironment {
+    /// Quiet-sun environment for an orbit.
     pub fn new(orbit: Orbit) -> SeuEnvironment {
         SeuEnvironment { orbit, solar_activity: 1.0 }
     }

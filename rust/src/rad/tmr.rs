@@ -19,7 +19,9 @@ const POWER_FACTOR: f64 = 3.05;
 /// A TMR'd design evaluation.
 #[derive(Debug, Clone, Copy)]
 pub struct TmrOverhead {
+    /// Un-hardened design footprint.
     pub base: Utilization,
+    /// Triplicated footprint (voters included).
     pub tmr: Utilization,
     /// Power multiplier to apply to the design's PL power term.
     pub power_factor: f64,

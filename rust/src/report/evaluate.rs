@@ -15,21 +15,35 @@ use crate::resources::{estimate_hls, Utilization};
 /// Everything Table III reports for one model, CPU + accelerator.
 #[derive(Debug, Clone)]
 pub struct Evaluation {
+    /// Catalog name.
     pub name: String,
+    /// Paper display name.
     pub display: String,
+    /// Deployed accelerator (DPU or HLS).
     pub target: Target,
     // CPU baseline (calibrated to the paper's CPU rows)
+    /// CPU inferences/s.
     pub cpu_fps: f64,
+    /// CPU achieved MOP/s (the paper's Throughput column).
     pub cpu_mops: f64,
+    /// CPU board (12 V rail) power, W.
     pub cpu_p_board: f64,
+    /// CPU MPSoC (INT rail) power, W.
     pub cpu_p_mpsoc: f64,
+    /// CPU energy per inference, mJ.
     pub cpu_energy_mj: f64,
     // Accelerator (predicted by the mechanism models)
+    /// Accelerator inferences/s.
     pub accel_fps: f64,
+    /// Accelerator achieved MOP/s.
     pub accel_mops: f64,
+    /// Accelerator board power, W.
     pub accel_p_board: f64,
+    /// Accelerator MPSoC power, W.
     pub accel_p_mpsoc: f64,
+    /// Accelerator energy per inference, mJ.
     pub accel_energy_mj: f64,
+    /// Accelerator FPS over CPU FPS (Table III's Speedup column).
     pub speedup: f64,
     /// Accelerator resource estimate (None for the DPU — fixed IP row).
     pub hls_util: Option<Utilization>,
@@ -37,7 +51,9 @@ pub struct Evaluation {
     pub dpu_duty: Option<f64>,
     /// Input staging time (s) — the Fig 11 effect.
     pub input_stage_s: f64,
+    /// Accelerator per-inference latency, s.
     pub accel_latency_s: f64,
+    /// CPU per-inference latency, s.
     pub cpu_latency_s: f64,
 }
 

@@ -4,8 +4,10 @@
 pub mod ablation;
 pub mod evaluate;
 pub mod figures;
+pub mod policy;
 pub mod related;
 pub mod whatif;
 pub mod tables;
 
 pub use evaluate::{evaluate_model, Evaluation};
+pub use policy::{policy_comparison, PolicyRun};

@@ -1,0 +1,158 @@
+//! Policy comparison: the same workload run under every dispatch
+//! policy, side by side — the report artifact for the trade-space the
+//! paper measures row by row (Table III) and the dispatcher exploits at
+//! runtime.  Timing-only runs (deterministic surrogate numerics), so
+//! the table regenerates without artifacts or PJRT.
+
+use anyhow::Result;
+
+use crate::board::Calibration;
+use crate::coordinator::{Pipeline, PipelineConfig, Policy};
+use crate::model::catalog::Catalog;
+use crate::util::table::{eng, Table};
+
+/// Knobs for one policy-comparison run.
+#[derive(Debug, Clone)]
+pub struct PolicyRun {
+    /// "vae" | "cnet" | "esperta" | "mms"
+    pub use_case: &'static str,
+    /// Events per run.
+    pub n_events: usize,
+    /// Sensor cadence (s).
+    pub cadence_s: f64,
+    /// Batcher flush threshold (events).
+    pub max_batch: usize,
+    /// Batcher wait budget (s) — must sit below the deadline for the
+    /// `deadline` row to be meetable (the batch spends this long
+    /// waiting before dispatch even starts).
+    pub max_wait_s: f64,
+    /// Mission power budget (W), applied to every dynamic policy.
+    pub power_budget_w: Option<f64>,
+    /// Deadline override (s); `None` = per-use-case default.
+    pub deadline_s: Option<f64>,
+    /// MMS sub-model selector.
+    pub mms_model: String,
+    /// RNG seed (sensors + decisions).
+    pub seed: u64,
+}
+
+impl Default for PolicyRun {
+    fn default() -> Self {
+        PolicyRun {
+            use_case: "mms",
+            n_events: 200,
+            cadence_s: 0.15,
+            max_batch: 8,
+            max_wait_s: 0.5,
+            power_budget_w: None,
+            deadline_s: None,
+            // match `spaceinfer pipeline`'s default MMS sub-model so the
+            // two subcommands evaluate the same workload
+            mms_model: "baseline".into(),
+            seed: 7,
+        }
+    }
+}
+
+/// Run the configured workload under all four policies and tabulate
+/// target mix, latency, energy, deadline misses, and power sheds.
+pub fn policy_comparison(
+    catalog: &Catalog,
+    calib: &Calibration,
+    run: &PolicyRun,
+) -> Result<Table> {
+    let mut t = Table::new(
+        &format!(
+            "Dispatch policy comparison [{}] ({} events @ {} ev/s{})",
+            run.use_case,
+            run.n_events,
+            eng(1.0 / run.cadence_s.max(1e-12)),
+            match run.power_budget_w {
+                Some(b) => format!(", budget {b} W"),
+                None => String::new(),
+            },
+        ),
+        &[
+            "Policy",
+            "Target mix (batches)",
+            "Mean lat (s)",
+            "p95 (s)",
+            "Energy (J)",
+            "Deadline misses",
+            "Power sheds",
+        ],
+    );
+    for policy in [
+        Policy::Static,
+        Policy::MinLatency,
+        Policy::MinEnergy,
+        Policy::Deadline,
+    ] {
+        let cfg = PipelineConfig {
+            use_case: run.use_case,
+            n_events: run.n_events,
+            cadence_s: run.cadence_s,
+            max_batch: run.max_batch,
+            max_wait_s: run.max_wait_s,
+            mms_model: run.mms_model.clone(),
+            seed: run.seed,
+            policy,
+            deadline_s: run.deadline_s,
+            power_budget_w: run.power_budget_w,
+            ..Default::default()
+        };
+        let report = Pipeline::new(cfg, catalog, calib)?.run(None)?;
+        t.row(vec![
+            policy.as_str().to_string(),
+            report.target_mix_str(),
+            format!("{:.4}", report.mean_latency_s),
+            format!("{:.4}", report.p95_latency_s),
+            format!("{:.3}", report.energy_j),
+            report.deadline_misses.to_string(),
+            report.power_sheds.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comparison_runs_on_synthetic_catalog() {
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        let run = PolicyRun { use_case: "vae", n_events: 64, ..Default::default() };
+        let t = policy_comparison(&catalog, &calib, &run).unwrap();
+        assert_eq!(t.rows.len(), 4);
+        let rendered = t.render();
+        assert!(rendered.contains("static"));
+        assert!(rendered.contains("min-energy"));
+    }
+
+    #[test]
+    fn budget_changes_the_energy_row() {
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        let free = policy_comparison(
+            &catalog,
+            &calib,
+            &PolicyRun { use_case: "vae", n_events: 64, ..Default::default() },
+        )
+        .unwrap();
+        let capped = policy_comparison(
+            &catalog,
+            &calib,
+            &PolicyRun {
+                use_case: "vae",
+                n_events: 64,
+                power_budget_w: Some(4.0),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // row 2 = min-energy: 4 W excludes the DPU, so the mix differs
+        assert_ne!(free.rows[2][1], capped.rows[2][1]);
+    }
+}

@@ -19,10 +19,15 @@ use crate::model::{LayerKind, Manifest};
 /// Estimated utilization of one design.
 #[derive(Debug, Clone, Copy)]
 pub struct Utilization {
+    /// Lookup tables.
     pub luts: u64,
+    /// Flip-flops.
     pub ffs: u64,
+    /// DSP slices.
     pub dsps: u64,
+    /// BRAM36 blocks (half units allowed).
     pub brams: f64,
+    /// UltraRAM blocks.
     pub urams: u64,
 }
 

@@ -12,20 +12,27 @@ use crate::util::json::Json;
 /// One named input tensor.
 #[derive(Debug, Clone)]
 pub struct IoSpec {
+    /// HLO parameter name.
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Flat row-major values.
     pub data: Vec<f32>,
 }
 
 /// Golden IO pair for one artifact.
 #[derive(Debug, Clone)]
 pub struct GoldenIo {
+    /// Input tensors in manifest order.
     pub inputs: Vec<IoSpec>,
+    /// Shape of the expected output.
     pub expected_shape: Vec<usize>,
+    /// Expected output values (python-executed oracle).
     pub expected: Vec<f32>,
 }
 
 impl GoldenIo {
+    /// Parse a `<tag>.io.json` file.
     pub fn load(path: &Path) -> Result<GoldenIo> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading golden IO {}", path.display()))?;

@@ -55,6 +55,7 @@ impl Default for Backend {
 }
 
 impl Backend {
+    /// CLI / report spelling.
     pub fn as_str(&self) -> &'static str {
         match self {
             Backend::Pjrt => "pjrt",
@@ -72,7 +73,9 @@ enum Exec {
 
 /// A compiled, executable model.
 pub struct LoadedModel {
+    /// Artifact tag ("name.precision").
     pub tag: String,
+    /// The variant's manifest (shapes, counts).
     pub manifest: Manifest,
     /// Input element counts per HLO parameter (manifest order).
     input_elems: Vec<usize>,
@@ -222,10 +225,12 @@ impl Engine {
         })
     }
 
+    /// Which backend this engine executes on.
     pub fn backend(&self) -> Backend {
         self.backend
     }
 
+    /// Human-readable execution platform name.
     pub fn platform(&self) -> String {
         match self.backend {
             #[cfg(feature = "xla")]

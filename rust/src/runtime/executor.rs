@@ -29,7 +29,9 @@ use super::client::{Backend, Engine, InputSet};
 
 /// A request to execute one model on a whole batch of input sets.
 pub struct ExecRequest {
+    /// Model name to execute.
     pub model: String,
+    /// Variant precision (selects the artifact).
     pub precision: Precision,
     /// One entry per event, batch order; buffers `Arc`-shared with the
     /// producer (zero-copy request path).
@@ -42,7 +44,9 @@ pub struct ExecRequest {
 
 /// The outcome of one batch execution.
 pub struct ExecResult {
+    /// Batch id echoed from the request.
     pub id: u64,
+    /// Model the batch ran.
     pub model: String,
     /// One flat f32 output per item, batch order; a batch fails as a
     /// unit (the coordinator never half-processes a batch).
@@ -63,6 +67,7 @@ enum Msg {
 pub struct PoolConfig {
     /// Worker threads; `ExecutorPool::default_workers()` when 0.
     pub workers: usize,
+    /// Execution backend for the shared engine.
     pub backend: Backend,
     /// (name, precision) variants compiled before any request is served.
     pub preload: Vec<(String, Precision)>,
@@ -129,6 +134,7 @@ impl ExecutorPool {
         Ok(ExecutorPool { workers, engine, submitted: AtomicU64::new(0) })
     }
 
+    /// Number of worker threads in the pool.
     pub fn worker_count(&self) -> usize {
         self.workers.len()
     }

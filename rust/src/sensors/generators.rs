@@ -16,8 +16,10 @@ pub enum Region {
 }
 
 impl Region {
+    /// All four regions, index order matching the classifier logits.
     pub const ALL: [Region; 4] = [Region::Sw, Region::If, Region::Msh, Region::Msp];
 
+    /// Short display label ("SW", "IF", ...).
     pub fn label(&self) -> &'static str {
         match self {
             Region::Sw => "SW",
@@ -27,6 +29,7 @@ impl Region {
         }
     }
 
+    /// Position in `Region::ALL` (the classifier's logit index).
     pub fn index(&self) -> usize {
         Region::ALL.iter().position(|r| r == self).unwrap()
     }

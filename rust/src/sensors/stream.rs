@@ -25,6 +25,7 @@ pub struct SensorEvent {
     pub inputs: Arc<Vec<Vec<f32>>>,
     /// Ground truth: MMS region index or SEP-event flag.
     pub truth: Option<usize>,
+    /// Monotonic sequence number within the stream.
     pub seq: u64,
 }
 
@@ -35,12 +36,14 @@ pub struct SensorStream {
     seq: u64,
     /// Cadence per use case (s between samples).
     pub cadence_s: f64,
+    /// Use case this stream generates for.
     pub use_case: &'static str,
     /// Probability an ESPERTA sample is a real SEP precursor.
     pub sep_rate: f64,
 }
 
 impl SensorStream {
+    /// Deterministic stream for one use case.
     pub fn new(use_case: &'static str, seed: u64, cadence_s: f64) -> SensorStream {
         SensorStream {
             rng: Prng::new(seed),

@@ -21,6 +21,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// Record one sample.
     pub fn record(&mut self, d: Duration) {
         let us = (d.as_micros() as u64).max(1);
         let bucket = (63 - us.leading_zeros() as usize).min(24);
@@ -30,10 +31,12 @@ impl Histogram {
         self.max_us = self.max_us.max(us);
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Mean sample in microseconds.
     pub fn mean_us(&self) -> f64 {
         if self.count == 0 {
             return 0.0;
@@ -41,6 +44,7 @@ impl Histogram {
         self.sum_us as f64 / self.count as f64
     }
 
+    /// Largest sample in microseconds.
     pub fn max_us(&self) -> u64 {
         self.max_us
     }
@@ -70,22 +74,35 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Increment a counter by one.
+    ///
+    /// ```
+    /// use spaceinfer::telemetry::Metrics;
+    /// let mut m = Metrics::default();
+    /// m.inc("batches");
+    /// m.add("batches", 4);
+    /// assert_eq!(m.counter("batches"), 5);
+    /// ```
     pub fn inc(&mut self, name: &str) {
         self.add(name, 1);
     }
 
+    /// Add to a counter.
     pub fn add(&mut self, name: &str, v: u64) {
         *self.counters.entry(name.to_string()).or_insert(0) += v;
     }
 
+    /// Record a duration sample into the named histogram.
     pub fn observe(&mut self, name: &str, d: Duration) {
         self.histograms.entry(name.to_string()).or_default().record(d);
     }
 
+    /// Current counter value (0 when absent).
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
+    /// The named histogram, if anything was observed.
     pub fn histogram(&self, name: &str) -> Option<&Histogram> {
         self.histograms.get(name)
     }

@@ -11,7 +11,9 @@ use std::time::{Duration, Instant};
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct Sample {
+    /// Case name (printed in reports).
     pub name: String,
+    /// Raw timed samples.
     pub samples: Vec<Duration>,
 }
 
@@ -22,17 +24,22 @@ impl Sample {
         v
     }
 
+    /// Median sample.
     pub fn median(&self) -> Duration {
         let v = self.sorted_nanos();
         Duration::from_nanos(v[v.len() / 2] as u64)
     }
 
+    /// 95th-percentile sample (nearest-rank, the same convention as the
+    /// pipeline's latency p95 — truncating the rank understates the
+    /// tail for small n).
     pub fn p95(&self) -> Duration {
         let v = self.sorted_nanos();
-        let idx = ((v.len() as f64) * 0.95) as usize;
-        Duration::from_nanos(v[idx.min(v.len() - 1)] as u64)
+        let rank = ((v.len() as f64) * 0.95).ceil() as usize;
+        Duration::from_nanos(v[rank.clamp(1, v.len()) - 1] as u64)
     }
 
+    /// Arithmetic mean of the samples.
     pub fn mean(&self) -> Duration {
         let total: u128 = self.samples.iter().map(|d| d.as_nanos()).sum();
         Duration::from_nanos((total / self.samples.len() as u128) as u64)

@@ -9,7 +9,10 @@ const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
 
 /// Streaming FNV-1a hasher.
 #[derive(Debug, Clone, Copy)]
-pub struct Fnv1a(pub u64);
+pub struct Fnv1a(
+    /// Current hash state (public so tests and seeding tricks can peek).
+    pub u64,
+);
 
 impl Default for Fnv1a {
     fn default() -> Fnv1a {
@@ -23,12 +26,14 @@ impl Fnv1a {
         Fnv1a(FNV_OFFSET ^ seed)
     }
 
+    /// Fold one byte in.
     pub fn write_u8(&mut self, b: u8) -> &mut Self {
         self.0 ^= b as u64;
         self.0 = self.0.wrapping_mul(FNV_PRIME);
         self
     }
 
+    /// Fold a byte stream in.
     pub fn write_bytes(&mut self, bytes: impl IntoIterator<Item = u8>) -> &mut Self {
         for b in bytes {
             self.write_u8(b);
@@ -44,6 +49,7 @@ impl Fnv1a {
         self
     }
 
+    /// The current hash value.
     pub fn finish(&self) -> u64 {
         self.0
     }

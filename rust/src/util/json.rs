@@ -13,11 +13,17 @@ use anyhow::{anyhow, bail, Result};
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always stored as f64).
     Num(f64),
+    /// String (escapes resolved).
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object (sorted keys — deterministic emission).
     Obj(BTreeMap<String, Json>),
 }
 
@@ -47,6 +53,7 @@ impl Json {
         self.get(key).ok_or_else(|| anyhow!("missing JSON key {key:?}"))
     }
 
+    /// Number, or error.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -54,6 +61,7 @@ impl Json {
         }
     }
 
+    /// Integer-valued number, or error.
     pub fn as_i64(&self) -> Result<i64> {
         let n = self.as_f64()?;
         if n.fract() != 0.0 {
@@ -62,6 +70,7 @@ impl Json {
         Ok(n as i64)
     }
 
+    /// Non-negative integer, or error.
     pub fn as_usize(&self) -> Result<usize> {
         let n = self.as_i64()?;
         if n < 0 {
@@ -70,6 +79,7 @@ impl Json {
         Ok(n as usize)
     }
 
+    /// String, or error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -77,6 +87,7 @@ impl Json {
         }
     }
 
+    /// Bool, or error.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -84,6 +95,7 @@ impl Json {
         }
     }
 
+    /// Array slice, or error.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),
@@ -91,6 +103,7 @@ impl Json {
         }
     }
 
+    /// Object map, or error.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),

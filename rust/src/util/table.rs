@@ -3,12 +3,23 @@
 /// A simple column-aligned table with a header row.
 #[derive(Debug, Default, Clone)]
 pub struct Table {
+    /// Rendered above the header as `== title ==` (empty = omitted).
     pub title: String,
+    /// Column headers.
     pub header: Vec<String>,
+    /// Data rows; each must match the header width.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
+    ///
+    /// ```
+    /// use spaceinfer::util::table::Table;
+    /// let mut t = Table::new("T", &["model", "fps"]);
+    /// t.row(vec!["vae".into(), "606.6".into()]);
+    /// assert!(t.render().contains("== T =="));
+    /// ```
     pub fn new(title: &str, header: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -17,6 +28,7 @@ impl Table {
         }
     }
 
+    /// Append one row (panics on width mismatch — a bug in the caller).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(
             cells.len(),

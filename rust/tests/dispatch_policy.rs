@@ -1,0 +1,166 @@
+//! Cost-model dispatcher policies, end to end through the pipeline —
+//! self-provisioning via `Catalog::synthetic()` (no `make artifacts`,
+//! no PJRT; timing-only runs over the deterministic surrogate).
+
+use std::collections::BTreeMap;
+
+use spaceinfer::board::Calibration;
+use spaceinfer::coordinator::{Pipeline, PipelineConfig, Policy, Slot};
+use spaceinfer::model::Catalog;
+use spaceinfer::report::{policy_comparison, PolicyRun};
+
+fn run(cfg: PipelineConfig) -> spaceinfer::coordinator::PipelineReport {
+    let catalog = Catalog::synthetic();
+    let calib = Calibration::default();
+    Pipeline::new(cfg, &catalog, &calib)
+        .expect("pipeline builds on the synthetic catalog")
+        .run(None)
+        .expect("timing-only run")
+}
+
+fn vae_cfg(policy: Policy) -> PipelineConfig {
+    PipelineConfig {
+        use_case: "vae",
+        n_events: 96,
+        policy,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn static_policy_reproduces_paper_routing() {
+    let r = run(vae_cfg(Policy::Static));
+    assert_eq!(r.slot, Slot::Dpu);
+    assert_eq!(r.policy, "static");
+    // every batch lands on the paper's slot
+    assert_eq!(r.target_mix.keys().collect::<Vec<_>>(), vec!["dpu"]);
+    assert_eq!(r.events, 96);
+    assert_eq!(r.power_sheds, 0, "static never sheds");
+}
+
+#[test]
+fn min_latency_and_budgeted_min_energy_pick_different_targets() {
+    // min-latency, unconstrained: the DPU is the fastest VAE target
+    let fast = run(vae_cfg(Policy::MinLatency));
+    assert_eq!(fast.target_mix.keys().collect::<Vec<_>>(), vec!["dpu"]);
+
+    // min-energy under a 4 W mission budget: the 5.x W DPU is excluded,
+    // and the A53 beats the (slow) naive HLS IP on energy per batch
+    let frugal = run(PipelineConfig {
+        power_budget_w: Some(4.0),
+        ..vae_cfg(Policy::MinEnergy)
+    });
+    assert!(
+        !frugal.target_mix.contains_key("dpu"),
+        "4 W budget must exclude the DPU, got {:?}",
+        frugal.target_mix
+    );
+    assert_ne!(fast.target_mix, frugal.target_mix);
+    assert!(frugal.power_sheds > 0, "budget must actually change decisions");
+    // the budget costs latency — that's the trade the policy makes
+    assert!(frugal.mean_latency_s > fast.mean_latency_s);
+}
+
+#[test]
+fn deadline_policy_falls_back_when_nothing_meets_it() {
+    // a 1 µs deadline is unmeetable: the dispatcher must fall back to
+    // min-latency (not wedge), and every batch counts as a miss
+    let r = run(PipelineConfig {
+        use_case: "esperta",
+        n_events: 64,
+        cadence_s: 0.01,
+        policy: Policy::Deadline,
+        deadline_s: Some(1e-6),
+        ..Default::default()
+    });
+    let batches = r.metrics.counter("batches");
+    assert!(batches > 0);
+    assert_eq!(r.deadline_misses, batches);
+    assert_eq!(r.events, 64);
+}
+
+#[test]
+fn deadline_policy_meets_loose_deadlines_frugally() {
+    // with a generous deadline every target qualifies, so the deadline
+    // policy reduces to min-energy and never misses
+    let strict = run(PipelineConfig {
+        deadline_s: Some(10.0),
+        ..vae_cfg(Policy::Deadline)
+    });
+    assert_eq!(strict.deadline_misses, 0);
+    let energy_only = run(vae_cfg(Policy::MinEnergy));
+    assert_eq!(strict.target_mix, energy_only.target_mix);
+}
+
+#[test]
+fn policy_choice_is_seed_deterministic() {
+    for policy in [Policy::MinLatency, Policy::MinEnergy, Policy::Deadline] {
+        let a = run(PipelineConfig {
+            power_budget_w: Some(4.0),
+            ..vae_cfg(policy)
+        });
+        let b = run(PipelineConfig {
+            power_budget_w: Some(4.0),
+            ..vae_cfg(policy)
+        });
+        assert_eq!(a.target_mix, b.target_mix, "{policy:?} mix must be stable");
+        assert_eq!(a.decisions, b.decisions);
+        assert_eq!(a.mean_latency_s, b.mean_latency_s, "bitwise-deterministic");
+        assert_eq!(a.energy_j, b.energy_j);
+    }
+}
+
+#[test]
+fn predicted_matches_measured_while_calibration_is_shared() {
+    // the dispatcher predicts with the same calibrated models the
+    // timeline charges, so predicted == measured energy; drift here
+    // means the cost model went stale against the simulators
+    let r = run(vae_cfg(Policy::MinLatency));
+    let rel = (r.predicted_energy_j - r.energy_j).abs() / r.energy_j.max(1e-12);
+    assert!(rel < 1e-9, "predicted {} vs measured {}", r.predicted_energy_j, r.energy_j);
+    // and the per-batch histograms were populated
+    assert!(r.metrics.histogram("predicted_batch_latency").is_some());
+    assert!(r.metrics.histogram("measured_batch_latency").is_some());
+}
+
+#[test]
+fn dynamic_policies_work_for_every_use_case() {
+    for use_case in ["vae", "cnet", "esperta", "mms"] {
+        let r = run(PipelineConfig {
+            use_case,
+            n_events: 40,
+            policy: Policy::MinEnergy,
+            ..Default::default()
+        });
+        assert_eq!(r.events, 40, "{use_case}");
+        let batches: u64 = r.target_mix.values().sum();
+        assert_eq!(batches, r.metrics.counter("batches"), "{use_case}");
+    }
+}
+
+#[test]
+fn policy_comparison_table_shows_the_trade_space() {
+    let catalog = Catalog::synthetic();
+    let calib = Calibration::default();
+    let t = policy_comparison(
+        &catalog,
+        &calib,
+        &PolicyRun {
+            use_case: "vae",
+            n_events: 64,
+            power_budget_w: Some(4.0),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(t.rows.len(), 4);
+    // collect per-policy mixes; the budget forces at least two distinct
+    // mixes (static stays on the DPU, dynamic policies shed off it)
+    let mixes: BTreeMap<&str, &str> = t
+        .rows
+        .iter()
+        .map(|r| (r[0].as_str(), r[1].as_str()))
+        .collect();
+    assert!(mixes["static"].contains("dpu"));
+    assert!(!mixes["min-energy"].contains("dpu"));
+}
