@@ -20,7 +20,7 @@
 use anyhow::Result;
 use spaceinfer::board::Calibration;
 use spaceinfer::coordinator::{Pipeline, PipelineConfig, Policy};
-use spaceinfer::model::Catalog;
+use spaceinfer::model::{Catalog, UseCase};
 use spaceinfer::report::{policy_comparison, PolicyRun};
 
 /// Eclipse power cap on active MPSoC draw (W).
@@ -35,7 +35,7 @@ fn main() -> Result<()> {
     let calib = Calibration::default();
 
     let base = PipelineConfig {
-        use_case: "vae",
+        use_case: UseCase::Vae,
         n_events: 240,
         cadence_s: 0.05,
         ..Default::default()
@@ -80,7 +80,7 @@ fn main() -> Result<()> {
         &catalog,
         &calib,
         &PolicyRun {
-            use_case: "vae",
+            use_case: UseCase::Vae,
             n_events: 240,
             cadence_s: 0.05,
             power_budget_w: Some(ECLIPSE_BUDGET_W),

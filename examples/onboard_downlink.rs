@@ -19,7 +19,7 @@ use anyhow::Result;
 use spaceinfer::board::Calibration;
 use spaceinfer::coordinator::{Pipeline, PipelineConfig};
 use spaceinfer::model::catalog::Catalog;
-use spaceinfer::model::Precision;
+use spaceinfer::model::{Precision, UseCase};
 use spaceinfer::runtime::ExecutorPool;
 
 fn main() -> Result<()> {
@@ -37,7 +37,7 @@ fn main() -> Result<()> {
     println!("{} FPI distributions, BaselineNet on the HLS slot, real PJRT numerics\n", n_events);
 
     let cfg = PipelineConfig {
-        use_case: "mms",
+        use_case: UseCase::Mms,
         n_events,
         cadence_s: 0.15, // FPI fast-survey-ish cadence
         max_batch: 8,

@@ -13,7 +13,7 @@ use spaceinfer::board::{Calibration, Zcu104};
 use spaceinfer::coordinator::decision::{decide, Decision};
 use spaceinfer::hls::HlsDesign;
 use spaceinfer::model::catalog::Catalog;
-use spaceinfer::model::Precision;
+use spaceinfer::model::{Precision, UseCase};
 use spaceinfer::power::{energy_mj, Implementation, PowerModel};
 use spaceinfer::resources::estimate_hls;
 use spaceinfer::runtime::Engine;
@@ -55,7 +55,7 @@ fn main() -> Result<()> {
         let is_sep = rng.chance(0.25);
         let features = flare_features(&mut rng, is_sep);
         let out = model.run(&[&features])?;
-        match decide("esperta", &out, &mut rng) {
+        match decide(UseCase::Esperta, &out, &mut rng) {
             Decision::SepAlert { warning, mask, max_prob } => {
                 if warning {
                     alerts += 1;

@@ -19,7 +19,7 @@
 use anyhow::Result;
 use spaceinfer::board::Calibration;
 use spaceinfer::coordinator::{Pipeline, PipelineConfig, Policy};
-use spaceinfer::model::Catalog;
+use spaceinfer::model::{Catalog, UseCase};
 use spaceinfer::report::{policy_comparison, PolicyRun};
 
 fn main() -> Result<()> {
@@ -37,7 +37,7 @@ fn main() -> Result<()> {
         for policy in [Policy::Deadline, Policy::MinLatency, Policy::MinEnergy] {
             let report = Pipeline::new(
                 PipelineConfig {
-                    use_case: "esperta",
+                    use_case: UseCase::Esperta,
                     n_events,
                     cadence_s,
                     max_wait_s: 0.05, // alerts cannot sit in the batcher
@@ -65,7 +65,7 @@ fn main() -> Result<()> {
         &catalog,
         &calib,
         &PolicyRun {
-            use_case: "esperta",
+            use_case: UseCase::Esperta,
             n_events: 512,
             cadence_s: 0.005,
             ..Default::default()

@@ -14,7 +14,7 @@ use spaceinfer::board::{Calibration, Zcu104};
 use spaceinfer::coordinator::decision::{decide, Decision};
 use spaceinfer::dpu::{DpuArch, DpuSchedule};
 use spaceinfer::model::catalog::{model_info, Catalog};
-use spaceinfer::model::Precision;
+use spaceinfer::model::{Precision, UseCase};
 use spaceinfer::power::{energy_mj, PowerModel};
 use spaceinfer::runtime::Engine;
 use spaceinfer::sensors::generators::magnetogram_tile;
@@ -56,7 +56,7 @@ fn main() -> Result<()> {
         let out32 = f32m.run(&[&tile])?;
         let out8 = i8m.run(&[&tile])?;
         // rust-side reparameterization (the op the paper moved off-FPGA)
-        let z = match decide("vae", &out32, &mut rng) {
+        let z = match decide(UseCase::Vae, &out32, &mut rng) {
             Decision::Latent { z } => z,
             _ => unreachable!(),
         };

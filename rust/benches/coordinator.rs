@@ -10,6 +10,7 @@ use spaceinfer::coordinator::{
     Batcher, BoundedQueue, DownlinkManager, Pipeline, PipelineConfig, Router,
 };
 use spaceinfer::model::catalog::Catalog;
+use spaceinfer::model::UseCase;
 use spaceinfer::runtime::{Backend, ExecutorPool, PoolConfig};
 use spaceinfer::sensors::SensorStream;
 use spaceinfer::util::benchkit::{bench, throughput};
@@ -18,11 +19,11 @@ use spaceinfer::util::prng::Prng;
 fn main() {
     let router = Router::default();
     let s = bench("router.route", 100, 1000, || {
-        router.route("mms", 3).unwrap();
+        router.route(UseCase::Mms, 3).unwrap();
     });
     println!("{}", s.report());
 
-    let mut stream = SensorStream::new("esperta", 1, 0.001);
+    let mut stream = SensorStream::new(UseCase::Esperta, 1, 0.001);
     let events: Vec<_> = stream.take(4096);
     let s = bench("batcher offer+flush x4096 (esperta)", 2, 50, || {
         let mut b = Batcher::new("esperta", 8, 0.5);
@@ -53,7 +54,7 @@ fn main() {
         let mut dl = DownlinkManager::new(1 << 20);
         let mut r = Prng::new(9);
         for out in &outputs {
-            let d = decide("esperta", out, &mut r);
+            let d = decide(UseCase::Esperta, out, &mut r);
             dl.offer(&d, 12);
         }
     });
@@ -64,7 +65,7 @@ fn main() {
     if let Ok(catalog) = Catalog::load(std::path::Path::new("artifacts")) {
         let calib = Calibration::default();
         let cfg = PipelineConfig {
-            use_case: "mms",
+            use_case: UseCase::Mms,
             n_events: 1000,
             ..Default::default()
         };
@@ -79,7 +80,7 @@ fn main() {
         // overhead scales with batches, not events
         for max_batch in [1usize, 8] {
             let cfg = PipelineConfig {
-                use_case: "mms",
+                use_case: UseCase::Mms,
                 mms_model: "logistic".into(),
                 n_events: 1000,
                 max_batch,
@@ -102,7 +103,7 @@ fn main() {
         // the sharded pool (surrogate backend so the bench isolates
         // dispatch + coordination cost from PJRT compute)
         let cfg = PipelineConfig {
-            use_case: "mms",
+            use_case: UseCase::Mms,
             mms_model: "logistic".into(),
             n_events: 1000,
             ..Default::default()

@@ -2,14 +2,22 @@
 //! through the compiled HLO (host numbers; the ZCU104 numbers come from
 //! the simulators), plus the executor pool's dispatch-amortization
 //! claim: batch-N through one `ExecRequest` vs N single-event submits.
+//!
 //! Emits machine-readable `BENCH_runtime.json` at the repo root so the
-//! perf trajectory is comparable across PRs.
+//! perf trajectory is comparable across PRs.  The `targets` section —
+//! one row per backend-registry target per use case (predicted latency,
+//! energy per inference, active power) — is emitted even without
+//! `make artifacts` (synthetic stand-in catalog), so the full target
+//! matrix is tracked on every machine.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
+use spaceinfer::backend::{AccelModel, TargetRegistry, TargetSet};
+use spaceinfer::board::Calibration;
+use spaceinfer::coordinator::Router;
 use spaceinfer::model::catalog::Catalog;
-use spaceinfer::model::Precision;
+use spaceinfer::model::{Precision, UseCase};
 use spaceinfer::runtime::{Engine, ExecutorPool, GoldenIo, InputSet, PoolConfig};
 use spaceinfer::util::benchkit::{bench, throughput};
 use spaceinfer::util::json::Json;
@@ -27,110 +35,157 @@ fn repo_root() -> PathBuf {
     cwd
 }
 
+/// One row per registered target per use case: the simulator-predicted
+/// operating point the dispatcher scores at runtime.
+fn target_matrix_rows(catalog: &Catalog) -> BTreeMap<String, Json> {
+    let calib = Calibration::default();
+    let router = Router::default(); // mms -> baseline
+    let mut rows = BTreeMap::new();
+    for uc in UseCase::ALL {
+        let route = router.route(uc, 0).expect("route");
+        let registry =
+            TargetRegistry::build(&route.model, catalog, &calib, &TargetSet::All)
+                .expect("registry");
+        for target in registry.targets() {
+            let mut row = BTreeMap::new();
+            row.insert("latency_s".to_string(), Json::Num(target.batch_latency_s(1)));
+            row.insert(
+                "energy_per_inf_j".to_string(),
+                Json::Num(target.batch_energy_j(1)),
+            );
+            row.insert(
+                "active_power_w".to_string(),
+                Json::Num(target.active_power_w()),
+            );
+            rows.insert(
+                format!("{}.{}", route.model, target.name()),
+                Json::Obj(row),
+            );
+            println!(
+                "target {:<10} {:<10} {:>12.6} s/inf  {:>10.4} mJ/inf  {:>5.2} W",
+                route.model,
+                target.name(),
+                target.batch_latency_s(1),
+                target.batch_energy_j(1) * 1e3,
+                target.active_power_w(),
+            );
+        }
+    }
+    rows
+}
+
 fn main() {
     let dir = std::path::Path::new("artifacts");
-    let catalog = match Catalog::load(dir) {
-        Ok(c) => c,
-        Err(e) => {
-            eprintln!("bench runtime: {e:#}\nrun `make artifacts` first");
-            std::process::exit(1);
-        }
-    };
-    let engine = Engine::new(dir).expect("engine");
-    println!("platform: {}\n", engine.platform());
-
-    // compile cost first (paid once at startup)
-    for tag in &catalog.executable {
-        let (name, prec) = tag.rsplit_once('.').unwrap();
-        let prec = Precision::parse(prec).unwrap();
-        let t0 = std::time::Instant::now();
-        engine.load(name, prec).expect("load");
-        println!("compile {tag:<22} {:>10.1?}", t0.elapsed());
-    }
-    println!();
-
-    // execute hot path (fewer samples for the heavyweights)
-    for tag in &catalog.executable {
-        let (name, prec) = tag.rsplit_once('.').unwrap();
-        let prec = Precision::parse(prec).unwrap();
-        let model = engine.load(name, prec).unwrap();
-        let io = GoldenIo::load(&catalog.io_path(tag)).expect("golden io");
-        let inputs = io.input_slices();
-        let n = if model.manifest.total_macs > 100_000_000 { 5 } else { 30 };
-        let s = bench(&format!("execute {tag}"), 2, n, || {
-            model.run(&inputs).expect("run");
-        });
-        let med = s.median();
-        println!("{}  -> {:.1} inf/s host", s.report(), throughput(1, med));
-    }
-    println!();
-
-    // dispatch amortization through the pool: batch-1 submit-per-event
-    // (the old hot path: one channel round trip + input copy per event)
-    // vs one whole-batch ExecRequest with Arc-shared buffers
-    let pool = ExecutorPool::with_config(
-        dir.to_path_buf(),
-        PoolConfig::default(),
-    )
-    .expect("executor pool");
-    println!(
-        "pool: {} workers, backend {}\n",
-        pool.worker_count(),
-        pool.engine().backend().as_str()
-    );
-    let mut model_rows: BTreeMap<String, Json> = BTreeMap::new();
-    for tag in &catalog.executable {
-        let (name, prec) = tag.rsplit_once('.').unwrap();
-        let prec = Precision::parse(prec).unwrap();
-        let model = engine.load(name, prec).unwrap();
-        if model.manifest.total_macs > 100_000_000 {
-            continue; // amortization story is about the small nets
-        }
-        let io = GoldenIo::load(&catalog.io_path(tag)).expect("golden io");
-        let set = io.input_set();
-        let raw: Vec<Vec<f32>> = (*set).clone();
-        let items: Vec<InputSet> = vec![set; BATCH_N];
-
-        let samples = 20;
-        let s1 = bench(&format!("submit-per-event x{BATCH_N} {tag}"), 2, samples, || {
-            for _ in 0..BATCH_N {
-                // per-event dispatch pays the input clone + round trip,
-                // exactly what the pre-batch-native pipeline paid
-                pool.run_sync(name, prec, raw.clone()).expect("run_sync");
-            }
-        });
-        let s8 = bench(&format!("one batch-{BATCH_N} request {tag}"), 2, samples, || {
-            pool.run_batch_sync(name, prec, items.clone()).expect("run_batch");
-        });
-        let eps1 = throughput(BATCH_N as u64, s1.median());
-        let eps8 = throughput(BATCH_N as u64, s8.median());
-        println!("{} -> {:.0} events/s", s1.report(), eps1);
-        println!("{} -> {:.0} events/s", s8.report(), eps8);
-        println!("  amortization: {:.2}x\n", eps8 / eps1.max(1e-12));
-
-        let mut row = BTreeMap::new();
-        row.insert("batch1_events_per_s".to_string(), Json::Num(eps1));
-        row.insert(
-            format!("batch{BATCH_N}_events_per_s"),
-            Json::Num(eps8),
-        );
-        row.insert(
-            "amortization_x".to_string(),
-            Json::Num(eps8 / eps1.max(1e-12)),
-        );
-        model_rows.insert(tag.clone(), Json::Obj(row));
-    }
+    let have_artifacts = Catalog::is_present(dir);
+    let catalog = Catalog::load_or_synthetic(dir).expect("catalog");
 
     let mut doc = BTreeMap::new();
     doc.insert("bench".to_string(), Json::Str("runtime".to_string()));
-    doc.insert("platform".to_string(), Json::Str(engine.platform()));
-    doc.insert(
-        "backend".to_string(),
-        Json::Str(pool.engine().backend().as_str().to_string()),
-    );
-    doc.insert("pool_workers".to_string(), Json::Num(pool.worker_count() as f64));
     doc.insert("batch_n".to_string(), Json::Num(BATCH_N as f64));
+
+    // full target matrix first: runs with or without artifacts
+    println!("== backend target matrix (simulated ZCU104 operating points) ==");
+    doc.insert("targets".to_string(), Json::Obj(target_matrix_rows(&catalog)));
+    println!();
+
+    let mut model_rows: BTreeMap<String, Json> = BTreeMap::new();
+    if !have_artifacts {
+        eprintln!(
+            "bench runtime: no artifacts in {} — skipping the host execute \
+             and pool-amortization sections (run `make artifacts` for them)",
+            dir.display()
+        );
+    } else {
+        let engine = Engine::new(dir).expect("engine");
+        println!("platform: {}\n", engine.platform());
+
+        // compile cost first (paid once at startup)
+        for tag in &catalog.executable {
+            let (name, prec) = tag.rsplit_once('.').unwrap();
+            let prec = Precision::parse(prec).unwrap();
+            let t0 = std::time::Instant::now();
+            engine.load(name, prec).expect("load");
+            println!("compile {tag:<22} {:>10.1?}", t0.elapsed());
+        }
+        println!();
+
+        // execute hot path (fewer samples for the heavyweights)
+        for tag in &catalog.executable {
+            let (name, prec) = tag.rsplit_once('.').unwrap();
+            let prec = Precision::parse(prec).unwrap();
+            let model = engine.load(name, prec).unwrap();
+            let io = GoldenIo::load(&catalog.io_path(tag)).expect("golden io");
+            let inputs = io.input_slices();
+            let n = if model.manifest.total_macs > 100_000_000 { 5 } else { 30 };
+            let s = bench(&format!("execute {tag}"), 2, n, || {
+                model.run(&inputs).expect("run");
+            });
+            let med = s.median();
+            println!("{}  -> {:.1} inf/s host", s.report(), throughput(1, med));
+        }
+        println!();
+
+        // dispatch amortization through the pool: batch-1 submit-per-event
+        // (the old hot path: one channel round trip + input copy per event)
+        // vs one whole-batch ExecRequest with Arc-shared buffers
+        let pool = ExecutorPool::with_config(dir.to_path_buf(), PoolConfig::default())
+            .expect("executor pool");
+        println!(
+            "pool: {} workers, backend {}\n",
+            pool.worker_count(),
+            pool.engine().backend().as_str()
+        );
+        for tag in &catalog.executable {
+            let (name, prec) = tag.rsplit_once('.').unwrap();
+            let prec = Precision::parse(prec).unwrap();
+            let model = engine.load(name, prec).unwrap();
+            if model.manifest.total_macs > 100_000_000 {
+                continue; // amortization story is about the small nets
+            }
+            let io = GoldenIo::load(&catalog.io_path(tag)).expect("golden io");
+            let set = io.input_set();
+            let raw: Vec<Vec<f32>> = (*set).clone();
+            let items: Vec<InputSet> = vec![set; BATCH_N];
+
+            let samples = 20;
+            let s1 =
+                bench(&format!("submit-per-event x{BATCH_N} {tag}"), 2, samples, || {
+                    for _ in 0..BATCH_N {
+                        // per-event dispatch pays the input clone + round
+                        // trip, exactly what the pre-batch-native pipeline paid
+                        pool.run_sync(name, prec, raw.clone()).expect("run_sync");
+                    }
+                });
+            let s8 = bench(&format!("one batch-{BATCH_N} request {tag}"), 2, samples, || {
+                pool.run_batch_sync(name, prec, items.clone()).expect("run_batch");
+            });
+            let eps1 = throughput(BATCH_N as u64, s1.median());
+            let eps8 = throughput(BATCH_N as u64, s8.median());
+            println!("{} -> {:.0} events/s", s1.report(), eps1);
+            println!("{} -> {:.0} events/s", s8.report(), eps8);
+            println!("  amortization: {:.2}x\n", eps8 / eps1.max(1e-12));
+
+            let mut row = BTreeMap::new();
+            row.insert("batch1_events_per_s".to_string(), Json::Num(eps1));
+            row.insert(format!("batch{BATCH_N}_events_per_s"), Json::Num(eps8));
+            row.insert(
+                "amortization_x".to_string(),
+                Json::Num(eps8 / eps1.max(1e-12)),
+            );
+            model_rows.insert(tag.clone(), Json::Obj(row));
+        }
+        doc.insert("platform".to_string(), Json::Str(engine.platform()));
+        doc.insert(
+            "backend".to_string(),
+            Json::Str(pool.engine().backend().as_str().to_string()),
+        );
+        doc.insert(
+            "pool_workers".to_string(),
+            Json::Num(pool.worker_count() as f64),
+        );
+    }
     doc.insert("models".to_string(), Json::Obj(model_rows));
+
     let out = repo_root().join("BENCH_runtime.json");
     match std::fs::write(&out, Json::Obj(doc).to_string()) {
         Ok(()) => println!("wrote {}", out.display()),

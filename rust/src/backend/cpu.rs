@@ -1,0 +1,68 @@
+//! The A53 software target — the paper's baseline and the coordinator's
+//! always-available escape hatch, behind the [`AccelModel`] seam.
+
+use anyhow::Result;
+
+use super::{AccelModel, Slot};
+use crate::board::Calibration;
+use crate::cpu::A53Model;
+use crate::model::catalog::ModelInfo;
+use crate::model::{Manifest, Precision};
+use crate::resources::Utilization;
+
+/// PS software execution of one model: per-item latency from the
+/// calibrated [`A53Model`], power from the paper's CPU row.
+#[derive(Debug, Clone)]
+pub struct CpuTarget {
+    /// Calibrated per-model A53 timing model.
+    pub model: A53Model,
+    power_w: f64,
+}
+
+impl CpuTarget {
+    /// Registry / telemetry name of the CPU target.
+    pub const NAME: &'static str = "cpu";
+
+    /// Calibrate on the model's paper CPU row (Table III anchoring,
+    /// exactly the seed dispatcher's construction).
+    pub fn new(man: &Manifest, calib: &Calibration, info: &ModelInfo) -> CpuTarget {
+        CpuTarget {
+            model: A53Model::calibrated(man, calib, info.paper.cpu_fps),
+            power_w: info.paper.cpu_p_mpsoc,
+        }
+    }
+}
+
+impl AccelModel for CpuTarget {
+    fn name(&self) -> &'static str {
+        Self::NAME
+    }
+
+    fn slot(&self) -> Slot {
+        Slot::Cpu
+    }
+
+    fn precision(&self) -> Precision {
+        Precision::Fp32
+    }
+
+    fn supports(&self, _man: &Manifest) -> Result<()> {
+        Ok(()) // PyTorch-equivalent software path runs every operator
+    }
+
+    fn setup_s(&self) -> f64 {
+        0.0
+    }
+
+    fn per_item_s(&self) -> f64 {
+        self.model.latency_s()
+    }
+
+    fn active_power_w(&self) -> f64 {
+        self.power_w
+    }
+
+    fn resources(&self) -> Utilization {
+        Utilization::none() // the A53 lives in the PS, not in CRAM
+    }
+}

@@ -1,0 +1,93 @@
+//! The Vitis-AI DPU family targets (B512–B4096) behind [`AccelModel`].
+//!
+//! The paper instantiates one B4096; PG338 defines the size axis, and
+//! the survey literature (PAPERS.md) motivates exploring it: smaller
+//! arrays trade throughput for power and CRAM footprint — exactly the
+//! axis a mission power budget or SEU environment cares about.
+
+use anyhow::{bail, Result};
+
+use super::{AccelModel, Slot};
+use crate::board::{Calibration, Zcu104};
+use crate::dpu::{DpuArch, DpuSchedule, DpuSize};
+use crate::model::{Manifest, Precision};
+use crate::power::PowerModel;
+use crate::resources::Utilization;
+
+/// One DPU configuration running one int8 model: timing from the
+/// per-layer cycle scheduler, power scaled from the calibrated B4096
+/// anchor, footprint from the architecture description.
+#[derive(Debug, Clone)]
+pub struct DpuTarget {
+    /// Convolution-architecture size this target instantiates.
+    pub size: DpuSize,
+    /// Per-layer schedule of the deployed int8 manifest on this array.
+    pub sched: DpuSchedule,
+    power_w: f64,
+}
+
+impl DpuTarget {
+    /// Schedule `man` onto a `size` array.  Errors when the manifest
+    /// fails the §III-B operator gate.
+    pub fn new(
+        man: &Manifest,
+        size: DpuSize,
+        calib: &Calibration,
+        board: &Zcu104,
+    ) -> Result<DpuTarget> {
+        let arch = DpuArch::of_size(size, calib, board.dpu_clock_hz);
+        let sched = DpuSchedule::new(man, arch, calib, board.axi_bandwidth)?;
+        let power_w =
+            PowerModel::new(calib.clone()).dpu_family_w(size.frac(), sched.mac_duty());
+        Ok(DpuTarget { size, sched, power_w })
+    }
+}
+
+impl AccelModel for DpuTarget {
+    fn name(&self) -> &'static str {
+        self.size.target_name()
+    }
+
+    fn slot(&self) -> Slot {
+        Slot::Dpu
+    }
+
+    fn precision(&self) -> Precision {
+        Precision::Int8
+    }
+
+    fn supports(&self, man: &Manifest) -> Result<()> {
+        if man.dpu_compatible() {
+            Ok(())
+        } else {
+            bail!(
+                "model {:?} uses operators unsupported by the DPU \
+                 (sigmoid / comparator / 3-D layers)",
+                man.name
+            )
+        }
+    }
+
+    fn setup_s(&self) -> f64 {
+        self.sched.invoke_s // PYNQ/VART runner submit-wait path
+    }
+
+    fn per_item_s(&self) -> f64 {
+        self.sched.latency_s() - self.sched.invoke_s
+    }
+
+    fn active_power_w(&self) -> f64 {
+        self.power_w
+    }
+
+    fn resources(&self) -> Utilization {
+        let r = self.sched.arch.resources();
+        Utilization {
+            luts: r.luts,
+            ffs: r.ffs,
+            dsps: r.dsps,
+            brams: r.brams,
+            urams: r.urams,
+        }
+    }
+}

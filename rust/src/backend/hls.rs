@@ -1,0 +1,100 @@
+//! The Vitis-HLS custom-IP targets behind [`AccelModel`]: the paper's
+//! naive sequential design and the pipelined (II=1) variant its §V
+//! explicitly leaves on the table ("the HLS use cases were deliberately
+//! unoptimized ... pipelining and loop unrolling would increase
+//! performance at the cost of resources").
+
+use anyhow::Result;
+
+use super::{AccelModel, Slot};
+use crate::board::{Calibration, Zcu104};
+use crate::hls::HlsDesign;
+use crate::model::{Manifest, Precision};
+use crate::power::{Implementation, PowerModel};
+use crate::resources::{estimate_hls, estimate_hls_pipelined, Utilization};
+
+/// One synthesized HLS accelerator (naive or pipelined) for one model.
+#[derive(Debug, Clone)]
+pub struct HlsTarget {
+    /// The synthesized design (timing + BRAM plan).
+    pub design: HlsDesign,
+    /// True for the II=1 dataflow variant.
+    pub pipelined: bool,
+    util: Utilization,
+    power_w: f64,
+}
+
+impl HlsTarget {
+    /// Registry / telemetry name of the naive design.
+    pub const NAME: &'static str = "hls";
+    /// Registry / telemetry name of the pipelined (II=1) design.
+    pub const PIPELINED_NAME: &'static str = "hls-pipe";
+
+    /// The paper's un-pragma'd sequential design (exactly the seed
+    /// dispatcher's construction).
+    pub fn naive(man: &Manifest, board: &Zcu104, calib: &Calibration) -> HlsTarget {
+        let design = HlsDesign::synthesize(man, board, calib);
+        let util = estimate_hls(man, &design.plan);
+        Self::finish(design, util, false, calib)
+    }
+
+    /// The II=1 dataflow variant: pipelined/unrolled datapath, BRAM
+    /// partitioning pressure through the same allocator.
+    pub fn pipelined(man: &Manifest, board: &Zcu104, calib: &Calibration) -> HlsTarget {
+        let design = HlsDesign::synthesize_pipelined(man, board, calib);
+        let util = estimate_hls_pipelined(man, &design.plan);
+        Self::finish(design, util, true, calib)
+    }
+
+    fn finish(
+        design: HlsDesign,
+        util: Utilization,
+        pipelined: bool,
+        calib: &Calibration,
+    ) -> HlsTarget {
+        let power_w = PowerModel::new(calib.clone()).mpsoc_w(&Implementation::Hls {
+            kiloluts: util.luts as f64 / 1000.0,
+            brams: design.plan.brams(),
+            duty: 1.0,
+        });
+        HlsTarget { design, pipelined, util, power_w }
+    }
+}
+
+impl AccelModel for HlsTarget {
+    fn name(&self) -> &'static str {
+        if self.pipelined {
+            Self::PIPELINED_NAME
+        } else {
+            Self::NAME
+        }
+    }
+
+    fn slot(&self) -> Slot {
+        Slot::Hls
+    }
+
+    fn precision(&self) -> Precision {
+        Precision::Fp32
+    }
+
+    fn supports(&self, _man: &Manifest) -> Result<()> {
+        Ok(()) // any manifest synthesizes (fp32, sigmoid/3-D included)
+    }
+
+    fn setup_s(&self) -> f64 {
+        self.design.axi_setup_cycles / self.design.clock_hz
+    }
+
+    fn per_item_s(&self) -> f64 {
+        self.design.latency_s() - self.setup_s()
+    }
+
+    fn active_power_w(&self) -> f64 {
+        self.power_w
+    }
+
+    fn resources(&self) -> Utilization {
+        self.util
+    }
+}

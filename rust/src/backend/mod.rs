@@ -1,0 +1,446 @@
+//! Pluggable accelerator backends: the trait seam every execution
+//! target enters through.
+//!
+//! The paper evaluates exactly three targets (A53 CPU, one Vitis-AI DPU
+//! configuration, naive Vitis HLS) but frames them as points in a design
+//! space: DPU cores ship in B512–B4096 sizes (PG338) and the HLS designs
+//! are "deliberately unoptimized" with known pragma headroom (§V).  This
+//! module turns that space into data:
+//!
+//! * [`AccelModel`] — the capability + cost interface one execution
+//!   target exposes (operator support, batch latency/energy, precision,
+//!   active power, PL footprint);
+//! * [`TargetRegistry`] — the instantiated, ordered target table for one
+//!   use-case model, built from the catalog and calibration;
+//! * [`TargetSet`] — which targets to instantiate (`default` reproduces
+//!   the paper's triple, `all` opens the full family, or an explicit
+//!   comma list from `--targets`).
+//!
+//! The coordinator's dispatcher scores registry *indices*; nothing above
+//! this layer matches on target kinds.  Adding a backend (INT4 DPU,
+//! FINN-style streaming, a second FPGA) means implementing [`AccelModel`]
+//! and registering it in [`TargetRegistry::build`] — the dispatcher,
+//! pipeline, policy reports, telemetry, and SEU accounting pick it up
+//! unchanged.
+
+pub mod cpu;
+pub mod dpu;
+pub mod hls;
+
+use anyhow::{bail, Result};
+
+use crate::board::{Calibration, Zcu104};
+use crate::dpu::DpuSize;
+use crate::model::catalog::{model_info, Catalog, Target as PaperTarget};
+use crate::model::{Manifest, Precision};
+use crate::resources::Utilization;
+
+pub use cpu::CpuTarget;
+pub use dpu::DpuTarget;
+pub use hls::HlsTarget;
+
+/// Coarse execution-slot kind on the simulated MPSoC.  Several registry
+/// targets may share a slot (the four DPU sizes are all [`Slot::Dpu`]);
+/// the paper's deployment matrix and the report layer speak in slots,
+/// the dispatcher in registry indices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Slot {
+    /// A Vitis-AI DPU instance.
+    Dpu,
+    /// A per-model HLS IP.
+    Hls,
+    /// A53 software fallback.
+    Cpu,
+}
+
+impl Slot {
+    /// Short lower-case name used in reports.
+    ///
+    /// ```
+    /// use spaceinfer::coordinator::Slot;
+    /// assert_eq!(Slot::Dpu.name(), "dpu");
+    /// ```
+    pub fn name(&self) -> &'static str {
+        match self {
+            Slot::Dpu => "dpu",
+            Slot::Hls => "hls",
+            Slot::Cpu => "cpu",
+        }
+    }
+}
+
+/// One pluggable execution target: the calibrated cost + capability
+/// model the dispatcher scores.
+///
+/// Implementations are bound to one deployed model variant (they embed
+/// the scheduled manifest), so the per-batch cost methods need no
+/// manifest argument; [`AccelModel::supports`] answers the eligibility
+/// question for an arbitrary manifest (the §III-B operator gate).
+pub trait AccelModel: std::fmt::Debug + Send + Sync {
+    /// Stable registry / telemetry key (`target_mix` and `dispatch_*`
+    /// counters use it).  The paper's three targets keep their seed-era
+    /// names (`cpu` / `dpu` / `hls`); family members extend them
+    /// (`dpu-b512`, `hls-pipe`).
+    fn name(&self) -> &'static str;
+
+    /// Coarse slot kind this target occupies.
+    fn slot(&self) -> Slot;
+
+    /// Precision the deployed variant runs at — also what the executor
+    /// pool loads for this target.
+    fn precision(&self) -> Precision;
+
+    /// Can this target execute `man`?  `Err` carries the reason (e.g.
+    /// the DPU's unsupported-operator gate).
+    fn supports(&self, man: &Manifest) -> Result<()>;
+
+    /// Fixed per-batch submission overhead (s) — runner invocation,
+    /// AXI-Lite setup, zero for the CPU.
+    fn setup_s(&self) -> f64;
+
+    /// Marginal time per inference within a batch (s).
+    fn per_item_s(&self) -> f64;
+
+    /// Active MPSoC draw while this target runs (W) — what a mission
+    /// power budget caps.
+    fn active_power_w(&self) -> f64;
+
+    /// PL footprint of the target's design — drives Table II reporting
+    /// and `rad::seu` essential-bit scaling.  Empty for the CPU (the
+    /// A53 lives in the PS, not configuration memory).
+    fn resources(&self) -> Utilization;
+
+    /// Predicted busy time for a batch of `n` (s): setup + n · per-item.
+    fn batch_latency_s(&self, n: u64) -> f64 {
+        self.setup_s() + n as f64 * self.per_item_s()
+    }
+
+    /// Predicted busy energy for a batch of `n` (J): active power ×
+    /// busy time.
+    fn batch_energy_j(&self, n: u64) -> f64 {
+        self.active_power_w() * self.batch_latency_s(n)
+    }
+}
+
+/// Which targets a registry instantiates.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum TargetSet {
+    /// The paper's triple: A53 + B4096 DPU + naive HLS.  Byte-identical
+    /// dispatch behavior to the pre-registry coordinator.
+    #[default]
+    Default,
+    /// Every target the model is eligible for (the full DPU family and
+    /// both HLS variants).
+    All,
+    /// An explicit selection (`--targets cpu,dpu-b1024,hls-pipe`).
+    /// Unknown names are rejected at parse time; requesting a DPU
+    /// target for an operator-incompatible model errors at build time.
+    Named(Vec<String>),
+}
+
+impl TargetSet {
+    /// Every registrable target name, in registry order.
+    pub const KNOWN: [&'static str; 7] = [
+        "cpu", "dpu-b512", "dpu-b1024", "dpu-b2304", "dpu", "hls", "hls-pipe",
+    ];
+
+    /// Parse a CLI selection: `default` | `all` | a comma list of names
+    /// from [`TargetSet::KNOWN`] (`dpu-b4096` is accepted as an alias
+    /// for `dpu`).
+    ///
+    /// ```
+    /// use spaceinfer::backend::TargetSet;
+    /// assert_eq!(TargetSet::parse("all").unwrap(), TargetSet::All);
+    /// assert!(TargetSet::parse("cpu,hls-pipe").is_ok());
+    /// assert!(TargetSet::parse("gpu").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<TargetSet> {
+        match s {
+            "default" => Ok(TargetSet::Default),
+            "all" => Ok(TargetSet::All),
+            _ => {
+                let mut names = Vec::new();
+                for raw in s.split(',') {
+                    let mut name = raw.trim();
+                    if name == "dpu-b4096" {
+                        name = "dpu";
+                    }
+                    if !Self::KNOWN.iter().any(|&k| k == name) {
+                        bail!(
+                            "unknown target {name:?} (known: {}, or `default` / `all`)",
+                            Self::KNOWN.join(", ")
+                        );
+                    }
+                    names.push(name.to_string());
+                }
+                Ok(TargetSet::Named(names))
+            }
+        }
+    }
+
+    /// Does this set admit a target?  `in_default` marks the paper's
+    /// three seed targets.
+    fn admits(&self, name: &str, in_default: bool) -> bool {
+        match self {
+            TargetSet::Default => in_default,
+            TargetSet::All => true,
+            TargetSet::Named(list) => list.iter().any(|n| n == name),
+        }
+    }
+
+    fn is_named(&self) -> bool {
+        matches!(self, TargetSet::Named(_))
+    }
+}
+
+/// The instantiated, ordered target table for one use-case model.
+/// Immutable once built; per-run queue state lives in the caller's
+/// timeline vector, index-aligned with [`TargetRegistry::targets`].
+#[derive(Debug)]
+pub struct TargetRegistry {
+    targets: Vec<Box<dyn AccelModel>>,
+    primary: Option<usize>,
+}
+
+impl TargetRegistry {
+    /// Build the registry for `model` from the catalog and calibration.
+    ///
+    /// Order is fixed (CPU, DPU family ascending, naive HLS, pipelined
+    /// HLS) so dispatcher tie-breaks stay deterministic; under
+    /// [`TargetSet::Default`] this reduces to the seed coordinator's
+    /// `[cpu, dpu, hls]` table exactly.  DPU entries exist only when the
+    /// int8 variant passes the §III-B operator gate — silently skipped
+    /// for `default`/`all`, a hard error when explicitly `Named`.
+    pub fn build(
+        model: &str,
+        catalog: &Catalog,
+        calib: &Calibration,
+        set: &TargetSet,
+    ) -> Result<TargetRegistry> {
+        let info = model_info(model)?;
+        let board = Zcu104::default();
+        let cpu_man = catalog.manifest(model, Precision::Fp32)?;
+        let int8_man = catalog.manifest(model, Precision::Int8).ok();
+        let mut targets: Vec<Box<dyn AccelModel>> = Vec::new();
+        let mut primary = None;
+
+        if set.admits(CpuTarget::NAME, true) {
+            targets.push(Box::new(CpuTarget::new(cpu_man, calib, info)));
+        }
+        for size in DpuSize::ALL {
+            let name = size.target_name();
+            if !set.admits(name, size == DpuSize::B4096) {
+                continue;
+            }
+            match int8_man {
+                Some(man) if man.dpu_compatible() => {
+                    if size == DpuSize::B4096 && info.target == PaperTarget::Dpu {
+                        primary = Some(targets.len());
+                    }
+                    targets.push(Box::new(DpuTarget::new(man, size, calib, &board)?));
+                }
+                _ => {
+                    if set.is_named() {
+                        bail!(
+                            "target {name:?} requested but model {model:?} has no \
+                             DPU-deployable int8 variant (operator gate / missing \
+                             manifest)"
+                        );
+                    }
+                }
+            }
+        }
+        if set.admits(HlsTarget::NAME, true) {
+            if info.target == PaperTarget::Hls {
+                primary = Some(targets.len());
+            }
+            targets.push(Box::new(HlsTarget::naive(cpu_man, &board, calib)));
+        }
+        if set.admits(HlsTarget::PIPELINED_NAME, false) {
+            targets.push(Box::new(HlsTarget::pipelined(cpu_man, &board, calib)));
+        }
+        if targets.is_empty() {
+            bail!("target set selected no eligible target for model {model:?}");
+        }
+        Ok(TargetRegistry { targets, primary })
+    }
+
+    /// Assemble a registry from pre-built targets (tests, external
+    /// backends).  `primary` indexes the static-policy target.
+    pub fn from_targets(
+        targets: Vec<Box<dyn AccelModel>>,
+        primary: Option<usize>,
+    ) -> TargetRegistry {
+        TargetRegistry { targets, primary }
+    }
+
+    /// The ordered target table.
+    pub fn targets(&self) -> &[Box<dyn AccelModel>] {
+        &self.targets
+    }
+
+    /// One target by registry index.
+    pub fn get(&self, index: usize) -> &dyn AccelModel {
+        self.targets[index].as_ref()
+    }
+
+    /// Number of registered targets.
+    pub fn len(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// True when no target registered (never after a successful `build`).
+    pub fn is_empty(&self) -> bool {
+        self.targets.is_empty()
+    }
+
+    /// Index of the paper's deployment-matrix target, when registered.
+    pub fn primary_index(&self) -> Option<usize> {
+        self.primary
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rad::seu::essential_bits_of;
+
+    fn registry(model: &str, set: &TargetSet) -> TargetRegistry {
+        TargetRegistry::build(
+            model,
+            &Catalog::synthetic(),
+            &Calibration::default(),
+            set,
+        )
+        .unwrap()
+    }
+
+    fn names(r: &TargetRegistry) -> Vec<&'static str> {
+        r.targets().iter().map(|t| t.name()).collect()
+    }
+
+    #[test]
+    fn default_set_reproduces_the_paper_triple() {
+        let r = registry("vae", &TargetSet::Default);
+        assert_eq!(names(&r), vec!["cpu", "dpu", "hls"]);
+        assert_eq!(r.primary_index(), Some(1));
+        // HLS-primary model without an int8 variant: no DPU entry
+        let r = registry("baseline", &TargetSet::Default);
+        assert_eq!(names(&r), vec!["cpu", "hls"]);
+        assert_eq!(r.primary_index(), Some(1));
+    }
+
+    #[test]
+    fn all_set_opens_the_family() {
+        let r = registry("vae", &TargetSet::All);
+        assert_eq!(
+            names(&r),
+            vec!["cpu", "dpu-b512", "dpu-b1024", "dpu-b2304", "dpu", "hls", "hls-pipe"]
+        );
+        assert!(r.len() >= 6, "acceptance: >= 6 targets for a DPU model");
+        // operator-incompatible model: DPU family absent, HLS pair present
+        let r = registry("esperta", &TargetSet::All);
+        assert_eq!(names(&r), vec!["cpu", "hls", "hls-pipe"]);
+    }
+
+    #[test]
+    fn named_set_selects_and_rejects() {
+        let r = registry("vae", &TargetSet::parse("cpu,dpu-b1024").unwrap());
+        assert_eq!(names(&r), vec!["cpu", "dpu-b1024"]);
+        assert_eq!(r.primary_index(), None, "b4096 not registered");
+        // alias
+        assert_eq!(
+            TargetSet::parse("dpu-b4096").unwrap(),
+            TargetSet::Named(vec!["dpu".into()])
+        );
+        // typo: parse-time error, not silent fall-through
+        assert!(TargetSet::parse("dpu-b9999").is_err());
+        // explicit DPU request for an incompatible model: build-time error
+        let err = TargetRegistry::build(
+            "esperta",
+            &Catalog::synthetic(),
+            &Calibration::default(),
+            &TargetSet::parse("dpu").unwrap(),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn dpu_family_scales_latency_power_and_footprint() {
+        let r = registry("vae", &TargetSet::All);
+        let dpus: Vec<&dyn AccelModel> = r
+            .targets()
+            .iter()
+            .map(|t| t.as_ref())
+            .filter(|t| t.slot() == Slot::Dpu)
+            .collect();
+        assert_eq!(dpus.len(), 4);
+        for pair in dpus.windows(2) {
+            // ascending array size: faster per item, hotter, bigger
+            assert!(
+                pair[0].per_item_s() >= pair[1].per_item_s(),
+                "{} vs {}",
+                pair[0].name(),
+                pair[1].name()
+            );
+            assert!(pair[0].active_power_w() < pair[1].active_power_w());
+            assert!(pair[0].resources().dsps < pair[1].resources().dsps);
+            assert!(
+                essential_bits_of(&pair[0].resources())
+                    < essential_bits_of(&pair[1].resources())
+            );
+        }
+    }
+
+    #[test]
+    fn pipelined_hls_is_faster_but_heavier() {
+        let r = registry("esperta", &TargetSet::All);
+        let naive = r.get(1);
+        let pipe = r.get(2);
+        assert_eq!(naive.name(), "hls");
+        assert_eq!(pipe.name(), "hls-pipe");
+        assert!(pipe.per_item_s() < naive.per_item_s(), "II=1 beats II=5");
+        assert!(
+            pipe.resources().brams >= naive.resources().brams,
+            "partitioning raises BRAM pressure"
+        );
+        assert!(pipe.resources().dsps > naive.resources().dsps);
+        assert!(pipe.active_power_w() > naive.active_power_w());
+    }
+
+    #[test]
+    fn cpu_target_has_no_pl_footprint() {
+        let r = registry("vae", &TargetSet::Default);
+        let cpu = r.get(0);
+        assert_eq!(cpu.name(), "cpu");
+        assert_eq!(essential_bits_of(&cpu.resources()), 0);
+        assert_eq!(cpu.setup_s(), 0.0);
+    }
+
+    #[test]
+    fn supports_gates_the_dpu() {
+        let catalog = Catalog::synthetic();
+        let r = registry("vae", &TargetSet::Default);
+        let dpu = r.get(1);
+        let vae = catalog.manifest("vae", Precision::Int8).unwrap();
+        let baseline = catalog.manifest("baseline", Precision::Fp32).unwrap();
+        assert!(dpu.supports(vae).is_ok());
+        assert!(dpu.supports(baseline).is_err(), "conv3d is off the DPU");
+        // CPU and HLS take anything
+        assert!(r.get(0).supports(baseline).is_ok());
+        assert!(r.get(2).supports(baseline).is_ok());
+    }
+
+    #[test]
+    fn batch_cost_defaults_compose() {
+        let r = registry("vae", &TargetSet::Default);
+        let t = r.get(1);
+        let one = t.batch_latency_s(1);
+        let eight = t.batch_latency_s(8);
+        assert!((eight - one - 7.0 * t.per_item_s()).abs() < 1e-15);
+        assert_eq!(
+            t.batch_energy_j(8).to_bits(),
+            (t.active_power_w() * eight).to_bits()
+        );
+    }
+}

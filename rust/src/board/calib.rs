@@ -51,6 +51,13 @@ pub struct Calibration {
     /// on-chip store for the big CNNs and stream through DDR.
     pub dpu_ddr_bytes_per_cycle: f64,
 
+    // ---- DPU family scaling ----
+    /// Fraction of the B4096 static draw that does not scale with array
+    /// size (scheduler, instruction fetch, AXI interconnect); the rest
+    /// scales with MAC-array capacity.  Anchored so the B4096 member
+    /// reproduces `p_dpu_base` exactly.
+    pub dpu_static_fixed_frac: f64,
+
     // ---- HLS naive-dataflow timing ----
     /// AXI-Lite setup + start + done-poll cycles per inference.
     pub hls_axi_setup_cycles: f64,
@@ -58,6 +65,15 @@ pub struct Calibration {
     pub hls_ii: f64,
     /// Pipeline fill cycles per layer.
     pub hls_layer_fill_cycles: f64,
+
+    // ---- HLS pipelined (II=1) variant ----
+    /// Initiation interval with pipeline/unroll pragmas (cycles/op).
+    pub hls_pipe_ii: f64,
+    /// Deeper pipeline fill cycles per layer in the pipelined variant.
+    pub hls_pipe_fill_cycles: f64,
+    /// BRAM bytes charged per stored byte under array partitioning +
+    /// double buffering (>= 1.0; the naive flow is 1.0).
+    pub hls_pipe_bram_factor: f64,
 
     // ---- power (W) ----
     /// Board peripheral floor (fans, PHYs, VRM losses).
@@ -102,9 +118,15 @@ impl Default for Calibration {
             dpu_misc_elems_per_cycle: 64.0,
             dpu_ddr_bytes_per_cycle: 13.0,
 
+            dpu_static_fixed_frac: 0.35,
+
             hls_axi_setup_cycles: 2600.0,
             hls_ii: 5.0,
             hls_layer_fill_cycles: 64.0,
+
+            hls_pipe_ii: 1.0,
+            hls_pipe_fill_cycles: 256.0,
+            hls_pipe_bram_factor: 2.0,
 
             p_periph: 8.95,
             p_ddr_cpu: 0.5,
@@ -146,9 +168,10 @@ macro_rules! calib_fields {
 calib_fields!(
     cpu_peak_ops, dispatch_conv2d, dispatch_conv3d, dispatch_pool,
     dispatch_dense, dispatch_misc, dpu_invoke_s, dpu_layer_s,
-    dpu_misc_elems_per_cycle, dpu_ddr_bytes_per_cycle, hls_axi_setup_cycles,
-    hls_ii,
-    hls_layer_fill_cycles, p_periph, p_ddr_cpu, p_ps_idle, p_ps_poll,
+    dpu_misc_elems_per_cycle, dpu_ddr_bytes_per_cycle,
+    dpu_static_fixed_frac, hls_axi_setup_cycles, hls_ii,
+    hls_layer_fill_cycles, hls_pipe_ii, hls_pipe_fill_cycles,
+    hls_pipe_bram_factor, p_periph, p_ddr_cpu, p_ps_idle, p_ps_poll,
     p_dpu_base, p_dpu_dyn, p_hls_base, p_hls_per_kilolut, p_hls_per_bram,
     p_config_spike, t_config,
 );

@@ -60,8 +60,9 @@ impl Batcher {
     ///
     /// ```
     /// use spaceinfer::coordinator::Batcher;
+    /// use spaceinfer::model::UseCase;
     /// use spaceinfer::sensors::SensorStream;
-    /// let mut stream = SensorStream::new("esperta", 1, 0.1);
+    /// let mut stream = SensorStream::new(UseCase::Esperta, 1, 0.1);
     /// let mut b = Batcher::new("esperta", 2, 10.0);
     /// assert!(b.offer(stream.next_event(), 0.0).is_none());
     /// let batch = b.offer(stream.next_event(), 0.1).expect("full at 2");
@@ -137,6 +138,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::UseCase;
     use crate::sensors::SensorStream;
 
     fn ev(stream: &mut SensorStream) -> SensorEvent {
@@ -145,7 +147,7 @@ mod tests {
 
     #[test]
     fn flushes_when_full() {
-        let mut s = SensorStream::new("esperta", 1, 0.1);
+        let mut s = SensorStream::new(UseCase::Esperta, 1, 0.1);
         let mut b = Batcher::new("esperta", 3, 10.0);
         assert!(b.offer(ev(&mut s), 0.0).is_none());
         assert!(b.offer(ev(&mut s), 0.1).is_none());
@@ -158,7 +160,7 @@ mod tests {
 
     #[test]
     fn input_sets_share_event_buffers() {
-        let mut s = SensorStream::new("mms", 4, 0.1);
+        let mut s = SensorStream::new(UseCase::Mms, 4, 0.1);
         let mut b = Batcher::new("baseline", 2, 10.0);
         b.offer(ev(&mut s), 0.0);
         let batch = b.offer(ev(&mut s), 0.1).expect("full batch");
@@ -171,7 +173,7 @@ mod tests {
 
     #[test]
     fn flushes_on_deadline() {
-        let mut s = SensorStream::new("esperta", 2, 0.1);
+        let mut s = SensorStream::new(UseCase::Esperta, 2, 0.1);
         let mut b = Batcher::new("esperta", 100, 0.5);
         b.offer(ev(&mut s), 0.0);
         assert!(b.poll(0.4).is_none());
@@ -184,7 +186,7 @@ mod tests {
 
     #[test]
     fn late_poll_does_not_inflate_wait() {
-        let mut s = SensorStream::new("esperta", 3, 0.1);
+        let mut s = SensorStream::new(UseCase::Esperta, 3, 0.1);
         let mut b = Batcher::new("esperta", 100, 0.05);
         b.offer(ev(&mut s), 1.0);
         // next event arrives a long gap later: flush fires at 1.05
@@ -202,7 +204,7 @@ mod tests {
 
     #[test]
     fn oldest_wait_tracks_first_arrival() {
-        let mut s = SensorStream::new("mms", 3, 0.1);
+        let mut s = SensorStream::new(UseCase::Mms, 3, 0.1);
         let mut b = Batcher::new("baseline", 10, 99.0);
         b.offer(ev(&mut s), 2.0);
         b.offer(ev(&mut s), 3.0);

@@ -11,6 +11,7 @@
 //!   processing on the "CPU"), producing the 6-float latent to downlink.
 //! * **CNet** — the scalar forecast, with an M-class threshold alert.
 
+use crate::model::UseCase;
 use crate::sensors::generators::Region;
 use crate::util::prng::Prng;
 
@@ -30,10 +31,11 @@ pub enum Decision {
 /// log10 flux above which CNet raises an alert (M-class: 1e-5 W/m^2).
 pub const FLUX_ALERT_THRESHOLD: f32 = -5.0;
 
-/// Decide from a model's raw output vector.
-pub fn decide(use_case: &str, output: &[f32], rng: &mut Prng) -> Decision {
+/// Decide from a model's raw output vector.  Exhaustive over
+/// [`UseCase`]: there is no catch-all arm to fall through.
+pub fn decide(use_case: UseCase, output: &[f32], rng: &mut Prng) -> Decision {
     match use_case {
-        "mms" => {
+        UseCase::Mms => {
             assert_eq!(output.len(), 4, "MMS nets emit 4 logits");
             let mut logits = [0f32; 4];
             logits.copy_from_slice(output);
@@ -45,7 +47,7 @@ pub fn decide(use_case: &str, output: &[f32], rng: &mut Prng) -> Decision {
                 logits,
             }
         }
-        "esperta" => {
+        UseCase::Esperta => {
             assert_eq!(output.len(), 12, "multi-ESPERTA emits probs|alerts");
             let mut mask = [false; 6];
             let mut max_prob = 0f32;
@@ -55,7 +57,7 @@ pub fn decide(use_case: &str, output: &[f32], rng: &mut Prng) -> Decision {
             }
             Decision::SepAlert { warning: mask.iter().any(|&b| b), mask, max_prob }
         }
-        "vae" => {
+        UseCase::Vae => {
             assert_eq!(output.len(), 12, "VAE encoder emits mu|logvar");
             // reparameterization on the PS: z = mu + exp(0.5*logvar)*eps
             let mut z = [0f32; 6];
@@ -65,14 +67,13 @@ pub fn decide(use_case: &str, output: &[f32], rng: &mut Prng) -> Decision {
             }
             Decision::Latent { z }
         }
-        "cnet" => {
+        UseCase::Cnet => {
             assert_eq!(output.len(), 1, "CNet emits one flux value");
             Decision::FluxForecast {
                 log_flux: output[0],
                 alert: output[0] > FLUX_ALERT_THRESHOLD,
             }
         }
-        other => panic!("no decision logic for use case {other:?}"),
     }
 }
 
@@ -122,7 +123,7 @@ mod tests {
     #[test]
     fn mms_argmax_and_roi() {
         let mut rng = Prng::new(1);
-        let d = decide("mms", &[0.1, 3.0, -1.0, 0.2], &mut rng);
+        let d = decide(UseCase::Mms, &[0.1, 3.0, -1.0, 0.2], &mut rng);
         match d {
             Decision::MmsRegion { region, roi, .. } => {
                 assert_eq!(region, Region::If);
@@ -130,7 +131,7 @@ mod tests {
             }
             _ => panic!("wrong decision kind"),
         }
-        let d = decide("mms", &[9.0, 3.0, -1.0, 0.2], &mut rng);
+        let d = decide(UseCase::Mms, &[9.0, 3.0, -1.0, 0.2], &mut rng);
         match d {
             Decision::MmsRegion { region, roi, .. } => {
                 assert_eq!(region, Region::Sw);
@@ -145,7 +146,7 @@ mod tests {
         let mut rng = Prng::new(2);
         let mut out = vec![0.2; 12];
         out[6 + 3] = 1.0;
-        match decide("esperta", &out, &mut rng) {
+        match decide(UseCase::Esperta, &out, &mut rng) {
             Decision::SepAlert { warning, mask, .. } => {
                 assert!(warning);
                 assert!(mask[3]);
@@ -154,7 +155,7 @@ mod tests {
             _ => panic!(),
         }
         let quiet = vec![0.2; 12];
-        match decide("esperta", &quiet, &mut rng) {
+        match decide(UseCase::Esperta, &quiet, &mut rng) {
             Decision::SepAlert { warning, .. } => assert!(!warning),
             _ => panic!(),
         }
@@ -169,7 +170,7 @@ mod tests {
             out[i] = i as f32;
             out[6 + i] = -80.0;
         }
-        match decide("vae", &out, &mut rng) {
+        match decide(UseCase::Vae, &out, &mut rng) {
             Decision::Latent { z } => {
                 for i in 0..6 {
                     assert!((z[i] - i as f32).abs() < 1e-6);
@@ -182,11 +183,11 @@ mod tests {
     #[test]
     fn cnet_alert_threshold() {
         let mut rng = Prng::new(4);
-        match decide("cnet", &[-4.2], &mut rng) {
+        match decide(UseCase::Cnet, &[-4.2], &mut rng) {
             Decision::FluxForecast { alert, .. } => assert!(alert),
             _ => panic!(),
         }
-        match decide("cnet", &[-6.5], &mut rng) {
+        match decide(UseCase::Cnet, &[-6.5], &mut rng) {
             Decision::FluxForecast { alert, .. } => assert!(!alert),
             _ => panic!(),
         }

@@ -1,20 +1,17 @@
-//! Cost-model-driven dispatch: score every eligible target per batch.
+//! Cost-model-driven dispatch: score every registered target per batch.
 //!
 //! The paper's core result is a *trade-space*, not a fixed mapping: the
 //! DPU reaches up to 34.16× the A53 inference rate but draws 5.75–6.75 W,
 //! the naive HLS IPs add the operators the DPU lacks at 1.5–1.75 W, and
 //! the A53 is always available at 2.0–2.75 W.  Which target a workload
 //! belongs on therefore depends on latency, energy, and operator support
-//! — so the coordinator decides *at runtime*, per flushed batch, from the
-//! same calibrated simulators that reproduce Table III:
+//! — so the coordinator decides *at runtime*, per flushed batch.
 //!
-//! * latency — `cpu::A53Model`, `dpu::DpuSchedule`, `hls::HlsDesign`
-//!   (per-item compute + per-batch setup), plus the target's current
-//!   queue backlog from its `AccelTimeline`;
-//! * energy — busy time × the `power::PowerModel` draw for that
-//!   implementation;
-//! * operator support — the DPU target only exists when the int8 variant
-//!   passes the paper's §III-B operator gate (`Manifest::dpu_compatible`).
+//! The dispatcher owns no target-specific knowledge: it scores the
+//! [`crate::backend::TargetRegistry`] — each entry an opaque
+//! [`crate::backend::AccelModel`] supplying batch latency, batch energy,
+//! and active power — plus each target's current queue backlog from its
+//! `AccelTimeline`.  Adding a backend never touches this file.
 //!
 //! Policies ([`Policy`]): `static` reproduces the paper's deployment
 //! matrix, `min-latency` / `min-energy` optimize one axis, and `deadline`
@@ -26,16 +23,11 @@
 
 use anyhow::{bail, Result};
 
-use crate::board::{Calibration, Zcu104};
-use crate::coordinator::router::Slot;
+use crate::backend::{AccelModel, TargetRegistry, TargetSet};
+use crate::board::Calibration;
 use crate::coordinator::scheduler::{AccelTimeline, ScheduledRun};
-use crate::cpu::A53Model;
-use crate::dpu::{DpuArch, DpuSchedule};
-use crate::hls::HlsDesign;
-use crate::model::catalog::{model_info, Catalog, Target as PaperTarget};
-use crate::model::Precision;
-use crate::power::{Implementation, PowerModel};
-use crate::resources::estimate_hls;
+use crate::model::catalog::Catalog;
+use crate::model::UseCase;
 
 /// How the dispatcher picks a target for each flushed batch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -88,7 +80,8 @@ impl Policy {
 
 /// Default end-to-end deadline (event arrival → decision, seconds) per
 /// use case, used when the CLI does not override it.  SEP alerts are
-/// time-critical; flux forecasts ride a slow cadence.
+/// time-critical; flux forecasts ride a slow cadence.  Exhaustive over
+/// [`UseCase`] — no stringly-typed fall-through.
 ///
 /// The deadline races the batcher: a batch force-flushed after
 /// `max_wait_s` has already spent that long waiting, so a deadline is
@@ -97,32 +90,19 @@ impl Policy {
 /// 0.1 s alert deadline deliberately does not — pair it with
 /// `--max-wait` ≤ ~0.05 s (as the `sep_storm` example does) or every
 /// batch counts as late.
-pub fn default_deadline_s(use_case: &str) -> f64 {
+pub fn default_deadline_s(use_case: UseCase) -> f64 {
     match use_case {
-        "esperta" => 0.1,
-        "cnet" => 2.0,
-        _ => 1.0, // vae latents, MMS region labels
+        UseCase::Esperta => 0.1,
+        UseCase::Cnet => 2.0,
+        UseCase::Vae | UseCase::Mms => 1.0,
     }
-}
-
-/// One dispatchable execution target: a slot plus the calibrated timing
-/// and power the cost model scores it with.
-#[derive(Debug, Clone)]
-pub struct DispatchTarget {
-    /// Which simulated slot this is.
-    pub slot: Slot,
-    /// Precision the deployed variant runs at (int8 on the DPU, fp32
-    /// elsewhere) — also what the executor pool loads.
-    pub precision: Precision,
-    /// Per-batch setup + per-item compute + active power.
-    pub run: ScheduledRun,
 }
 
 /// Predicted cost of one batch on one target.
 #[derive(Debug, Clone)]
 pub struct BatchCost {
-    /// Target slot this cost was scored for.
-    pub slot: Slot,
+    /// Registry name of the target this cost was scored for.
+    pub target: &'static str,
     /// Flush → predicted completion (queue wait + setup + n·per-item), s.
     pub latency_s: f64,
     /// Oldest-event arrival → predicted completion, s (what the deadline
@@ -139,7 +119,7 @@ pub struct BatchCost {
 /// The dispatcher's verdict for one batch.
 #[derive(Debug, Clone)]
 pub struct Choice {
-    /// Index into `Dispatcher::targets` (and the run's timeline vector).
+    /// Index into the registry (and the run's timeline vector).
     pub index: usize,
     /// The predicted cost of the chosen target.
     pub cost: BatchCost,
@@ -148,36 +128,35 @@ pub struct Choice {
     pub power_shed: bool,
 }
 
-/// Scores every eligible target for each batch and picks one under the
-/// configured policy.  Immutable once built — per-run queue state lives
-/// in the caller's `AccelTimeline` vector (index-aligned with
-/// `targets`), so one dispatcher can serve many runs.
+/// Scores every registered target for each batch and picks one under
+/// the configured policy.  Immutable once built — per-run queue state
+/// lives in the caller's `AccelTimeline` vector (index-aligned with the
+/// registry), so one dispatcher can serve many runs.
 ///
 /// ```
+/// use spaceinfer::backend::{AccelModel, TargetSet};
 /// use spaceinfer::board::Calibration;
 /// use spaceinfer::coordinator::{Dispatcher, Policy, Slot};
 /// use spaceinfer::model::Catalog;
 ///
 /// let catalog = Catalog::synthetic();
 /// let d = Dispatcher::new("vae", &catalog, &Calibration::default(),
-///                         Policy::MinLatency, 0.5, None).unwrap();
-/// // VAE is DPU-compatible: CPU + DPU + HLS are all eligible
-/// assert_eq!(d.targets.len(), 3);
+///                         Policy::MinLatency, 0.5, None,
+///                         &TargetSet::Default).unwrap();
+/// // VAE is DPU-compatible: CPU + DPU + HLS are all registered
+/// assert_eq!(d.registry.len(), 3);
 /// let mut timelines = d.timelines();
 /// let choice = d.choose(&timelines, 0.0, 0.0, 8);
-/// assert_eq!(d.targets[choice.index].slot, Slot::Dpu);
+/// assert_eq!(d.registry.get(choice.index).slot(), Slot::Dpu);
 /// // commit the batch to the chosen target's queue
-/// timelines[choice.index].schedule(0.0, 8, d.targets[choice.index].run);
+/// timelines[choice.index].schedule(0.0, 8, d.run_of(choice.index));
 /// ```
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct Dispatcher {
     /// Active policy.
     pub policy: Policy,
-    /// Eligible targets (CPU always; DPU when the int8 variant passes
-    /// the operator gate; HLS always — any manifest synthesizes).
-    pub targets: Vec<DispatchTarget>,
-    /// The paper's deployment-matrix slot (what `Policy::Static` picks).
-    pub primary: Slot,
+    /// The instantiated target table for this model.
+    pub registry: TargetRegistry,
     /// End-to-end deadline (oldest event arrival → completion), s.
     pub deadline_s: f64,
     /// Cap on active MPSoC draw (W); `None` disables the budget filter.
@@ -185,9 +164,10 @@ pub struct Dispatcher {
 }
 
 impl Dispatcher {
-    /// Build the target table for one model from the catalog and the
+    /// Build the registry for one model from the catalog and the
     /// calibrated simulators.  Errors when the paper's primary target
-    /// for the model cannot be built (missing manifest variant).
+    /// is needed (static policy, or the default set) but not
+    /// registrable (missing int8 manifest variant).
     pub fn new(
         model: &str,
         catalog: &Catalog,
@@ -195,117 +175,67 @@ impl Dispatcher {
         policy: Policy,
         deadline_s: f64,
         power_budget_w: Option<f64>,
+        targets: &TargetSet,
     ) -> Result<Dispatcher> {
-        let info = model_info(model)?;
-        let board = Zcu104::default();
-        let power = PowerModel::new(calib.clone());
-        let mut targets = Vec::with_capacity(3);
-
-        // A53 software path: always eligible (the paper's baseline and
-        // its overload escape hatch), calibrated on the CPU rows.
-        let cpu_man = catalog.manifest(model, Precision::Fp32)?;
-        let a53 = A53Model::calibrated(cpu_man, calib, info.paper.cpu_fps);
-        targets.push(DispatchTarget {
-            slot: Slot::Cpu,
-            precision: Precision::Fp32,
-            run: ScheduledRun {
-                setup_s: 0.0,
-                per_item_s: a53.latency_s(),
-                power_w: info.paper.cpu_p_mpsoc,
-            },
-        });
-
-        // Vitis-AI DPU: int8 variant present AND every operator inside
-        // the DPU's set (the paper's §III-B inspector gate).
-        if let Ok(man) = catalog.manifest(model, Precision::Int8) {
-            if man.dpu_compatible() {
-                let sched = DpuSchedule::new(
-                    man,
-                    DpuArch::b4096(calib, board.dpu_clock_hz),
-                    calib,
-                    board.axi_bandwidth,
-                )?;
-                let per_item = sched.latency_s() - sched.invoke_s;
-                targets.push(DispatchTarget {
-                    slot: Slot::Dpu,
-                    precision: Precision::Int8,
-                    run: ScheduledRun {
-                        setup_s: sched.invoke_s,
-                        per_item_s: per_item,
-                        power_w: power.mpsoc_w(&PowerModel::dpu_impl(&sched)),
-                    },
-                });
-            }
-        }
-
-        // Vitis-HLS custom IP: any manifest synthesizes (fp32, naive
-        // dataflow) — slow for deep CNNs, frugal for shallow nets.
-        let design = HlsDesign::synthesize(cpu_man, &board, calib);
-        let setup = design.axi_setup_cycles / design.clock_hz;
-        let util = estimate_hls(cpu_man, &design.plan);
-        targets.push(DispatchTarget {
-            slot: Slot::Hls,
-            precision: Precision::Fp32,
-            run: ScheduledRun {
-                setup_s: setup,
-                per_item_s: design.latency_s() - setup,
-                power_w: power.mpsoc_w(&Implementation::Hls {
-                    kiloluts: util.luts as f64 / 1000.0,
-                    brams: design.plan.brams(),
-                    duty: 1.0,
-                }),
-            },
-        });
-
-        let primary = match info.target {
-            PaperTarget::Dpu => Slot::Dpu,
-            PaperTarget::Hls => Slot::Hls,
-        };
-        if !targets.iter().any(|t| t.slot == primary) {
+        let registry = TargetRegistry::build(model, catalog, calib, targets)?;
+        if registry.primary_index().is_none()
+            && (policy == Policy::Static || *targets == TargetSet::Default)
+        {
             bail!(
-                "model {model:?}: paper's primary slot {primary:?} has no \
-                 dispatchable target (missing int8 manifest?)"
+                "model {model:?}: the paper's primary slot has no registered \
+                 target (missing int8 manifest?)"
             );
         }
-        Ok(Dispatcher { policy, targets, primary, deadline_s, power_budget_w })
+        Ok(Dispatcher { policy, registry, deadline_s, power_budget_w })
     }
 
-    /// Fresh per-run queue state, index-aligned with `targets`.
+    /// Fresh per-run queue state, index-aligned with the registry.
     pub fn timelines(&self) -> Vec<AccelTimeline> {
-        self.targets
+        self.registry
+            .targets()
             .iter()
-            .map(|t| AccelTimeline::new(t.slot.name()))
+            .map(|t| AccelTimeline::new(t.name()))
             .collect()
     }
 
-    /// Index of the paper's deployment-matrix target.
+    /// Index of the paper's deployment-matrix target (0 when the
+    /// registry was assembled without one — tests, custom sets).
     pub fn primary_index(&self) -> usize {
-        self.targets
-            .iter()
-            .position(|t| t.slot == self.primary)
-            .unwrap_or(0)
+        self.registry.primary_index().unwrap_or(0)
     }
 
-    /// Score one target for a batch of `n` events flushed at `now_s`
-    /// whose oldest event arrived at `oldest_t_s`.
+    /// Timeline parameters (setup / per-item / power) of one registered
+    /// target — what the virtual-clock scheduler charges.
+    pub fn run_of(&self, index: usize) -> ScheduledRun {
+        let t = self.registry.get(index);
+        ScheduledRun {
+            setup_s: t.setup_s(),
+            per_item_s: t.per_item_s(),
+            power_w: t.active_power_w(),
+        }
+    }
+
+    /// Score one registered target for a batch of `n` events flushed at
+    /// `now_s` whose oldest event arrived at `oldest_t_s`.
     pub fn cost(
         &self,
-        target: &DispatchTarget,
+        index: usize,
         timeline: &AccelTimeline,
         now_s: f64,
         oldest_t_s: f64,
         n: u64,
     ) -> BatchCost {
+        let target = self.registry.get(index);
         let queue_s = timeline.backlog_s(now_s);
-        let busy_s = target.run.setup_s + n as f64 * target.run.per_item_s;
+        let busy_s = target.batch_latency_s(n);
         let latency_s = queue_s + busy_s;
         let oldest_latency_s = (now_s - oldest_t_s).max(0.0) + latency_s;
         BatchCost {
-            slot: target.slot,
+            target: target.name(),
             latency_s,
             oldest_latency_s,
-            energy_j: target.run.power_w * busy_s,
-            power_w: target.run.power_w,
+            energy_j: target.batch_energy_j(n),
+            power_w: target.active_power_w(),
             meets_deadline: oldest_latency_s <= self.deadline_s,
         }
     }
@@ -313,7 +243,7 @@ impl Dispatcher {
     /// Pick a target for one batch.  `timelines` is the run's queue
     /// state (from [`Dispatcher::timelines`]); the caller commits the
     /// batch by calling `schedule` on the chosen entry.  Deterministic:
-    /// ties break toward the first target in table order.
+    /// ties break toward the first target in registry order.
     pub fn choose(
         &self,
         timelines: &[AccelTimeline],
@@ -321,11 +251,9 @@ impl Dispatcher {
         oldest_t_s: f64,
         n: u64,
     ) -> Choice {
-        let costs: Vec<BatchCost> = self
-            .targets
-            .iter()
+        let costs: Vec<BatchCost> = (0..self.registry.len())
             .zip(timelines)
-            .map(|(t, tl)| self.cost(t, tl, now_s, oldest_t_s, n))
+            .map(|(i, tl)| self.cost(i, tl, now_s, oldest_t_s, n))
             .collect();
         if self.policy == Policy::Static {
             let index = self.primary_index();
@@ -390,30 +318,70 @@ fn argmin<F: Fn(&BatchCost) -> f64>(idxs: &[usize], costs: &[BatchCost], key: F)
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::{AccelModel, Slot};
+    use crate::model::{Manifest, Precision};
+    use crate::resources::Utilization;
+
+    /// Minimal registry stub: the dispatcher must work against any
+    /// `AccelModel`, not just the built-in simulators.
+    #[derive(Debug)]
+    struct Stub {
+        name: &'static str,
+        slot: Slot,
+        per_item_s: f64,
+        power_w: f64,
+    }
+
+    impl AccelModel for Stub {
+        fn name(&self) -> &'static str {
+            self.name
+        }
+        fn slot(&self) -> Slot {
+            self.slot
+        }
+        fn precision(&self) -> Precision {
+            Precision::Fp32
+        }
+        fn supports(&self, _man: &Manifest) -> anyhow::Result<()> {
+            Ok(())
+        }
+        fn setup_s(&self) -> f64 {
+            0.0
+        }
+        fn per_item_s(&self) -> f64 {
+            self.per_item_s
+        }
+        fn active_power_w(&self) -> f64 {
+            self.power_w
+        }
+        fn resources(&self) -> Utilization {
+            Utilization::none()
+        }
+    }
 
     /// fast-but-hot / slow-but-frugal / very-slow-middling table: the
     /// constructed trade-space where every policy picks differently.
     fn table(policy: Policy, deadline_s: f64, budget: Option<f64>) -> Dispatcher {
-        let t = |slot, per_item_s, power_w| DispatchTarget {
-            slot,
-            precision: Precision::Fp32,
-            run: ScheduledRun { setup_s: 0.0, per_item_s, power_w },
+        let t = |name, slot, per_item_s, power_w| -> Box<dyn AccelModel> {
+            Box::new(Stub { name, slot, per_item_s, power_w })
         };
         Dispatcher {
             policy,
-            targets: vec![
-                t(Slot::Dpu, 0.001, 6.0),  // 6 mJ/item, fastest
-                t(Slot::Hls, 0.002, 1.5),  // 3 mJ/item, cheapest
-                t(Slot::Cpu, 0.040, 2.75), // 110 mJ/item, slowest
-            ],
-            primary: Slot::Dpu,
+            registry: TargetRegistry::from_targets(
+                vec![
+                    t("dpu", Slot::Dpu, 0.001, 6.0),  // 6 mJ/item, fastest
+                    t("hls", Slot::Hls, 0.002, 1.5),  // 3 mJ/item, cheapest
+                    t("cpu", Slot::Cpu, 0.040, 2.75), // 110 mJ/item, slowest
+                ],
+                Some(0),
+            ),
             deadline_s,
             power_budget_w: budget,
         }
     }
 
     fn slot_of(d: &Dispatcher, tl: &[AccelTimeline]) -> Slot {
-        d.targets[d.choose(tl, 0.0, 0.0, 1).index].slot
+        d.registry.get(d.choose(tl, 0.0, 0.0, 1).index).slot()
     }
 
     #[test]
@@ -430,7 +398,7 @@ mod tests {
         let d = table(Policy::Static, 1.0, None);
         let mut tl = d.timelines();
         // pile work on the primary: static must not steer away
-        tl[0].schedule(0.0, 1000, d.targets[0].run);
+        tl[0].schedule(0.0, 1000, d.run_of(0));
         assert_eq!(slot_of(&d, &tl), Slot::Dpu);
     }
 
@@ -450,7 +418,7 @@ mod tests {
         let d = table(Policy::Deadline, 0.0001, None);
         let tl = d.timelines();
         let c = d.choose(&tl, 0.0, 0.0, 1);
-        assert_eq!(d.targets[c.index].slot, Slot::Dpu);
+        assert_eq!(d.registry.get(c.index).slot(), Slot::Dpu);
         assert!(!c.cost.meets_deadline);
     }
 
@@ -460,12 +428,12 @@ mod tests {
         let d = table(Policy::MinLatency, 1.0, Some(4.0));
         let tl = d.timelines();
         let c = d.choose(&tl, 0.0, 0.0, 1);
-        assert_eq!(d.targets[c.index].slot, Slot::Hls);
+        assert_eq!(d.registry.get(c.index).slot(), Slot::Hls);
         assert!(c.power_shed, "budget changed the decision");
         // budget below every target: lowest-power wins outright
         let d = table(Policy::MinLatency, 1.0, Some(1.0));
         let c = d.choose(&tl, 0.0, 0.0, 1);
-        assert_eq!(d.targets[c.index].slot, Slot::Hls);
+        assert_eq!(d.registry.get(c.index).slot(), Slot::Hls);
         assert!(c.power_shed);
     }
 
@@ -475,11 +443,11 @@ mod tests {
         let en = table(Policy::MinEnergy, 1.0, None);
         let mut tl = lat.timelines();
         // 100 ms of queue on the fast target
-        tl[0].schedule(0.0, 100, lat.targets[0].run);
+        tl[0].schedule(0.0, 100, lat.run_of(0));
         assert_eq!(slot_of(&lat, &tl), Slot::Hls, "latency policy routes around the queue");
         assert_eq!(slot_of(&en, &tl), Slot::Hls);
         // pile onto HLS too: min-latency goes to the CPU, min-energy stays
-        tl[1].schedule(0.0, 100, lat.targets[1].run);
+        tl[1].schedule(0.0, 100, lat.run_of(1));
         assert_eq!(slot_of(&lat, &tl), Slot::Cpu);
         assert_eq!(slot_of(&en, &tl), Slot::Hls, "energy policy ignores queues");
     }
@@ -488,32 +456,44 @@ mod tests {
     fn cost_accounts_queue_and_batch_size() {
         let d = table(Policy::MinLatency, 1.0, None);
         let mut tl = d.timelines();
-        let c1 = d.cost(&d.targets[0], &tl[0], 0.0, 0.0, 1);
-        let c8 = d.cost(&d.targets[0], &tl[0], 0.0, 0.0, 8);
+        let c1 = d.cost(0, &tl[0], 0.0, 0.0, 1);
+        let c8 = d.cost(0, &tl[0], 0.0, 0.0, 8);
         assert!((c8.latency_s - 8.0 * c1.latency_s).abs() < 1e-12);
         assert!((c8.energy_j - 8.0 * c1.energy_j).abs() < 1e-12);
-        tl[0].schedule(0.0, 10, d.targets[0].run); // 10 ms backlog
-        let queued = d.cost(&d.targets[0], &tl[0], 0.0, 0.0, 1);
+        tl[0].schedule(0.0, 10, d.run_of(0)); // 10 ms backlog
+        let queued = d.cost(0, &tl[0], 0.0, 0.0, 1);
         assert!((queued.latency_s - (0.010 + 0.001)).abs() < 1e-12);
         // waiting already spent counts against the deadline
-        let waited = d.cost(&d.targets[0], &tl[0], 0.5, 0.0, 1);
+        let waited = d.cost(0, &tl[0], 0.5, 0.0, 1);
         assert!(waited.oldest_latency_s > 0.5);
+        assert_eq!(waited.target, "dpu");
     }
 
     #[test]
     fn synthetic_catalog_builds_expected_targets() {
         let catalog = Catalog::synthetic();
         let calib = Calibration::default();
-        // DPU-compatible model: all three targets
-        let d = Dispatcher::new("vae", &catalog, &calib, Policy::Static, 0.5, None).unwrap();
-        assert_eq!(d.targets.len(), 3);
-        assert_eq!(d.primary, Slot::Dpu);
+        // DPU-compatible model: all three default targets
+        let d = Dispatcher::new(
+            "vae", &catalog, &calib, Policy::Static, 0.5, None, &TargetSet::Default,
+        )
+        .unwrap();
+        assert_eq!(d.registry.len(), 3);
+        assert_eq!(d.registry.get(d.primary_index()).slot(), Slot::Dpu);
         // conv3d model: no DPU target, primary HLS
-        let d = Dispatcher::new("baseline", &catalog, &calib, Policy::Static, 0.5, None)
-            .unwrap();
-        assert_eq!(d.targets.len(), 2);
-        assert!(d.targets.iter().all(|t| t.slot != Slot::Dpu));
-        assert_eq!(d.primary, Slot::Hls);
+        let d = Dispatcher::new(
+            "baseline", &catalog, &calib, Policy::Static, 0.5, None, &TargetSet::Default,
+        )
+        .unwrap();
+        assert_eq!(d.registry.len(), 2);
+        assert!(d.registry.targets().iter().all(|t| t.slot() != Slot::Dpu));
+        assert_eq!(d.registry.get(d.primary_index()).slot(), Slot::Hls);
+        // the full family opens the design space
+        let d = Dispatcher::new(
+            "vae", &catalog, &calib, Policy::MinLatency, 0.5, None, &TargetSet::All,
+        )
+        .unwrap();
+        assert_eq!(d.registry.len(), 7);
     }
 
     #[test]
@@ -526,7 +506,7 @@ mod tests {
 
     #[test]
     fn deadline_defaults_ranked_by_urgency() {
-        assert!(default_deadline_s("esperta") < default_deadline_s("mms"));
-        assert!(default_deadline_s("mms") < default_deadline_s("cnet"));
+        assert!(default_deadline_s(UseCase::Esperta) < default_deadline_s(UseCase::Mms));
+        assert!(default_deadline_s(UseCase::Mms) < default_deadline_s(UseCase::Cnet));
     }
 }

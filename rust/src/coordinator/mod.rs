@@ -16,8 +16,10 @@
 //! calibrated ZCU104 simulators' outputs, advanced on a virtual clock.
 //! Per-batch target selection is cost-model-driven (`dispatch`): the
 //! router resolves the model variant and the paper's primary slot, the
-//! dispatcher scores every eligible slot under the configured policy.
-//! See `docs/ARCHITECTURE.md` for the full module map and lifecycle.
+//! dispatcher scores every target registered in the backend layer
+//! (`crate::backend`) under the configured policy — the coordinator
+//! itself contains no per-target code.  See `docs/ARCHITECTURE.md` for
+//! the full module map and lifecycle.
 
 pub mod backpressure;
 pub mod batcher;
@@ -31,9 +33,7 @@ pub mod scheduler;
 pub use backpressure::BoundedQueue;
 pub use batcher::{Batch, Batcher};
 pub use decision::{decide, Decision};
-pub use dispatch::{
-    default_deadline_s, BatchCost, Choice, DispatchTarget, Dispatcher, Policy,
-};
+pub use dispatch::{default_deadline_s, BatchCost, Choice, Dispatcher, Policy};
 pub use downlink::{DownlinkManager, DownlinkVerdict};
 pub use pipeline::{Pipeline, PipelineConfig, PipelineReport};
 pub use router::{Route, Router, Slot};

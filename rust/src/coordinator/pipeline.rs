@@ -12,11 +12,12 @@
 //! the whole `PipelineReport` — deterministic for a given seed.
 //!
 //! Target selection is per batch: the [`Dispatcher`] scores every
-//! eligible slot (A53 / DPU / HLS) with the calibrated simulators and
-//! picks under the configured [`Policy`].  Each batch's predicted
-//! latency/energy land in telemetry next to the "measured" (virtual
-//! clock) values, so calibration drift between the cost model and the
-//! timeline shows up as a nonzero prediction error.
+//! target in the backend registry (the paper's A53 / DPU / HLS triple
+//! by default; the full DPU family and pipelined HLS under
+//! `--targets all`) and picks under the configured [`Policy`].  Each
+//! batch's predicted latency/energy land in telemetry next to the
+//! "measured" (virtual clock) values, so calibration drift between the
+//! cost model and the timeline shows up as a nonzero prediction error.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -24,6 +25,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::backend::{AccelModel, TargetSet};
 use crate::board::Calibration;
 use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::decision::{decide, Decision};
@@ -32,7 +34,7 @@ use crate::coordinator::downlink::{DownlinkManager, DownlinkVerdict};
 use crate::coordinator::router::{Route, Router, Slot};
 use crate::coordinator::scheduler::AccelTimeline;
 use crate::model::catalog::Catalog;
-use crate::model::Precision;
+use crate::model::{Precision, UseCase};
 use crate::runtime::{ExecRequest, ExecResult, ExecutorPool};
 use crate::sensors::{SensorEvent, SensorStream};
 use crate::telemetry::Metrics;
@@ -41,8 +43,8 @@ use crate::util::prng::Prng;
 /// Pipeline configuration.
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
-    /// "vae" | "cnet" | "esperta" | "mms"
-    pub use_case: &'static str,
+    /// Which paper use case the run serves.
+    pub use_case: UseCase,
     /// Events to process.
     pub n_events: usize,
     /// Sensor cadence (s).
@@ -64,12 +66,15 @@ pub struct PipelineConfig {
     pub deadline_s: Option<f64>,
     /// Mission power budget: cap on active MPSoC draw (W), `None` = off.
     pub power_budget_w: Option<f64>,
+    /// Which backend targets to register (`default` = the paper's
+    /// triple; `all` opens the DPU family + pipelined HLS).
+    pub targets: TargetSet,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
         PipelineConfig {
-            use_case: "mms",
+            use_case: UseCase::Mms,
             n_events: 100,
             cadence_s: 0.15,
             max_batch: 8,
@@ -80,6 +85,7 @@ impl Default for PipelineConfig {
             policy: Policy::Static,
             deadline_s: None,
             power_budget_w: None,
+            targets: TargetSet::Default,
         }
     }
 }
@@ -88,14 +94,15 @@ impl Default for PipelineConfig {
 #[derive(Debug)]
 pub struct PipelineReport {
     /// Use case the run served.
-    pub use_case: String,
+    pub use_case: UseCase,
     /// Model variant name.
     pub model: String,
     /// Primary (paper deployment-matrix) slot.
     pub slot: Slot,
     /// Dispatch policy the run used.
     pub policy: String,
-    /// Batches dispatched per slot name ("cpu" / "dpu" / "hls").
+    /// Batches dispatched per registry target name ("cpu" / "dpu" /
+    /// "dpu-b512" / "hls" / "hls-pipe" / ...).
     pub target_mix: BTreeMap<String, u64>,
     /// Events completed on the virtual clock.
     pub events: u64,
@@ -217,7 +224,7 @@ impl RunState {
     /// downlink verdict.
     fn decide_one(
         &mut self,
-        use_case: &'static str,
+        use_case: UseCase,
         ev: &SensorEvent,
         output: &[f32],
         input_bytes: u64,
@@ -292,7 +299,7 @@ impl<'a> Reaper<'a> {
     /// Process every completion whose turn has come.
     fn process_arrived(
         &mut self,
-        use_case: &'static str,
+        use_case: UseCase,
         input_bytes: u64,
         state: &mut RunState,
     ) -> Result<()> {
@@ -332,7 +339,7 @@ impl<'a> Reaper<'a> {
     /// overlaps with execution instead of stalling on each batch.
     fn drain_ready(
         &mut self,
-        use_case: &'static str,
+        use_case: UseCase,
         input_bytes: u64,
         state: &mut RunState,
     ) -> Result<()> {
@@ -349,7 +356,7 @@ impl<'a> Reaper<'a> {
     fn throttle(
         &mut self,
         cap: u64,
-        use_case: &'static str,
+        use_case: UseCase,
         input_bytes: u64,
         state: &mut RunState,
     ) -> Result<()> {
@@ -367,7 +374,7 @@ impl<'a> Reaper<'a> {
     /// Blocking reap of everything still in flight (end of run).
     fn drain_all(
         &mut self,
-        use_case: &'static str,
+        use_case: UseCase,
         input_bytes: u64,
         state: &mut RunState,
     ) -> Result<()> {
@@ -415,6 +422,7 @@ impl Pipeline {
             config.policy,
             deadline_s,
             config.power_budget_w,
+            &config.targets,
         )?;
         Ok(Pipeline { config, route, dispatcher, input_bytes })
     }
@@ -434,16 +442,19 @@ impl Pipeline {
         let choice =
             self.dispatcher
                 .choose(&state.timelines, batch.flushed_at_s, oldest_t_s, n);
-        let target = &self.dispatcher.targets[choice.index];
-        let (_start, done) =
-            state.timelines[choice.index].schedule(batch.flushed_at_s, n, target.run);
+        let target = self.dispatcher.registry.get(choice.index);
+        let (_start, done) = state.timelines[choice.index].schedule(
+            batch.flushed_at_s,
+            n,
+            self.dispatcher.run_of(choice.index),
+        );
         state.sim_end = state.sim_end.max(done);
         state.metrics.add("batches", 1);
         state.metrics.add("inferences", n);
-        state.metrics.inc(&format!("dispatch_{}", target.slot.name()));
+        state.metrics.inc(&format!("dispatch_{}", target.name()));
         *state
             .target_batches
-            .entry(target.slot.name().to_string())
+            .entry(target.name().to_string())
             .or_insert(0) += 1;
         // predicted-vs-"measured" (virtual clock) telemetry: equal while
         // the cost model and the timeline share calibration; drift here
@@ -470,7 +481,7 @@ impl Pipeline {
         }
         match reaper {
             Some(r) => {
-                r.submit(&self.route.model, target.precision, batch)?;
+                r.submit(&self.route.model, target.precision(), batch)?;
                 // overlap: absorb any batches that already finished,
                 // then apply backpressure so in-flight work is bounded
                 r.drain_ready(cfg.use_case, self.input_bytes, state)?;
@@ -485,8 +496,7 @@ impl Pipeline {
                 // timing-only run: deterministic surrogate numerics,
                 // processed inline (same RNG order as the PJRT path)
                 for ev in &batch.events {
-                    let out =
-                        surrogate_output(cfg.use_case, ev, &mut state.rng)?;
+                    let out = surrogate_output(cfg.use_case, ev, &mut state.rng);
                     state.decide_one(cfg.use_case, ev, &out, self.input_bytes);
                 }
                 Ok(())
@@ -567,7 +577,7 @@ impl Pipeline {
         let energy_j: f64 = timelines.iter().map(|t| t.energy_j).sum();
         let busy_fps = if busy_s > 0.0 { completed as f64 / busy_s } else { 0.0 };
         Ok(PipelineReport {
-            use_case: cfg.use_case.to_string(),
+            use_case: cfg.use_case,
             model: self.route.model.clone(),
             slot: self.route.slot,
             policy: cfg.policy.as_str().to_string(),
@@ -618,20 +628,17 @@ const DECISION_RNG_SALT: u64 = 0xD01E_57A7;
 const MAX_INFLIGHT_BATCHES: u64 = 64;
 
 /// Deterministic surrogate outputs for timing-only runs (no executor).
-fn surrogate_output(
-    use_case: &str,
-    ev: &SensorEvent,
-    rng: &mut Prng,
-) -> Result<Vec<f32>> {
-    Ok(match use_case {
-        "mms" => {
+/// Exhaustive over [`UseCase`] — infallible by construction.
+fn surrogate_output(use_case: UseCase, ev: &SensorEvent, rng: &mut Prng) -> Vec<f32> {
+    match use_case {
+        UseCase::Mms => {
             let mut v = vec![0.0f32; 4];
             if let Some(t) = ev.truth {
                 v[t] = 1.0 + rng.f32();
             }
             v
         }
-        "esperta" => {
+        UseCase::Esperta => {
             let mut v = vec![0.2f32; 12];
             if ev.truth == Some(1) {
                 for i in 0..6 {
@@ -641,10 +648,9 @@ fn surrogate_output(
             }
             v
         }
-        "vae" => (0..12).map(|_| rng.normal() as f32).collect(),
-        "cnet" => vec![-6.0 + 2.0 * rng.f32()],
-        other => bail!("no surrogate for unknown use case {other:?}"),
-    })
+        UseCase::Vae => (0..12).map(|_| rng.normal() as f32).collect(),
+        UseCase::Cnet => vec![-6.0 + 2.0 * rng.f32()],
+    }
 }
 
 fn decision_key(d: &Decision) -> String {
@@ -690,24 +696,26 @@ mod tests {
     }
 
     #[test]
-    fn surrogate_rejects_unknown_use_case() {
+    fn surrogate_encodes_truth() {
         let mut rng = Prng::new(1);
         let ev = SensorEvent {
             t_s: 0.0,
-            use_case: "mms",
+            use_case: UseCase::Mms,
             inputs: std::sync::Arc::new(vec![vec![0.0; 4]]),
             truth: Some(1),
             seq: 0,
         };
-        assert!(surrogate_output("mms", &ev, &mut rng).is_ok());
-        assert!(surrogate_output("radar", &ev, &mut rng).is_err());
+        let out = surrogate_output(UseCase::Mms, &ev, &mut rng);
+        assert_eq!(out.len(), 4);
+        assert!(out[1] >= 1.0, "truth class must carry the max logit");
     }
 
     #[test]
-    fn default_config_is_static_policy() {
+    fn default_config_is_static_policy_on_default_targets() {
         let cfg = PipelineConfig::default();
         assert_eq!(cfg.policy, Policy::Static);
         assert!(cfg.deadline_s.is_none());
         assert!(cfg.power_budget_w.is_none());
+        assert_eq!(cfg.targets, TargetSet::Default);
     }
 }

@@ -9,40 +9,15 @@
 //!
 //! The static matrix is only the *primary* mapping: per-batch target
 //! selection is owned by [`crate::coordinator::dispatch::Dispatcher`],
-//! which scores every eligible slot with the calibrated cost models and
-//! reduces to this table under `Policy::Static`.
+//! which scores every target in the backend registry and reduces to this
+//! table under `Policy::Static`.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::model::catalog::{model_info, Target};
-use crate::model::Precision;
+use crate::model::{Precision, UseCase};
 
-/// An execution slot on the simulated MPSoC.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Slot {
-    /// The (single) DPU instance.
-    Dpu,
-    /// A per-model HLS IP.
-    Hls,
-    /// A53 software fallback.
-    Cpu,
-}
-
-impl Slot {
-    /// Short lower-case name used in telemetry keys and reports.
-    ///
-    /// ```
-    /// use spaceinfer::coordinator::Slot;
-    /// assert_eq!(Slot::Dpu.name(), "dpu");
-    /// ```
-    pub fn name(&self) -> &'static str {
-        match self {
-            Slot::Dpu => "dpu",
-            Slot::Hls => "hls",
-            Slot::Cpu => "cpu",
-        }
-    }
-}
+pub use crate::backend::Slot;
 
 /// A routed request: which model variant on which slot.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -73,13 +48,12 @@ impl Default for Router {
 impl Router {
     /// Route one use case given the current queue depth of its primary
     /// slot.
-    pub fn route(&self, use_case: &str, queue_depth: usize) -> Result<Route> {
+    pub fn route(&self, use_case: UseCase, queue_depth: usize) -> Result<Route> {
         let model = match use_case {
-            "vae" => "vae".to_string(),
-            "cnet" => "cnet".to_string(),
-            "esperta" => "esperta".to_string(),
-            "mms" => self.mms_model.clone(),
-            other => bail!("unroutable use case {other:?}"),
+            UseCase::Vae => "vae".to_string(),
+            UseCase::Cnet => "cnet".to_string(),
+            UseCase::Esperta => "esperta".to_string(),
+            UseCase::Mms => self.mms_model.clone(),
         };
         let info = model_info(&model)?;
         let (slot, precision) = match info.target {
@@ -101,32 +75,34 @@ mod tests {
     #[test]
     fn deployment_matrix_matches_paper() {
         let r = Router::default();
-        assert_eq!(r.route("vae", 0).unwrap().slot, Slot::Dpu);
-        assert_eq!(r.route("vae", 0).unwrap().precision, Precision::Int8);
-        assert_eq!(r.route("cnet", 0).unwrap().slot, Slot::Dpu);
-        let e = r.route("esperta", 0).unwrap();
+        assert_eq!(r.route(UseCase::Vae, 0).unwrap().slot, Slot::Dpu);
+        assert_eq!(r.route(UseCase::Vae, 0).unwrap().precision, Precision::Int8);
+        assert_eq!(r.route(UseCase::Cnet, 0).unwrap().slot, Slot::Dpu);
+        let e = r.route(UseCase::Esperta, 0).unwrap();
         assert_eq!(e.slot, Slot::Hls);
         assert_eq!(e.precision, Precision::Fp32);
-        assert_eq!(r.route("mms", 0).unwrap().model, "baseline");
+        assert_eq!(r.route(UseCase::Mms, 0).unwrap().model, "baseline");
     }
 
     #[test]
     fn mms_submodel_selector() {
         let mut r = Router::default();
         r.mms_model = "logistic".into();
-        assert_eq!(r.route("mms", 0).unwrap().model, "logistic");
+        assert_eq!(r.route(UseCase::Mms, 0).unwrap().model, "logistic");
     }
 
     #[test]
     fn overload_falls_back_to_cpu() {
         let r = Router::default();
-        let route = r.route("vae", 64).unwrap();
+        let route = r.route(UseCase::Vae, 64).unwrap();
         assert_eq!(route.slot, Slot::Cpu);
         assert_eq!(route.precision, Precision::Fp32);
     }
 
     #[test]
-    fn unknown_use_case_rejected() {
-        assert!(Router::default().route("lidar", 0).is_err());
+    fn unknown_mms_submodel_rejected() {
+        let mut r = Router::default();
+        r.mms_model = "nonexistent".into();
+        assert!(r.route(UseCase::Mms, 0).is_err());
     }
 }

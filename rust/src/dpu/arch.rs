@@ -10,6 +10,54 @@
 use crate::board::Calibration;
 use crate::board::zcu104::PlResources;
 
+/// DPUCZDX8G convolution-architecture sizes (PG338 Table 5): peak INT8
+/// ops per cycle = 2 × PP × ICP × OCP.  The paper instantiates B4096;
+/// the smaller members trade throughput for power and CRAM footprint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DpuSize {
+    /// 4×8×8 — 256 MACs/cycle.
+    B512,
+    /// 8×8×8 — 512 MACs/cycle.
+    B1024,
+    /// 8×12×12 — 1152 MACs/cycle.
+    B2304,
+    /// 8×16×16 — 2048 MACs/cycle (the paper's configuration).
+    B4096,
+}
+
+impl DpuSize {
+    /// All sizes, ascending — registry order for the DPU family.
+    pub const ALL: [DpuSize; 4] =
+        [DpuSize::B512, DpuSize::B1024, DpuSize::B2304, DpuSize::B4096];
+
+    /// (pixel, input-channel, output-channel) parallelism.
+    pub fn dims(&self) -> (u64, u64, u64) {
+        match self {
+            DpuSize::B512 => (4, 8, 8),
+            DpuSize::B1024 => (8, 8, 8),
+            DpuSize::B2304 => (8, 12, 12),
+            DpuSize::B4096 => (8, 16, 16),
+        }
+    }
+
+    /// MAC-array capacity relative to the B4096 anchor (1.0 for B4096).
+    pub fn frac(&self) -> f64 {
+        let (pp, icp, ocp) = self.dims();
+        (pp * icp * ocp) as f64 / 2048.0
+    }
+
+    /// Registry / telemetry name.  B4096 keeps the seed era's bare
+    /// `dpu` so `target_mix` keys stay stable for the default set.
+    pub fn target_name(&self) -> &'static str {
+        match self {
+            DpuSize::B512 => "dpu-b512",
+            DpuSize::B1024 => "dpu-b1024",
+            DpuSize::B2304 => "dpu-b2304",
+            DpuSize::B4096 => "dpu",
+        }
+    }
+}
+
 /// Fixed architectural description of the instantiated DPU IP.
 #[derive(Debug, Clone, Copy)]
 pub struct DpuArch {
@@ -44,20 +92,57 @@ impl DpuArch {
         }
     }
 
+    /// Any family member: B4096 is the calibrated anchor (identical to
+    /// [`DpuArch::b4096`]); smaller sizes use the PG338 canonical
+    /// parallelism with the misc engine narrowed in proportion to OCP
+    /// and the on-chip store scaled with array capacity.  The DDR
+    /// streaming bandwidth is a board property and stays fixed.
+    pub fn of_size(size: DpuSize, calib: &Calibration, clock_hz: f64) -> DpuArch {
+        if size == DpuSize::B4096 {
+            return DpuArch::b4096(calib, clock_hz);
+        }
+        let (pp, icp, ocp) = size.dims();
+        let frac = size.frac();
+        DpuArch {
+            pp,
+            icp,
+            ocp,
+            clock_hz,
+            misc_elems_per_cycle: calib.dpu_misc_elems_per_cycle
+                * (ocp as f64 / calib.dpu_ocp as f64),
+            ddr_bytes_per_cycle: calib.dpu_ddr_bytes_per_cycle,
+            onchip_bytes: ((165.0 * frac).round() as u64) * 4608
+                + ((92.0 * frac).round() as u64) * 36_864,
+        }
+    }
+
     /// MACs retired per cycle when every dimension is filled.
     pub fn macs_per_cycle(&self) -> u64 {
         self.pp * self.icp * self.ocp
     }
 
-    /// Table II row: the B4096 IP's PL footprint (fixed property of the
-    /// IP configuration, from the paper's implementation).
+    /// Table II row for B4096 (the IP's measured footprint), scaled
+    /// down for smaller family members: the MAC array, weight store,
+    /// and load/save engines shrink with capacity while the scheduler,
+    /// instruction fetch, and AXI shell are a fixed floor (the split is
+    /// anchored so the B4096 numbers reproduce Table II exactly).
     pub fn resources(&self) -> PlResources {
+        let frac = self.macs_per_cycle() as f64 / 2048.0;
+        if frac >= 1.0 {
+            return PlResources {
+                luts: 102_154,
+                ffs: 199_192,
+                dsps: 1_420,
+                brams: 165.0,
+                urams: 92,
+            };
+        }
         PlResources {
-            luts: 102_154,
-            ffs: 199_192,
-            dsps: 1_420,
-            brams: 165.0,
-            urams: 92,
+            luts: 30_000 + (72_154.0 * frac).round() as u64,
+            ffs: 40_000 + (159_192.0 * frac).round() as u64,
+            dsps: 100 + (1_320.0 * frac).round() as u64,
+            brams: 25.0 + 140.0 * frac,
+            urams: (92.0 * frac).round() as u64,
         }
     }
 
@@ -84,5 +169,51 @@ mod tests {
         let a = DpuArch::b4096(&Calibration::default(), 300e6);
         let mb = a.onchip_bytes as f64 / (1024.0 * 1024.0);
         assert!((mb - 3.92).abs() < 0.1, "{mb}");
+    }
+
+    #[test]
+    fn family_of_size_b4096_is_the_anchor() {
+        let c = Calibration::default();
+        let anchor = DpuArch::b4096(&c, 300e6);
+        let via = DpuArch::of_size(DpuSize::B4096, &c, 300e6);
+        assert_eq!(via.pp, anchor.pp);
+        assert_eq!(via.onchip_bytes, anchor.onchip_bytes);
+        assert_eq!(via.resources(), anchor.resources());
+        // Table II exactly
+        let r = anchor.resources();
+        assert_eq!((r.luts, r.ffs, r.dsps), (102_154, 199_192, 1_420));
+        assert_eq!(r.brams, 165.0);
+        assert_eq!(r.urams, 92);
+    }
+
+    #[test]
+    fn family_scales_monotonically() {
+        let c = Calibration::default();
+        let archs: Vec<DpuArch> = DpuSize::ALL
+            .iter()
+            .map(|&s| DpuArch::of_size(s, &c, 300e6))
+            .collect();
+        for pair in archs.windows(2) {
+            assert!(pair[0].macs_per_cycle() < pair[1].macs_per_cycle());
+            assert!(pair[0].peak_tops() < pair[1].peak_tops());
+            assert!(pair[0].onchip_bytes < pair[1].onchip_bytes);
+            let (a, b) = (pair[0].resources(), pair[1].resources());
+            assert!(a.luts < b.luts && a.dsps < b.dsps && a.brams < b.brams);
+        }
+        // PG338 peak-ops naming: macs/cycle * 2 == the size's number
+        assert_eq!(archs[0].macs_per_cycle(), 256);
+        assert_eq!(archs[1].macs_per_cycle(), 512);
+        assert_eq!(archs[2].macs_per_cycle(), 1152);
+        assert_eq!(archs[3].macs_per_cycle(), 2048);
+    }
+
+    #[test]
+    fn frac_is_relative_capacity() {
+        assert_eq!(DpuSize::B512.frac(), 0.125);
+        assert_eq!(DpuSize::B1024.frac(), 0.25);
+        assert_eq!(DpuSize::B2304.frac(), 0.5625);
+        assert_eq!(DpuSize::B4096.frac(), 1.0);
+        assert_eq!(DpuSize::B4096.target_name(), "dpu");
+        assert_eq!(DpuSize::B512.target_name(), "dpu-b512");
     }
 }

@@ -1,9 +1,11 @@
-//! Vitis-AI DPUCZDX8G B4096 simulator (the paper's high-throughput path).
+//! Vitis-AI DPUCZDX8G simulator — the paper's high-throughput path,
+//! generalized to the PG338 size family (B512–B4096) for the backend
+//! registry.
 
 pub mod arch;
 pub mod isa;
 pub mod schedule;
 
-pub use arch::DpuArch;
+pub use arch::{DpuArch, DpuSize};
 pub use isa::{DpuInstr, DpuProgram};
 pub use schedule::{DpuSchedule, LayerTiming};

@@ -45,13 +45,52 @@ pub struct HlsDesign {
 impl HlsDesign {
     /// Synthesize (i.e., model) a manifest as a naive HLS accelerator.
     pub fn synthesize(man: &Manifest, board: &Zcu104, calib: &Calibration) -> HlsDesign {
-        let plan = BramAllocator::new(&board.pl).allocate(man);
+        Self::synthesize_with(
+            man,
+            board,
+            calib,
+            calib.hls_ii,
+            calib.hls_layer_fill_cycles,
+            1.0,
+        )
+    }
+
+    /// Synthesize the pipelined (II=1) dataflow variant — the pragma
+    /// headroom the paper's §V leaves on the table.  The datapath
+    /// retires one op per cycle after a deeper pipeline fill, at the
+    /// cost of BRAM partitioning pressure (`hls_pipe_bram_factor`
+    /// bytes of budget per stored byte), so large models spill to DRAM
+    /// sooner — pipelining does not rescue BaselineNet.
+    pub fn synthesize_pipelined(
+        man: &Manifest,
+        board: &Zcu104,
+        calib: &Calibration,
+    ) -> HlsDesign {
+        Self::synthesize_with(
+            man,
+            board,
+            calib,
+            calib.hls_pipe_ii,
+            calib.hls_pipe_fill_cycles,
+            calib.hls_pipe_bram_factor,
+        )
+    }
+
+    fn synthesize_with(
+        man: &Manifest,
+        board: &Zcu104,
+        calib: &Calibration,
+        ii: f64,
+        fill_cycles: f64,
+        bram_factor: f64,
+    ) -> HlsDesign {
+        let plan = BramAllocator::new(&board.pl).allocate_scaled(man, bram_factor);
         let axi = AxiMaster::naive(board.ddr_word_cycles);
         let mut layer_cycles = Vec::with_capacity(man.layers.len());
         let mut fetch_cycles = Vec::with_capacity(man.layers.len());
         for (l, place) in man.layers.iter().zip(&plan.placement) {
-            let compute = l.ops as f64 * calib.hls_ii
-                + if l.ops > 0 { calib.hls_layer_fill_cycles } else { 0.0 };
+            let compute =
+                l.ops as f64 * ii + if l.ops > 0 { fill_cycles } else { 0.0 };
             layer_cycles.push(compute);
             fetch_cycles.push(match place {
                 WeightPlacement::Dram => axi.fetch_cycles(l.weight_bytes),
@@ -165,6 +204,24 @@ mod tests {
         let d = design(&mini());
         let expected = d.total_cycles() / 100.0e6;
         assert!((d.latency_s() - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipelined_variant_cuts_initiation_interval() {
+        let man = mini();
+        let c = Calibration::default();
+        let naive = design(&man);
+        let pipe =
+            HlsDesign::synthesize_pipelined(&man, &Zcu104::default(), &c);
+        // II=1 with a deeper fill, same AXI shell
+        assert_eq!(
+            pipe.layer_cycles[0],
+            640.0 * c.hls_pipe_ii + c.hls_pipe_fill_cycles
+        );
+        assert_eq!(pipe.axi_setup_cycles, naive.axi_setup_cycles);
+        assert!(pipe.latency_s() < naive.latency_s());
+        // partitioning charges more BRAM for the same weights
+        assert!(pipe.plan.onchip_weight_bytes >= naive.plan.onchip_weight_bytes);
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Vitis-HLS custom-IP simulator (the paper's flexibility path: fp32,
-//! sigmoid/comparator/3-D operators, naive sequential dataflow).
+//! sigmoid/comparator/3-D operators).  Two design points: the paper's
+//! naive sequential dataflow and the pipelined II=1 variant (§V's
+//! acknowledged pragma headroom) exposed through the backend registry.
 
 pub mod axi;
 pub mod bram;

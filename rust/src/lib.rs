@@ -10,6 +10,12 @@
 //! CPU client); latency and power come from the calibrated analytic
 //! simulators — see DESIGN.md §2 for the substitution table.
 //!
+//! Execution targets live behind the [`backend`] layer: an
+//! [`backend::AccelModel`] trait + [`backend::TargetRegistry`] that the
+//! coordinator dispatches over by index — the paper's A53 / B4096 DPU /
+//! naive-HLS triple is just the default registry, with the full DPU
+//! size family and a pipelined-HLS variant behind `--targets all`.
+//!
 //! Start with `docs/ARCHITECTURE.md` for the module map, the
 //! batch-native dispatch lifecycle, and the cost-model dispatch flow.
 
@@ -24,6 +30,7 @@ pub mod hls;
 pub mod power;
 pub mod rad;
 pub mod resources;
+pub mod backend;
 pub mod runtime;
 pub mod sensors;
 pub mod telemetry;

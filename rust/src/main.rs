@@ -12,8 +12,9 @@
 //! spaceinfer selfcheck                            golden-IO over PJRT
 //! spaceinfer pipeline --use-case mms [--real]     end-to-end coordinator
 //!     [--policy static|min-latency|min-energy|deadline]
-//!     [--power-budget W] [--deadline-ms MS]
+//!     [--power-budget W] [--deadline-ms MS] [--targets default|all|...]
 //! spaceinfer policies [--use-case vae]            policy comparison table
+//! spaceinfer targets [--use-case vae]             target-matrix table
 //! spaceinfer inspect --model vae                  manifests, DPU program
 //! spaceinfer calibrate [--save calib.json]        dump calibration
 //! ```
@@ -22,11 +23,12 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use spaceinfer::backend::TargetSet;
 use spaceinfer::board::Calibration;
 use spaceinfer::coordinator::{Pipeline, PipelineConfig, Policy};
 use spaceinfer::model::catalog::{model_info, Catalog};
-use spaceinfer::model::Precision;
-use spaceinfer::report::{ablation, figures, policy, related, tables, whatif};
+use spaceinfer::model::{Precision, UseCase};
+use spaceinfer::report::{ablation, figures, policy, related, tables, targets, whatif};
 use spaceinfer::runtime::{Backend, Engine, ExecutorPool, GoldenIo, PoolConfig};
 use spaceinfer::util::cli::Args;
 
@@ -128,6 +130,7 @@ fn run() -> Result<()> {
         "selfcheck" => selfcheck(&dir),
         "pipeline" => pipeline_cmd(&args, &dir, calib),
         "policies" => policies_cmd(&args, &dir, calib),
+        "targets" => targets_cmd(&args, &dir, calib),
         "inspect" => inspect(&args, &dir, &calib),
         "calibrate" => {
             if let Some(path) = args.flags.get("save") {
@@ -204,16 +207,6 @@ fn selfcheck(dir: &Path) -> Result<()> {
     Ok(())
 }
 
-fn parse_use_case(s: &str) -> Result<&'static str> {
-    Ok(match s {
-        "vae" => "vae",
-        "cnet" => "cnet",
-        "esperta" => "esperta",
-        "mms" => "mms",
-        other => bail!("unknown use case {other:?}"),
-    })
-}
-
 /// `--deadline-ms N` -> seconds; absent -> per-use-case default.
 fn parse_deadline_s(args: &Args) -> Result<Option<f64>> {
     Ok(match args.flags.get("deadline-ms") {
@@ -245,7 +238,7 @@ fn catalog_or_synthetic(dir: &Path) -> Result<Catalog> {
 
 fn pipeline_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
     let catalog = catalog_or_synthetic(dir)?;
-    let use_case = parse_use_case(args.get("use-case", "mms"))?;
+    let use_case = UseCase::parse(args.get("use-case", "mms"))?;
     let cfg = PipelineConfig {
         use_case,
         n_events: args.get_usize("n", 200)?,
@@ -258,6 +251,7 @@ fn pipeline_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
         policy: Policy::parse(args.get("policy", "static"))?,
         deadline_s: parse_deadline_s(args)?,
         power_budget_w: parse_power_budget_w(args)?,
+        targets: TargetSet::parse(args.get("targets", "default"))?,
     };
     if cfg.policy == Policy::Static && cfg.power_budget_w.is_some() {
         bail!(
@@ -322,7 +316,7 @@ fn pipeline_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
 fn policies_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
     let catalog = catalog_or_synthetic(dir)?;
     let run = policy::PolicyRun {
-        use_case: parse_use_case(args.get("use-case", "mms"))?,
+        use_case: UseCase::parse(args.get("use-case", "mms"))?,
         n_events: args.get_usize("n", 200)?,
         cadence_s: args.get_f64("cadence", 0.15)?,
         max_batch: args.get_usize("batch", 8)?,
@@ -331,8 +325,33 @@ fn policies_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
         deadline_s: parse_deadline_s(args)?,
         mms_model: args.get("mms-model", "baseline").to_string(),
         seed: args.get_usize("seed", 7)? as u64,
+        targets: TargetSet::parse(args.get("targets", "default"))?,
     };
     println!("{}", policy::policy_comparison(&catalog, &calib, &run)?.render());
+    Ok(())
+}
+
+/// `spaceinfer targets` — enumerate every registrable backend for one
+/// (or every) use case: the design-space table behind `--targets all`.
+fn targets_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
+    let catalog = catalog_or_synthetic(dir)?;
+    let mms_model = args.get("mms-model", "baseline");
+    let batch = args.get_usize("batch", 8)? as u64;
+    match args.flags.get("use-case") {
+        Some(uc) => {
+            let table = targets::target_matrix(
+                &catalog, &calib, UseCase::parse(uc)?, mms_model, batch,
+            )?;
+            println!("{}", table.render());
+        }
+        None => {
+            for uc in UseCase::ALL {
+                let table =
+                    targets::target_matrix(&catalog, &calib, uc, mms_model, batch)?;
+                println!("{}", table.render());
+            }
+        }
+    }
     Ok(())
 }
 
@@ -386,10 +405,15 @@ usage: spaceinfer <subcommand> [--artifacts DIR] [--calib FILE]
                       [--workers N] [--exec-backend pjrt|surrogate]
                       [--policy static|min-latency|min-energy|deadline]
                       [--power-budget W] [--deadline-ms MS]
+                      [--targets default|all|cpu,dpu-b1024,hls-pipe,...]
   policies            dispatch-policy comparison table (all policies)
                       [--use-case ...] [--n N] [--cadence S]
                       [--batch B] [--max-wait S]
                       [--power-budget W] [--deadline-ms MS]
+                      [--targets default|all|NAMES]
+  targets             registered-target comparison matrix (latency,
+                      energy, power, footprint, essential bits)
+                      [--use-case ...] [--mms-model NAME] [--batch B]
   inspect             model + DPU program listing  [--model NAME]
   calibrate           print or save calibration    [--save FILE]
 ";

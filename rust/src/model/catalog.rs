@@ -10,6 +10,63 @@ use anyhow::{bail, Context, Result};
 use super::manifest::{Layer, LayerKind, Manifest, Precision};
 use crate::util::json::Json;
 
+/// The four paper use cases (§III-A), as a type.
+///
+/// Replaces the stringly-typed names previously threaded through the
+/// router, dispatcher, and pipeline: a typo is now a compile error (or
+/// a parse error at the CLI boundary) instead of a silent fall-through
+/// into a catch-all match arm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum UseCase {
+    /// Solar-magnetogram compression: VAE encoder latents.
+    Vae,
+    /// Solar X-ray flux forecasting: CNetPlusScalar.
+    Cnet,
+    /// SEP early warning: the multi-ESPERTA bank.
+    Esperta,
+    /// Magnetospheric region classification: the MMS networks.
+    Mms,
+}
+
+impl UseCase {
+    /// All use cases, report order.
+    pub const ALL: [UseCase; 4] =
+        [UseCase::Vae, UseCase::Cnet, UseCase::Esperta, UseCase::Mms];
+
+    /// Parse the CLI spelling.
+    ///
+    /// ```
+    /// use spaceinfer::model::UseCase;
+    /// assert_eq!(UseCase::parse("mms").unwrap(), UseCase::Mms);
+    /// assert!(UseCase::parse("radar").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<UseCase> {
+        Ok(match s {
+            "vae" => UseCase::Vae,
+            "cnet" => UseCase::Cnet,
+            "esperta" => UseCase::Esperta,
+            "mms" => UseCase::Mms,
+            other => bail!("unknown use case {other:?} (vae | cnet | esperta | mms)"),
+        })
+    }
+
+    /// The CLI / report spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            UseCase::Vae => "vae",
+            UseCase::Cnet => "cnet",
+            UseCase::Esperta => "esperta",
+            UseCase::Mms => "mms",
+        }
+    }
+}
+
+impl std::fmt::Display for UseCase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Which accelerator the paper deploys a model on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Target {
@@ -535,11 +592,17 @@ fn synthetic_reduced() -> Manifest {
     )
 }
 
-/// MMS BaselineNet stand-in: 3-D conv + pool + dense.
+/// MMS BaselineNet stand-in: 3-D conv + pool + a wide hidden dense +
+/// the region head.  The hidden layer's fp32 weights (~1 MB) exceed the
+/// HLS BRAM budget and spill to DRAM — reproducing, at synthetic scale,
+/// the word-by-word fetch collapse behind the real BaselineNet's 0.01×
+/// row, so artifact-less runs exhibit the paper's shallow-vs-deep
+/// crossover.
 fn synthetic_baseline() -> Manifest {
     let conv_out = (16 * 8 * 16 * 4) as u64;
     let conv_macs = conv_out * 27;
-    let dense_macs = 1_024u64 * 4;
+    let hidden_macs = 1_024u64 * 256;
+    let head_macs = 256u64 * 4;
     syn_manifest(
         "baseline",
         Precision::Fp32,
@@ -570,11 +633,21 @@ fn synthetic_baseline() -> Manifest {
             syn_layer(
                 LayerKind::Dense,
                 &[1, 1024],
+                &[1, 256],
+                hidden_macs,
+                2 * hidden_macs + 256,
+                256 * 1_025,
+                256 * 1_025 * 4,
+                "relu",
+            ),
+            syn_layer(
+                LayerKind::Dense,
+                &[1, 256],
                 &[1, 4],
-                dense_macs,
-                2 * dense_macs + 4,
-                4 * 1_025,
-                4 * 1_025 * 4,
+                head_macs,
+                2 * head_macs + 4,
+                4 * 257,
+                4 * 257 * 4,
                 "none",
             ),
         ],
@@ -632,6 +705,26 @@ mod tests {
         assert_eq!(c.manifest("cnet", Precision::Fp32).unwrap().output_elems(), 1);
         assert_eq!(c.manifest("esperta", Precision::Fp32).unwrap().output_elems(), 12);
         assert_eq!(c.manifest("logistic", Precision::Fp32).unwrap().output_elems(), 4);
+    }
+
+    #[test]
+    fn use_case_parse_roundtrip() {
+        for uc in UseCase::ALL {
+            assert_eq!(UseCase::parse(uc.as_str()).unwrap(), uc);
+            assert_eq!(format!("{uc}"), uc.as_str());
+        }
+        assert!(UseCase::parse("lidar").is_err());
+    }
+
+    #[test]
+    fn synthetic_baseline_spills_hls_bram() {
+        // the stand-in must reproduce the paper's qualitative collapse:
+        // BaselineNet's dense weights exceed the HLS BRAM budget
+        let c = Catalog::synthetic();
+        let man = c.manifest("baseline", Precision::Fp32).unwrap();
+        let z = crate::board::Zcu104::default();
+        let plan = crate::hls::BramAllocator::new(&z.pl).allocate(man);
+        assert!(plan.spills(), "hidden dense must exceed the BRAM budget");
     }
 
     #[test]

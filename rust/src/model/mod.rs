@@ -5,5 +5,5 @@ pub mod catalog;
 pub mod counts;
 pub mod manifest;
 
-pub use catalog::{Catalog, ModelInfo};
+pub use catalog::{Catalog, ModelInfo, UseCase};
 pub use manifest::{Layer, LayerKind, Manifest, Precision};

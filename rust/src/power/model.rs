@@ -52,6 +52,23 @@ impl PowerModel {
         }
     }
 
+    /// Active MPSoC draw for a DPU-family member, scaled from the
+    /// calibrated B4096 anchor.  `frac` is the member's MAC-array
+    /// capacity relative to B4096 (`dpu::DpuSize::frac`): the static
+    /// base splits into a fixed share (`dpu_static_fixed_frac` —
+    /// scheduler / fetch / interconnect) plus an array-proportional
+    /// share, and the dynamic swing scales with the array.  For
+    /// `frac = 1` this routes through the exact B4096 formula, so the
+    /// default target set stays bit-identical to the seed dispatcher.
+    pub fn dpu_family_w(&self, frac: f64, mac_duty: f64) -> f64 {
+        if frac >= 1.0 {
+            return self.mpsoc_w(&Implementation::Dpu { mac_duty });
+        }
+        let c = &self.calib;
+        let f = c.dpu_static_fixed_frac;
+        c.p_dpu_base * (f + (1.0 - f) * frac) + c.p_dpu_dyn * frac * mac_duty
+    }
+
     /// MPSoC power when idle (after reboot, before any bitstream).
     pub fn mpsoc_idle_w(&self) -> f64 {
         self.calib.p_ps_idle
@@ -108,6 +125,21 @@ mod tests {
         // paper range: 5.75 (VAE) .. 6.75 (CNet)
         assert!((5.2..6.2).contains(&lo), "{lo}");
         assert!((6.2..7.2).contains(&hi), "{hi}");
+    }
+
+    #[test]
+    fn dpu_family_power_anchored_and_monotone() {
+        let m = pm();
+        // frac = 1 is bit-identical to the B4096 formula
+        let anchor = m.mpsoc_w(&Implementation::Dpu { mac_duty: 0.42 });
+        assert_eq!(m.dpu_family_w(1.0, 0.42).to_bits(), anchor.to_bits());
+        // smaller arrays draw strictly less, but keep the fixed floor
+        let fracs = [0.125, 0.25, 0.5625, 1.0];
+        for pair in fracs.windows(2) {
+            assert!(m.dpu_family_w(pair[0], 0.5) < m.dpu_family_w(pair[1], 0.5));
+        }
+        let floor = m.calib.p_dpu_base * m.calib.dpu_static_fixed_frac;
+        assert!(m.dpu_family_w(0.125, 0.0) > floor * 0.99);
     }
 
     #[test]

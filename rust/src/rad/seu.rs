@@ -7,6 +7,8 @@
 //! ~30x through GTO belts, ~3x for deep space GCR background, with a
 //! solar-event multiplier on top.
 
+use crate::resources::Utilization;
+
 /// Mission orbit regimes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Orbit {
@@ -72,6 +74,16 @@ pub fn essential_bits(luts: u64, ffs: u64, dsps: u64, brams: f64) -> u64 {
     luts * 200 + ffs * 10 + dsps * 1_200 + (brams * 2_000.0) as u64
 }
 
+/// Essential bits of an execution target from its estimated
+/// [`Utilization`] — the seam SEU / scrub reporting shares with the
+/// backend registry: every `backend::AccelModel::resources()` feeds
+/// here, so upset rates scale with DPU array size and pipelined-HLS
+/// BRAM growth automatically, and the A53 (empty footprint) contributes
+/// zero CRAM exposure.
+pub fn essential_bits_of(u: &Utilization) -> u64 {
+    essential_bits(u.luts, u.ffs, u.dsps, u.brams)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,5 +125,87 @@ mod tests {
         let dpu = essential_bits(102_154, 199_192, 1_420, 165.0);
         assert!(dpu > 10 * small);
         assert!(small > 1_000_000); // ~2 Mbit
+    }
+
+    // ---- per-registry-target essential bits: SEU exposure must track
+    // each backend's resources() ----
+
+    use crate::backend::{AccelModel, TargetRegistry, TargetSet};
+    use crate::board::Calibration;
+    use crate::model::Catalog;
+
+    fn bits_of(model: &str, target: &str) -> u64 {
+        let reg = TargetRegistry::build(
+            model,
+            &Catalog::synthetic(),
+            &Calibration::default(),
+            &TargetSet::All,
+        )
+        .unwrap();
+        let t = reg
+            .targets()
+            .iter()
+            .find(|t| t.name() == target)
+            .unwrap_or_else(|| panic!("no target {target} for {model}"));
+        essential_bits_of(&t.resources())
+    }
+
+    #[test]
+    fn target_cpu_has_zero_cram_exposure() {
+        assert_eq!(bits_of("vae", "cpu"), 0);
+    }
+
+    #[test]
+    fn target_dpu_b512_exposure() {
+        let b = bits_of("vae", "dpu-b512");
+        // scaled footprint: well above an HLS design, well below B4096
+        assert!(b > 5_000_000, "{b}");
+        assert!(b < bits_of("vae", "dpu"));
+    }
+
+    #[test]
+    fn target_dpu_b1024_exposure() {
+        assert!(bits_of("vae", "dpu-b1024") > bits_of("vae", "dpu-b512"));
+    }
+
+    #[test]
+    fn target_dpu_b2304_exposure() {
+        assert!(bits_of("vae", "dpu-b2304") > bits_of("vae", "dpu-b1024"));
+    }
+
+    #[test]
+    fn target_dpu_b4096_matches_table2_footprint() {
+        assert_eq!(
+            bits_of("vae", "dpu"),
+            essential_bits(102_154, 199_192, 1_420, 165.0)
+        );
+        assert!(bits_of("vae", "dpu") > bits_of("vae", "dpu-b2304"));
+    }
+
+    #[test]
+    fn target_hls_naive_exposure() {
+        let b = bits_of("esperta", "hls");
+        assert!(b > 1_000_000, "{b}"); // sigmoid cores cost real LUTs
+        // even the smallest DPU member dwarfs a naive HLS shell
+        assert!(b < bits_of("vae", "dpu-b512"));
+    }
+
+    #[test]
+    fn target_hls_pipelined_exposure_grows() {
+        // unrolled datapath + partitioned BRAM -> more essential bits
+        assert!(bits_of("esperta", "hls-pipe") > bits_of("esperta", "hls"));
+        assert!(bits_of("baseline", "hls-pipe") > bits_of("baseline", "hls"));
+    }
+
+    #[test]
+    fn scrub_period_scales_with_target_exposure() {
+        use crate::rad::scrub::ScrubPolicy;
+        let env = SeuEnvironment::new(Orbit::Gto);
+        let small = ScrubPolicy::period_for_target(&env, bits_of("vae", "dpu-b512"), 1e-3);
+        let big = ScrubPolicy::period_for_target(&env, bits_of("vae", "dpu"), 1e-3);
+        assert!(
+            big < small,
+            "the bigger array must scrub more often ({big} vs {small})"
+        );
     }
 }

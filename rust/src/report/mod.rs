@@ -6,8 +6,10 @@ pub mod evaluate;
 pub mod figures;
 pub mod policy;
 pub mod related;
+pub mod targets;
 pub mod whatif;
 pub mod tables;
 
 pub use evaluate::{evaluate_model, Evaluation};
 pub use policy::{policy_comparison, PolicyRun};
+pub use targets::target_matrix;

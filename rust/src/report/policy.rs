@@ -6,16 +6,18 @@
 
 use anyhow::Result;
 
+use crate::backend::TargetSet;
 use crate::board::Calibration;
 use crate::coordinator::{Pipeline, PipelineConfig, Policy};
 use crate::model::catalog::Catalog;
+use crate::model::UseCase;
 use crate::util::table::{eng, Table};
 
 /// Knobs for one policy-comparison run.
 #[derive(Debug, Clone)]
 pub struct PolicyRun {
-    /// "vae" | "cnet" | "esperta" | "mms"
-    pub use_case: &'static str,
+    /// Which paper use case the comparison runs.
+    pub use_case: UseCase,
     /// Events per run.
     pub n_events: usize,
     /// Sensor cadence (s).
@@ -34,12 +36,14 @@ pub struct PolicyRun {
     pub mms_model: String,
     /// RNG seed (sensors + decisions).
     pub seed: u64,
+    /// Which backend targets every policy row dispatches over.
+    pub targets: TargetSet,
 }
 
 impl Default for PolicyRun {
     fn default() -> Self {
         PolicyRun {
-            use_case: "mms",
+            use_case: UseCase::Mms,
             n_events: 200,
             cadence_s: 0.15,
             max_batch: 8,
@@ -50,6 +54,7 @@ impl Default for PolicyRun {
             // two subcommands evaluate the same workload
             mms_model: "baseline".into(),
             seed: 7,
+            targets: TargetSet::Default,
         }
     }
 }
@@ -96,6 +101,7 @@ pub fn policy_comparison(
             max_wait_s: run.max_wait_s,
             mms_model: run.mms_model.clone(),
             seed: run.seed,
+            targets: run.targets.clone(),
             policy,
             deadline_s: run.deadline_s,
             power_budget_w: run.power_budget_w,
@@ -123,7 +129,7 @@ mod tests {
     fn comparison_runs_on_synthetic_catalog() {
         let catalog = Catalog::synthetic();
         let calib = Calibration::default();
-        let run = PolicyRun { use_case: "vae", n_events: 64, ..Default::default() };
+        let run = PolicyRun { use_case: UseCase::Vae, n_events: 64, ..Default::default() };
         let t = policy_comparison(&catalog, &calib, &run).unwrap();
         assert_eq!(t.rows.len(), 4);
         let rendered = t.render();
@@ -138,14 +144,14 @@ mod tests {
         let free = policy_comparison(
             &catalog,
             &calib,
-            &PolicyRun { use_case: "vae", n_events: 64, ..Default::default() },
+            &PolicyRun { use_case: UseCase::Vae, n_events: 64, ..Default::default() },
         )
         .unwrap();
         let capped = policy_comparison(
             &catalog,
             &calib,
             &PolicyRun {
-                use_case: "vae",
+                use_case: UseCase::Vae,
                 n_events: 64,
                 power_budget_w: Some(4.0),
                 ..Default::default()

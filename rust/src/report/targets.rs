@@ -1,0 +1,109 @@
+//! `spaceinfer targets` — the target-matrix comparison table: every
+//! backend the registry can instantiate for a use case, with its
+//! predicted latency, energy, active power, PL footprint, and SEU
+//! exposure side by side.  The design space the paper's three rows
+//! sample, enumerated.
+
+use anyhow::Result;
+
+use crate::backend::{AccelModel, TargetRegistry, TargetSet};
+use crate::board::Calibration;
+use crate::coordinator::Router;
+use crate::model::catalog::Catalog;
+use crate::model::UseCase;
+use crate::rad::seu::essential_bits_of;
+use crate::util::table::{eng, Table};
+
+/// Tabulate the full target family ([`TargetSet::All`]) for one use
+/// case's deployed model.  DPU rows appear only when the model passes
+/// the operator gate, so ESPERTA/MMS tables are CPU + the HLS pair.
+pub fn target_matrix(
+    catalog: &Catalog,
+    calib: &Calibration,
+    use_case: UseCase,
+    mms_model: &str,
+    batch: u64,
+) -> Result<Table> {
+    let mut router = Router::default();
+    router.mms_model = mms_model.to_string();
+    let route = router.route(use_case, 0)?;
+    let registry = TargetRegistry::build(&route.model, catalog, calib, &TargetSet::All)?;
+    let batch_col = format!("Batch-{batch} (ms)");
+    let mut t = Table::new(
+        &format!(
+            "Registered targets [{use_case}] model={} ({} of {} registrable)",
+            route.model,
+            registry.len(),
+            TargetSet::KNOWN.len(),
+        ),
+        &[
+            "Target",
+            "Slot",
+            "Prec",
+            "Setup (ms)",
+            "Per-inf (ms)",
+            batch_col.as_str(),
+            "mJ/inf",
+            "Power (W)",
+            "kLUT",
+            "DSP",
+            "BRAM",
+            "Ess. bits",
+        ],
+    );
+    for target in registry.targets() {
+        let r = target.resources();
+        t.row(vec![
+            target.name().to_string(),
+            target.slot().name().to_string(),
+            target.precision().as_str().to_string(),
+            format!("{:.3}", target.setup_s() * 1e3),
+            format!("{:.4}", target.per_item_s() * 1e3),
+            format!("{:.3}", target.batch_latency_s(batch) * 1e3),
+            format!("{:.3}", target.batch_energy_j(1) * 1e3),
+            format!("{:.2}", target.active_power_w()),
+            format!("{:.1}", r.luts as f64 / 1000.0),
+            r.dsps.to_string(),
+            format!("{:.1}", r.brams),
+            eng(essential_bits_of(&r) as f64),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vae_matrix_lists_the_whole_family() {
+        let t = target_matrix(
+            &Catalog::synthetic(),
+            &Calibration::default(),
+            UseCase::Vae,
+            "baseline",
+            8,
+        )
+        .unwrap();
+        assert!(t.rows.len() >= 6, "acceptance: >= 6 targets, got {}", t.rows.len());
+        let names: Vec<&str> = t.rows.iter().map(|r| r[0].as_str()).collect();
+        for expect in ["cpu", "dpu-b512", "dpu-b1024", "dpu-b2304", "dpu", "hls", "hls-pipe"]
+        {
+            assert!(names.contains(&expect), "{expect} missing from {names:?}");
+        }
+    }
+
+    #[test]
+    fn mms_matrix_has_no_dpu_rows() {
+        let t = target_matrix(
+            &Catalog::synthetic(),
+            &Calibration::default(),
+            UseCase::Mms,
+            "baseline",
+            8,
+        )
+        .unwrap();
+        assert!(t.rows.iter().all(|r| !r[0].starts_with("dpu")));
+        assert_eq!(t.rows.len(), 3); // cpu + hls + hls-pipe
+    }
+}

@@ -32,6 +32,12 @@ pub struct Utilization {
 }
 
 impl Utilization {
+    /// The empty footprint — a target that configures no PL fabric at
+    /// all (the A53 software path).
+    pub fn none() -> Utilization {
+        Utilization { luts: 0, ffs: 0, dsps: 0, brams: 0.0, urams: 0 }
+    }
+
     /// Percentage strings against the device pool (Table II formatting).
     pub fn percent(&self, pl: &PlResources) -> (f64, f64, f64, f64, f64) {
         (
@@ -114,6 +120,30 @@ pub fn estimate_hls(man: &Manifest, plan: &BramPlan) -> Utilization {
     }
 
     Utilization { luts, ffs, dsps, brams: plan.brams(), urams: 0 }
+}
+
+/// Parallel fp32 MACs per compute layer in the pipelined (II=1)
+/// variant — the unroll factor the dataflow pragmas buy.
+pub const PIPE_UNROLL: u64 = 8;
+
+/// Footprint of the pipelined (II=1) variant: instead of one shared
+/// datapath per layer *kind*, every compute layer gets its own
+/// [`PIPE_UNROLL`]-wide pipelined MAC datapath (what `#pragma HLS
+/// pipeline` + `unroll` elaborate to), on top of the naive shell.  The
+/// BRAM column comes from the partitioned plan, which already carries
+/// the banking overhead.
+pub fn estimate_hls_pipelined(man: &Manifest, plan: &BramPlan) -> Utilization {
+    let base = estimate_hls(man, plan);
+    let compute_layers =
+        man.layers.iter().filter(|l| l.kind.is_compute()).count() as u64;
+    let extra = compute_layers * (PIPE_UNROLL - 1);
+    Utilization {
+        luts: base.luts + extra * FP32_MAC_LUTS,
+        ffs: base.ffs + extra * FP32_MAC_FFS,
+        dsps: base.dsps + extra * FP32_MAC_DSPS,
+        brams: plan.brams(),
+        urams: 0,
+    }
 }
 
 #[cfg(test)]

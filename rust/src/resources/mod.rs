@@ -2,4 +2,4 @@
 
 pub mod estimate;
 
-pub use estimate::{estimate_hls, Utilization};
+pub use estimate::{estimate_hls, estimate_hls_pipelined, Utilization};

@@ -6,6 +6,7 @@
 
 use std::sync::Arc;
 
+use crate::model::UseCase;
 use crate::util::prng::Prng;
 
 use super::generators;
@@ -16,8 +17,8 @@ use super::generators::Region;
 pub struct SensorEvent {
     /// Simulated onboard time (s).
     pub t_s: f64,
-    /// "vae" | "cnet" | "esperta" | "mms"
-    pub use_case: &'static str,
+    /// Use case this event belongs to.
+    pub use_case: UseCase,
     /// Flat input tensors (manifest input order of the target model),
     /// `Arc`-shared so the batcher -> executor path never copies the
     /// buffers (cloning an event or building an `ExecRequest` is a
@@ -37,14 +38,14 @@ pub struct SensorStream {
     /// Cadence per use case (s between samples).
     pub cadence_s: f64,
     /// Use case this stream generates for.
-    pub use_case: &'static str,
+    pub use_case: UseCase,
     /// Probability an ESPERTA sample is a real SEP precursor.
     pub sep_rate: f64,
 }
 
 impl SensorStream {
     /// Deterministic stream for one use case.
-    pub fn new(use_case: &'static str, seed: u64, cadence_s: f64) -> SensorStream {
+    pub fn new(use_case: UseCase, seed: u64, cadence_s: f64) -> SensorStream {
         SensorStream {
             rng: Prng::new(seed),
             t_s: 0.0,
@@ -58,29 +59,28 @@ impl SensorStream {
     /// Produce the next event.
     pub fn next_event(&mut self) -> SensorEvent {
         let (inputs, truth) = match self.use_case {
-            "vae" => (vec![generators::magnetogram_tile(&mut self.rng)], None),
-            "cnet" => (
+            UseCase::Vae => (vec![generators::magnetogram_tile(&mut self.rng)], None),
+            UseCase::Cnet => (
                 vec![
                     generators::aia_hmi_pair(&mut self.rng),
                     vec![generators::background_flux(&mut self.rng)],
                 ],
                 None,
             ),
-            "esperta" => {
+            UseCase::Esperta => {
                 let sep = self.rng.chance(self.sep_rate);
                 (
                     vec![generators::flare_features(&mut self.rng, sep)],
                     Some(sep as usize),
                 )
             }
-            "mms" => {
+            UseCase::Mms => {
                 let region = Region::ALL[self.rng.below(4)];
                 (
                     vec![generators::ion_distribution(&mut self.rng, region)],
                     Some(region.index()),
                 )
             }
-            other => panic!("unknown use case {other:?}"),
         };
         let ev = SensorEvent {
             t_s: self.t_s,
@@ -106,7 +106,7 @@ mod tests {
 
     #[test]
     fn mms_stream_has_truth_labels() {
-        let mut s = SensorStream::new("mms", 1, 0.15);
+        let mut s = SensorStream::new(UseCase::Mms, 1, 0.15);
         let evs = s.take(8);
         assert_eq!(evs.len(), 8);
         for (i, e) in evs.iter().enumerate() {
@@ -120,7 +120,7 @@ mod tests {
 
     #[test]
     fn cnet_stream_two_inputs() {
-        let mut s = SensorStream::new("cnet", 2, 60.0);
+        let mut s = SensorStream::new(UseCase::Cnet, 2, 60.0);
         let e = s.next_event();
         assert_eq!(e.inputs.len(), 2);
         assert_eq!(e.inputs[0].len(), 256 * 256 * 2);
@@ -129,16 +129,10 @@ mod tests {
 
     #[test]
     fn deterministic_by_seed() {
-        let mut a = SensorStream::new("esperta", 9, 1.0);
-        let mut b = SensorStream::new("esperta", 9, 1.0);
+        let mut a = SensorStream::new(UseCase::Esperta, 9, 1.0);
+        let mut b = SensorStream::new(UseCase::Esperta, 9, 1.0);
         let (x, y) = (a.next_event(), b.next_event());
         assert_eq!(x.inputs[0], y.inputs[0]);
         assert_eq!(x.truth, y.truth);
-    }
-
-    #[test]
-    #[should_panic(expected = "unknown use case")]
-    fn unknown_use_case_panics() {
-        SensorStream::new("radar", 1, 1.0).next_event();
     }
 }

@@ -4,9 +4,10 @@
 
 use std::collections::BTreeMap;
 
+use spaceinfer::backend::TargetSet;
 use spaceinfer::board::Calibration;
 use spaceinfer::coordinator::{Pipeline, PipelineConfig, Policy, Slot};
-use spaceinfer::model::Catalog;
+use spaceinfer::model::{Catalog, UseCase};
 use spaceinfer::report::{policy_comparison, PolicyRun};
 
 fn run(cfg: PipelineConfig) -> spaceinfer::coordinator::PipelineReport {
@@ -20,7 +21,7 @@ fn run(cfg: PipelineConfig) -> spaceinfer::coordinator::PipelineReport {
 
 fn vae_cfg(policy: Policy) -> PipelineConfig {
     PipelineConfig {
-        use_case: "vae",
+        use_case: UseCase::Vae,
         n_events: 96,
         policy,
         ..Default::default()
@@ -66,7 +67,7 @@ fn deadline_policy_falls_back_when_nothing_meets_it() {
     // a 1 µs deadline is unmeetable: the dispatcher must fall back to
     // min-latency (not wedge), and every batch counts as a miss
     let r = run(PipelineConfig {
-        use_case: "esperta",
+        use_case: UseCase::Esperta,
         n_events: 64,
         cadence_s: 0.01,
         policy: Policy::Deadline,
@@ -125,7 +126,7 @@ fn predicted_matches_measured_while_calibration_is_shared() {
 
 #[test]
 fn dynamic_policies_work_for_every_use_case() {
-    for use_case in ["vae", "cnet", "esperta", "mms"] {
+    for use_case in UseCase::ALL {
         let r = run(PipelineConfig {
             use_case,
             n_events: 40,
@@ -139,6 +140,75 @@ fn dynamic_policies_work_for_every_use_case() {
 }
 
 #[test]
+fn targets_all_reproduces_the_paper_crossover() {
+    // the acceptance scenario: min-latency over the full registry picks
+    // different targets for a shallow net vs a deep 3-D CNN — the
+    // paper's Table III crossover (ESPERTA 5.33x on HLS, BaselineNet
+    // 0.01x) emerging from the mechanism models at dispatch time
+    let shallow = run(PipelineConfig {
+        use_case: UseCase::Esperta,
+        n_events: 64,
+        policy: Policy::MinLatency,
+        targets: TargetSet::All,
+        ..Default::default()
+    });
+    assert!(
+        shallow.target_mix.keys().all(|k| k.starts_with("hls")),
+        "shallow net must dispatch to an HLS target, got {:?}",
+        shallow.target_mix
+    );
+
+    let deep = run(PipelineConfig {
+        use_case: UseCase::Mms,
+        mms_model: "baseline".into(),
+        n_events: 64,
+        policy: Policy::MinLatency,
+        targets: TargetSet::All,
+        ..Default::default()
+    });
+    assert!(
+        deep.target_mix.contains_key("cpu"),
+        "spilling 3-D CNN must fall back to the A53, got {:?}",
+        deep.target_mix
+    );
+    assert_ne!(
+        shallow.target_mix.keys().collect::<Vec<_>>(),
+        deep.target_mix.keys().collect::<Vec<_>>(),
+        "the crossover: shallow and deep nets pick different targets"
+    );
+}
+
+#[test]
+fn dpu_family_offers_a_power_latency_ladder() {
+    // under a budget that excludes B4096 (5.75+ W) but admits smaller
+    // family members, min-latency keeps the workload on a mid-size DPU
+    // instead of collapsing all the way to HLS/CPU
+    let r = run(PipelineConfig {
+        power_budget_w: Some(4.0),
+        targets: TargetSet::All,
+        ..vae_cfg(Policy::MinLatency)
+    });
+    assert!(
+        r.target_mix.keys().any(|k| k.starts_with("dpu-b")),
+        "a smaller DPU must fit the 4 W budget, got {:?}",
+        r.target_mix
+    );
+    assert!(!r.target_mix.contains_key("dpu"), "B4096 exceeds 4 W");
+}
+
+#[test]
+fn named_target_set_restricts_dispatch() {
+    let r = run(PipelineConfig {
+        policy: Policy::MinLatency,
+        targets: TargetSet::parse("cpu,hls").unwrap(),
+        ..vae_cfg(Policy::MinLatency)
+    });
+    for key in r.target_mix.keys() {
+        assert!(key == "cpu" || key == "hls", "unexpected target {key}");
+    }
+}
+
+#[test]
 fn policy_comparison_table_shows_the_trade_space() {
     let catalog = Catalog::synthetic();
     let calib = Calibration::default();
@@ -146,7 +216,7 @@ fn policy_comparison_table_shows_the_trade_space() {
         &catalog,
         &calib,
         &PolicyRun {
-            use_case: "vae",
+            use_case: UseCase::Vae,
             n_events: 64,
             power_budget_w: Some(4.0),
             ..Default::default()

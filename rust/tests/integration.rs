@@ -11,7 +11,7 @@ use spaceinfer::cpu::A53Model;
 use spaceinfer::dpu::{DpuArch, DpuSchedule};
 use spaceinfer::hls::HlsDesign;
 use spaceinfer::model::catalog::{Catalog, Target, MODELS};
-use spaceinfer::model::{counts, Precision};
+use spaceinfer::model::{counts, Precision, UseCase};
 use spaceinfer::report::{ablation, evaluate_model, figures, related, tables};
 use spaceinfer::runtime::{Backend, Engine, ExecutorPool, GoldenIo, PoolConfig};
 
@@ -362,7 +362,7 @@ fn pipeline_mms_logistic_keeps_up() {
     let c = catalog();
     let calib = Calibration::default();
     let cfg = PipelineConfig {
-        use_case: "mms",
+        use_case: UseCase::Mms,
         n_events: 200,
         mms_model: "logistic".into(),
         ..Default::default()
@@ -382,7 +382,7 @@ fn pipeline_mms_baseline_saturates() {
     let c = catalog();
     let calib = Calibration::default();
     let cfg = PipelineConfig {
-        use_case: "mms",
+        use_case: UseCase::Mms,
         n_events: 100,
         mms_model: "baseline".into(),
         ..Default::default()
@@ -397,7 +397,7 @@ fn pipeline_esperta_alert_rate_tracks_sep_rate() {
     let c = catalog();
     let calib = Calibration::default();
     let cfg = PipelineConfig {
-        use_case: "esperta",
+        use_case: UseCase::Esperta,
         n_events: 400,
         cadence_s: 0.01,
         ..Default::default()
@@ -415,7 +415,7 @@ fn pipeline_real_pjrt_numerics_mms_logistic() {
     let c = catalog();
     let calib = Calibration::default();
     let cfg = PipelineConfig {
-        use_case: "mms",
+        use_case: UseCase::Mms,
         n_events: 24,
         mms_model: "logistic".into(),
         ..Default::default()
@@ -442,7 +442,7 @@ fn pipeline_dispatches_exactly_one_request_per_batch() {
     let c = catalog();
     let calib = Calibration::default();
     let cfg = PipelineConfig {
-        use_case: "mms",
+        use_case: UseCase::Mms,
         n_events: 100,
         mms_model: "logistic".into(),
         max_batch: 8,
@@ -488,7 +488,7 @@ fn pipeline_same_seed_same_report() {
     let calib = Calibration::default();
     let run = || {
         let cfg = PipelineConfig {
-            use_case: "esperta",
+            use_case: UseCase::Esperta,
             n_events: 150,
             cadence_s: 0.01,
             seed: 42,
@@ -535,7 +535,7 @@ fn pipeline_timing_only_same_seed_same_report() {
     let calib = Calibration::default();
     let run = || {
         let cfg = PipelineConfig {
-            use_case: "mms",
+            use_case: UseCase::Mms,
             n_events: 120,
             mms_model: "logistic".into(),
             seed: 9,
@@ -557,7 +557,7 @@ fn pipeline_p95_at_least_mean_tail() {
     let c = catalog();
     let calib = Calibration::default();
     let cfg = PipelineConfig {
-        use_case: "mms",
+        use_case: UseCase::Mms,
         n_events: 60,
         mms_model: "baseline".into(),
         ..Default::default()
@@ -576,7 +576,7 @@ fn pipeline_downlink_budget_sheds_under_pressure() {
     let c = catalog();
     let calib = Calibration::default();
     let cfg = PipelineConfig {
-        use_case: "mms",
+        use_case: UseCase::Mms,
         n_events: 300,
         mms_model: "logistic".into(),
         downlink_budget: 512, // ~30 labels worth

@@ -8,6 +8,7 @@ use spaceinfer::coordinator::{AccelTimeline, Batcher, BoundedQueue,
                               DownlinkManager, ScheduledRun};
 use spaceinfer::coordinator::decision::{decide, Decision};
 use spaceinfer::hls::AxiMaster;
+use spaceinfer::model::UseCase;
 use spaceinfer::sensors::SensorStream;
 use spaceinfer::util::json::Json;
 use spaceinfer::util::prng::Prng;
@@ -73,7 +74,7 @@ fn prop_batcher_conserves_events() {
         let n = 1 + rng.below(200);
         let max_batch = 1 + rng.below(16);
         let max_wait = rng.range_f64(0.01, 2.0);
-        let mut stream = SensorStream::new("esperta", rng.next_u64(), 0.05);
+        let mut stream = SensorStream::new(UseCase::Esperta, rng.next_u64(), 0.05);
         let mut b = Batcher::new("esperta", max_batch, max_wait);
         let mut seen: Vec<u64> = Vec::new();
         let mut now = 0.0;
@@ -100,7 +101,7 @@ fn prop_batcher_conserves_events() {
 fn prop_batcher_never_exceeds_max_batch() {
     for_seeds(60, |rng| {
         let max_batch = 1 + rng.below(8);
-        let mut stream = SensorStream::new("esperta", rng.next_u64(), 0.05);
+        let mut stream = SensorStream::new(UseCase::Esperta, rng.next_u64(), 0.05);
         let mut b = Batcher::new("esperta", max_batch, 100.0);
         for i in 0..100 {
             if let Some(batch) = b.offer(stream.next_event(), i as f64 * 0.01) {
@@ -196,7 +197,7 @@ fn prop_downlink_budget_and_floor() {
         for _ in 0..300 {
             let decision = match rng2.below(3) {
                 0 => Decision::Latent { z: [0.0; 6] },
-                1 => decide("mms", &[rng2.f32(), rng2.f32(), rng2.f32(),
+                1 => decide(UseCase::Mms, &[rng2.f32(), rng2.f32(), rng2.f32(),
                                      rng2.f32()], &mut rng2),
                 _ => Decision::SepAlert {
                     warning: rng2.chance(0.3),
@@ -276,12 +277,12 @@ fn prop_power_trace_nonnegative_and_time_monotone() {
 fn prop_sensor_streams_deterministic_and_labeled() {
     for_seeds(30, |rng| {
         let seed = rng.next_u64();
-        for uc in ["vae", "cnet", "esperta", "mms"] {
+        for uc in UseCase::ALL {
             let mut a = SensorStream::new(uc, seed, 0.1);
             let mut b = SensorStream::new(uc, seed, 0.1);
             let (x, y) = (a.next_event(), b.next_event());
             assert_eq!(x.inputs, y.inputs, "{uc} stream not deterministic");
-            if uc == "mms" {
+            if uc == UseCase::Mms {
                 assert!(x.truth.unwrap() < 4);
             }
         }
