@@ -1,30 +1,28 @@
-//! Eclipse power-constrained operations: the VAE compression workload
-//! through an umbra crossing.
+//! Eclipse power-constrained operations — the `eclipse-ops` built-in
+//! scenario: the VAE compression workload through an umbra crossing, in
+//! ONE deterministic run on the steppable pipeline.
 //!
 //! In sunlight the spacecraft runs `min-latency` and the dispatcher
 //! keeps the VAE encoder on the Vitis-AI DPU (the paper's 24× slot, at
-//! 5.75 W).  Entering eclipse the EPS caps active inference draw at
-//! 4 W, so the same workload re-dispatches under the `deadline` policy
-//! with a mission power budget: the DPU no longer fits, and batches
-//! shed to the lowest-power eligible target while the latency deadline
-//! is still honored where possible — exactly the latency/energy
-//! trade-space the paper measures in Table III, exercised at runtime.
+//! 5.75 W).  At umbra entry the mission timeline applies
+//! `SetPolicy(deadline)` + `EnterEclipse{4 W}` between ticks: the DPU
+//! no longer fits the EPS budget and the same workload re-dispatches
+//! live to the low-power target while the latency deadline is honored
+//! where possible — the latency/energy trade-space of Table III,
+//! exercised mid-run.  Egress lifts the cap and the DPU returns.
 //!
 //! Runs without artifacts (synthetic stand-in catalog, timing-only
 //! pipeline):
 //!
 //! ```bash
 //! cargo run --release --example eclipse_ops
+//! # equivalent CLI: spaceinfer scenario eclipse-ops
 //! ```
 
 use anyhow::Result;
 use spaceinfer::board::Calibration;
-use spaceinfer::coordinator::{Pipeline, PipelineConfig, Policy};
-use spaceinfer::model::{Catalog, UseCase};
-use spaceinfer::report::{policy_comparison, PolicyRun};
-
-/// Eclipse power cap on active MPSoC draw (W).
-const ECLIPSE_BUDGET_W: f64 = 4.0;
+use spaceinfer::model::Catalog;
+use spaceinfer::scenario::{builtin, run_scenario};
 
 fn main() -> Result<()> {
     let dir = std::path::Path::new("artifacts");
@@ -32,61 +30,22 @@ fn main() -> Result<()> {
         println!("(no artifacts — using the synthetic stand-in catalog)\n");
     }
     let catalog = Catalog::load_or_synthetic(dir)?;
-    let calib = Calibration::default();
+    let sc = builtin("eclipse-ops")?;
+    println!("scenario [{}] — {}\n", sc.name, sc.summary);
 
-    let base = PipelineConfig {
-        use_case: UseCase::Vae,
-        n_events: 240,
-        cadence_s: 0.05,
-        ..Default::default()
-    };
+    let report = run_scenario(&sc, &catalog, &Calibration::default(), None)?;
+    print!("{}", report.render());
 
-    // --- sunlit ops: latency-optimal, no power constraint ---
-    let sunlit = Pipeline::new(
-        PipelineConfig { policy: Policy::MinLatency, ..base.clone() },
-        &catalog,
-        &calib,
-    )?
-    .run(None)?;
-    println!("== sunlit (min-latency, unconstrained) ==");
-    print!("{}", sunlit.render());
-
-    // --- umbra: deadline policy under the eclipse power budget ---
-    let eclipse = Pipeline::new(
-        PipelineConfig {
-            policy: Policy::Deadline,
-            power_budget_w: Some(ECLIPSE_BUDGET_W),
-            ..base.clone()
-        },
-        &catalog,
-        &calib,
-    )?
-    .run(None)?;
-    println!("\n== eclipse (deadline, {ECLIPSE_BUDGET_W} W budget) ==");
-    print!("{}", eclipse.render());
-
+    let sunlit = &report.phases[0];
+    let umbra = &report.phases[1];
     println!(
-        "\neclipse vs sunlit: energy {:.3} J -> {:.3} J, mean latency {:.4} s -> {:.4} s, \
-         {} batches shed off the DPU",
+        "\numbra vs sunlit: energy {:.3} J -> {:.3} J, p95 {:.4} s -> {:.4} s, \
+         {} batches shed off the DPU by the 4 W budget",
         sunlit.energy_j,
-        eclipse.energy_j,
-        sunlit.mean_latency_s,
-        eclipse.mean_latency_s,
-        eclipse.power_sheds,
+        umbra.energy_j,
+        sunlit.p95_latency_s,
+        umbra.p95_latency_s,
+        umbra.power_sheds,
     );
-
-    // --- the whole trade-space at the eclipse operating point ---
-    let table = policy_comparison(
-        &catalog,
-        &calib,
-        &PolicyRun {
-            use_case: UseCase::Vae,
-            n_events: 240,
-            cadence_s: 0.05,
-            power_budget_w: Some(ECLIPSE_BUDGET_W),
-            ..Default::default()
-        },
-    )?;
-    println!("\n{}", table.render());
     Ok(())
 }

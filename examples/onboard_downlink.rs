@@ -1,81 +1,48 @@
-//! End-to-end driver (DESIGN.md §5 E2E): the MMS selective-downlink
-//! mission scenario on the full stack.
+//! MMS selective downlink — the `onboard-downlink` built-in scenario:
+//! the mission the paper's §I motivates (classify plasma regions
+//! onboard, downlink labels instead of raw distributions), with the
+//! pass budget draining and replenishing inside ONE deterministic run.
 //!
-//! A simulated FPI instrument streams 3-D ion energy distributions at
-//! survey cadence; the coordinator routes them to the BaselineNet HLS
-//! slot (with CPU fallback), batches, runs REAL inference through the
-//! AOT-compiled HLO on the PJRT runtime, classifies the plasma region,
-//! flags regions of interest, and spends a downlink budget — the exact
-//! onboard data-reduction loop the paper's §I motivates.  Timing/energy
-//! figures come from the calibrated ZCU104 simulators.
+//! A simulated FPI instrument streams ion distributions at survey
+//! cadence; the coordinator classifies them on the LogisticNet slot and
+//! spends a tight 2 KiB downlink budget.  Mid-run a ground-station pass
+//! applies `DownlinkPass{16 KiB}` between ticks and shed routine labels
+//! start flowing again — the budget lifecycle is visible per phase.
+//!
+//! Runs without artifacts (synthetic stand-in catalog, timing-only
+//! pipeline):
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example onboard_downlink
+//! cargo run --release --example onboard_downlink
+//! # equivalent CLI: spaceinfer scenario onboard-downlink
 //! ```
-//!
-//! The run is recorded in EXPERIMENTS.md §E2E.
 
 use anyhow::Result;
 use spaceinfer::board::Calibration;
-use spaceinfer::coordinator::{Pipeline, PipelineConfig};
-use spaceinfer::model::catalog::Catalog;
-use spaceinfer::model::{Precision, UseCase};
-use spaceinfer::runtime::ExecutorPool;
+use spaceinfer::model::Catalog;
+use spaceinfer::scenario::{builtin, run_scenario};
 
 fn main() -> Result<()> {
-    let dir = std::path::PathBuf::from("artifacts");
-    let catalog = Catalog::load(&dir)?;
-    let calib = Calibration::default();
+    let dir = std::path::Path::new("artifacts");
+    if !Catalog::is_present(dir) {
+        println!("(no artifacts — using the synthetic stand-in catalog)\n");
+    }
+    let catalog = Catalog::load_or_synthetic(dir)?;
+    let sc = builtin("onboard-downlink")?;
+    println!("scenario [{}] — {}\n", sc.name, sc.summary);
 
-    // one orbit segment: 1000 distributions at FPI survey cadence
-    let n_events: usize = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(1000);
-
-    println!("== MMS selective-downlink scenario ==");
-    println!("{} FPI distributions, BaselineNet on the HLS slot, real PJRT numerics\n", n_events);
-
-    let cfg = PipelineConfig {
-        use_case: UseCase::Mms,
-        n_events,
-        cadence_s: 0.15, // FPI fast-survey-ish cadence
-        max_batch: 8,
-        max_wait_s: 1.0,
-        downlink_budget: 16 * 1024, // tight pass budget
-        mms_model: "baseline".into(),
-        seed: 2026,
-    };
-    let pipeline = Pipeline::new(cfg.clone(), &catalog, &calib)?;
-    let executor = ExecutorPool::spawn(
-        dir.clone(),
-        vec![(pipeline.route.model.clone(), pipeline.route.precision)],
-    )?;
-    let t0 = std::time::Instant::now();
-    let report = pipeline.run(Some(&executor))?;
-    let host = t0.elapsed();
-
+    let report = run_scenario(&sc, &catalog, &Calibration::default(), None)?;
     print!("{}", report.render());
-    println!("--- telemetry ---\n{}", report.metrics.report());
-    println!("host wall-clock for {} real inferences: {:.1?}", n_events, host);
 
-    // the upload-minimization angle (Ekelund et al.): same scenario on
-    // the 8k-parameter LogisticNet — 112x smaller upload, how much worse?
-    println!("\n== upload-minimization comparison (LogisticNet slot) ==");
-    let cfg2 = PipelineConfig { mms_model: "logistic".into(), ..cfg };
-    let p2 = Pipeline::new(cfg2, &catalog, &calib)?;
-    let executor2 = ExecutorPool::spawn(
-        dir,
-        vec![(p2.route.model.clone(), Precision::Fp32)],
-    )?;
-    let r2 = p2.run(Some(&executor2))?;
-    print!("{}", r2.render());
+    for p in &report.phases {
+        println!(
+            "{:<12} downlink sent {:<4} shed {:<4}",
+            p.name, p.downlink_sent, p.downlink_shed
+        );
+    }
     println!(
-        "\nmodel upload: baseline {} B vs logistic {} B ({}x smaller)",
-        catalog.manifest("baseline", Precision::Fp32)?.weight_bytes,
-        catalog.manifest("logistic", Precision::Fp32)?.weight_bytes,
-        catalog.manifest("baseline", Precision::Fp32)?.weight_bytes
-            / catalog.manifest("logistic", Precision::Fp32)?.weight_bytes
+        "\ncompression: {:.0} raw sensor bytes represented per byte downlinked",
+        report.compression_ratio
     );
     Ok(())
 }

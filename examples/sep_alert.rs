@@ -1,83 +1,57 @@
-//! ESPERTA early-warning scenario: a stream of solar-flare descriptors
-//! runs through the multi-ESPERTA HLS slot; any of the six models firing
-//! raises a Solar Energetic Particle alert that preempts the downlink
-//! queue.  Demonstrates the operators Vitis AI cannot map (sigmoid +
-//! greater-than) running on the HLS path with full fp32 fidelity.
+//! ESPERTA early warning through a radiation strike — the `sep-alert`
+//! built-in scenario: an SEU corrupts the HLS IP's configuration memory
+//! mid-run and the paper's static deployment matrix must re-dispatch
+//! live, in ONE deterministic run on the steppable pipeline.
+//!
+//! Nominal monitoring runs the multi-ESPERTA chain on its HLS slot (the
+//! operators Vitis AI cannot map — sigmoid + comparator — at 1.5 W).
+//! The mission timeline then applies `SeuUpset{hls}` between ticks: the
+//! target is marked unavailable, alerts re-dispatch to the A53, and the
+//! scrubber's next reconfiguration window (period + bitstream reload —
+//! the Fig 13 power spike) restores the slot mid-phase.  The per-phase
+//! target mix shows the knock-out and the recovery.
+//!
+//! Runs without artifacts (synthetic stand-in catalog, timing-only
+//! pipeline):
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example sep_alert
+//! cargo run --release --example sep_alert
+//! # equivalent CLI: spaceinfer scenario sep-alert
 //! ```
 
 use anyhow::Result;
-use spaceinfer::board::{Calibration, Zcu104};
-use spaceinfer::coordinator::decision::{decide, Decision};
-use spaceinfer::hls::HlsDesign;
-use spaceinfer::model::catalog::Catalog;
-use spaceinfer::model::{Precision, UseCase};
-use spaceinfer::power::{energy_mj, Implementation, PowerModel};
-use spaceinfer::resources::estimate_hls;
-use spaceinfer::runtime::Engine;
-use spaceinfer::sensors::generators::flare_features;
-use spaceinfer::util::prng::Prng;
+use spaceinfer::board::Calibration;
+use spaceinfer::coordinator::PipelineReport;
+use spaceinfer::model::Catalog;
+use spaceinfer::scenario::{builtin, run_scenario};
 
 fn main() -> Result<()> {
     let dir = std::path::Path::new("artifacts");
-    let catalog = Catalog::load(dir)?;
-    let calib = Calibration::default();
-    let board = Zcu104::default();
-    let engine = Engine::new(dir)?;
-    let model = engine.load("esperta", Precision::Fp32)?;
-
-    let man = catalog.manifest("esperta", Precision::Fp32)?;
-    let design = HlsDesign::synthesize(man, &board, &calib);
-    let util = estimate_hls(man, &design.plan);
-    let pm = PowerModel::new(calib.clone());
-    let p = pm.mpsoc_w(&Implementation::Hls {
-        kiloluts: util.luts as f64 / 1000.0,
-        brams: design.plan.brams(),
-        duty: 1.0,
-    });
+    if !Catalog::is_present(dir) {
+        println!("(no artifacts — using the synthetic stand-in catalog)\n");
+    }
+    let catalog = Catalog::load_or_synthetic(dir)?;
+    let sc = builtin("sep-alert")?;
     println!(
-        "multi-ESPERTA HLS IP (sim): {:.0} FPS, {:.2} W MPSoC, {:.4} mJ/inf, \
-         {:.1} BRAMs, {} LUTs\n",
-        design.fps(), p, energy_mj(p, design.latency_s()),
-        design.plan.brams(), util.luts
+        "scenario [{}] — {} (scrub period {} s)\n",
+        sc.name, sc.summary, sc.scrub.period_s
     );
 
-    // a week of M2+ flares at ~20/week with ~25% SEP-effective
-    let mut rng = Prng::new(99);
-    let mut alerts = 0;
-    let mut hits = 0;
-    let mut false_alarms = 0;
-    let mut misses = 0;
-    let n = 40;
-    for i in 0..n {
-        let is_sep = rng.chance(0.25);
-        let features = flare_features(&mut rng, is_sep);
-        let out = model.run(&[&features])?;
-        match decide(UseCase::Esperta, &out, &mut rng) {
-            Decision::SepAlert { warning, mask, max_prob } => {
-                if warning {
-                    alerts += 1;
-                    if is_sep { hits += 1 } else { false_alarms += 1 }
-                    println!(
-                        "flare {i:2}: ALERT  p_max={max_prob:.2} models={:?}{}",
-                        mask.iter().filter(|&&b| b).count(),
-                        if is_sep { "  (real SEP)" } else { "  (false alarm)" }
-                    );
-                } else if is_sep {
-                    misses += 1;
-                    println!("flare {i:2}: quiet  — MISSED SEP EVENT");
-                }
-            }
-            _ => unreachable!(),
-        }
+    let report = run_scenario(&sc, &catalog, &Calibration::default(), None)?;
+    print!("{}", report.render());
+
+    for p in &report.phases {
+        println!(
+            "{:<12} mix [{}]",
+            p.name,
+            PipelineReport::mix_str(&p.target_mix)
+        );
     }
-    let pod = hits as f64 / (hits + misses).max(1) as f64;
+    let alerts = report.decisions.get("sep_alert").copied().unwrap_or(0);
     println!(
-        "\n{n} flares: {alerts} alerts, POD {:.0}% (paper's ESPERTA: 83%), \
-         {false_alarms} false alarms",
-        100.0 * pod
+        "\n{} SEP alerts raised; the upset phase re-dispatched to the A53 \
+         until the scrub window elapsed",
+        alerts
     );
     Ok(())
 }

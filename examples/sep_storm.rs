@@ -1,26 +1,28 @@
-//! SEP-storm burst load: the ESPERTA early-warning chain under a solar
-//! energetic particle event.
+//! SEP-storm burst load — the `sep-storm` built-in scenario: the
+//! ESPERTA early-warning chain through a solar energetic particle
+//! event, in ONE deterministic run on the steppable pipeline.
 //!
-//! Quiet sun, flare descriptors trickle in and any policy keeps up.
-//! During a storm the cadence jumps two orders of magnitude and the
-//! alert deadline (100 ms from sample to SEP verdict) starts to bind:
-//! the `deadline` policy keeps picking the cheapest target that still
-//! meets it, `min-latency` burns energy for margin, and `min-energy`
-//! ignores the queue entirely — the dispatcher's per-batch cost model
-//! makes the difference visible in the target mix and miss counts.
+//! Quiet sun, flare descriptors trickle in and the deadline policy
+//! keeps up on the HLS IP.  At storm onset the mission timeline applies
+//! `SepStorm{20000x, 5 ms}` between ticks: the event rate jumps four
+//! orders of magnitude past what any target serves, the alert deadline
+//! tightens and binds, and the bounded ingress queue sheds load
+//! deterministically (visible as per-phase drops) instead of growing an
+//! unbounded backlog.  When the storm subsides the cadence and deadline
+//! restore and shedding stops.
 //!
 //! Runs without artifacts (synthetic stand-in catalog, timing-only
 //! pipeline):
 //!
 //! ```bash
 //! cargo run --release --example sep_storm
+//! # equivalent CLI: spaceinfer scenario sep-storm
 //! ```
 
 use anyhow::Result;
 use spaceinfer::board::Calibration;
-use spaceinfer::coordinator::{Pipeline, PipelineConfig, Policy};
-use spaceinfer::model::{Catalog, UseCase};
-use spaceinfer::report::{policy_comparison, PolicyRun};
+use spaceinfer::model::Catalog;
+use spaceinfer::scenario::{builtin, run_scenario};
 
 fn main() -> Result<()> {
     let dir = std::path::Path::new("artifacts");
@@ -28,49 +30,22 @@ fn main() -> Result<()> {
         println!("(no artifacts — using the synthetic stand-in catalog)\n");
     }
     let catalog = Catalog::load_or_synthetic(dir)?;
-    let calib = Calibration::default();
+    let sc = builtin("sep-storm")?;
+    println!("scenario [{}] — {}\n", sc.name, sc.summary);
 
-    for (label, cadence_s, n_events) in
-        [("quiet sun", 0.5, 64), ("SEP storm burst", 0.005, 512)]
-    {
-        println!("== {label}: {} descriptors @ {:.0} ev/s ==", n_events, 1.0 / cadence_s);
-        for policy in [Policy::Deadline, Policy::MinLatency, Policy::MinEnergy] {
-            let report = Pipeline::new(
-                PipelineConfig {
-                    use_case: UseCase::Esperta,
-                    n_events,
-                    cadence_s,
-                    max_wait_s: 0.05, // alerts cannot sit in the batcher
-                    policy,
-                    ..Default::default()
-                },
-                &catalog,
-                &calib,
-            )?
-            .run(None)?;
-            let alerts = report.decisions.get("sep_alert").copied().unwrap_or(0);
-            let mix = report.target_mix_str();
-            println!(
-                "  {:<12} mix [{mix}]  p95 {:.4}s  energy {:.4}J  \
-                 deadline_misses {}  SEP alerts {alerts}",
-                report.policy, report.p95_latency_s, report.energy_j,
-                report.deadline_misses,
-            );
-        }
-        println!();
-    }
+    let report = run_scenario(&sc, &catalog, &Calibration::default(), None)?;
+    print!("{}", report.render());
 
-    // full comparison table at the storm operating point
-    let table = policy_comparison(
-        &catalog,
-        &calib,
-        &PolicyRun {
-            use_case: UseCase::Esperta,
-            n_events: 512,
-            cadence_s: 0.005,
-            ..Default::default()
-        },
-    )?;
-    println!("{}", table.render());
+    let storm = &report.phases[1];
+    let alerts = report.decisions.get("sep_alert").copied().unwrap_or(0);
+    println!(
+        "\nstorm phase: {} of {} events decimated at ingress, {} deadline \
+         misses, mix [{}]; {} SEP alerts raised over the whole run",
+        storm.dropped,
+        storm.events,
+        storm.deadline_misses,
+        spaceinfer::coordinator::PipelineReport::mix_str(&storm.target_mix),
+        alerts,
+    );
     Ok(())
 }

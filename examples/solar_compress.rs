@@ -1,82 +1,52 @@
-//! VAE latent-compression scenario: SHARP-like magnetogram tiles are
-//! encoded on the (simulated) DPU to 6-float latents — the paper's
-//! 1:16,384 compression — with the sampling + exponent steps the paper
-//! kept off-FPGA executed here in rust post-processing.  Also runs the
-//! INT8-PTQ variant against fp32 to show the quantization cost on the
-//! latents (paper §IV's PTQ-degradation observation).
+//! VAE latent compression — the `solar-compress` built-in scenario:
+//! SHARP-like magnetogram tiles encoded to 6-float latents (the paper's
+//! 1:16,384 compression) with the energy policy, an eclipse power cap,
+//! and a downlink pass all playing out in ONE deterministic run.
+//!
+//! Imaging runs `min-energy`, which keeps the encoder on the DPU (the
+//! cheapest joules-per-tile).  At eclipse the timeline applies
+//! `EnterEclipse{2 W}` between ticks: only the 1.5 W HLS IP fits, so
+//! every batch sheds to it until egress, where the cap lifts and a
+//! ground pass (`DownlinkPass{32 KiB}`) replenishes the latent budget.
+//!
+//! Runs without artifacts (synthetic stand-in catalog, timing-only
+//! pipeline):
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example solar_compress
+//! cargo run --release --example solar_compress
+//! # equivalent CLI: spaceinfer scenario solar-compress
 //! ```
 
 use anyhow::Result;
-use spaceinfer::board::{Calibration, Zcu104};
-use spaceinfer::coordinator::decision::{decide, Decision};
-use spaceinfer::dpu::{DpuArch, DpuSchedule};
-use spaceinfer::model::catalog::{model_info, Catalog};
-use spaceinfer::model::{Precision, UseCase};
-use spaceinfer::power::{energy_mj, PowerModel};
-use spaceinfer::runtime::Engine;
-use spaceinfer::sensors::generators::magnetogram_tile;
-use spaceinfer::util::prng::Prng;
+use spaceinfer::board::Calibration;
+use spaceinfer::coordinator::PipelineReport;
+use spaceinfer::model::Catalog;
+use spaceinfer::scenario::{builtin, run_scenario};
 
 fn main() -> Result<()> {
     let dir = std::path::Path::new("artifacts");
-    let catalog = Catalog::load(dir)?;
-    let calib = Calibration::default();
-    let board = Zcu104::default();
-    let engine = Engine::new(dir)?;
-    let f32m = engine.load("vae", Precision::Fp32)?;
-    let i8m = engine.load("vae", Precision::Int8)?;
+    if !Catalog::is_present(dir) {
+        println!("(no artifacts — using the synthetic stand-in catalog)\n");
+    }
+    let catalog = Catalog::load_or_synthetic(dir)?;
+    let sc = builtin("solar-compress")?;
+    println!("scenario [{}] — {}\n", sc.name, sc.summary);
 
-    // simulated DPU deployment numbers
-    let man = catalog.manifest("vae", Precision::Int8)?;
-    let sched = DpuSchedule::new(
-        man,
-        DpuArch::b4096(&calib, board.dpu_clock_hz),
-        &calib,
-        board.axi_bandwidth,
-    )?;
-    let pm = PowerModel::new(calib.clone());
-    let p = pm.mpsoc_w(&PowerModel::dpu_impl(&sched));
-    let info = model_info("vae")?;
-    println!(
-        "VAE encoder on B4096 (sim): {:.0} FPS (paper {:.0}), {:.2} W, \
-         {:.2} mJ/inf, MAC util {:.1}%\n",
-        sched.fps(), info.paper.accel_fps, p,
-        energy_mj(p, sched.latency_s()),
-        100.0 * sched.mac_utilization()
-    );
+    let report = run_scenario(&sc, &catalog, &Calibration::default(), None)?;
+    print!("{}", report.render());
 
-    let mut rng = Prng::new(7);
-    let raw_bytes = 128 * 256 * 3 * 4;
-    let mut worst_rel = 0.0f64;
-    for i in 0..5 {
-        let tile = magnetogram_tile(&mut rng);
-        let out32 = f32m.run(&[&tile])?;
-        let out8 = i8m.run(&[&tile])?;
-        // rust-side reparameterization (the op the paper moved off-FPGA)
-        let z = match decide(UseCase::Vae, &out32, &mut rng) {
-            Decision::Latent { z } => z,
-            _ => unreachable!(),
-        };
-        let err: f64 = out32
-            .iter()
-            .zip(&out8)
-            .map(|(a, b)| (a - b).abs() as f64)
-            .fold(0.0, f64::max);
-        let scale: f64 = out32.iter().map(|v| v.abs() as f64).sum::<f64>() / 12.0;
-        worst_rel = worst_rel.max(err / scale.max(1e-9));
+    for p in &report.phases {
         println!(
-            "tile {i}: mu/logvar -> z = {:?}  (int8 max|err| {err:.4})",
-            z.map(|v| (v * 100.0).round() / 100.0)
+            "{:<10} mix [{}]  energy {:.3} J  power_sheds {}",
+            p.name,
+            PipelineReport::mix_str(&p.target_mix),
+            p.energy_j,
+            p.power_sheds
         );
     }
     println!(
-        "\ncompression {}:1 ({} B -> 24 B latent); worst PTQ rel-err {:.1}%",
-        raw_bytes / 24,
-        raw_bytes,
-        100.0 * worst_rel
+        "\nlatents downlinked: {} ({} B) — {:.0}:1 over the raw magnetograms",
+        report.downlink_sent, report.downlink_sent_bytes, report.compression_ratio
     );
     Ok(())
 }

@@ -69,7 +69,7 @@ fn main() {
             n_events: 1000,
             ..Default::default()
         };
-        let pipeline = Pipeline::new(cfg, &catalog, &calib).unwrap();
+        let mut pipeline = Pipeline::new(cfg, &catalog, &calib).unwrap();
         let s = bench("pipeline 1000 events (sim-only, mms)", 1, 20, || {
             pipeline.run(None).unwrap();
         });
@@ -86,7 +86,7 @@ fn main() {
                 max_batch,
                 ..Default::default()
             };
-            let p = Pipeline::new(cfg, &catalog, &calib).unwrap();
+            let mut p = Pipeline::new(cfg, &catalog, &calib).unwrap();
             let s = bench(
                 &format!("pipeline 1000 events (sim-only, max_batch={max_batch})"),
                 1,
@@ -108,7 +108,7 @@ fn main() {
             n_events: 1000,
             ..Default::default()
         };
-        let p = Pipeline::new(cfg, &catalog, &calib).unwrap();
+        let mut p = Pipeline::new(cfg, &catalog, &calib).unwrap();
         let pool = ExecutorPool::with_config(
             std::path::PathBuf::from("artifacts"),
             PoolConfig {

@@ -194,12 +194,19 @@ impl TargetSet {
 }
 
 /// The instantiated, ordered target table for one use-case model.
-/// Immutable once built; per-run queue state lives in the caller's
-/// timeline vector, index-aligned with [`TargetRegistry::targets`].
+/// The table itself is immutable once built; per-run queue state lives
+/// in the caller's timeline vector, index-aligned with
+/// [`TargetRegistry::targets`].  The only mutable bit is per-target
+/// *availability*: a mission event (an SEU in the target's
+/// configuration memory, a thermal limit) can mark a target out of
+/// service with [`TargetRegistry::set_available`] and the dispatcher
+/// re-routes live until it is restored (typically when a
+/// `rad::scrub` repair window elapses).
 #[derive(Debug)]
 pub struct TargetRegistry {
     targets: Vec<Box<dyn AccelModel>>,
     primary: Option<usize>,
+    available: Vec<bool>,
 }
 
 impl TargetRegistry {
@@ -262,7 +269,8 @@ impl TargetRegistry {
         if targets.is_empty() {
             bail!("target set selected no eligible target for model {model:?}");
         }
-        Ok(TargetRegistry { targets, primary })
+        let available = vec![true; targets.len()];
+        Ok(TargetRegistry { targets, primary, available })
     }
 
     /// Assemble a registry from pre-built targets (tests, external
@@ -271,7 +279,8 @@ impl TargetRegistry {
         targets: Vec<Box<dyn AccelModel>>,
         primary: Option<usize>,
     ) -> TargetRegistry {
-        TargetRegistry { targets, primary }
+        let available = vec![true; targets.len()];
+        TargetRegistry { targets, primary, available }
     }
 
     /// The ordered target table.
@@ -297,6 +306,29 @@ impl TargetRegistry {
     /// Index of the paper's deployment-matrix target, when registered.
     pub fn primary_index(&self) -> Option<usize> {
         self.primary
+    }
+
+    /// Registry index of a target by its stable name, if registered.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.targets.iter().position(|t| t.name() == name)
+    }
+
+    /// Is the target at `index` currently in service?  Targets start
+    /// available; mission events toggle this at runtime.
+    pub fn is_available(&self, index: usize) -> bool {
+        self.available[index]
+    }
+
+    /// Mark a target in or out of service.  An unavailable target is
+    /// excluded from every dispatch decision (the static policy falls
+    /// back to the fastest available target) until restored.
+    pub fn set_available(&mut self, index: usize, available: bool) {
+        self.available[index] = available;
+    }
+
+    /// Number of targets currently in service.
+    pub fn available_count(&self) -> usize {
+        self.available.iter().filter(|&&a| a).count()
     }
 }
 
@@ -429,6 +461,20 @@ mod tests {
         // CPU and HLS take anything
         assert!(r.get(0).supports(baseline).is_ok());
         assert!(r.get(2).supports(baseline).is_ok());
+    }
+
+    #[test]
+    fn availability_toggles_and_lookup_by_name() {
+        let mut r = registry("vae", &TargetSet::Default);
+        assert_eq!(r.available_count(), 3, "everything starts in service");
+        let dpu = r.index_of("dpu").unwrap();
+        assert!(r.is_available(dpu));
+        r.set_available(dpu, false);
+        assert!(!r.is_available(dpu));
+        assert_eq!(r.available_count(), 2);
+        r.set_available(dpu, true);
+        assert_eq!(r.available_count(), 3);
+        assert_eq!(r.index_of("warp-drive"), None);
     }
 
     #[test]

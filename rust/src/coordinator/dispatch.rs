@@ -244,6 +244,15 @@ impl Dispatcher {
     /// state (from [`Dispatcher::timelines`]); the caller commits the
     /// batch by calling `schedule` on the chosen entry.  Deterministic:
     /// ties break toward the first target in registry order.
+    ///
+    /// Targets the registry marks unavailable (an SEU awaiting its
+    /// scrub repair, a thermal trip) leave the candidate set: dynamic
+    /// policies score only in-service targets, and the static policy
+    /// falls back to the fastest available target while its primary
+    /// slot is down.  When *nothing* is in service the full set is
+    /// used — a spacecraft cannot stop deciding.  With every target
+    /// available (the default) the decision is bit-identical to the
+    /// unfiltered dispatcher.
     pub fn choose(
         &self,
         timelines: &[AccelTimeline],
@@ -255,11 +264,24 @@ impl Dispatcher {
             .zip(timelines)
             .map(|(i, tl)| self.cost(i, tl, now_s, oldest_t_s, n))
             .collect();
+        let mut avail: Vec<usize> = (0..costs.len())
+            .filter(|&i| self.registry.is_available(i))
+            .collect();
+        if avail.is_empty() {
+            avail = (0..costs.len()).collect();
+        }
         if self.policy == Policy::Static {
-            let index = self.primary_index();
+            let primary = self.primary_index();
+            let index = if self.registry.is_available(primary) || avail.len() == costs.len()
+            {
+                primary
+            } else {
+                // the deployment-matrix slot is knocked out: re-dispatch
+                // to the fastest in-service target until it is repaired
+                argmin(&avail, &costs, |c| c.latency_s)
+            };
             return Choice { index, cost: costs[index].clone(), power_shed: false };
         }
-        let all: Vec<usize> = (0..costs.len()).collect();
         let pick = |idxs: &[usize]| -> usize {
             match self.policy {
                 Policy::MinLatency => argmin(idxs, &costs, |c| c.latency_s),
@@ -283,9 +305,9 @@ impl Dispatcher {
         };
         let (index, power_shed) = match self.power_budget_w {
             // no budget: one scoring pass, never a shed
-            None => (pick(&all), false),
+            None => (pick(&avail), false),
             Some(budget) => {
-                let fits: Vec<usize> = all
+                let fits: Vec<usize> = avail
                     .iter()
                     .copied()
                     .filter(|&i| costs[i].power_w <= budget)
@@ -293,11 +315,11 @@ impl Dispatcher {
                 let index = if fits.is_empty() {
                     // nothing fits the budget: shed to the lowest-power
                     // target outright
-                    argmin(&all, &costs, |c| c.power_w)
+                    argmin(&avail, &costs, |c| c.power_w)
                 } else {
                     pick(&fits)
                 };
-                (index, index != pick(&all))
+                (index, index != pick(&avail))
             }
         };
         Choice { index, cost: costs[index].clone(), power_shed }
@@ -494,6 +516,41 @@ mod tests {
         )
         .unwrap();
         assert_eq!(d.registry.len(), 7);
+    }
+
+    #[test]
+    fn unavailable_target_is_never_chosen() {
+        // knock out the fast DPU: min-latency must land on the HLS stub
+        let mut d = table(Policy::MinLatency, 1.0, None);
+        d.registry.set_available(0, false);
+        let tl = d.timelines();
+        assert_eq!(slot_of(&d, &tl), Slot::Hls);
+        // restore: decisions return to the unfiltered pick
+        d.registry.set_available(0, true);
+        assert_eq!(slot_of(&d, &tl), Slot::Dpu);
+    }
+
+    #[test]
+    fn static_redispatches_while_primary_is_down() {
+        let mut d = table(Policy::Static, 1.0, None);
+        let tl = d.timelines();
+        assert_eq!(slot_of(&d, &tl), Slot::Dpu, "primary up: paper mapping");
+        d.registry.set_available(0, false);
+        // fastest available target takes over (HLS at 2 ms beats CPU)
+        assert_eq!(slot_of(&d, &tl), Slot::Hls);
+        d.registry.set_available(0, true);
+        assert_eq!(slot_of(&d, &tl), Slot::Dpu, "repair restores the mapping");
+    }
+
+    #[test]
+    fn all_targets_down_falls_back_to_full_set() {
+        let mut d = table(Policy::MinLatency, 1.0, None);
+        for i in 0..d.registry.len() {
+            d.registry.set_available(i, false);
+        }
+        // the spacecraft cannot stop deciding: the full set is scored
+        let tl = d.timelines();
+        assert_eq!(slot_of(&d, &tl), Slot::Dpu);
     }
 
     #[test]

@@ -18,8 +18,12 @@
 //! router resolves the model variant and the paper's primary slot, the
 //! dispatcher scores every target registered in the backend layer
 //! (`crate::backend`) under the configured policy — the coordinator
-//! itself contains no per-target code.  See `docs/ARCHITECTURE.md` for
-//! the full module map and lifecycle.
+//! itself contains no per-target code.  The pipeline is steppable
+//! (`Pipeline::begin` / `PipelineRun::tick`): every operational knob —
+//! policy, power budget, deadline, cadence, target availability — is
+//! mutable between ticks, which is how `crate::scenario` replays
+//! mission timelines inside one deterministic run.  See
+//! `docs/ARCHITECTURE.md` for the full module map and lifecycle.
 
 pub mod backpressure;
 pub mod batcher;
@@ -30,11 +34,11 @@ pub mod pipeline;
 pub mod router;
 pub mod scheduler;
 
-pub use backpressure::BoundedQueue;
+pub use backpressure::{BoundedQueue, OverflowPolicy};
 pub use batcher::{Batch, Batcher};
 pub use decision::{decide, Decision};
 pub use dispatch::{default_deadline_s, BatchCost, Choice, Dispatcher, Policy};
 pub use downlink::{DownlinkManager, DownlinkVerdict};
-pub use pipeline::{Pipeline, PipelineConfig, PipelineReport};
+pub use pipeline::{PhaseReport, Pipeline, PipelineConfig, PipelineReport, PipelineRun};
 pub use router::{Route, Router, Slot};
 pub use scheduler::{AccelTimeline, ScheduledRun};

@@ -18,6 +18,22 @@
 //! batch's predicted latency/energy land in telemetry next to the
 //! "measured" (virtual clock) values, so calibration drift between the
 //! cost model and the timeline shows up as a nonzero prediction error.
+//!
+//! # Steppable execution
+//!
+//! The pipeline is a *steppable state machine*: [`Pipeline::begin`]
+//! opens a [`PipelineRun`], each [`PipelineRun::tick`] advances the
+//! virtual clock by exactly one sensor event, and
+//! [`PipelineRun::finish`] drains and produces the report.
+//! [`Pipeline::run`] is now only the thin driver loop over those three
+//! calls.  Between ticks every operational knob is live: dispatch
+//! policy, power budget, deadline, sensor cadence/burst, downlink
+//! budget, and per-target availability — the seam `crate::scenario`
+//! uses to replay whole mission timelines (eclipse entry, SEP storms,
+//! ground-station passes, SEU upsets) inside a single deterministic
+//! run.  [`PipelineRun::begin_phase`] segments the report: every batch,
+//! joule, deadline miss, ingress drop, and downlink verdict is credited
+//! to the mission phase that dispatched it.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -27,6 +43,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::backend::{AccelModel, TargetSet};
 use crate::board::Calibration;
+use crate::coordinator::backpressure::{BoundedQueue, OverflowPolicy};
 use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::decision::{decide, Decision};
 use crate::coordinator::dispatch::{default_deadline_s, Dispatcher, Policy};
@@ -69,6 +86,22 @@ pub struct PipelineConfig {
     /// Which backend targets to register (`default` = the paper's
     /// triple; `all` opens the DPU family + pipelined HLS).
     pub targets: TargetSet,
+    /// Ingress-queue capacity (events) between the sensor and the
+    /// batcher.  `None` (default) admits every event unconditionally —
+    /// the pre-ingress behavior, bit for bit.  `Some(cap)` bounds the
+    /// coordinator's event buffer: while every in-service target's
+    /// backlog exceeds [`PipelineConfig::ingress_max_backlog_s`],
+    /// events pool in the queue and overflow is shed per
+    /// [`PipelineConfig::ingress_policy`] — deterministic sensor
+    /// decimation instead of an unbounded backlog.
+    pub ingress_cap: Option<usize>,
+    /// What the ingress queue does with overflow (only read when
+    /// [`PipelineConfig::ingress_cap`] is set).
+    pub ingress_policy: OverflowPolicy,
+    /// Admission threshold (s): events leave the ingress queue for the
+    /// batcher only while the *least-loaded* in-service target is at
+    /// most this far behind the virtual clock.
+    pub ingress_max_backlog_s: f64,
 }
 
 impl Default for PipelineConfig {
@@ -86,8 +119,48 @@ impl Default for PipelineConfig {
             deadline_s: None,
             power_budget_w: None,
             targets: TargetSet::Default,
+            ingress_cap: None,
+            ingress_policy: OverflowPolicy::DropNewest,
+            ingress_max_backlog_s: 0.25,
         }
     }
+}
+
+/// Per-phase slice of a [`PipelineReport`]: what one mission phase
+/// dispatched, spent, missed, shed, and downlinked.  A legacy
+/// (non-scenario) run has exactly one phase named `"run"` spanning the
+/// whole timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseReport {
+    /// Phase name (from [`PipelineRun::begin_phase`]).
+    pub name: String,
+    /// Virtual time the phase began (s).
+    pub start_s: f64,
+    /// Virtual time the phase ended (s) — the next phase's start, or
+    /// for the final phase the completion of the last batch.
+    pub end_s: f64,
+    /// Sensor events generated during the phase.
+    pub events: u64,
+    /// Batches dispatched during the phase.
+    pub batches: u64,
+    /// Batches per registry target name, for this phase only.
+    pub target_mix: BTreeMap<String, u64>,
+    /// Simulated inference energy charged by this phase's batches (J).
+    pub energy_j: f64,
+    /// Mean end-to-end latency of this phase's batches (s).
+    pub mean_latency_s: f64,
+    /// p95 end-to-end latency of this phase's batches (s).
+    pub p95_latency_s: f64,
+    /// Batches whose oldest event missed the deadline.
+    pub deadline_misses: u64,
+    /// Batches the power budget steered away from the policy's pick.
+    pub power_sheds: u64,
+    /// Events the ingress queue shed during the phase (decimation).
+    pub dropped: u64,
+    /// Decisions the downlink kept, for batches dispatched this phase.
+    pub downlink_sent: u64,
+    /// Decisions the downlink shed, for batches dispatched this phase.
+    pub downlink_shed: u64,
 }
 
 /// Summary of a pipeline run.
@@ -99,7 +172,8 @@ pub struct PipelineReport {
     pub model: String,
     /// Primary (paper deployment-matrix) slot.
     pub slot: Slot,
-    /// Dispatch policy the run used.
+    /// Dispatch policy the run used (the run's *final* policy when a
+    /// scenario changed it mid-run).
     pub policy: String,
     /// Batches dispatched per registry target name ("cpu" / "dpu" /
     /// "dpu-b512" / "hls" / "hls-pipe" / ...).
@@ -127,6 +201,11 @@ pub struct PipelineReport {
     pub deadline_misses: u64,
     /// Batches the power budget steered away from the policy's pick.
     pub power_sheds: u64,
+    /// Events admitted past the ingress queue (equals `n_events` when
+    /// no queue is configured).
+    pub ingress_accepted: u64,
+    /// Events the ingress queue shed (always 0 without a queue).
+    pub ingress_dropped: u64,
     /// Decisions the downlink kept.
     pub downlink_sent: u64,
     /// Decisions the downlink shed.
@@ -139,6 +218,10 @@ pub struct PipelineReport {
     pub accuracy: Option<f64>,
     /// Decision label -> count.
     pub decisions: BTreeMap<String, u64>,
+    /// Per-phase segmentation of the run.  Exactly one entry (named
+    /// `"run"`) for a legacy single-phase run; one entry per
+    /// [`PipelineRun::begin_phase`] otherwise.
+    pub phases: Vec<PhaseReport>,
     /// Counters + histograms collected during the run.
     pub metrics: Metrics,
 }
@@ -186,6 +269,12 @@ impl PipelineReport {
             self.energy_j,
             self.predicted_energy_j
         ));
+        if self.ingress_dropped > 0 {
+            out.push_str(&format!(
+                "  ingress: accepted {}  dropped {} (sensor decimation)\n",
+                self.ingress_accepted, self.ingress_dropped
+            ));
+        }
         out.push_str(&format!(
             "  downlink: sent {} ({} B) shed {}  compression {:.0}:1\n",
             self.downlink_sent, self.downlink_sent_bytes, self.downlink_shed,
@@ -197,7 +286,101 @@ impl PipelineReport {
         for (k, v) in &self.decisions {
             out.push_str(&format!("  decision[{k}] = {v}\n"));
         }
+        if self.phases.len() > 1 {
+            out.push_str("  phases:\n");
+            for p in &self.phases {
+                out.push_str(&format!(
+                    "    {:<16} [{:8.2}s..{:8.2}s]  events {:<5} mix [{}]  \
+                     energy {:.3}J  p95 {:.4}s  misses {}  sheds {}  \
+                     drops {}  dl {}/{}\n",
+                    p.name,
+                    p.start_s,
+                    p.end_s,
+                    p.events,
+                    PipelineReport::mix_str(&p.target_mix),
+                    p.energy_j,
+                    p.p95_latency_s,
+                    p.deadline_misses,
+                    p.power_sheds,
+                    p.dropped,
+                    p.downlink_sent,
+                    p.downlink_shed,
+                ));
+            }
+        }
         out
+    }
+}
+
+/// Per-phase accumulator (finalized into a [`PhaseReport`] at
+/// [`PipelineRun::finish`]).
+#[derive(Debug)]
+struct PhaseAccum {
+    name: String,
+    start_s: f64,
+    end_s: f64,
+    events: u64,
+    batches: u64,
+    target_mix: BTreeMap<String, u64>,
+    energy_j: f64,
+    deadline_misses: u64,
+    power_sheds: u64,
+    dropped: u64,
+    downlink_sent: u64,
+    downlink_shed: u64,
+    latencies: Vec<f64>,
+}
+
+impl PhaseAccum {
+    fn new(name: &str, start_s: f64) -> PhaseAccum {
+        PhaseAccum {
+            name: name.to_string(),
+            start_s,
+            end_s: start_s,
+            events: 0,
+            batches: 0,
+            target_mix: BTreeMap::new(),
+            energy_j: 0.0,
+            deadline_misses: 0,
+            power_sheds: 0,
+            dropped: 0,
+            downlink_sent: 0,
+            downlink_shed: 0,
+            latencies: Vec::new(),
+        }
+    }
+
+    /// True while nothing has been credited to the phase — the initial
+    /// `"run"` placeholder can then be renamed in place.
+    fn is_untouched(&self) -> bool {
+        self.events == 0
+            && self.batches == 0
+            && self.dropped == 0
+            && self.downlink_sent == 0
+            && self.downlink_shed == 0
+            && self.latencies.is_empty()
+    }
+
+    fn finalize(&mut self) -> PhaseReport {
+        self.latencies.sort_by(f64::total_cmp);
+        let mean =
+            self.latencies.iter().sum::<f64>() / self.latencies.len().max(1) as f64;
+        PhaseReport {
+            name: self.name.clone(),
+            start_s: self.start_s,
+            end_s: self.end_s,
+            events: self.events,
+            batches: self.batches,
+            target_mix: self.target_mix.clone(),
+            energy_j: self.energy_j,
+            mean_latency_s: mean,
+            p95_latency_s: percentile_nearest_rank(&self.latencies, 0.95),
+            deadline_misses: self.deadline_misses,
+            power_sheds: self.power_sheds,
+            dropped: self.dropped,
+            downlink_sent: self.downlink_sent,
+            downlink_shed: self.downlink_shed,
+        }
     }
 }
 
@@ -217,17 +400,29 @@ struct RunState {
     correct: u64,
     with_truth: u64,
     sim_end: f64,
+    /// Phase accumulators; the last entry is the current phase.  Never
+    /// empty — `begin` seeds the `"run"` placeholder.
+    phases: Vec<PhaseAccum>,
 }
 
 impl RunState {
+    /// Index of the current phase (what a dispatched batch is credited
+    /// to, and what its reaped decisions later credit).
+    fn phase_index(&self) -> usize {
+        self.phases.len() - 1
+    }
+
     /// Post-inference stages for one event: decision, truth scoring,
-    /// downlink verdict.
+    /// downlink verdict.  `phase` is the phase the event's batch was
+    /// *dispatched* in, so executor-path decisions reaped after a phase
+    /// transition still land in the right segment.
     fn decide_one(
         &mut self,
         use_case: UseCase,
         ev: &SensorEvent,
         output: &[f32],
         input_bytes: u64,
+        phase: usize,
     ) {
         let d = decide(use_case, output, &mut self.rng);
         if let Some(truth) = ev.truth {
@@ -238,8 +433,14 @@ impl RunState {
         }
         *self.decisions.entry(decision_key(&d)).or_insert(0) += 1;
         match self.downlink.offer(&d, input_bytes) {
-            DownlinkVerdict::Sent => self.metrics.inc("downlink_sent"),
-            DownlinkVerdict::Shed => self.metrics.inc("downlink_shed"),
+            DownlinkVerdict::Sent => {
+                self.metrics.inc("downlink_sent");
+                self.phases[phase].downlink_sent += 1;
+            }
+            DownlinkVerdict::Shed => {
+                self.metrics.inc("downlink_shed");
+                self.phases[phase].downlink_shed += 1;
+            }
         }
     }
 }
@@ -255,8 +456,8 @@ struct Reaper<'a> {
     next_id: u64,
     /// Next batch id to process (strict submission order).
     next_done: u64,
-    /// Events of submitted batches, keyed by batch id.
-    pending: BTreeMap<u64, Vec<SensorEvent>>,
+    /// (dispatch phase, events) of submitted batches, keyed by batch id.
+    pending: BTreeMap<u64, (usize, Vec<SensorEvent>)>,
     /// Completions that arrived ahead of `next_done`.
     arrived: BTreeMap<u64, ExecResult>,
 }
@@ -277,12 +478,19 @@ impl<'a> Reaper<'a> {
 
     /// One `ExecRequest` for the whole batch — the only executor
     /// dispatch on this path.  `precision` follows the chosen target
-    /// (int8 on the DPU slot, fp32 elsewhere).
-    fn submit(&mut self, model: &str, precision: Precision, batch: Batch) -> Result<()> {
+    /// (int8 on the DPU slot, fp32 elsewhere); `phase` is the mission
+    /// phase the batch was dispatched in.
+    fn submit(
+        &mut self,
+        model: &str,
+        precision: Precision,
+        phase: usize,
+        batch: Batch,
+    ) -> Result<()> {
         let items = batch.input_sets(); // Arc clones, zero-copy
         let id = self.next_id;
         self.next_id += 1;
-        self.pending.insert(id, batch.events);
+        self.pending.insert(id, (phase, batch.events));
         self.pool.submit(ExecRequest {
             model: model.to_string(),
             precision,
@@ -304,7 +512,7 @@ impl<'a> Reaper<'a> {
         state: &mut RunState,
     ) -> Result<()> {
         while let Some(res) = self.arrived.remove(&self.next_done) {
-            let events = self
+            let (phase, events) = self
                 .pending
                 .remove(&res.id)
                 .ok_or_else(|| anyhow!("reaped unknown batch id {}", res.id))?;
@@ -327,7 +535,7 @@ impl<'a> Reaper<'a> {
             );
             state.metrics.inc(&format!("exec_worker_{}", res.worker));
             for (ev, out) in events.iter().zip(&outputs) {
-                state.decide_one(use_case, ev, out, input_bytes);
+                state.decide_one(use_case, ev, out, input_bytes, phase);
             }
             self.next_done += 1;
         }
@@ -396,7 +604,9 @@ pub struct Pipeline {
     pub config: PipelineConfig,
     /// Primary route (paper deployment matrix) for the use case.
     pub route: Route,
-    /// Per-batch target selection (cost model + policy).
+    /// Per-batch target selection (cost model + policy).  Its `policy`,
+    /// `deadline_s`, `power_budget_w`, and registry availability are
+    /// the knobs a [`PipelineRun`] mutates between ticks.
     pub dispatcher: Dispatcher,
     input_bytes: u64,
 }
@@ -437,17 +647,16 @@ impl Pipeline {
         reaper: &mut Option<Reaper<'_>>,
     ) -> Result<()> {
         let cfg = &self.config;
+        let phase = state.phase_index();
         let n = batch.len() as u64;
         let oldest_t_s = batch.events.first().map(|e| e.t_s).unwrap_or(batch.flushed_at_s);
         let choice =
             self.dispatcher
                 .choose(&state.timelines, batch.flushed_at_s, oldest_t_s, n);
         let target = self.dispatcher.registry.get(choice.index);
-        let (_start, done) = state.timelines[choice.index].schedule(
-            batch.flushed_at_s,
-            n,
-            self.dispatcher.run_of(choice.index),
-        );
+        let srun = self.dispatcher.run_of(choice.index);
+        let (start, done) =
+            state.timelines[choice.index].schedule(batch.flushed_at_s, n, srun);
         state.sim_end = state.sim_end.max(done);
         state.metrics.add("batches", 1);
         state.metrics.add("inferences", n);
@@ -468,7 +677,8 @@ impl Pipeline {
             "measured_batch_latency",
             Duration::from_secs_f64((done - batch.flushed_at_s).max(0.0)),
         );
-        if done - oldest_t_s > self.dispatcher.deadline_s {
+        let missed = done - oldest_t_s > self.dispatcher.deadline_s;
+        if missed {
             state.deadline_misses += 1;
             state.metrics.inc("deadline_miss_batches");
         }
@@ -479,9 +689,25 @@ impl Pipeline {
         for ev in &batch.events {
             state.latencies.push(done - ev.t_s);
         }
+        // phase-segmented accounting: credit the dispatching phase
+        {
+            let ph = &mut state.phases[phase];
+            ph.batches += 1;
+            *ph.target_mix.entry(target.name().to_string()).or_insert(0) += 1;
+            ph.energy_j += srun.power_w * (done - start);
+            if missed {
+                ph.deadline_misses += 1;
+            }
+            if choice.power_shed {
+                ph.power_sheds += 1;
+            }
+            for ev in &batch.events {
+                ph.latencies.push(done - ev.t_s);
+            }
+        }
         match reaper {
             Some(r) => {
-                r.submit(&self.route.model, target.precision(), batch)?;
+                r.submit(&self.route.model, target.precision(), phase, batch)?;
                 // overlap: absorb any batches that already finished,
                 // then apply backpressure so in-flight work is bounded
                 r.drain_ready(cfg.use_case, self.input_bytes, state)?;
@@ -497,22 +723,34 @@ impl Pipeline {
                 // processed inline (same RNG order as the PJRT path)
                 for ev in &batch.events {
                     let out = surrogate_output(cfg.use_case, ev, &mut state.rng);
-                    state.decide_one(cfg.use_case, ev, &out, self.input_bytes);
+                    state.decide_one(cfg.use_case, ev, &out, self.input_bytes, phase);
                 }
                 Ok(())
             }
         }
     }
 
-    /// Run the pipeline.  `executor` supplies real numerics through the
-    /// sharded pool; pass `None` for a timing-only (simulated outputs)
-    /// run — decisions then come from a deterministic surrogate so
-    /// downstream stages still exercise.
-    pub fn run(&self, executor: Option<&ExecutorPool>) -> Result<PipelineReport> {
+    /// Open a steppable run: the state machine behind [`Pipeline::run`]
+    /// and the `crate::scenario` engine.  `executor` supplies real
+    /// numerics through the sharded pool; pass `None` for a timing-only
+    /// (deterministic surrogate outputs) run.
+    ///
+    /// The run borrows the pipeline mutably so knob mutations between
+    /// ticks ([`PipelineRun::set_policy`] and friends) are visible to
+    /// the very next dispatch.  Mutations persist on the `Pipeline`
+    /// after the run finishes — scenario drivers build a fresh
+    /// `Pipeline` per run.
+    pub fn begin<'e>(
+        &mut self,
+        executor: Option<&'e ExecutorPool>,
+    ) -> PipelineRun<'_, 'e> {
         let cfg = &self.config;
-        let mut stream = SensorStream::new(cfg.use_case, cfg.seed, cfg.cadence_s);
-        let mut batcher = Batcher::new(&self.route.model, cfg.max_batch, cfg.max_wait_s);
-        let mut state = RunState {
+        let stream = SensorStream::new(cfg.use_case, cfg.seed, cfg.cadence_s);
+        let batcher = Batcher::new(&self.route.model, cfg.max_batch, cfg.max_wait_s);
+        let ingress = cfg
+            .ingress_cap
+            .map(|cap| BoundedQueue::new(cap, cfg.ingress_policy));
+        let state = RunState {
             timelines: self.dispatcher.timelines(),
             downlink: DownlinkManager::new(cfg.downlink_budget),
             metrics: Metrics::default(),
@@ -526,34 +764,284 @@ impl Pipeline {
             correct: 0,
             with_truth: 0,
             sim_end: 0.0,
+            phases: vec![PhaseAccum::new("run", 0.0)],
         };
-        let mut reaper = executor.map(Reaper::new);
+        let base_cadence_s = cfg.cadence_s;
+        let reaper = executor.map(Reaper::new);
+        let base_deadline_s = self.dispatcher.deadline_s;
+        PipelineRun {
+            stream,
+            batcher,
+            ingress,
+            state,
+            reaper,
+            emitted: 0,
+            base_cadence_s,
+            base_deadline_s,
+            pipeline: self,
+        }
+    }
 
-        for _ in 0..cfg.n_events {
-            let ev = stream.next_event();
-            let now = ev.t_s;
-            if let Some(b) = batcher.poll(now) {
-                self.dispatch(b, &mut state, &mut reaper)?;
+    /// Run the pipeline: the thin driver loop over [`Pipeline::begin`],
+    /// `config.n_events` ticks, and [`PipelineRun::finish`].  `executor`
+    /// supplies real numerics through the sharded pool; pass `None` for
+    /// a timing-only (simulated outputs) run — decisions then come from
+    /// a deterministic surrogate so downstream stages still exercise.
+    pub fn run(&mut self, executor: Option<&ExecutorPool>) -> Result<PipelineReport> {
+        let n = self.config.n_events;
+        let mut run = self.begin(executor);
+        for _ in 0..n {
+            run.tick()?;
+        }
+        run.finish()
+    }
+}
+
+/// One in-progress pipeline run: the steppable state machine.
+///
+/// Obtained from [`Pipeline::begin`].  Each [`PipelineRun::tick`]
+/// advances the virtual clock by one sensor event (generate → ingress
+/// admission → batch → dispatch → decide/downlink); between ticks the
+/// caller may retune any operational knob — dispatch policy, power
+/// budget, deadline, cadence/burst, downlink budget, per-target
+/// availability — and the next dispatch obeys it.  `crate::scenario`
+/// drives this interface from declarative mission timelines.
+pub struct PipelineRun<'p, 'e> {
+    pipeline: &'p mut Pipeline,
+    stream: SensorStream,
+    batcher: Batcher,
+    ingress: Option<BoundedQueue<SensorEvent>>,
+    state: RunState,
+    reaper: Option<Reaper<'e>>,
+    emitted: u64,
+    base_cadence_s: f64,
+    base_deadline_s: f64,
+}
+
+impl PipelineRun<'_, '_> {
+    /// The virtual-clock frontier (s): the timestamp the next generated
+    /// event will carry.
+    pub fn now_s(&self) -> f64 {
+        self.stream.t_s
+    }
+
+    /// Sensor events generated so far.
+    pub fn events_emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    /// The deadline the run started with (s) — what
+    /// [`PipelineRun::set_deadline_s`] restores after a storm tightens
+    /// it.
+    pub fn base_deadline_s(&self) -> f64 {
+        self.base_deadline_s
+    }
+
+    /// Switch the dispatch policy; the next batch is scored under it.
+    pub fn set_policy(&mut self, policy: Policy) {
+        self.pipeline.dispatcher.policy = policy;
+    }
+
+    /// Set or lift the mission power budget (cap on active MPSoC draw,
+    /// W).  Only dynamic policies consult it.
+    pub fn set_power_budget_w(&mut self, budget_w: Option<f64>) {
+        self.pipeline.dispatcher.power_budget_w = budget_w;
+    }
+
+    /// Retune the end-to-end deadline (s).
+    pub fn set_deadline_s(&mut self, deadline_s: f64) {
+        assert!(
+            deadline_s > 0.0 && deadline_s.is_finite(),
+            "deadline must be positive and finite"
+        );
+        self.pipeline.dispatcher.deadline_s = deadline_s;
+    }
+
+    /// Change the sensor cadence (s between samples) from the next
+    /// inter-event gap on.
+    pub fn set_cadence_s(&mut self, cadence_s: f64) {
+        self.stream.set_cadence(cadence_s);
+    }
+
+    /// Multiply the *base* event rate: `set_burst(100.0)` runs the
+    /// sensor 100× faster than the configured cadence,
+    /// `set_burst(1.0)` restores it.
+    pub fn set_burst(&mut self, burst_x: f64) {
+        assert!(
+            burst_x > 0.0 && burst_x.is_finite(),
+            "burst multiplier must be positive and finite"
+        );
+        self.stream.set_cadence(self.base_cadence_s / burst_x);
+    }
+
+    /// Grant additional downlink byte budget (a ground-station pass).
+    pub fn grant_downlink_bytes(&mut self, bytes: u64) {
+        self.state.downlink.budget_bytes += bytes;
+        self.state.metrics.add("downlink_budget_granted", bytes);
+    }
+
+    /// Registry index of a dispatch target by name, if registered for
+    /// this run's model.
+    pub fn target_index(&self, name: &str) -> Option<usize> {
+        self.pipeline.dispatcher.registry.index_of(name)
+    }
+
+    /// Mark a dispatch target in or out of service (see
+    /// [`crate::backend::TargetRegistry::set_available`]).  The next
+    /// batch re-dispatches around an out-of-service target.
+    pub fn set_target_available(&mut self, index: usize, available: bool) {
+        self.pipeline.dispatcher.registry.set_available(index, available);
+        self.state.metrics.inc(if available {
+            "target_restored"
+        } else {
+            "target_knocked_out"
+        });
+    }
+
+    /// Start a new report phase at the current virtual time.  All
+    /// subsequent batches, drops, and downlink verdicts are credited to
+    /// it.  The very first call renames the initial `"run"` placeholder
+    /// in place (so a scenario's first phase is the report's first
+    /// phase); later calls close the current phase and open a new one.
+    pub fn begin_phase(&mut self, name: &str) {
+        let now = self.stream.t_s;
+        let phases = &mut self.state.phases;
+        if phases.len() == 1 && phases[0].is_untouched() && phases[0].name == "run" {
+            phases[0].name = name.to_string();
+            phases[0].start_s = now;
+            phases[0].end_s = now;
+            return;
+        }
+        if let Some(last) = phases.last_mut() {
+            last.end_s = now;
+        }
+        phases.push(PhaseAccum::new(name, now));
+    }
+
+    /// Can the ingress queue release an event to the batcher right now?
+    /// Yes while the least-loaded in-service target is within the
+    /// configured backlog bound — otherwise events pool (and overflow
+    /// sheds) instead of growing an unbounded batch backlog.  With
+    /// *nothing* in service the gate falls back to the full set, the
+    /// same "a spacecraft cannot stop deciding" fallback the dispatcher
+    /// applies — the two layers must agree on whether work proceeds.
+    fn admission_open(&self, now_s: f64) -> bool {
+        let d = &self.pipeline.dispatcher;
+        let bound = self.pipeline.config.ingress_max_backlog_s;
+        let min_over = |available_only: bool| {
+            (0..d.registry.len())
+                .filter(|&i| !available_only || d.registry.is_available(i))
+                .map(|i| self.state.timelines[i].backlog_s(now_s))
+                .fold(f64::INFINITY, f64::min)
+        };
+        let min_backlog = if d.registry.available_count() > 0 {
+            min_over(true)
+        } else {
+            min_over(false)
+        };
+        min_backlog <= bound
+    }
+
+    /// Advance the virtual clock by exactly one sensor event: generate
+    /// it, run ingress admission (when configured), feed the batcher,
+    /// and dispatch whatever flushes.
+    pub fn tick(&mut self) -> Result<()> {
+        let ev = self.stream.next_event();
+        let now = ev.t_s;
+        self.emitted += 1;
+        {
+            let idx = self.state.phase_index();
+            self.state.phases[idx].events += 1;
+        }
+        if let Some(b) = self.batcher.poll(now) {
+            self.pipeline.dispatch(b, &mut self.state, &mut self.reaper)?;
+        }
+        if self.ingress.is_none() {
+            if let Some(b) = self.batcher.offer(ev, now) {
+                self.pipeline.dispatch(b, &mut self.state, &mut self.reaper)?;
             }
-            if let Some(b) = batcher.offer(ev, now) {
-                self.dispatch(b, &mut state, &mut reaper)?;
+            return Ok(());
+        }
+        let dropped_before = self.ingress.as_ref().map(|q| q.dropped).unwrap_or(0);
+        // free queue space first — if the backlog has drained since the
+        // last tick, the pooled events leave before the new one arrives
+        self.drain_ingress(now)?;
+        if let Some(q) = self.ingress.as_mut() {
+            q.push(ev);
+        }
+        self.drain_ingress(now)?;
+        let dropped_now = self.ingress.as_ref().map(|q| q.dropped).unwrap_or(0);
+        let shed = dropped_now - dropped_before;
+        if shed > 0 {
+            let idx = self.state.phase_index();
+            self.state.phases[idx].dropped += shed;
+            self.state.metrics.add("ingress_dropped", shed);
+        }
+        Ok(())
+    }
+
+    /// Admission loop: release queued events into the batcher while
+    /// some in-service target is keeping up.  Each release may flush a
+    /// batch, which grows the backlog, so the gate is re-checked per
+    /// event.
+    fn drain_ingress(&mut self, now_s: f64) -> Result<()> {
+        loop {
+            if !self.admission_open(now_s) {
+                return Ok(());
+            }
+            let ev = match self.ingress.as_mut().and_then(|q| q.pop()) {
+                Some(ev) => ev,
+                None => return Ok(()),
+            };
+            if let Some(b) = self.batcher.offer(ev, now_s) {
+                self.pipeline.dispatch(b, &mut self.state, &mut self.reaper)?;
             }
         }
-        let drain_t = cfg.n_events as f64 * cfg.cadence_s + cfg.max_wait_s;
+    }
+
+    /// Drain everything in flight and assemble the report.  For a
+    /// constant-cadence single-phase run the aggregate fields are
+    /// bit-identical to the pre-steppable `Pipeline::run`.
+    pub fn finish(mut self) -> Result<PipelineReport> {
+        let cfg = self.pipeline.config.clone();
+        // release any events still pooled at ingress: they were
+        // accepted, so they run (the queue bounds memory, not the tail)
+        let now = self.stream.t_s;
+        loop {
+            let ev = match self.ingress.as_mut().and_then(|q| q.pop()) {
+                Some(ev) => ev,
+                None => break,
+            };
+            if let Some(b) = self.batcher.offer(ev, now) {
+                self.pipeline.dispatch(b, &mut self.state, &mut self.reaper)?;
+            }
+        }
         // end-of-run drain: by drain_t the wait timer is always overdue,
         // so poll() stamps the flush when that timer would have fired
         // (oldest + max_wait) instead of charging the full drain gap;
         // the unconditional flush below is only the empty-batcher no-op.
-        if let Some(b) = batcher.poll(drain_t) {
-            self.dispatch(b, &mut state, &mut reaper)?;
+        // (stream.t_s is the virtual frontier — for a constant cadence
+        // it equals n_events * cadence_s, the pre-steppable formula.)
+        let drain_t = self.stream.t_s + cfg.max_wait_s;
+        if let Some(b) = self.batcher.poll(drain_t) {
+            self.pipeline.dispatch(b, &mut self.state, &mut self.reaper)?;
         }
-        if let Some(b) = batcher.flush(drain_t) {
-            self.dispatch(b, &mut state, &mut reaper)?;
+        if let Some(b) = self.batcher.flush(drain_t) {
+            self.pipeline.dispatch(b, &mut self.state, &mut self.reaper)?;
         }
-        if let Some(r) = &mut reaper {
-            r.drain_all(cfg.use_case, self.input_bytes, &mut state)?;
+        if let Some(r) = &mut self.reaper {
+            r.drain_all(cfg.use_case, self.pipeline.input_bytes, &mut self.state)?;
         }
 
+        // accepted = events that got past ingress.  Derived from the
+        // drop count rather than the queue's `accepted` counter so the
+        // invariant accepted + dropped == events emitted holds under
+        // BOTH overflow policies (DropOldest counts an evicted item as
+        // accepted-then-dropped in the queue's own bookkeeping).
+        let (ingress_accepted, ingress_dropped) = match &self.ingress {
+            Some(q) => (self.emitted - q.dropped, q.dropped),
+            None => (self.emitted, 0),
+        };
         let RunState {
             timelines,
             downlink,
@@ -567,8 +1055,9 @@ impl Pipeline {
             correct,
             with_truth,
             sim_end,
+            mut phases,
             ..
-        } = state;
+        } = self.state;
         latencies.sort_by(f64::total_cmp);
         let mean = latencies.iter().sum::<f64>() / latencies.len().max(1) as f64;
         let p95 = percentile_nearest_rank(&latencies, 0.95);
@@ -576,11 +1065,18 @@ impl Pipeline {
         let busy_s: f64 = timelines.iter().map(|t| t.busy_s).sum();
         let energy_j: f64 = timelines.iter().map(|t| t.energy_j).sum();
         let busy_fps = if busy_s > 0.0 { completed as f64 / busy_s } else { 0.0 };
+        // the final phase ends when the last batch completes (or at the
+        // event frontier, whichever is later)
+        let run_end = sim_end.max(self.stream.t_s);
+        if let Some(last) = phases.last_mut() {
+            last.end_s = run_end;
+        }
+        let phases: Vec<PhaseReport> = phases.iter_mut().map(PhaseAccum::finalize).collect();
         Ok(PipelineReport {
             use_case: cfg.use_case,
-            model: self.route.model.clone(),
-            slot: self.route.slot,
-            policy: cfg.policy.as_str().to_string(),
+            model: self.pipeline.route.model.clone(),
+            slot: self.pipeline.route.slot,
+            policy: self.pipeline.dispatcher.policy.as_str().to_string(),
             target_mix: target_batches,
             events: completed,
             sim_elapsed_s: sim_end,
@@ -592,6 +1088,8 @@ impl Pipeline {
             predicted_energy_j,
             deadline_misses,
             power_sheds,
+            ingress_accepted,
+            ingress_dropped,
             downlink_sent: downlink.sent_count,
             downlink_shed: downlink.shed_count,
             downlink_sent_bytes: downlink.sent_bytes,
@@ -602,6 +1100,7 @@ impl Pipeline {
                 None
             },
             decisions,
+            phases,
             metrics,
         })
     }
@@ -717,5 +1216,232 @@ mod tests {
         assert!(cfg.deadline_s.is_none());
         assert!(cfg.power_budget_w.is_none());
         assert_eq!(cfg.targets, TargetSet::Default);
+        assert!(cfg.ingress_cap.is_none(), "ingress off by default");
+    }
+
+    fn vae_pipeline(policy: Policy) -> Pipeline {
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        Pipeline::new(
+            PipelineConfig {
+                use_case: UseCase::Vae,
+                n_events: 60,
+                cadence_s: 0.05,
+                policy,
+                ..Default::default()
+            },
+            &catalog,
+            &calib,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn stepped_run_matches_driver_loop_bitwise() {
+        // run() is only a driver over begin/tick/finish: stepping by
+        // hand must produce the identical report
+        let mut a = vae_pipeline(Policy::MinLatency);
+        let ra = a.run(None).unwrap();
+        let mut b = vae_pipeline(Policy::MinLatency);
+        let mut run = b.begin(None);
+        for _ in 0..60 {
+            run.tick().unwrap();
+        }
+        let rb = run.finish().unwrap();
+        assert_eq!(ra.target_mix, rb.target_mix);
+        assert_eq!(ra.mean_latency_s.to_bits(), rb.mean_latency_s.to_bits());
+        assert_eq!(ra.energy_j.to_bits(), rb.energy_j.to_bits());
+        assert_eq!(ra.decisions, rb.decisions);
+        assert_eq!(ra.phases.len(), 1);
+        assert_eq!(ra.phases[0].name, "run");
+        assert_eq!(ra.phases[0].energy_j.to_bits(), rb.phases[0].energy_j.to_bits());
+    }
+
+    #[test]
+    fn single_phase_totals_match_phase_slice() {
+        let mut p = vae_pipeline(Policy::Static);
+        let r = p.run(None).unwrap();
+        assert_eq!(r.phases.len(), 1);
+        let ph = &r.phases[0];
+        assert_eq!(ph.target_mix, r.target_mix);
+        assert_eq!(ph.deadline_misses, r.deadline_misses);
+        assert_eq!(ph.downlink_sent, r.downlink_sent);
+        assert_eq!(ph.downlink_shed, r.downlink_shed);
+        assert_eq!(ph.events, 60);
+        // phase energy is per-dispatch accumulation of the same charges
+        // the timelines integrate
+        assert!((ph.energy_j - r.energy_j).abs() < 1e-9);
+        assert_eq!(ph.mean_latency_s.to_bits(), r.mean_latency_s.to_bits());
+        assert_eq!(ph.p95_latency_s.to_bits(), r.p95_latency_s.to_bits());
+    }
+
+    #[test]
+    fn power_budget_change_between_ticks_shifts_the_mix() {
+        let mut p = vae_pipeline(Policy::MinLatency);
+        let mut run = p.begin(None);
+        run.begin_phase("sunlit");
+        for _ in 0..30 {
+            run.tick().unwrap();
+        }
+        run.begin_phase("eclipse");
+        run.set_power_budget_w(Some(4.0));
+        for _ in 0..30 {
+            run.tick().unwrap();
+        }
+        let r = run.finish().unwrap();
+        assert_eq!(r.phases.len(), 2);
+        assert_eq!(r.phases[0].name, "sunlit");
+        // unconstrained min-latency keeps the VAE on the 5.75 W DPU; the
+        // 4 W eclipse budget excludes it mid-run — visible per phase
+        assert!(r.phases[0].target_mix.contains_key("dpu"));
+        assert_eq!(r.phases[0].power_sheds, 0);
+        assert!(!r.phases[1].target_mix.contains_key("dpu"));
+        assert!(r.phases[1].power_sheds > 0, "budget changed decisions");
+    }
+
+    #[test]
+    fn target_knockout_between_ticks_redispatches() {
+        let mut p = vae_pipeline(Policy::Static);
+        let mut run = p.begin(None);
+        run.begin_phase("nominal");
+        for _ in 0..24 {
+            run.tick().unwrap();
+        }
+        let dpu = run.target_index("dpu").unwrap();
+        run.begin_phase("upset");
+        run.set_target_available(dpu, false);
+        for _ in 0..24 {
+            run.tick().unwrap();
+        }
+        let r = run.finish().unwrap();
+        assert!(r.phases[0].target_mix.contains_key("dpu"));
+        assert!(
+            !r.phases[1].target_mix.contains_key("dpu"),
+            "static policy must re-dispatch off the knocked-out primary: {:?}",
+            r.phases[1].target_mix
+        );
+        assert!(r.phases[1].batches > 0);
+    }
+
+    #[test]
+    fn ingress_queue_decimates_saturated_runs() {
+        // BaselineNet on HLS serves ~0.21 fps against 6.7 events/s: the
+        // ingress queue must shed most of the stream instead of growing
+        // an unbounded backlog
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        let mut p = Pipeline::new(
+            PipelineConfig {
+                use_case: UseCase::Mms,
+                mms_model: "baseline".into(),
+                n_events: 120,
+                ingress_cap: Some(8),
+                ingress_max_backlog_s: 1.0,
+                ..Default::default()
+            },
+            &catalog,
+            &calib,
+        )
+        .unwrap();
+        let r = p.run(None).unwrap();
+        assert!(r.ingress_dropped > 0, "saturated run must decimate");
+        assert_eq!(r.phases[0].dropped, r.ingress_dropped);
+        assert!(r.events < 120, "dropped events never execute");
+        assert_eq!(
+            r.ingress_accepted + r.ingress_dropped,
+            120,
+            "every event is accepted or dropped"
+        );
+        // without the queue the same run executes everything
+        let mut free = Pipeline::new(
+            PipelineConfig {
+                use_case: UseCase::Mms,
+                mms_model: "baseline".into(),
+                n_events: 120,
+                ..Default::default()
+            },
+            &catalog,
+            &calib,
+        )
+        .unwrap();
+        let rf = free.run(None).unwrap();
+        assert_eq!(rf.events, 120);
+        assert_eq!(rf.ingress_dropped, 0);
+        assert_eq!(rf.ingress_accepted, 120);
+    }
+
+    #[test]
+    fn ingress_accounting_holds_for_drop_oldest() {
+        // the queue's own counters mark an evicted item as
+        // accepted-then-dropped; the report must still partition the
+        // emitted events exactly
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        let mut p = Pipeline::new(
+            PipelineConfig {
+                use_case: UseCase::Mms,
+                mms_model: "baseline".into(),
+                n_events: 120,
+                ingress_cap: Some(8),
+                ingress_policy: OverflowPolicy::DropOldest,
+                ingress_max_backlog_s: 1.0,
+                ..Default::default()
+            },
+            &catalog,
+            &calib,
+        )
+        .unwrap();
+        let r = p.run(None).unwrap();
+        assert!(r.ingress_dropped > 0, "saturated run must evict");
+        assert_eq!(
+            r.ingress_accepted + r.ingress_dropped,
+            120,
+            "accepted + dropped must partition the emitted events"
+        );
+        assert_eq!(r.events, r.ingress_accepted, "survivors execute at drain");
+    }
+
+    #[test]
+    fn burst_and_deadline_retune_between_ticks() {
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        let mut p = Pipeline::new(
+            PipelineConfig {
+                use_case: UseCase::Esperta,
+                n_events: 40,
+                cadence_s: 0.5,
+                max_wait_s: 0.05,
+                policy: Policy::Deadline,
+                ..Default::default()
+            },
+            &catalog,
+            &calib,
+        )
+        .unwrap();
+        let mut run = p.begin(None);
+        let base = run.base_deadline_s();
+        for _ in 0..10 {
+            run.tick().unwrap();
+        }
+        let t_quiet = run.now_s();
+        run.set_burst(100.0);
+        run.set_deadline_s(0.05);
+        for _ in 0..20 {
+            run.tick().unwrap();
+        }
+        let t_storm = run.now_s();
+        run.set_burst(1.0);
+        run.set_deadline_s(base);
+        for _ in 0..10 {
+            run.tick().unwrap();
+        }
+        let t_recover = run.now_s();
+        // 20 storm events advanced the clock ~100x slower than 10 quiet
+        let quiet_span = t_quiet; // 10 events at 0.5 s
+        let storm_span = t_storm - t_quiet; // 20 events at 5 ms
+        let recover_span = t_recover - t_storm; // 10 events at 0.5 s
+        assert!(storm_span < quiet_span / 10.0, "{storm_span} vs {quiet_span}");
+        assert!(recover_span > storm_span, "cadence must restore");
+        run.finish().unwrap();
     }
 }

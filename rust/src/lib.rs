@@ -16,6 +16,14 @@
 //! naive-HLS triple is just the default registry, with the full DPU
 //! size family and a pipelined-HLS variant behind `--targets all`.
 //!
+//! Mission conditions change *inside* a run: the pipeline is a
+//! steppable state machine ([`coordinator::Pipeline::begin`] /
+//! [`coordinator::PipelineRun::tick`]) whose policy, power budget,
+//! deadline, cadence, and per-target availability are mutable between
+//! ticks, and the [`scenario`] layer drives it from declarative mission
+//! timelines (`spaceinfer scenario <name>`), producing phase-segmented
+//! reports.
+//!
 //! Start with `docs/ARCHITECTURE.md` for the module map, the
 //! batch-native dispatch lifecycle, and the cost-model dispatch flow.
 
@@ -35,6 +43,7 @@ pub mod runtime;
 pub mod sensors;
 pub mod telemetry;
 pub mod coordinator;
+pub mod scenario;
 pub mod report;
 
 /// Crate-wide result type.

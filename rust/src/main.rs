@@ -14,6 +14,7 @@
 //!     [--policy static|min-latency|min-energy|deadline]
 //!     [--power-budget W] [--deadline-ms MS] [--targets default|all|...]
 //! spaceinfer policies [--use-case vae]            policy comparison table
+//! spaceinfer scenario <name> | --list             mission scenario engine
 //! spaceinfer targets [--use-case vae]             target-matrix table
 //! spaceinfer inspect --model vae                  manifests, DPU program
 //! spaceinfer calibrate [--save calib.json]        dump calibration
@@ -130,6 +131,7 @@ fn run() -> Result<()> {
         "selfcheck" => selfcheck(&dir),
         "pipeline" => pipeline_cmd(&args, &dir, calib),
         "policies" => policies_cmd(&args, &dir, calib),
+        "scenario" => scenario_cmd(&args, &dir, calib),
         "targets" => targets_cmd(&args, &dir, calib),
         "inspect" => inspect(&args, &dir, &calib),
         "calibrate" => {
@@ -223,6 +225,21 @@ fn parse_power_budget_w(args: &Args) -> Result<Option<f64>> {
     })
 }
 
+/// `--ingress-cap N` -> bounded sensor-ingress queue; absent -> off
+/// (every event admitted unconditionally, the legacy behavior).
+fn parse_ingress_cap(args: &Args) -> Result<Option<usize>> {
+    Ok(match args.flags.get("ingress-cap") {
+        Some(_) => {
+            let cap = args.get_usize("ingress-cap", 0)?;
+            if cap == 0 {
+                bail!("--ingress-cap must be >= 1 (omit the flag to disable the queue)");
+            }
+            Some(cap)
+        }
+        None => None,
+    })
+}
+
 /// Catalog from `--artifacts`, or the synthetic stand-in catalog when
 /// the artifacts directory does not exist (policy exploration works
 /// without `make artifacts`; simulated numbers are stand-ins then).
@@ -252,6 +269,8 @@ fn pipeline_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
         deadline_s: parse_deadline_s(args)?,
         power_budget_w: parse_power_budget_w(args)?,
         targets: TargetSet::parse(args.get("targets", "default"))?,
+        ingress_cap: parse_ingress_cap(args)?,
+        ..Default::default()
     };
     if cfg.policy == Policy::Static && cfg.power_budget_w.is_some() {
         bail!(
@@ -260,7 +279,7 @@ fn pipeline_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
              or deadline)"
         );
     }
-    let pipeline = Pipeline::new(cfg, &catalog, &calib)?;
+    let mut pipeline = Pipeline::new(cfg, &catalog, &calib)?;
     if !args.has("real") {
         for flag in ["workers", "exec-backend"] {
             if args.flags.contains_key(flag) {
@@ -326,8 +345,50 @@ fn policies_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
         mms_model: args.get("mms-model", "baseline").to_string(),
         seed: args.get_usize("seed", 7)? as u64,
         targets: TargetSet::parse(args.get("targets", "default"))?,
+        ingress_cap: parse_ingress_cap(args)?,
     };
     println!("{}", policy::policy_comparison(&catalog, &calib, &run)?.render());
+    Ok(())
+}
+
+/// `spaceinfer scenario <name>` — run a built-in mission scenario on
+/// the steppable pipeline (timing-only, artifact-free) and print the
+/// phase-segmented report; `--list` tabulates the library.
+fn scenario_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
+    use spaceinfer::scenario;
+    use spaceinfer::util::table::Table;
+    let name = args.positional.first().map(String::as_str);
+    if args.has("list") || name.is_none() {
+        let mut t = Table::new(
+            "Built-in mission scenarios (spaceinfer scenario <name>)",
+            &["Name", "Use case", "Events", "Phases", "Mission"],
+        );
+        for sc in scenario::all_builtins() {
+            t.row(vec![
+                sc.name.clone(),
+                sc.config.use_case.to_string(),
+                sc.total_events().to_string(),
+                sc.phase_chain(),
+                sc.summary.clone(),
+            ]);
+        }
+        println!("{}", t.render());
+        return Ok(());
+    }
+    let mut sc = scenario::builtin(name.unwrap_or_default())?;
+    if args.flags.contains_key("seed") {
+        sc.config.seed = args.get_usize("seed", 7)? as u64;
+    }
+    let catalog = catalog_or_synthetic(dir)?;
+    println!(
+        "scenario [{}] — {}\n  phases: {}\n",
+        sc.name,
+        sc.summary,
+        sc.phase_chain()
+    );
+    let report = scenario::run_scenario(&sc, &catalog, &calib, None)?;
+    print!("{}", report.render());
+    println!("--- telemetry ---\n{}", report.metrics.report());
     Ok(())
 }
 
@@ -406,11 +467,16 @@ usage: spaceinfer <subcommand> [--artifacts DIR] [--calib FILE]
                       [--policy static|min-latency|min-energy|deadline]
                       [--power-budget W] [--deadline-ms MS]
                       [--targets default|all|cpu,dpu-b1024,hls-pipe,...]
+                      [--ingress-cap N]
   policies            dispatch-policy comparison table (all policies)
                       [--use-case ...] [--n N] [--cadence S]
                       [--batch B] [--max-wait S]
                       [--power-budget W] [--deadline-ms MS]
-                      [--targets default|all|NAMES]
+                      [--targets default|all|NAMES] [--ingress-cap N]
+  scenario            run a built-in mission scenario (steppable
+                      pipeline + declarative timeline; artifact-free,
+                      phase-segmented report)
+                      scenario --list | scenario <name> [--seed N]
   targets             registered-target comparison matrix (latency,
                       energy, power, footprint, essential bits)
                       [--use-case ...] [--mms-model NAME] [--batch B]

@@ -156,7 +156,14 @@ impl TraceBuilder {
     }
 }
 
-/// Render a trace as CSV (t_s, power_w, phase).
+/// The highest-power sample of a trace, `None` for an empty trace —
+/// the panic-free peak lookup the renderers and reports share.
+pub fn peak(points: &[TracePoint]) -> Option<&TracePoint> {
+    points.iter().max_by(|a, b| a.power_w.total_cmp(&b.power_w))
+}
+
+/// Render a trace as CSV (t_s, power_w, phase).  An empty trace
+/// renders as the bare header — never a panic.
 pub fn to_csv(points: &[TracePoint]) -> String {
     let mut out = String::from("t_s,power_w,phase\n");
     for p in points {
@@ -166,12 +173,15 @@ pub fn to_csv(points: &[TracePoint]) -> String {
 }
 
 /// Render a coarse ASCII plot (for terminal inspection of the figure).
+/// An empty trace renders as an empty plot (no samples, no footer) —
+/// never a panic.
 pub fn to_ascii(points: &[TracePoint], width: usize, height: usize) -> String {
-    if points.is_empty() {
+    let Some(last) = points.last() else {
         return String::new();
-    }
-    let t_max = points.last().unwrap().t_s.max(1e-9);
-    let p_max = points.iter().map(|p| p.power_w).fold(0.0, f64::max) * 1.05;
+    };
+    let t_max = last.t_s.max(1e-9);
+    // 1e-9 floor: an all-zero trace plots flat instead of dividing by 0
+    let p_max = (peak(points).map(|p| p.power_w).unwrap_or(0.0) * 1.05).max(1e-9);
     let mut grid = vec![vec![b' '; width]; height];
     for p in points {
         let x = ((p.t_s / t_max) * (width - 1) as f64) as usize;
@@ -225,8 +235,20 @@ mod tests {
             &Implementation::Hls { kiloluts: 6.5, brams: 150.5, duty: 1.0 },
             2.75, 10, 0.024, 0.001, 4.76,
         );
-        let peak = tr.iter().max_by(|a, b| a.power_w.total_cmp(&b.power_w)).unwrap();
-        assert_eq!(peak.phase, Phase::BitstreamLoad);
+        let top = peak(&tr).expect("non-empty trace has a peak");
+        assert_eq!(top.phase, Phase::BitstreamLoad);
+    }
+
+    #[test]
+    fn empty_trace_renders_empty_not_panics() {
+        let none: Vec<TracePoint> = Vec::new();
+        assert_eq!(to_csv(&none), "t_s,power_w,phase\n");
+        assert_eq!(to_ascii(&none, 80, 16), "");
+        assert!(peak(&none).is_none());
+        // a zero-power trace must also render without dividing by zero
+        let flat = vec![TracePoint { t_s: 0.0, power_w: 0.0, phase: Phase::Idle }];
+        let art = to_ascii(&flat, 10, 4);
+        assert!(art.contains("peak 0.00 W"));
     }
 
     #[test]

@@ -38,6 +38,10 @@ pub struct PolicyRun {
     pub seed: u64,
     /// Which backend targets every policy row dispatches over.
     pub targets: TargetSet,
+    /// Bounded sensor-ingress queue capacity; `None` (default) admits
+    /// every event.  When set, the Drops column shows the decimation
+    /// each policy's backlog forces.
+    pub ingress_cap: Option<usize>,
 }
 
 impl Default for PolicyRun {
@@ -55,6 +59,7 @@ impl Default for PolicyRun {
             mms_model: "baseline".into(),
             seed: 7,
             targets: TargetSet::Default,
+            ingress_cap: None,
         }
     }
 }
@@ -85,6 +90,7 @@ pub fn policy_comparison(
             "Energy (J)",
             "Deadline misses",
             "Power sheds",
+            "Drops",
         ],
     );
     for policy in [
@@ -105,6 +111,7 @@ pub fn policy_comparison(
             policy,
             deadline_s: run.deadline_s,
             power_budget_w: run.power_budget_w,
+            ingress_cap: run.ingress_cap,
             ..Default::default()
         };
         let report = Pipeline::new(cfg, catalog, calib)?.run(None)?;
@@ -116,6 +123,7 @@ pub fn policy_comparison(
             format!("{:.3}", report.energy_j),
             report.deadline_misses.to_string(),
             report.power_sheds.to_string(),
+            report.ingress_dropped.to_string(),
         ]);
     }
     Ok(t)
@@ -135,6 +143,36 @@ mod tests {
         let rendered = t.render();
         assert!(rendered.contains("static"));
         assert!(rendered.contains("min-energy"));
+    }
+
+    #[test]
+    fn ingress_cap_surfaces_drops_column() {
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        // BaselineNet saturates at survey cadence: with a bounded
+        // ingress the decimation must be visible, not silent
+        let t = policy_comparison(
+            &catalog,
+            &calib,
+            &PolicyRun {
+                use_case: UseCase::Mms,
+                n_events: 100,
+                ingress_cap: Some(8),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(t.header.last().map(String::as_str), Some("Drops"));
+        let static_drops: u64 = t.rows[0].last().unwrap().parse().unwrap();
+        assert!(static_drops > 0, "saturated static row must show drops");
+        // without a queue every policy's Drops column reads 0
+        let free = policy_comparison(
+            &catalog,
+            &calib,
+            &PolicyRun { use_case: UseCase::Mms, n_events: 100, ..Default::default() },
+        )
+        .unwrap();
+        assert!(free.rows.iter().all(|r| r.last().unwrap() == "0"));
     }
 
     #[test]

@@ -1,0 +1,276 @@
+//! The scenario engine: drives a steppable pipeline run from a
+//! declarative [`Scenario`].
+//!
+//! The engine owns exactly three responsibilities, all on the virtual
+//! clock: (1) open a report phase and apply that phase's
+//! [`MissionEvent`]s at entry, (2) tick the pipeline once per sensor
+//! event, and (3) complete pending SEU repairs — a struck target
+//! returns to service at the first scrub boundary after the upset plus
+//! the bitstream reconfiguration time (`Calibration::t_config`), the
+//! same reload the Fig 13 power spike prices.
+
+use anyhow::{anyhow, Result};
+
+use crate::board::Calibration;
+use crate::coordinator::{Pipeline, PipelineReport, PipelineRun};
+use crate::model::catalog::Catalog;
+use crate::runtime::ExecutorPool;
+
+use super::{MissionEvent, Scenario};
+
+/// A target awaiting its scrub repair.
+struct PendingRepair {
+    /// Registry index of the struck target.
+    index: usize,
+    /// Virtual time the repair completes (s).
+    ready_at_s: f64,
+}
+
+/// Run a scenario end to end and return the phase-segmented report.
+///
+/// Deterministic: the same scenario and seed produce a bit-identical
+/// report.  `executor` supplies real numerics through the sharded pool;
+/// `None` runs timing-only (deterministic surrogate outputs), which is
+/// what `spaceinfer scenario` uses so every built-in runs without
+/// artifacts.
+pub fn run_scenario(
+    scenario: &Scenario,
+    catalog: &Catalog,
+    calib: &Calibration,
+    executor: Option<&ExecutorPool>,
+) -> Result<PipelineReport> {
+    let mut pipeline = Pipeline::new(scenario.config.clone(), catalog, calib)?;
+    let mut run = pipeline.begin(executor);
+    let mut repairs: Vec<PendingRepair> = Vec::new();
+    for phase in &scenario.phases {
+        run.begin_phase(&phase.name);
+        for event in &phase.events {
+            apply_event(event, &mut run, &mut repairs, scenario, calib)?;
+        }
+        for _ in 0..phase.n_events {
+            let now = run.now_s();
+            repairs.retain(|r| {
+                if now >= r.ready_at_s {
+                    run.set_target_available(r.index, true);
+                    false
+                } else {
+                    true
+                }
+            });
+            run.tick()?;
+        }
+    }
+    run.finish()
+}
+
+/// Apply one mission event to the run.  SEU upsets also schedule the
+/// repair that restores the target when the scrub window elapses.
+fn apply_event(
+    event: &MissionEvent,
+    run: &mut PipelineRun<'_, '_>,
+    repairs: &mut Vec<PendingRepair>,
+    scenario: &Scenario,
+    calib: &Calibration,
+) -> Result<()> {
+    match event {
+        MissionEvent::EnterEclipse { budget_w } => {
+            run.set_power_budget_w(Some(*budget_w));
+        }
+        MissionEvent::ExitEclipse => run.set_power_budget_w(None),
+        MissionEvent::SepStorm { burst_x, deadline_s } => {
+            run.set_burst(*burst_x);
+            run.set_deadline_s(*deadline_s);
+        }
+        MissionEvent::StormSubsides => {
+            run.set_burst(1.0);
+            let base = run.base_deadline_s();
+            run.set_deadline_s(base);
+        }
+        MissionEvent::DownlinkPass { budget_bytes } => {
+            run.grant_downlink_bytes(*budget_bytes);
+        }
+        MissionEvent::SetPolicy { policy } => run.set_policy(*policy),
+        MissionEvent::SeuUpset { target } => {
+            let index = run.target_index(target).ok_or_else(|| {
+                anyhow!(
+                    "scenario {:?} strikes unknown target {target:?} \
+                     (not registered for this model)",
+                    scenario.name
+                )
+            })?;
+            run.set_target_available(index, false);
+            let now = run.now_s();
+            let period = scenario.scrub.period_s;
+            // a re-strike supersedes any repair already scheduled for
+            // this target — otherwise the stale (earlier) repair would
+            // end the new outage prematurely
+            repairs.retain(|r| r.index != index);
+            // the scrubber reloads on its fixed cycle: the upset waits
+            // for the next boundary, then pays the reconfiguration time
+            let wait = period - (now % period);
+            repairs.push(PendingRepair { index, ready_at_s: now + wait + calib.t_config });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{PipelineConfig, Policy};
+    use crate::model::UseCase;
+    use crate::rad::ScrubPolicy;
+    use crate::scenario::Phase;
+
+    fn catalog() -> Catalog {
+        Catalog::synthetic()
+    }
+
+    fn esperta_seu_scenario(period_s: f64) -> Scenario {
+        Scenario {
+            name: "test-seu".into(),
+            summary: "seu strike on the hls target".into(),
+            config: PipelineConfig {
+                use_case: UseCase::Esperta,
+                cadence_s: 0.1,
+                ..Default::default()
+            },
+            scrub: ScrubPolicy { period_s },
+            phases: vec![
+                Phase::new("monitoring", 40, vec![]),
+                Phase::new(
+                    "post-upset",
+                    120,
+                    vec![MissionEvent::SeuUpset { target: "hls".into() }],
+                ),
+            ],
+        }
+    }
+
+    #[test]
+    fn seu_upset_shifts_mix_then_scrub_restores() {
+        // phase 2 starts at t=4 s; with a 6 s scrub period the repair
+        // lands at 6 s + t_config (~6.8 s), mid-way through the phase
+        let calib = Calibration::default();
+        let r = run_scenario(&esperta_seu_scenario(6.0), &catalog(), &calib, None)
+            .unwrap();
+        assert_eq!(r.phases.len(), 2);
+        let nominal = &r.phases[0];
+        let upset = &r.phases[1];
+        assert_eq!(nominal.target_mix.keys().collect::<Vec<_>>(), vec!["hls"]);
+        assert!(
+            upset.target_mix.contains_key("cpu"),
+            "knocked-out primary must re-dispatch: {:?}",
+            upset.target_mix
+        );
+        assert!(
+            upset.target_mix.contains_key("hls"),
+            "scrub must restore the target within the phase: {:?}",
+            upset.target_mix
+        );
+    }
+
+    #[test]
+    fn unrepaired_upset_keeps_target_out_all_phase() {
+        // a day-long scrub period: the repair never lands inside the run
+        let calib = Calibration::default();
+        let r = run_scenario(
+            &esperta_seu_scenario(86_400.0),
+            &catalog(),
+            &calib,
+            None,
+        )
+        .unwrap();
+        let upset = &r.phases[1];
+        assert!(!upset.target_mix.contains_key("hls"), "{:?}", upset.target_mix);
+        assert!(upset.target_mix.contains_key("cpu"));
+    }
+
+    #[test]
+    fn restrike_during_reload_supersedes_the_stale_repair() {
+        // first strike at t=4 schedules its repair for the t=6 scrub
+        // boundary + 0.8 s reload (6.8).  The second strike lands at
+        // t=6.5 — *inside* that reload window — so its own repair waits
+        // for the NEXT boundary (12.8).  The stale 6.8 repair must not
+        // restore the freshly re-struck target.
+        let calib = Calibration::default();
+        let sc = Scenario {
+            name: "restrike".into(),
+            summary: "second SEU during the scrub reload".into(),
+            config: PipelineConfig {
+                use_case: UseCase::Esperta,
+                cadence_s: 0.1,
+                ..Default::default()
+            },
+            scrub: ScrubPolicy { period_s: 6.0 },
+            phases: vec![
+                Phase::new("nominal", 40, vec![]),
+                Phase::new(
+                    "first-hit",
+                    25,
+                    vec![MissionEvent::SeuUpset { target: "hls".into() }],
+                ),
+                Phase::new(
+                    "second-hit",
+                    50,
+                    vec![MissionEvent::SeuUpset { target: "hls".into() }],
+                ),
+            ],
+        };
+        let r = run_scenario(&sc, &catalog(), &calib, None).unwrap();
+        // second-hit spans t = 6.5 .. 11.5, entirely before the 12.8
+        // repair: the target must stay out of service the whole phase
+        assert!(
+            !r.phases[2].target_mix.contains_key("hls"),
+            "stale repair restored a re-struck target: {:?}",
+            r.phases[2].target_mix
+        );
+        assert!(r.phases[2].target_mix.contains_key("cpu"));
+    }
+
+    #[test]
+    fn unknown_target_is_an_error() {
+        let mut sc = esperta_seu_scenario(60.0);
+        sc.phases[1].events =
+            vec![MissionEvent::SeuUpset { target: "dpu-b9999".into() }];
+        let calib = Calibration::default();
+        assert!(run_scenario(&sc, &catalog(), &calib, None).is_err());
+    }
+
+    #[test]
+    fn policy_switch_event_applies() {
+        let calib = Calibration::default();
+        let sc = Scenario {
+            name: "policy-flip".into(),
+            summary: "min-latency then eclipse budget".into(),
+            config: PipelineConfig {
+                use_case: UseCase::Vae,
+                cadence_s: 0.05,
+                policy: Policy::MinLatency,
+                ..Default::default()
+            },
+            scrub: ScrubPolicy { period_s: 60.0 },
+            phases: vec![
+                Phase::new("sunlit", 40, vec![]),
+                Phase::new(
+                    "umbra",
+                    40,
+                    vec![
+                        MissionEvent::SetPolicy { policy: Policy::Deadline },
+                        MissionEvent::EnterEclipse { budget_w: 4.0 },
+                    ],
+                ),
+                Phase::new("egress", 20, vec![MissionEvent::ExitEclipse]),
+            ],
+        };
+        let r = run_scenario(&sc, &catalog(), &calib, None).unwrap();
+        assert_eq!(r.phases.len(), 3);
+        assert!(r.phases[0].target_mix.contains_key("dpu"));
+        assert!(
+            !r.phases[1].target_mix.contains_key("dpu"),
+            "4 W budget excludes the 5.75 W DPU: {:?}",
+            r.phases[1].target_mix
+        );
+        assert!(r.phases[1].power_sheds > 0);
+    }
+}

@@ -1,0 +1,196 @@
+//! Mission scenario engine: declarative timelines over the steppable
+//! pipeline.
+//!
+//! The paper's numbers only matter operationally when conditions change
+//! *during* a run: MPSoC inference power spans 1.5–6.75 W, so an umbra
+//! crossing or a SEP storm forces re-dispatch under a new power budget,
+//! cadence, or deadline — the deployment concern the companion FPGA
+//! survey raises and duty-cycled CubeSat deployments live with.  This
+//! module turns those condition changes into data:
+//!
+//! * [`Scenario`] — a name, a base [`PipelineConfig`], a scrubbing
+//!   policy, and an ordered list of [`Phase`]s;
+//! * [`Phase`] — a named span of `n_events` sensor events, entered by
+//!   applying zero or more [`MissionEvent`]s;
+//! * [`MissionEvent`] — the vocabulary of mid-run condition changes:
+//!   eclipse entry/exit (power budget), SEP storms (burst rate +
+//!   deadline), ground-station passes (downlink budget), SEU upsets
+//!   (target knocked out until its `rad::scrub` repair window elapses),
+//!   and policy switches;
+//! * [`engine::run_scenario`] — drives a
+//!   [`crate::coordinator::PipelineRun`] tick by tick, applying events
+//!   at phase boundaries and completing scrub repairs on the virtual
+//!   clock;
+//! * [`library`] — the built-in scenarios behind
+//!   `spaceinfer scenario <name>`, re-expressing the repo's former
+//!   hand-rolled examples as data.
+//!
+//! Everything is deterministic: the same seed and scenario produce a
+//! bit-identical segmented [`crate::coordinator::PipelineReport`], and
+//! a single-phase scenario with no events reproduces the legacy
+//! `Pipeline::run` report exactly.
+
+pub mod engine;
+pub mod library;
+
+use crate::coordinator::{PipelineConfig, Policy};
+use crate::rad::ScrubPolicy;
+
+pub use engine::run_scenario;
+pub use library::{all_builtins, builtin, builtin_names};
+
+/// A mid-run change of mission conditions, applied between ticks of the
+/// steppable pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MissionEvent {
+    /// Umbra entry: the EPS caps active inference draw at `budget_w`
+    /// watts.  Applies to dynamic dispatch policies (the static policy
+    /// reproduces the paper's fixed mapping and ignores budgets).
+    EnterEclipse {
+        /// Cap on active MPSoC draw while inference runs (W).
+        budget_w: f64,
+    },
+    /// Umbra exit: the power cap is lifted.
+    ExitEclipse,
+    /// Solar-energetic-particle storm: the instrument bursts to
+    /// `burst_x` times the base event rate and the end-to-end alert
+    /// deadline tightens to `deadline_s`.
+    SepStorm {
+        /// Event-rate multiplier over the scenario's base cadence.
+        burst_x: f64,
+        /// Storm-time end-to-end deadline (s).
+        deadline_s: f64,
+    },
+    /// The storm subsides: cadence and deadline return to baseline.
+    StormSubsides,
+    /// A ground-station pass grants `budget_bytes` of additional
+    /// downlink budget.
+    DownlinkPass {
+        /// Bytes granted to the downlink manager.
+        budget_bytes: u64,
+    },
+    /// A single-event upset corrupts the named target's configuration
+    /// memory: the target is marked unavailable (dispatch re-routes
+    /// live) until the scrubber's repair window elapses — the next
+    /// scrub boundary plus the bitstream reconfiguration time.
+    SeuUpset {
+        /// Registry name of the struck target (`"dpu"`, `"hls"`, ...).
+        target: String,
+    },
+    /// Switch the dispatch policy from the next batch on.
+    SetPolicy {
+        /// The policy to dispatch under.
+        policy: Policy,
+    },
+}
+
+impl MissionEvent {
+    /// Short human-readable label for logs and phase listings.
+    pub fn label(&self) -> String {
+        match self {
+            MissionEvent::EnterEclipse { budget_w } => {
+                format!("eclipse({budget_w} W)")
+            }
+            MissionEvent::ExitEclipse => "eclipse-exit".into(),
+            MissionEvent::SepStorm { burst_x, deadline_s } => {
+                format!("storm({burst_x}x, {deadline_s} s)")
+            }
+            MissionEvent::StormSubsides => "storm-subsides".into(),
+            MissionEvent::DownlinkPass { budget_bytes } => {
+                format!("downlink-pass({budget_bytes} B)")
+            }
+            MissionEvent::SeuUpset { target } => format!("seu({target})"),
+            MissionEvent::SetPolicy { policy } => {
+                format!("policy({})", policy.as_str())
+            }
+        }
+    }
+}
+
+/// One named span of a scenario: `events` are applied when the phase
+/// begins, then `n_events` sensor events tick through the pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Phase {
+    /// Phase name (becomes the report segment's name).
+    pub name: String,
+    /// Sensor events generated during the phase.
+    pub n_events: usize,
+    /// Mission events applied at phase entry, in order.
+    pub events: Vec<MissionEvent>,
+}
+
+impl Phase {
+    /// Convenience constructor.
+    pub fn new(name: &str, n_events: usize, events: Vec<MissionEvent>) -> Phase {
+        Phase { name: name.to_string(), n_events, events }
+    }
+}
+
+/// A declarative mission timeline: base configuration + ordered phases.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Scenario name (`spaceinfer scenario <name>`).
+    pub name: String,
+    /// One-line mission summary for listings.
+    pub summary: String,
+    /// Base pipeline configuration the run starts from.  `n_events` is
+    /// informational — the phases drive the event count.
+    pub config: PipelineConfig,
+    /// Scrubbing policy governing SEU repair windows.
+    pub scrub: ScrubPolicy,
+    /// Ordered mission phases.
+    pub phases: Vec<Phase>,
+}
+
+impl Scenario {
+    /// Total sensor events across all phases.
+    pub fn total_events(&self) -> usize {
+        self.phases.iter().map(|p| p.n_events).sum()
+    }
+
+    /// The phase names joined as `a → b → c` (for listings).
+    pub fn phase_chain(&self) -> String {
+        self.phases
+            .iter()
+            .map(|p| p.name.as_str())
+            .collect::<Vec<_>>()
+            .join(" → ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_labels_are_compact() {
+        assert_eq!(
+            MissionEvent::EnterEclipse { budget_w: 4.0 }.label(),
+            "eclipse(4 W)"
+        );
+        assert_eq!(
+            MissionEvent::SeuUpset { target: "dpu".into() }.label(),
+            "seu(dpu)"
+        );
+        assert_eq!(
+            MissionEvent::SetPolicy { policy: Policy::MinEnergy }.label(),
+            "policy(min-energy)"
+        );
+    }
+
+    #[test]
+    fn scenario_totals_and_chain() {
+        let sc = Scenario {
+            name: "t".into(),
+            summary: "test".into(),
+            config: PipelineConfig::default(),
+            scrub: ScrubPolicy { period_s: 60.0 },
+            phases: vec![
+                Phase::new("a", 10, vec![]),
+                Phase::new("b", 20, vec![MissionEvent::ExitEclipse]),
+            ],
+        };
+        assert_eq!(sc.total_events(), 30);
+        assert_eq!(sc.phase_chain(), "a → b");
+    }
+}

@@ -98,6 +98,19 @@ impl SensorStream {
     pub fn take(&mut self, n: usize) -> Vec<SensorEvent> {
         (0..n).map(|_| self.next_event()).collect()
     }
+
+    /// Change the inter-event cadence mid-stream (s) — the instrument
+    /// switching survey modes, or a burst raising the sample rate.
+    /// Takes effect from the *next* inter-event gap; the timestamp the
+    /// upcoming event carries is already committed.  Panics on a
+    /// non-positive cadence (the virtual clock must advance).
+    pub fn set_cadence(&mut self, cadence_s: f64) {
+        assert!(
+            cadence_s > 0.0 && cadence_s.is_finite(),
+            "cadence must be positive and finite"
+        );
+        self.cadence_s = cadence_s;
+    }
 }
 
 #[cfg(test)]
@@ -125,6 +138,24 @@ mod tests {
         assert_eq!(e.inputs.len(), 2);
         assert_eq!(e.inputs[0].len(), 256 * 256 * 2);
         assert_eq!(e.inputs[1].len(), 1);
+    }
+
+    #[test]
+    fn cadence_change_applies_to_subsequent_gaps() {
+        let mut s = SensorStream::new(UseCase::Mms, 1, 0.15);
+        let a = s.next_event();
+        s.set_cadence(0.015); // 10x burst
+        let b = s.next_event();
+        let c = s.next_event();
+        // the gap *before* b was already committed at the old cadence
+        assert!((b.t_s - a.t_s - 0.15).abs() < 1e-12);
+        assert!((c.t_s - b.t_s - 0.015).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "cadence")]
+    fn zero_cadence_rejected() {
+        SensorStream::new(UseCase::Mms, 1, 0.15).set_cadence(0.0);
     }
 
     #[test]

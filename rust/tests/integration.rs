@@ -420,7 +420,7 @@ fn pipeline_real_pjrt_numerics_mms_logistic() {
         mms_model: "logistic".into(),
         ..Default::default()
     };
-    let pipeline = Pipeline::new(cfg, &c, &calib).unwrap();
+    let mut pipeline = Pipeline::new(cfg, &c, &calib).unwrap();
     let pool = ExecutorPool::spawn(
         c.dir.clone(),
         vec![("logistic".into(), Precision::Fp32)],
@@ -448,7 +448,7 @@ fn pipeline_dispatches_exactly_one_request_per_batch() {
         max_batch: 8,
         ..Default::default()
     };
-    let pipeline = Pipeline::new(cfg, &c, &calib).unwrap();
+    let mut pipeline = Pipeline::new(cfg, &c, &calib).unwrap();
     // surrogate backend: exercises the identical dispatch/reap path
     // without needing compiled HLO
     let pool = ExecutorPool::with_config(
@@ -494,7 +494,7 @@ fn pipeline_same_seed_same_report() {
             seed: 42,
             ..Default::default()
         };
-        let pipeline = Pipeline::new(cfg, &c, &calib).unwrap();
+        let mut pipeline = Pipeline::new(cfg, &c, &calib).unwrap();
         let pool = ExecutorPool::with_config(
             c.dir.clone(),
             PoolConfig {

@@ -146,6 +146,53 @@ fn prop_bounded_queue_invariants() {
     });
 }
 
+#[test]
+fn prop_bounded_queue_drop_newest_keeps_earliest_in_order() {
+    // pure overflow, no pops: DropNewest must retain exactly the first
+    // `cap` items in arrival order, shed the rest, and conserve counts
+    for_seeds(100, |rng| {
+        let cap = 1 + rng.below(16);
+        let n = cap as u64 + 1 + rng.below(200) as u64;
+        let mut q = BoundedQueue::new(cap, OverflowPolicy::DropNewest);
+        for i in 0..n {
+            let admitted = q.push(i);
+            // push returns false iff the *incoming* item was shed
+            assert_eq!(admitted, i < cap as u64, "admission verdict at {i}");
+        }
+        assert_eq!(q.accepted, cap as u64);
+        assert_eq!(q.dropped, n - cap as u64);
+        assert_eq!(q.accepted + q.dropped, n, "offered = accepted + dropped");
+        let drained: Vec<u64> = std::iter::from_fn(|| q.pop()).collect();
+        let expect: Vec<u64> = (0..cap as u64).collect();
+        assert_eq!(drained, expect, "earliest items, arrival order");
+    });
+}
+
+#[test]
+fn prop_bounded_queue_drop_oldest_keeps_freshest_in_order() {
+    // pure overflow, no pops: DropOldest must retain exactly the last
+    // `cap` items in arrival order; every offer is accepted and each
+    // drop is an eviction of an earlier acceptance
+    for_seeds(100, |rng| {
+        let cap = 1 + rng.below(16);
+        let n = cap as u64 + 1 + rng.below(200) as u64;
+        let mut q = BoundedQueue::new(cap, OverflowPolicy::DropOldest);
+        for i in 0..n {
+            assert!(q.push(i), "DropOldest always admits the incoming item");
+        }
+        assert_eq!(q.accepted, n, "every offer accepted");
+        assert_eq!(q.dropped, n - cap as u64, "evictions make the room");
+        assert_eq!(
+            q.accepted,
+            q.dropped + q.len() as u64,
+            "accepted = evicted + still queued (nothing popped)"
+        );
+        let drained: Vec<u64> = std::iter::from_fn(|| q.pop()).collect();
+        let expect: Vec<u64> = (n - cap as u64..n).collect();
+        assert_eq!(drained, expect, "freshest items, arrival order");
+    });
+}
+
 // ---------------------------------------------------------------------------
 // timeline: serialization + energy accounting
 // ---------------------------------------------------------------------------
