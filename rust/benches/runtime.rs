@@ -18,6 +18,7 @@ use spaceinfer::board::Calibration;
 use spaceinfer::coordinator::Router;
 use spaceinfer::model::catalog::Catalog;
 use spaceinfer::model::{Precision, UseCase};
+use spaceinfer::plan::Planner;
 use spaceinfer::runtime::{Engine, ExecutorPool, GoldenIo, InputSet, PoolConfig};
 use spaceinfer::util::benchkit::{bench, throughput};
 use spaceinfer::util::json::Json;
@@ -74,6 +75,56 @@ fn target_matrix_rows(catalog: &Catalog) -> BTreeMap<String, Json> {
     rows
 }
 
+/// One row per use case: the best whole-model plan vs the best plan
+/// overall (hybrid allowed) under min-latency at `BATCH_N` — the
+/// partitioning win the plan layer buys, tracked per PR.
+fn plan_rows(catalog: &Catalog) -> BTreeMap<String, Json> {
+    let calib = Calibration::default();
+    let router = Router::default(); // mms -> baseline
+    let n = BATCH_N as u64;
+    let mut rows = BTreeMap::new();
+    for uc in UseCase::ALL {
+        let route = router.route(uc, 0).expect("route");
+        let registry =
+            TargetRegistry::build(&route.model, catalog, &calib, &TargetSet::Default)
+                .expect("registry");
+        let planner =
+            Planner::build(&route.model, catalog, &calib, &registry, &TargetSet::Default)
+                .expect("planner");
+        let best = |hybrid_ok: bool| {
+            planner
+                .plans()
+                .iter()
+                .filter(|p| hybrid_ok || !p.is_hybrid())
+                .min_by(|a, b| a.batch_latency_s(n).total_cmp(&b.batch_latency_s(n)))
+                .expect("at least one plan")
+        };
+        let whole = best(false);
+        let any = best(true);
+        let mut row = BTreeMap::new();
+        row.insert("whole_latency_s".to_string(), Json::Num(whole.batch_latency_s(n)));
+        row.insert("plan_latency_s".to_string(), Json::Num(any.batch_latency_s(n)));
+        row.insert(
+            "speedup_x".to_string(),
+            Json::Num(whole.batch_latency_s(n) / any.batch_latency_s(n).max(1e-18)),
+        );
+        row.insert("whole_energy_j".to_string(), Json::Num(whole.batch_energy_j(n)));
+        row.insert("plan_energy_j".to_string(), Json::Num(any.batch_energy_j(n)));
+        row.insert("hybrid".to_string(), Json::Num(any.is_hybrid() as u8 as f64));
+        row.insert("partition".to_string(), Json::Str(any.describe()));
+        println!(
+            "plan {:<10} whole {:>10.4} ms  best {:>10.4} ms  {:>6.2}x  [{}]",
+            route.model,
+            whole.batch_latency_s(n) * 1e3,
+            any.batch_latency_s(n) * 1e3,
+            whole.batch_latency_s(n) / any.batch_latency_s(n).max(1e-18),
+            any.describe(),
+        );
+        rows.insert(route.model.clone(), Json::Obj(row));
+    }
+    rows
+}
+
 fn main() {
     let dir = std::path::Path::new("artifacts");
     let have_artifacts = Catalog::is_present(dir);
@@ -86,6 +137,12 @@ fn main() {
     // full target matrix first: runs with or without artifacts
     println!("== backend target matrix (simulated ZCU104 operating points) ==");
     doc.insert("targets".to_string(), Json::Obj(target_matrix_rows(&catalog)));
+    println!();
+
+    // execution-plan section: hybrid vs whole-model per use case
+    // (artifact-free — the perf trajectory of the partitioning win)
+    println!("== execution plans (hybrid vs whole-model, batch-{BATCH_N}) ==");
+    doc.insert("plans".to_string(), Json::Obj(plan_rows(&catalog)));
     println!();
 
     let mut model_rows: BTreeMap<String, Json> = BTreeMap::new();

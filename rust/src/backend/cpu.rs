@@ -3,11 +3,11 @@
 
 use anyhow::Result;
 
-use super::{AccelModel, Slot};
+use super::{AccelModel, SegmentCost, Slot};
 use crate::board::Calibration;
 use crate::cpu::A53Model;
 use crate::model::catalog::ModelInfo;
-use crate::model::{Manifest, Precision};
+use crate::model::{Layer, Manifest, Precision};
 use crate::resources::Utilization;
 
 /// PS software execution of one model: per-item latency from the
@@ -17,6 +17,9 @@ pub struct CpuTarget {
     /// Calibrated per-model A53 timing model.
     pub model: A53Model,
     power_w: f64,
+    /// Kept so sub-manifest segments re-simulate under the same
+    /// calibration the bound model was built with.
+    calib: Calibration,
 }
 
 impl CpuTarget {
@@ -29,6 +32,7 @@ impl CpuTarget {
         CpuTarget {
             model: A53Model::calibrated(man, calib, info.paper.cpu_fps),
             power_w: info.paper.cpu_p_mpsoc,
+            calib: calib.clone(),
         }
     }
 }
@@ -48,6 +52,21 @@ impl AccelModel for CpuTarget {
 
     fn supports(&self, _man: &Manifest) -> Result<()> {
         Ok(()) // PyTorch-equivalent software path runs every operator
+    }
+
+    fn supports_layer(&self, _layer: &Layer) -> Result<()> {
+        Ok(()) // per-operator coverage is total on the PS
+    }
+
+    fn segment_cost(&self, man: &Manifest) -> Result<SegmentCost> {
+        // same NEON efficiency as the calibrated whole model, ops and
+        // dispatch overhead recomputed for the sub-manifest
+        let m = A53Model::with_util(man, &self.calib, self.model.util);
+        Ok(SegmentCost {
+            setup_s: 0.0,
+            per_item_s: m.latency_s(),
+            active_power_w: self.power_w,
+        })
     }
 
     fn setup_s(&self) -> f64 {

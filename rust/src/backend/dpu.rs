@@ -7,10 +7,10 @@
 
 use anyhow::{bail, Result};
 
-use super::{AccelModel, Slot};
+use super::{AccelModel, SegmentCost, Slot};
 use crate::board::{Calibration, Zcu104};
 use crate::dpu::{DpuArch, DpuSchedule, DpuSize};
-use crate::model::{Manifest, Precision};
+use crate::model::{Layer, Manifest, Precision};
 use crate::power::PowerModel;
 use crate::resources::Utilization;
 
@@ -24,6 +24,10 @@ pub struct DpuTarget {
     /// Per-layer schedule of the deployed int8 manifest on this array.
     pub sched: DpuSchedule,
     power_w: f64,
+    /// Kept so sub-manifest segments re-schedule under the same
+    /// calibration the bound model was built with.
+    calib: Calibration,
+    axi_bandwidth: f64,
 }
 
 impl DpuTarget {
@@ -39,7 +43,13 @@ impl DpuTarget {
         let sched = DpuSchedule::new(man, arch, calib, board.axi_bandwidth)?;
         let power_w =
             PowerModel::new(calib.clone()).dpu_family_w(size.frac(), sched.mac_duty());
-        Ok(DpuTarget { size, sched, power_w })
+        Ok(DpuTarget {
+            size,
+            sched,
+            power_w,
+            calib: calib.clone(),
+            axi_bandwidth: board.axi_bandwidth,
+        })
     }
 }
 
@@ -66,6 +76,32 @@ impl AccelModel for DpuTarget {
                 man.name
             )
         }
+    }
+
+    fn supports_layer(&self, layer: &Layer) -> Result<()> {
+        if layer.dpu_mappable() {
+            Ok(())
+        } else {
+            bail!(
+                "{:?} (act {}) is outside the DPU operator set \
+                 (paper §III-B: no sigmoid / comparators / 3-D layers)",
+                layer.kind,
+                layer.act.as_str()
+            )
+        }
+    }
+
+    fn segment_cost(&self, man: &Manifest) -> Result<SegmentCost> {
+        // the per-layer cycle scheduler runs on the sub-manifest with
+        // the identical array / calibration the bound model used
+        let sched = DpuSchedule::new(man, self.sched.arch, &self.calib, self.axi_bandwidth)?;
+        let power_w = PowerModel::new(self.calib.clone())
+            .dpu_family_w(self.size.frac(), sched.mac_duty());
+        Ok(SegmentCost {
+            setup_s: sched.invoke_s,
+            per_item_s: sched.latency_s() - sched.invoke_s,
+            active_power_w: power_w,
+        })
     }
 
     fn setup_s(&self) -> f64 {

@@ -6,10 +6,10 @@
 
 use anyhow::Result;
 
-use super::{AccelModel, Slot};
+use super::{AccelModel, SegmentCost, Slot};
 use crate::board::{Calibration, Zcu104};
 use crate::hls::HlsDesign;
-use crate::model::{Manifest, Precision};
+use crate::model::{Layer, Manifest, Precision};
 use crate::power::{Implementation, PowerModel};
 use crate::resources::{estimate_hls, estimate_hls_pipelined, Utilization};
 
@@ -22,6 +22,10 @@ pub struct HlsTarget {
     pub pipelined: bool,
     util: Utilization,
     power_w: f64,
+    /// Kept so sub-manifest segments re-synthesize under the same
+    /// calibration / board the bound model was built with.
+    calib: Calibration,
+    board: Zcu104,
 }
 
 impl HlsTarget {
@@ -35,7 +39,7 @@ impl HlsTarget {
     pub fn naive(man: &Manifest, board: &Zcu104, calib: &Calibration) -> HlsTarget {
         let design = HlsDesign::synthesize(man, board, calib);
         let util = estimate_hls(man, &design.plan);
-        Self::finish(design, util, false, calib)
+        Self::finish(design, util, false, calib, board)
     }
 
     /// The II=1 dataflow variant: pipelined/unrolled datapath, BRAM
@@ -43,7 +47,7 @@ impl HlsTarget {
     pub fn pipelined(man: &Manifest, board: &Zcu104, calib: &Calibration) -> HlsTarget {
         let design = HlsDesign::synthesize_pipelined(man, board, calib);
         let util = estimate_hls_pipelined(man, &design.plan);
-        Self::finish(design, util, true, calib)
+        Self::finish(design, util, true, calib, board)
     }
 
     fn finish(
@@ -51,13 +55,14 @@ impl HlsTarget {
         util: Utilization,
         pipelined: bool,
         calib: &Calibration,
+        board: &Zcu104,
     ) -> HlsTarget {
         let power_w = PowerModel::new(calib.clone()).mpsoc_w(&Implementation::Hls {
             kiloluts: util.luts as f64 / 1000.0,
             brams: design.plan.brams(),
             duty: 1.0,
         });
-        HlsTarget { design, pipelined, util, power_w }
+        HlsTarget { design, pipelined, util, power_w, calib: calib.clone(), board: *board }
     }
 }
 
@@ -80,6 +85,36 @@ impl AccelModel for HlsTarget {
 
     fn supports(&self, _man: &Manifest) -> Result<()> {
         Ok(()) // any manifest synthesizes (fp32, sigmoid/3-D included)
+    }
+
+    fn supports_layer(&self, _layer: &Layer) -> Result<()> {
+        Ok(()) // ONNX2C emits C for every operator in the taxonomy
+    }
+
+    fn segment_cost(&self, man: &Manifest) -> Result<SegmentCost> {
+        // synthesize the sub-manifest as its own IP (per-model HLS is
+        // per-subgraph HLS in a hybrid deployment) and re-estimate its
+        // footprint-driven power
+        let (design, util) = if self.pipelined {
+            let d = HlsDesign::synthesize_pipelined(man, &self.board, &self.calib);
+            let u = estimate_hls_pipelined(man, &d.plan);
+            (d, u)
+        } else {
+            let d = HlsDesign::synthesize(man, &self.board, &self.calib);
+            let u = estimate_hls(man, &d.plan);
+            (d, u)
+        };
+        let power_w = PowerModel::new(self.calib.clone()).mpsoc_w(&Implementation::Hls {
+            kiloluts: util.luts as f64 / 1000.0,
+            brams: design.plan.brams(),
+            duty: 1.0,
+        });
+        let setup_s = design.axi_setup_cycles / design.clock_hz;
+        Ok(SegmentCost {
+            setup_s,
+            per_item_s: design.latency_s() - setup_s,
+            active_power_w: power_w,
+        })
     }
 
     fn setup_s(&self) -> f64 {

@@ -32,7 +32,7 @@ use anyhow::{bail, Result};
 use crate::board::{Calibration, Zcu104};
 use crate::dpu::DpuSize;
 use crate::model::catalog::{model_info, Catalog, Target as PaperTarget};
-use crate::model::{Manifest, Precision};
+use crate::model::{Layer, Manifest, Precision};
 use crate::resources::Utilization;
 
 pub use cpu::CpuTarget;
@@ -69,13 +69,31 @@ impl Slot {
     }
 }
 
+/// Operating point of one target evaluated on a specific
+/// (sub-)manifest — what [`AccelModel::segment_cost`] returns.  The
+/// execution-plan partitioner (`crate::plan`) prices each segment of a
+/// hybrid deployment with these, by running the target's *own*
+/// calibrated simulator on the segment's sub-manifest.
+#[derive(Debug, Clone, Copy)]
+pub struct SegmentCost {
+    /// Fixed per-batch submission overhead on this target (s).
+    pub setup_s: f64,
+    /// Marginal time per inference of the (sub-)manifest (s).
+    pub per_item_s: f64,
+    /// Active MPSoC draw while the (sub-)manifest runs (W).
+    pub active_power_w: f64,
+}
+
 /// One pluggable execution target: the calibrated cost + capability
 /// model the dispatcher scores.
 ///
 /// Implementations are bound to one deployed model variant (they embed
 /// the scheduled manifest), so the per-batch cost methods need no
 /// manifest argument; [`AccelModel::supports`] answers the eligibility
-/// question for an arbitrary manifest (the §III-B operator gate).
+/// question for an arbitrary manifest (the §III-B operator gate), and
+/// [`AccelModel::supports_layer`] answers it per layer — the seam the
+/// subgraph partitioner (`crate::plan`) builds hybrid execution plans
+/// on.
 pub trait AccelModel: std::fmt::Debug + Send + Sync {
     /// Stable registry / telemetry key (`target_mix` and `dispatch_*`
     /// counters use it).  The paper's three targets keep their seed-era
@@ -93,6 +111,45 @@ pub trait AccelModel: std::fmt::Debug + Send + Sync {
     /// Can this target execute `man`?  `Err` carries the reason (e.g.
     /// the DPU's unsupported-operator gate).
     fn supports(&self, man: &Manifest) -> Result<()>;
+
+    /// Can this target execute a single `layer`?  The per-layer form of
+    /// [`AccelModel::supports`]: the Vitis-AI flow does not reject a
+    /// model with one unsupported operator, it splits the graph there —
+    /// this method is where a backend declares the split points.
+    ///
+    /// The default wraps the layer in a one-layer manifest and
+    /// delegates to the whole-model gate, so existing external backends
+    /// inherit layer granularity for free; the built-in adapters
+    /// override it directly.
+    fn supports_layer(&self, layer: &Layer) -> Result<()> {
+        let single = Manifest {
+            name: format!("<{:?}>", layer.kind),
+            precision: self.precision(),
+            inputs: vec![("x".to_string(), layer.in_shape.clone())],
+            output_shape: layer.out_shape.clone(),
+            layers: vec![layer.clone()],
+            total_macs: layer.macs,
+            total_ops: layer.ops,
+            total_params: layer.params,
+            weight_bytes: layer.weight_bytes,
+        };
+        self.supports(&single)
+    }
+
+    /// Evaluate this target's calibrated simulator on an arbitrary
+    /// (sub-)manifest — how the plan layer prices one segment of a
+    /// hybrid deployment.  The default returns the bound whole-model
+    /// operating point (exact when `man` *is* the bound manifest, a
+    /// conservative over-estimate for a strict sub-manifest); the
+    /// built-in adapters re-simulate for real.
+    fn segment_cost(&self, man: &Manifest) -> Result<SegmentCost> {
+        self.supports(man)?;
+        Ok(SegmentCost {
+            setup_s: self.setup_s(),
+            per_item_s: self.per_item_s(),
+            active_power_w: self.active_power_w(),
+        })
+    }
 
     /// Fixed per-batch submission overhead (s) — runner invocation,
     /// AXI-Lite setup, zero for the CPU.
@@ -179,8 +236,9 @@ impl TargetSet {
     }
 
     /// Does this set admit a target?  `in_default` marks the paper's
-    /// three seed targets.
-    fn admits(&self, name: &str, in_default: bool) -> bool {
+    /// three seed targets.  `pub(crate)` so the plan layer can honor an
+    /// explicit `--targets` exclusion when deriving plan-only lanes.
+    pub(crate) fn admits(&self, name: &str, in_default: bool) -> bool {
         match self {
             TargetSet::Default => in_default,
             TargetSet::All => true,
@@ -475,6 +533,75 @@ mod tests {
         r.set_available(dpu, true);
         assert_eq!(r.available_count(), 3);
         assert_eq!(r.index_of("warp-drive"), None);
+    }
+
+    #[test]
+    fn supports_layer_moves_the_gate_to_layer_granularity() {
+        let catalog = Catalog::synthetic();
+        let r = registry("vae", &TargetSet::Default);
+        let dpu = r.get(1);
+        assert_eq!(dpu.name(), "dpu");
+        // BaselineNet: conv3d/maxpool3d rejected, flatten/dense accepted
+        let baseline = catalog.manifest("baseline", Precision::Fp32).unwrap();
+        assert!(dpu.supports(baseline).is_err(), "whole-model gate still fails");
+        let verdicts: Vec<bool> = baseline
+            .layers
+            .iter()
+            .map(|l| dpu.supports_layer(l).is_ok())
+            .collect();
+        assert_eq!(verdicts, vec![false, false, true, true, true]);
+        // sigmoid activation is a per-layer rejection too
+        let esperta = catalog.manifest("esperta", Precision::Fp32).unwrap();
+        assert!(dpu.supports_layer(&esperta.layers[0]).is_err());
+        // CPU and HLS accept every layer
+        for l in baseline.layers.iter().chain(&esperta.layers) {
+            assert!(r.get(0).supports_layer(l).is_ok());
+            assert!(r.get(2).supports_layer(l).is_ok());
+        }
+    }
+
+    #[test]
+    fn segment_cost_on_the_bound_manifest_is_the_whole_model_point() {
+        // re-simulating the full manifest must land exactly on the
+        // registered operating point — the degenerate-plan invariant's
+        // cost-side half
+        let catalog = Catalog::synthetic();
+        let r = registry("vae", &TargetSet::Default);
+        for (target, prec) in
+            [(r.get(0), Precision::Fp32), (r.get(1), Precision::Int8), (r.get(2), Precision::Fp32)]
+        {
+            let man = catalog.manifest("vae", prec).unwrap();
+            let c = target.segment_cost(man).unwrap();
+            assert_eq!(c.setup_s.to_bits(), target.setup_s().to_bits(), "{}", target.name());
+            assert_eq!(
+                c.per_item_s.to_bits(),
+                target.per_item_s().to_bits(),
+                "{}",
+                target.name()
+            );
+            assert_eq!(
+                c.active_power_w.to_bits(),
+                target.active_power_w().to_bits(),
+                "{}",
+                target.name()
+            );
+        }
+    }
+
+    #[test]
+    fn segment_cost_scales_with_the_sub_manifest() {
+        let catalog = Catalog::synthetic();
+        let r = registry("vae", &TargetSet::Default);
+        let man = catalog.manifest("vae", Precision::Fp32).unwrap();
+        let head = man.slice(0, 1);
+        let cpu = r.get(0);
+        let part = cpu.segment_cost(&head).unwrap();
+        let whole = cpu.segment_cost(man).unwrap();
+        assert!(part.per_item_s < whole.per_item_s, "fewer layers, less time");
+        assert!(part.per_item_s > 0.0);
+        // the DPU rejects a sub-manifest with unsupported operators
+        let baseline = catalog.manifest("baseline", Precision::Fp32).unwrap();
+        assert!(r.get(1).segment_cost(&baseline.slice(0, 2)).is_err());
     }
 
     #[test]

@@ -28,6 +28,7 @@ use crate::board::Calibration;
 use crate::coordinator::scheduler::{AccelTimeline, ScheduledRun};
 use crate::model::catalog::Catalog;
 use crate::model::UseCase;
+use crate::plan::{ExecutionPlan, Lane, Planner};
 
 /// How the dispatcher picks a target for each flushed batch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -125,6 +126,35 @@ pub struct Choice {
     pub cost: BatchCost,
     /// True when the power budget changed the decision (the batch was
     /// shed away from the target the bare policy would have picked).
+    pub power_shed: bool,
+}
+
+/// Predicted cost of one batch under one execution plan — the
+/// plan-level analogue of [`BatchCost`].
+#[derive(Debug, Clone)]
+pub struct PlanCost {
+    /// Flush → predicted completion (bottleneck queue wait + every
+    /// segment's setup + n·(per-item + boundary transfers)), s.
+    pub latency_s: f64,
+    /// Oldest-event arrival → predicted completion, s.
+    pub oldest_latency_s: f64,
+    /// Predicted busy energy for the batch across all segments, J.
+    pub energy_j: f64,
+    /// Peak active draw over the plan's segments, W (what the power
+    /// budget must clear — segments run sequentially).
+    pub power_w: f64,
+    /// Does `oldest_latency_s` meet the dispatcher's deadline?
+    pub meets_deadline: bool,
+}
+
+/// The dispatcher's verdict for one batch in plan mode.
+#[derive(Debug, Clone)]
+pub struct PlanChoice {
+    /// Index into [`Planner::plans`].
+    pub index: usize,
+    /// The predicted cost of the chosen plan.
+    pub cost: PlanCost,
+    /// True when the power budget changed the decision.
     pub power_shed: bool,
 }
 
@@ -324,10 +354,125 @@ impl Dispatcher {
         };
         Choice { index, cost: costs[index].clone(), power_shed }
     }
+
+    /// Score one execution plan for a batch of `n` events flushed at
+    /// `now_s`.  `timelines` is the run's *lane* queue state (registry
+    /// lanes first, then the planner's derived lanes — see
+    /// [`Planner::flat`]).  The queue term is the bottleneck backlog
+    /// over the plan's lanes; busy time and energy come from the plan
+    /// itself.  For a single-segment plan this is arithmetically
+    /// identical, bit for bit, to [`Dispatcher::cost`] on the
+    /// underlying target.
+    pub fn plan_cost(
+        &self,
+        planner: &Planner,
+        plan: &ExecutionPlan,
+        timelines: &[AccelTimeline],
+        now_s: f64,
+        oldest_t_s: f64,
+        n: u64,
+    ) -> PlanCost {
+        let queue_s = plan
+            .segments
+            .iter()
+            .map(|s| timelines[planner.flat(s.lane)].backlog_s(now_s))
+            .fold(0.0, f64::max);
+        let busy_s = plan.batch_latency_s(n);
+        let latency_s = queue_s + busy_s;
+        let oldest_latency_s = (now_s - oldest_t_s).max(0.0) + latency_s;
+        PlanCost {
+            latency_s,
+            oldest_latency_s,
+            energy_j: plan.batch_energy_j(n),
+            power_w: plan.peak_power_w(),
+            meets_deadline: oldest_latency_s <= self.deadline_s,
+        }
+    }
+
+    /// Pick an execution plan for one batch — the plan-level analogue
+    /// of [`Dispatcher::choose`], same policy logic over the planner's
+    /// candidate set (hybrid plans scored alongside single-target
+    /// plans).  A plan is in service only while every registry lane it
+    /// touches is available (derived lanes have no availability state);
+    /// the static policy picks the primary's single-segment plan,
+    /// re-dispatching to the fastest available plan while the primary
+    /// is down.  For a model fully supported by every lane the decision
+    /// is bit-identical to [`Dispatcher::choose`] — the degenerate-plan
+    /// invariant the golden suite relies on.
+    pub fn choose_plan(
+        &self,
+        planner: &Planner,
+        timelines: &[AccelTimeline],
+        now_s: f64,
+        oldest_t_s: f64,
+        n: u64,
+    ) -> PlanChoice {
+        let plans = planner.plans();
+        let costs: Vec<PlanCost> = plans
+            .iter()
+            .map(|p| self.plan_cost(planner, p, timelines, now_s, oldest_t_s, n))
+            .collect();
+        let in_service = |p: &ExecutionPlan| {
+            p.segments.iter().all(|s| match s.lane {
+                Lane::Registry(i) => self.registry.is_available(i),
+                Lane::Derived(_) => true,
+            })
+        };
+        let mut avail: Vec<usize> =
+            (0..plans.len()).filter(|&i| in_service(&plans[i])).collect();
+        if avail.is_empty() {
+            avail = (0..plans.len()).collect();
+        }
+        if self.policy == Policy::Static {
+            let primary = planner.primary_plan().unwrap_or(0);
+            let index = if avail.contains(&primary) || avail.len() == plans.len() {
+                primary
+            } else {
+                argmin(&avail, &costs, |c| c.latency_s)
+            };
+            return PlanChoice { index, cost: costs[index].clone(), power_shed: false };
+        }
+        let pick = |idxs: &[usize]| -> usize {
+            match self.policy {
+                Policy::MinLatency => argmin(idxs, &costs, |c| c.latency_s),
+                Policy::MinEnergy => argmin(idxs, &costs, |c| c.energy_j),
+                Policy::Deadline => {
+                    let meeting: Vec<usize> = idxs
+                        .iter()
+                        .copied()
+                        .filter(|&i| costs[i].meets_deadline)
+                        .collect();
+                    if meeting.is_empty() {
+                        argmin(idxs, &costs, |c| c.latency_s)
+                    } else {
+                        argmin(&meeting, &costs, |c| c.energy_j)
+                    }
+                }
+                Policy::Static => unreachable!("handled above"),
+            }
+        };
+        let (index, power_shed) = match self.power_budget_w {
+            None => (pick(&avail), false),
+            Some(budget) => {
+                let fits: Vec<usize> = avail
+                    .iter()
+                    .copied()
+                    .filter(|&i| costs[i].power_w <= budget)
+                    .collect();
+                let index = if fits.is_empty() {
+                    argmin(&avail, &costs, |c| c.power_w)
+                } else {
+                    pick(&fits)
+                };
+                (index, index != pick(&avail))
+            }
+        };
+        PlanChoice { index, cost: costs[index].clone(), power_shed }
+    }
 }
 
 /// First index minimizing `key` (strict-less fold: deterministic ties).
-fn argmin<F: Fn(&BatchCost) -> f64>(idxs: &[usize], costs: &[BatchCost], key: F) -> usize {
+fn argmin<T, F: Fn(&T) -> f64>(idxs: &[usize], costs: &[T], key: F) -> usize {
     let mut best = idxs[0];
     for &i in &idxs[1..] {
         if key(&costs[i]) < key(&costs[best]) {

@@ -37,7 +37,9 @@ pub mod scheduler;
 pub use backpressure::{BoundedQueue, OverflowPolicy};
 pub use batcher::{Batch, Batcher};
 pub use decision::{decide, Decision};
-pub use dispatch::{default_deadline_s, BatchCost, Choice, Dispatcher, Policy};
+pub use dispatch::{
+    default_deadline_s, BatchCost, Choice, Dispatcher, PlanChoice, PlanCost, Policy,
+};
 pub use downlink::{DownlinkManager, DownlinkVerdict};
 pub use pipeline::{PhaseReport, Pipeline, PipelineConfig, PipelineReport, PipelineRun};
 pub use router::{Route, Router, Slot};

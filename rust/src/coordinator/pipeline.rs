@@ -49,9 +49,10 @@ use crate::coordinator::decision::{decide, Decision};
 use crate::coordinator::dispatch::{default_deadline_s, Dispatcher, Policy};
 use crate::coordinator::downlink::{DownlinkManager, DownlinkVerdict};
 use crate::coordinator::router::{Route, Router, Slot};
-use crate::coordinator::scheduler::AccelTimeline;
+use crate::coordinator::scheduler::{AccelTimeline, ScheduledRun};
 use crate::model::catalog::Catalog;
 use crate::model::{Precision, UseCase};
+use crate::plan::{Lane, Planner};
 use crate::runtime::{ExecRequest, ExecResult, ExecutorPool};
 use crate::sensors::{SensorEvent, SensorStream};
 use crate::telemetry::Metrics;
@@ -102,6 +103,17 @@ pub struct PipelineConfig {
     /// batcher only while the *least-loaded* in-service target is at
     /// most this far behind the virtual clock.
     pub ingress_max_backlog_s: f64,
+    /// Dispatch over heterogeneous *execution plans* instead of whole
+    /// models.  `false` (default) keeps the whole-model dispatcher bit
+    /// for bit.  `true` builds the `crate::plan` partition set at
+    /// construction and scores hybrid plans (DPU subgraphs + fallback
+    /// segments, the paper's Vitis-AI graph-splitting behavior)
+    /// alongside single-target plans under the configured policy; the
+    /// chosen plan executes segment by segment on the virtual clock,
+    /// boundary transfers included.  Models fully supported by one
+    /// target produce single-segment plans whose decisions and charges
+    /// are bit-identical to `plan_mode: false`.
+    pub plan_mode: bool,
 }
 
 impl Default for PipelineConfig {
@@ -122,6 +134,7 @@ impl Default for PipelineConfig {
             ingress_cap: None,
             ingress_policy: OverflowPolicy::DropNewest,
             ingress_max_backlog_s: 0.25,
+            plan_mode: false,
         }
     }
 }
@@ -206,6 +219,15 @@ pub struct PipelineReport {
     pub ingress_accepted: u64,
     /// Events the ingress queue shed (always 0 without a queue).
     pub ingress_dropped: u64,
+    /// Batches dispatched as execution plans (equals the batch count in
+    /// plan mode, 0 otherwise).
+    pub plan_batches: u64,
+    /// Plan-dispatched batches whose chosen plan was hybrid (more than
+    /// one segment — a DPU subgraph plus fallback).
+    pub plan_hybrid_batches: u64,
+    /// Virtual seconds spent moving boundary activations between
+    /// segments (the hybrid toll; 0 without hybrid batches).
+    pub plan_transfer_s: f64,
     /// Decisions the downlink kept.
     pub downlink_sent: u64,
     /// Decisions the downlink shed.
@@ -273,6 +295,12 @@ impl PipelineReport {
             out.push_str(&format!(
                 "  ingress: accepted {}  dropped {} (sensor decimation)\n",
                 self.ingress_accepted, self.ingress_dropped
+            ));
+        }
+        if self.plan_batches > 0 {
+            out.push_str(&format!(
+                "  plans: {} dispatched ({} hybrid)  transfer {:.4}s\n",
+                self.plan_batches, self.plan_hybrid_batches, self.plan_transfer_s
             ));
         }
         out.push_str(&format!(
@@ -397,6 +425,12 @@ struct RunState {
     predicted_energy_j: f64,
     deadline_misses: u64,
     power_sheds: u64,
+    plan_batches: u64,
+    plan_hybrid_batches: u64,
+    plan_transfer_s: f64,
+    /// Events whose batch has been dispatched (each event counted once,
+    /// regardless of how many plan segments executed it).
+    events_done: u64,
     correct: u64,
     with_truth: u64,
     sim_end: f64,
@@ -608,6 +642,10 @@ pub struct Pipeline {
     /// `deadline_s`, `power_budget_w`, and registry availability are
     /// the knobs a [`PipelineRun`] mutates between ticks.
     pub dispatcher: Dispatcher,
+    /// Candidate execution plans, present when
+    /// [`PipelineConfig::plan_mode`] is set: batches then dispatch over
+    /// plans instead of whole-model targets.
+    planner: Option<Planner>,
     input_bytes: u64,
 }
 
@@ -634,19 +672,38 @@ impl Pipeline {
             config.power_budget_w,
             &config.targets,
         )?;
-        Ok(Pipeline { config, route, dispatcher, input_bytes })
+        let planner = if config.plan_mode {
+            Some(Planner::build(
+                &route.model,
+                catalog,
+                calib,
+                &dispatcher.registry,
+                &config.targets,
+            )?)
+        } else {
+            None
+        };
+        Ok(Pipeline { config, route, dispatcher, planner, input_bytes })
+    }
+
+    /// The candidate plan set, when the pipeline runs in plan mode.
+    pub fn planner(&self) -> Option<&Planner> {
+        self.planner.as_ref()
     }
 
     /// Pick a target for one batch, advance its virtual-clock timeline,
     /// then hand the batch to the executor (one request per batch) or
-    /// run the surrogate inline.
+    /// run the surrogate inline.  In plan mode the batch dispatches
+    /// over execution plans instead ([`Pipeline::dispatch_plan`]).
     fn dispatch(
         &self,
         batch: Batch,
         state: &mut RunState,
         reaper: &mut Option<Reaper<'_>>,
     ) -> Result<()> {
-        let cfg = &self.config;
+        if self.planner.is_some() {
+            return self.dispatch_plan(batch, state, reaper);
+        }
         let phase = state.phase_index();
         let n = batch.len() as u64;
         let oldest_t_s = batch.events.first().map(|e| e.t_s).unwrap_or(batch.flushed_at_s);
@@ -658,6 +715,7 @@ impl Pipeline {
         let (start, done) =
             state.timelines[choice.index].schedule(batch.flushed_at_s, n, srun);
         state.sim_end = state.sim_end.max(done);
+        state.events_done += n;
         state.metrics.add("batches", 1);
         state.metrics.add("inferences", n);
         state.metrics.inc(&format!("dispatch_{}", target.name()));
@@ -705,9 +763,125 @@ impl Pipeline {
                 ph.latencies.push(done - ev.t_s);
             }
         }
+        self.run_numerics(batch, phase, target.precision(), state, reaper)
+    }
+
+    /// Pick an execution plan for one batch, advance every segment's
+    /// lane timeline in order (boundary transfers between them), then
+    /// run the numerics exactly like the whole-model path.
+    fn dispatch_plan(
+        &self,
+        batch: Batch,
+        state: &mut RunState,
+        reaper: &mut Option<Reaper<'_>>,
+    ) -> Result<()> {
+        let planner = self.planner.as_ref().expect("dispatch_plan needs plan mode");
+        let phase = state.phase_index();
+        let n = batch.len() as u64;
+        let oldest_t_s = batch.events.first().map(|e| e.t_s).unwrap_or(batch.flushed_at_s);
+        let pc = self.dispatcher.choose_plan(
+            planner,
+            &state.timelines,
+            batch.flushed_at_s,
+            oldest_t_s,
+            n,
+        );
+        let plan = &planner.plans()[pc.index];
+        // segments execute sequentially: each lane's timeline is
+        // charged in order, and the batch's activations pay the
+        // boundary transfer before the next segment may start
+        let mut at = batch.flushed_at_s;
+        let mut done = at;
+        let mut energy = 0.0;
+        for seg in &plan.segments {
+            let srun = ScheduledRun {
+                setup_s: seg.setup_s,
+                per_item_s: seg.per_item_s,
+                power_w: seg.power_w,
+            };
+            let (start, d) = state.timelines[planner.flat(seg.lane)].schedule(at, n, srun);
+            energy += seg.power_w * (d - start);
+            done = d;
+            at = d + n as f64 * seg.transfer_out_s;
+            state.metrics.inc(&format!("dispatch_{}", seg.target));
+            *state.target_batches.entry(seg.target.clone()).or_insert(0) += 1;
+        }
+        state.sim_end = state.sim_end.max(done);
+        state.events_done += n;
+        state.metrics.add("batches", 1);
+        state.metrics.add("inferences", n);
+        state.metrics.inc("plan_batches");
+        state.plan_batches += 1;
+        if plan.is_hybrid() {
+            state.metrics.inc("plan_hybrid_batches");
+            state.plan_hybrid_batches += 1;
+        }
+        state.plan_transfer_s += n as f64 * plan.transfer_per_item_s;
+        state.predicted_energy_j += pc.cost.energy_j;
+        state.metrics.observe(
+            "predicted_batch_latency",
+            Duration::from_secs_f64(pc.cost.latency_s.max(0.0)),
+        );
+        state.metrics.observe(
+            "measured_batch_latency",
+            Duration::from_secs_f64((done - batch.flushed_at_s).max(0.0)),
+        );
+        let missed = done - oldest_t_s > self.dispatcher.deadline_s;
+        if missed {
+            state.deadline_misses += 1;
+            state.metrics.inc("deadline_miss_batches");
+        }
+        if pc.power_shed {
+            state.power_sheds += 1;
+            state.metrics.inc("power_shed_batches");
+        }
+        for ev in &batch.events {
+            state.latencies.push(done - ev.t_s);
+        }
+        {
+            let ph = &mut state.phases[phase];
+            ph.batches += 1;
+            for seg in &plan.segments {
+                *ph.target_mix.entry(seg.target.clone()).or_insert(0) += 1;
+            }
+            ph.energy_j += energy;
+            if missed {
+                ph.deadline_misses += 1;
+            }
+            if pc.power_shed {
+                ph.power_sheds += 1;
+            }
+            for ev in &batch.events {
+                ph.latencies.push(done - ev.t_s);
+            }
+        }
+        // numerics follow the deployed variant: a single-segment plan on
+        // a registry target keeps that target's precision (bit-identical
+        // to the whole-model path); hybrids run the host-visible fp32
+        // variant (per-segment quantization is a timing/energy concern,
+        // not a numerics path we have artifacts for)
+        let precision = match (plan.segments.len(), plan.segments[0].lane) {
+            (1, Lane::Registry(i)) => self.dispatcher.registry.get(i).precision(),
+            _ => Precision::Fp32,
+        };
+        self.run_numerics(batch, phase, precision, state, reaper)
+    }
+
+    /// Post-scheduling numerics, shared by both dispatch paths: one
+    /// `ExecRequest` per batch through the pool, or the inline
+    /// deterministic surrogate for timing-only runs.
+    fn run_numerics(
+        &self,
+        batch: Batch,
+        phase: usize,
+        precision: Precision,
+        state: &mut RunState,
+        reaper: &mut Option<Reaper<'_>>,
+    ) -> Result<()> {
+        let cfg = &self.config;
         match reaper {
             Some(r) => {
-                r.submit(&self.route.model, target.precision(), phase, batch)?;
+                r.submit(&self.route.model, precision, phase, batch)?;
                 // overlap: absorb any batches that already finished,
                 // then apply backpressure so in-flight work is bounded
                 r.drain_ready(cfg.use_case, self.input_bytes, state)?;
@@ -750,8 +924,16 @@ impl Pipeline {
         let ingress = cfg
             .ingress_cap
             .map(|cap| BoundedQueue::new(cap, cfg.ingress_policy));
+        // plan mode appends one timeline per derived (plan-only) lane
+        // after the registry lanes, matching `Planner::flat` indexing
+        let mut timelines = self.dispatcher.timelines();
+        if let Some(p) = &self.planner {
+            for name in p.derived_lane_names() {
+                timelines.push(AccelTimeline::new(name));
+            }
+        }
         let state = RunState {
-            timelines: self.dispatcher.timelines(),
+            timelines,
             downlink: DownlinkManager::new(cfg.downlink_budget),
             metrics: Metrics::default(),
             rng: Prng::new(cfg.seed ^ DECISION_RNG_SALT),
@@ -761,6 +943,10 @@ impl Pipeline {
             predicted_energy_j: 0.0,
             deadline_misses: 0,
             power_sheds: 0,
+            plan_batches: 0,
+            plan_hybrid_batches: 0,
+            plan_transfer_s: 0.0,
+            events_done: 0,
             correct: 0,
             with_truth: 0,
             sim_end: 0.0,
@@ -1052,6 +1238,10 @@ impl PipelineRun<'_, '_> {
             predicted_energy_j,
             deadline_misses,
             power_sheds,
+            plan_batches,
+            plan_hybrid_batches,
+            plan_transfer_s,
+            events_done,
             correct,
             with_truth,
             sim_end,
@@ -1061,7 +1251,10 @@ impl PipelineRun<'_, '_> {
         latencies.sort_by(f64::total_cmp);
         let mean = latencies.iter().sum::<f64>() / latencies.len().max(1) as f64;
         let p95 = percentile_nearest_rank(&latencies, 0.95);
-        let completed: u64 = timelines.iter().map(|t| t.completed).sum();
+        // events counted per dispatched batch, not per timeline charge:
+        // a hybrid plan schedules the same batch on several lanes, and
+        // those segment charges must not inflate the event count
+        let completed = events_done;
         let busy_s: f64 = timelines.iter().map(|t| t.busy_s).sum();
         let energy_j: f64 = timelines.iter().map(|t| t.energy_j).sum();
         let busy_fps = if busy_s > 0.0 { completed as f64 / busy_s } else { 0.0 };
@@ -1088,6 +1281,9 @@ impl PipelineRun<'_, '_> {
             predicted_energy_j,
             deadline_misses,
             power_sheds,
+            plan_batches,
+            plan_hybrid_batches,
+            plan_transfer_s,
             ingress_accepted,
             ingress_dropped,
             downlink_sent: downlink.sent_count,
@@ -1399,6 +1595,105 @@ mod tests {
             "accepted + dropped must partition the emitted events"
         );
         assert_eq!(r.events, r.ingress_accepted, "survivors execute at drain");
+    }
+
+    #[test]
+    fn plan_mode_is_bit_identical_for_fully_supported_models() {
+        // VAE: every default target supports the whole model, so every
+        // candidate plan is single-segment and plan-mode runs must be
+        // bit-identical to the whole-model dispatcher — the pipeline
+        // half of the degenerate-plan invariant
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        for policy in
+            [Policy::Static, Policy::MinLatency, Policy::MinEnergy, Policy::Deadline]
+        {
+            let run = |plan_mode: bool| {
+                let mut p = Pipeline::new(
+                    PipelineConfig {
+                        use_case: UseCase::Vae,
+                        n_events: 60,
+                        cadence_s: 0.05,
+                        policy,
+                        plan_mode,
+                        ..Default::default()
+                    },
+                    &catalog,
+                    &calib,
+                )
+                .unwrap();
+                p.run(None).unwrap()
+            };
+            let whole = run(false);
+            let plan = run(true);
+            assert_eq!(whole.target_mix, plan.target_mix, "{policy:?}");
+            assert_eq!(
+                whole.mean_latency_s.to_bits(),
+                plan.mean_latency_s.to_bits(),
+                "{policy:?}"
+            );
+            assert_eq!(whole.energy_j.to_bits(), plan.energy_j.to_bits(), "{policy:?}");
+            assert_eq!(
+                whole.predicted_energy_j.to_bits(),
+                plan.predicted_energy_j.to_bits(),
+                "{policy:?}"
+            );
+            assert_eq!(whole.decisions, plan.decisions, "{policy:?}");
+            assert_eq!(whole.deadline_misses, plan.deadline_misses, "{policy:?}");
+            assert_eq!(plan.plan_batches, plan.metrics.counter("batches"));
+            assert_eq!(plan.plan_hybrid_batches, 0, "no hybrid exists for vae");
+            assert_eq!(plan.plan_transfer_s.to_bits(), 0.0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn plan_mode_dispatches_baseline_as_a_dpu_hybrid() {
+        // acceptance: a 3-D model dispatches as a multi-segment
+        // DPU+fallback plan under min-latency, transfer toll accounted
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        let mut p = Pipeline::new(
+            PipelineConfig {
+                use_case: UseCase::Mms,
+                mms_model: "baseline".into(),
+                n_events: 40,
+                policy: Policy::MinLatency,
+                plan_mode: true,
+                ..Default::default()
+            },
+            &catalog,
+            &calib,
+        )
+        .unwrap();
+        let r = p.run(None).unwrap();
+        assert_eq!(r.events, 40, "each event counts once, not once per segment");
+        assert!(r.plan_hybrid_batches > 0, "hybrid plan must win min-latency");
+        assert_eq!(r.plan_hybrid_batches, r.plan_batches);
+        assert!(r.plan_transfer_s > 0.0, "boundary transfers are charged");
+        assert!(
+            r.target_mix.contains_key("dpu") && r.target_mix.contains_key("cpu"),
+            "mix shows both segment lanes: {:?}",
+            r.target_mix
+        );
+        // prediction and virtual clock share calibration in plan mode too
+        let rel = (r.predicted_energy_j - r.energy_j).abs() / r.energy_j.max(1e-12);
+        assert!(rel < 1e-9, "predicted {} vs measured {}", r.predicted_energy_j, r.energy_j);
+        // the hybrid clears the whole-model static mapping by a wide
+        // margin: same workload, static policy, no plans
+        let mut st = Pipeline::new(
+            PipelineConfig {
+                use_case: UseCase::Mms,
+                mms_model: "baseline".into(),
+                n_events: 40,
+                policy: Policy::Static,
+                ..Default::default()
+            },
+            &catalog,
+            &calib,
+        )
+        .unwrap();
+        let rs = st.run(None).unwrap();
+        assert!(r.mean_latency_s < rs.mean_latency_s / 10.0, "{} vs {}", r.mean_latency_s, rs.mean_latency_s);
     }
 
     #[test]

@@ -15,6 +15,12 @@
 //! coordinator dispatches over by index — the paper's A53 / B4096 DPU /
 //! naive-HLS triple is just the default registry, with the full DPU
 //! size family and a pipelined-HLS variant behind `--targets all`.
+//! Operator support is *per layer* ([`backend::AccelModel::supports_layer`]),
+//! and the [`plan`] layer partitions operator-incompatible models into
+//! hybrid execution plans (DPU subgraphs + fallback segments, the
+//! paper's Vitis-AI graph-splitting behavior) that the dispatcher
+//! scores alongside whole-model deployments (`spaceinfer plan`,
+//! `pipeline --plan`).
 //!
 //! Mission conditions change *inside* a run: the pipeline is a
 //! steppable state machine ([`coordinator::Pipeline::begin`] /
@@ -39,6 +45,7 @@ pub mod power;
 pub mod rad;
 pub mod resources;
 pub mod backend;
+pub mod plan;
 pub mod runtime;
 pub mod sensors;
 pub mod telemetry;

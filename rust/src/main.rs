@@ -13,6 +13,8 @@
 //! spaceinfer pipeline --use-case mms [--real]     end-to-end coordinator
 //!     [--policy static|min-latency|min-energy|deadline]
 //!     [--power-budget W] [--deadline-ms MS] [--targets default|all|...]
+//!     [--plan]
+//! spaceinfer plan <model>                         execution-plan table
 //! spaceinfer policies [--use-case vae]            policy comparison table
 //! spaceinfer scenario <name> | --list             mission scenario engine
 //! spaceinfer targets [--use-case vae]             target-matrix table
@@ -130,6 +132,7 @@ fn run() -> Result<()> {
         "quantization" => quantization(&dir),
         "selfcheck" => selfcheck(&dir),
         "pipeline" => pipeline_cmd(&args, &dir, calib),
+        "plan" => plan_cmd(&args, &dir, calib),
         "policies" => policies_cmd(&args, &dir, calib),
         "scenario" => scenario_cmd(&args, &dir, calib),
         "targets" => targets_cmd(&args, &dir, calib),
@@ -270,6 +273,7 @@ fn pipeline_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
         power_budget_w: parse_power_budget_w(args)?,
         targets: TargetSet::parse(args.get("targets", "default"))?,
         ingress_cap: parse_ingress_cap(args)?,
+        plan_mode: args.has("plan"),
         ..Default::default()
     };
     if cfg.policy == Policy::Static && cfg.power_budget_w.is_some() {
@@ -327,6 +331,33 @@ fn pipeline_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
         );
     }
     println!("--- telemetry ---\n{}", report.metrics.report());
+    Ok(())
+}
+
+/// `spaceinfer plan <model>` — the candidate execution plans for one
+/// model (single-target and hybrid partitions) and the partition each
+/// dispatch policy would choose.  Artifact-free.
+fn plan_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
+    let catalog = catalog_or_synthetic(dir)?;
+    let model = match args.positional.first() {
+        Some(m) => m.as_str(),
+        None => bail!(
+            "usage: spaceinfer plan <model>  (vae | cnet | esperta | \
+             logistic | reduced | baseline)"
+        ),
+    };
+    let set = TargetSet::parse(args.get("targets", "default"))?;
+    let batch = args.get_usize("batch", 8)? as u64;
+    let report = spaceinfer::report::plan_report(
+        &catalog,
+        &calib,
+        model,
+        &set,
+        batch,
+        parse_deadline_s(args)?,
+        parse_power_budget_w(args)?,
+    )?;
+    println!("{report}");
     Ok(())
 }
 
@@ -467,7 +498,13 @@ usage: spaceinfer <subcommand> [--artifacts DIR] [--calib FILE]
                       [--policy static|min-latency|min-energy|deadline]
                       [--power-budget W] [--deadline-ms MS]
                       [--targets default|all|cpu,dpu-b1024,hls-pipe,...]
-                      [--ingress-cap N]
+                      [--ingress-cap N] [--plan]
+  plan                execution-plan table for one model: candidate
+                      partitions (hybrid DPU-subgraph + fallback plans
+                      next to whole-model deployments) and the choice
+                      per policy; artifact-free
+                      plan <model> [--batch B] [--targets ...]
+                      [--deadline-ms MS] [--power-budget W]
   policies            dispatch-policy comparison table (all policies)
                       [--use-case ...] [--n N] [--cadence S]
                       [--batch B] [--max-wait S]

@@ -7,7 +7,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use super::manifest::{Layer, LayerKind, Manifest, Precision};
+use super::manifest::{Activation, Layer, LayerKind, Manifest, Precision};
 use crate::util::json::Json;
 
 /// The four paper use cases (§III-A), as a type.
@@ -360,7 +360,7 @@ fn syn_layer(
     ops: u64,
     params: u64,
     weight_bytes: u64,
-    act: &str,
+    act: Activation,
 ) -> Layer {
     Layer {
         kind,
@@ -371,7 +371,7 @@ fn syn_layer(
         params,
         weight_bytes,
         act_bytes: out_shape.iter().skip(1).product::<usize>() as u64 * 4,
-        act: act.to_string(),
+        act,
     }
 }
 
@@ -426,9 +426,9 @@ fn synthetic_vae(prec: Precision) -> Manifest {
                 2 * conv_macs + 2 * conv_out,
                 8 * 28,
                 8 * 28 * bp,
-                "relu",
+                Activation::Relu,
             ),
-            syn_layer(LayerKind::Flatten, &[1, 64, 128, 8], &[1, 65536], 0, 0, 0, 0, "none"),
+            syn_layer(LayerKind::Flatten, &[1, 64, 128, 8], &[1, 65536], 0, 0, 0, 0, Activation::None),
             syn_layer(
                 LayerKind::Dense,
                 &[1, 65536],
@@ -437,7 +437,7 @@ fn synthetic_vae(prec: Precision) -> Manifest {
                 2 * dense_macs + 12,
                 12 * 65_537,
                 12 * 65_537 * bp,
-                "none",
+                Activation::None,
             ),
         ],
     )
@@ -463,7 +463,7 @@ fn synthetic_cnet(prec: Precision) -> Manifest {
                 2 * conv_macs + 2 * conv_out,
                 4 * 19,
                 4 * 19 * bp,
-                "relu",
+                Activation::Relu,
             ),
             syn_layer(
                 LayerKind::MaxPool2d,
@@ -473,9 +473,9 @@ fn synthetic_cnet(prec: Precision) -> Manifest {
                 16_384 * 3,
                 0,
                 0,
-                "none",
+                Activation::None,
             ),
-            syn_layer(LayerKind::Flatten, &[1, 64, 64, 4], &[1, 16384], 0, 0, 0, 0, "none"),
+            syn_layer(LayerKind::Flatten, &[1, 64, 64, 4], &[1, 16384], 0, 0, 0, 0, Activation::None),
             syn_layer(
                 LayerKind::ConcatScalar,
                 &[1, 16384],
@@ -484,7 +484,7 @@ fn synthetic_cnet(prec: Precision) -> Manifest {
                 0,
                 0,
                 0,
-                "none",
+                Activation::None,
             ),
             syn_layer(
                 LayerKind::Dense,
@@ -494,7 +494,7 @@ fn synthetic_cnet(prec: Precision) -> Manifest {
                 2 * 16_385 + 1,
                 16_386,
                 16_386 * bp,
-                "none",
+                Activation::None,
             ),
         ],
     )
@@ -516,7 +516,7 @@ fn synthetic_esperta() -> Manifest {
             2 * 18 + 3 * 6,
             24,
             96,
-            "sigmoid",
+            Activation::Sigmoid,
         )],
     )
 }
@@ -539,7 +539,7 @@ fn synthetic_logistic() -> Manifest {
                 0,
                 0,
                 0,
-                "none",
+                Activation::None,
             ),
             syn_layer(
                 LayerKind::Dense,
@@ -549,7 +549,7 @@ fn synthetic_logistic() -> Manifest {
                 2 * macs + 4,
                 4 * 16_385,
                 4 * 16_385 * 4,
-                "none",
+                Activation::None,
             ),
         ],
     )
@@ -575,9 +575,9 @@ fn synthetic_reduced() -> Manifest {
                 2 * conv_macs + 2 * conv_out,
                 2 * 28,
                 2 * 28 * 4,
-                "relu",
+                Activation::Relu,
             ),
-            syn_layer(LayerKind::Flatten, &[1, 16, 8, 16, 2], &[1, 4096], 0, 0, 0, 0, "none"),
+            syn_layer(LayerKind::Flatten, &[1, 16, 8, 16, 2], &[1, 4096], 0, 0, 0, 0, Activation::None),
             syn_layer(
                 LayerKind::Dense,
                 &[1, 4096],
@@ -586,7 +586,7 @@ fn synthetic_reduced() -> Manifest {
                 2 * dense_macs + 4,
                 4 * 4_097,
                 4 * 4_097 * 4,
-                "none",
+                Activation::None,
             ),
         ],
     )
@@ -617,7 +617,7 @@ fn synthetic_baseline() -> Manifest {
                 2 * conv_macs + 2 * conv_out,
                 4 * 28,
                 4 * 28 * 4,
-                "relu",
+                Activation::Relu,
             ),
             syn_layer(
                 LayerKind::MaxPool3d,
@@ -627,9 +627,9 @@ fn synthetic_baseline() -> Manifest {
                 1_024 * 7,
                 0,
                 0,
-                "none",
+                Activation::None,
             ),
-            syn_layer(LayerKind::Flatten, &[1, 8, 4, 8, 4], &[1, 1024], 0, 0, 0, 0, "none"),
+            syn_layer(LayerKind::Flatten, &[1, 8, 4, 8, 4], &[1, 1024], 0, 0, 0, 0, Activation::None),
             syn_layer(
                 LayerKind::Dense,
                 &[1, 1024],
@@ -638,7 +638,7 @@ fn synthetic_baseline() -> Manifest {
                 2 * hidden_macs + 256,
                 256 * 1_025,
                 256 * 1_025 * 4,
-                "relu",
+                Activation::Relu,
             ),
             syn_layer(
                 LayerKind::Dense,
@@ -648,7 +648,7 @@ fn synthetic_baseline() -> Manifest {
                 2 * head_macs + 4,
                 4 * 257,
                 4 * 257 * 4,
-                "none",
+                Activation::None,
             ),
         ],
     )

@@ -7,7 +7,7 @@
 
 use anyhow::{bail, Result};
 
-use super::manifest::{Layer, LayerKind, Manifest};
+use super::manifest::{Activation, Layer, LayerKind, Manifest};
 
 /// Recomputed counts for one layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -23,7 +23,7 @@ pub struct Counts {
 /// Recompute counts for a layer from its shapes (DESIGN §8 convention).
 pub fn recount(layer: &Layer) -> Result<Counts> {
     let out_elems = layer.out_elems();
-    let has_act = layer.act != "none";
+    let has_act = layer.act != Activation::None;
     let counts = match layer.kind {
         LayerKind::Conv2d | LayerKind::Conv3d => {
             let cin = *layer.in_shape.last().unwrap() as u64;

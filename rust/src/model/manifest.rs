@@ -40,6 +40,59 @@ impl Precision {
     }
 }
 
+/// Activation function applied after a layer's linear part — typed, so
+/// operator gates compare enum variants instead of raw manifest strings
+/// (a typo like `"sigmiod"` is now a parse error at the manifest
+/// boundary, not a silent pass through the DPU gate).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    /// No activation (the layer is purely linear / data movement).
+    None,
+    /// Rectified linear unit.
+    Relu,
+    /// Leaky ReLU (the paper's Vitis-AI inspector rejects it).
+    LeakyRelu,
+    /// Logistic sigmoid (HLS-only; the DPU has no sigmoid core).
+    Sigmoid,
+}
+
+impl Activation {
+    /// Parse the manifest spelling ("none" | "relu" | "leaky_relu" |
+    /// "sigmoid") — the exact set `python/compile/models/graph.py`
+    /// emits.
+    ///
+    /// ```
+    /// use spaceinfer::model::Activation;
+    /// assert_eq!(Activation::parse("relu").unwrap(), Activation::Relu);
+    /// assert!(Activation::parse("sigmiod").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<Activation> {
+        Ok(match s {
+            "none" => Activation::None,
+            "relu" => Activation::Relu,
+            "leaky_relu" => Activation::LeakyRelu,
+            "sigmoid" => Activation::Sigmoid,
+            _ => bail!("unknown activation {s:?} (none | relu | leaky_relu | sigmoid)"),
+        })
+    }
+
+    /// The manifest spelling of this activation.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Activation::None => "none",
+            Activation::Relu => "relu",
+            Activation::LeakyRelu => "leaky_relu",
+            Activation::Sigmoid => "sigmoid",
+        }
+    }
+
+    /// Can the Vitis-AI DPU fuse this activation? (paper §III-B: no
+    /// sigmoid, and the inspector also rejects leaky ReLU.)
+    pub fn dpu_supported(&self) -> bool {
+        matches!(self, Activation::None | Activation::Relu)
+    }
+}
+
 /// Layer taxonomy shared with `python/compile/models/graph.py`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LayerKind {
@@ -129,8 +182,8 @@ pub struct Layer {
     pub weight_bytes: u64,
     /// Bytes of the output activation.
     pub act_bytes: u64,
-    /// Activation function name ("none" | "relu" | "leaky_relu" | "sigmoid").
-    pub act: String,
+    /// Activation function applied after the layer.
+    pub act: Activation,
 }
 
 impl Layer {
@@ -144,13 +197,22 @@ impl Layer {
             params: j.req("params")?.as_i64()? as u64,
             weight_bytes: j.req("weight_bytes")?.as_i64()? as u64,
             act_bytes: j.req("act_bytes")?.as_i64()? as u64,
-            act: j.req("act")?.as_str()?.to_string(),
+            act: Activation::parse(j.req("act")?.as_str()?)?,
         })
     }
 
     /// Elements in the output activation.
     pub fn out_elems(&self) -> u64 {
         self.out_shape.iter().skip(1).product::<usize>() as u64
+    }
+
+    /// Is this layer executable by the Vitis-AI DPU — operator *and*
+    /// activation both inside the §III-B set?  The per-layer form of
+    /// [`Manifest::dpu_compatible`]; the partitioner
+    /// (`crate::plan`) uses it to find the maximal DPU-runnable
+    /// subgraphs of an otherwise-incompatible model.
+    pub fn dpu_mappable(&self) -> bool {
+        self.kind.dpu_supported() && self.act.dpu_supported()
     }
 }
 
@@ -270,8 +332,37 @@ impl Manifest {
 
     /// Is every layer DPU-mappable? (paper §III-B gate for Vitis AI)
     pub fn dpu_compatible(&self) -> bool {
-        self.layers.iter().all(|l| l.kind.dpu_supported())
-            && !self.layers.iter().any(|l| l.act == "sigmoid" || l.act == "leaky_relu")
+        self.layers.iter().all(Layer::dpu_mappable)
+    }
+
+    /// Sub-manifest over `layers[start..end)`: totals recomputed from
+    /// the slice, input/output shapes taken from the boundary layers.
+    /// The execution-plan partitioner evaluates the existing simulators
+    /// on these to price each segment of a hybrid deployment.
+    ///
+    /// Panics when the range is empty or out of bounds (plan-layer
+    /// callers partition `0..layers.len()` exactly).
+    pub fn slice(&self, start: usize, end: usize) -> Manifest {
+        assert!(start < end && end <= self.layers.len(), "bad slice {start}..{end}");
+        let layers: Vec<Layer> = self.layers[start..end].to_vec();
+        let inputs = if start == 0 {
+            self.inputs.clone()
+        } else {
+            // interior boundary: the segment consumes the previous
+            // segment's output activation as its sole input
+            vec![("seg_in".to_string(), layers[0].in_shape.clone())]
+        };
+        Manifest {
+            name: format!("{}[{start}..{end})", self.name),
+            precision: self.precision,
+            inputs,
+            output_shape: layers.last().unwrap().out_shape.clone(),
+            total_macs: layers.iter().map(|l| l.macs).sum(),
+            total_ops: layers.iter().map(|l| l.ops).sum(),
+            total_params: layers.iter().map(|l| l.params).sum(),
+            weight_bytes: layers.iter().map(|l| l.weight_bytes).sum(),
+            layers,
+        }
     }
 }
 
@@ -364,5 +455,56 @@ mod tests {
         assert_eq!(Precision::parse("fp32").unwrap(), Precision::Fp32);
         assert_eq!(Precision::Int8.as_str(), "int8");
         assert!(Precision::parse("fp16").is_err());
+    }
+
+    #[test]
+    fn activation_roundtrip_and_gate() {
+        for a in [
+            Activation::None,
+            Activation::Relu,
+            Activation::LeakyRelu,
+            Activation::Sigmoid,
+        ] {
+            assert_eq!(Activation::parse(a.as_str()).unwrap(), a);
+        }
+        // the typo that used to slip through the stringly gate is now
+        // rejected at parse time
+        assert!(Activation::parse("sigmiod").is_err());
+        let bad = MINI.replace("\"act\":\"relu\"", "\"act\":\"sigmiod\"");
+        assert!(Manifest::from_json(&Json::parse(&bad).unwrap()).is_err());
+        assert!(Activation::Relu.dpu_supported());
+        assert!(!Activation::Sigmoid.dpu_supported());
+        assert!(!Activation::LeakyRelu.dpu_supported());
+    }
+
+    #[test]
+    fn layer_level_gate_matches_model_level() {
+        let m = Manifest::from_json(&Json::parse(MINI).unwrap()).unwrap();
+        assert!(m.layers.iter().all(Layer::dpu_mappable));
+        let s = MINI.replace("\"act\":\"relu\"", "\"act\":\"sigmoid\"");
+        let m = Manifest::from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert!(!m.layers[0].dpu_mappable(), "sigmoid conv is off the DPU");
+        assert!(m.layers[2].dpu_mappable(), "the dense tail stays mappable");
+        assert_eq!(m.dpu_compatible(), m.layers.iter().all(Layer::dpu_mappable));
+    }
+
+    #[test]
+    fn slice_recomputes_totals_and_boundaries() {
+        let m = Manifest::from_json(&Json::parse(MINI).unwrap()).unwrap();
+        let head = m.slice(0, 1);
+        assert_eq!(head.layers.len(), 1);
+        assert_eq!(head.total_macs, 288);
+        assert_eq!(head.inputs, m.inputs, "prefix keeps the sensor inputs");
+        assert_eq!(head.output_shape, vec![1, 4, 4, 2]);
+        let tail = m.slice(1, 3);
+        assert_eq!(tail.total_macs, 64);
+        assert_eq!(tail.total_params, 66);
+        assert_eq!(tail.inputs[0].1, vec![1, 4, 4, 2], "boundary activation in");
+        assert_eq!(tail.output_shape, m.output_shape);
+        tail.validate().unwrap();
+        // the whole-model slice is the manifest itself, totals included
+        let all = m.slice(0, 3);
+        assert_eq!(all.total_ops, m.total_ops);
+        assert_eq!(all.weight_bytes, m.weight_bytes);
     }
 }

@@ -1,0 +1,42 @@
+//! Heterogeneous execution plans: per-layer operator support → subgraph
+//! partitions → plan-level dispatch.
+//!
+//! The paper's Vitis-AI flow does not reject a model containing a
+//! DPU-unsupported operator — the compiler *splits the graph* and falls
+//! back to the ARM CPU for the unsupported subgraph (§III-B; the same
+//! operator-coverage point drives the survey literature in PAPERS.md).
+//! Whole-model gating therefore under-serves hybrid deployments: one
+//! sigmoid layer used to push an entire model off the DPU.  This module
+//! closes that gap:
+//!
+//! * [`Planner`] — partitions a manifest against every candidate lane
+//!   using the backend layer's per-layer gate
+//!   ([`crate::backend::AccelModel::supports_layer`]), producing one
+//!   [`ExecutionPlan`] per lane: single-segment when the lane covers
+//!   the whole model, hybrid (maximal preferred runs + fallback
+//!   segments) otherwise;
+//! * [`ExecutionPlan`] / [`Segment`] — ordered segments that exactly
+//!   partition the layer list, each priced by *its own lane's
+//!   simulator on the segment's sub-manifest*
+//!   ([`crate::backend::AccelModel::segment_cost`] over
+//!   [`crate::model::Manifest::slice`]);
+//! * [`TransferModel`] — the per-boundary host↔accelerator toll,
+//!   modeled from the producing layer's output bytes over the
+//!   calibrated AXI/DDR path;
+//! * plan-level dispatch — `coordinator::dispatch::Dispatcher::choose_plan`
+//!   scores hybrid plans alongside single-target plans under every
+//!   policy, and the pipeline executes the chosen plan segment by
+//!   segment on the virtual clock (`--plan`).
+//!
+//! **Degenerate invariant:** a model fully supported by a lane yields a
+//! single-segment plan carrying that target's exact whole-model
+//! operating point with an exactly-zero transfer term, so plan-level
+//! decisions on such models are bit-identical to the whole-model
+//! dispatcher (`tests/golden_dispatch.rs` passes unchanged;
+//! `tests/plan_partition.rs` pins the equivalence).
+
+pub mod partition;
+pub mod transfer;
+
+pub use partition::{ExecutionPlan, Lane, Planner, Segment, DERIVED_DPU_NAME};
+pub use transfer::TransferModel;

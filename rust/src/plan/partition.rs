@@ -1,0 +1,583 @@
+//! The subgraph partitioner: manifest + per-layer operator support →
+//! candidate [`ExecutionPlan`]s.
+//!
+//! For every candidate lane (each registered backend target, plus a
+//! derived DPU lane when the model has no whole-model DPU deployment)
+//! the partitioner computes the per-layer support mask via
+//! [`AccelModel::supports_layer`], groups the layer list into **maximal
+//! contiguous runs** of supported layers on the preferred lane, and
+//! assigns each unsupported run to the fastest registry lane that
+//! covers all of its layers.  Segment operating points come from the
+//! *existing simulators evaluated on sub-manifests*
+//! ([`AccelModel::segment_cost`] on [`Manifest::slice`]); boundary
+//! transfers are priced by [`TransferModel`] from the producing layer's
+//! output bytes.
+//!
+//! Degenerate invariant: a lane that supports the whole model yields a
+//! **single-segment plan carrying the registry target's exact
+//! whole-model operating point** (no re-simulation, an exactly-zero
+//! transfer term), so plan-level dispatch over such plans is
+//! bit-identical to the whole-model dispatcher — the golden suite's
+//! guarantee.
+
+use anyhow::{bail, Result};
+
+use super::transfer::TransferModel;
+use crate::backend::{AccelModel, DpuTarget, SegmentCost, Slot, TargetRegistry, TargetSet};
+use crate::board::{Calibration, Zcu104};
+use crate::dpu::DpuSize;
+use crate::model::catalog::Catalog;
+use crate::model::{Layer, Manifest, Precision};
+
+/// Name of the derived (plan-only) DPU lane.  It reuses the B4096
+/// registry spelling — unambiguous because the lane exists only when no
+/// registry DPU target does.
+pub const DERIVED_DPU_NAME: &str = "dpu";
+
+/// Where a segment executes: a registered backend target, or a
+/// plan-only derived lane (the PTQ-quantized DPU view of a model with
+/// no deployed int8 variant — what the Vitis-AI compiler would emit for
+/// the supported subgraph).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// Index into the dispatcher's [`TargetRegistry`].
+    Registry(usize),
+    /// Index into the planner's derived-lane table.
+    Derived(usize),
+}
+
+/// One contiguous run of layers bound to one execution lane, priced by
+/// that lane's simulator on the run's sub-manifest.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    /// Lane the segment executes on.
+    pub lane: Lane,
+    /// Lane name for reports / telemetry (`target_mix` keys).
+    pub target: String,
+    /// First layer index of the segment (inclusive).
+    pub start: usize,
+    /// One past the last layer index (exclusive).
+    pub end: usize,
+    /// Fixed per-batch submission overhead on this lane (s).
+    pub setup_s: f64,
+    /// Marginal time per inference for this segment (s).
+    pub per_item_s: f64,
+    /// Active MPSoC draw while the segment runs (W).
+    pub power_w: f64,
+    /// Boundary activation bytes handed to the next segment (0 for the
+    /// final segment).
+    pub out_bytes: u64,
+    /// Per-inference host↔accelerator transfer time after this segment
+    /// (s); exactly 0 for the final segment.
+    pub transfer_out_s: f64,
+}
+
+impl Segment {
+    /// Number of layers the segment covers.
+    pub fn layer_count(&self) -> usize {
+        self.end - self.start
+    }
+}
+
+/// An ordered execution plan: segments that exactly partition the
+/// model's layer list, plus the per-boundary transfer toll.  A
+/// single-segment plan is a whole-model deployment; a multi-segment
+/// plan is the paper's Vitis-AI-style hybrid (DPU subgraphs + fallback
+/// for the operators the DPU lacks).
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    /// Model the plan partitions.
+    pub model: String,
+    /// Name of the preferred lane the plan was grown around.
+    pub preferred: String,
+    /// Ordered segments; `segments[k].end == segments[k+1].start`.
+    pub segments: Vec<Segment>,
+    /// Total per-inference boundary transfer time (s); exactly 0 for
+    /// single-segment plans.
+    pub transfer_per_item_s: f64,
+    /// Total boundary activation bytes crossing per inference.
+    pub transfer_bytes: u64,
+    /// Layer count of the partitioned manifest (for invariant checks).
+    pub n_layers: usize,
+}
+
+impl ExecutionPlan {
+    /// More than one segment — a genuine hybrid deployment.
+    pub fn is_hybrid(&self) -> bool {
+        self.segments.len() > 1
+    }
+
+    /// Predicted busy latency for a batch of `n` (s): every segment's
+    /// setup paid once, per-item compute and boundary transfers paid per
+    /// inference.  For a single-segment plan this reduces bit-exactly to
+    /// [`AccelModel::batch_latency_s`] of the underlying target.
+    pub fn batch_latency_s(&self, n: u64) -> f64 {
+        let setup: f64 = self.segments.iter().map(|s| s.setup_s).sum();
+        let per: f64 = self.segments.iter().map(|s| s.per_item_s).sum();
+        setup + n as f64 * (per + self.transfer_per_item_s)
+    }
+
+    /// Predicted busy energy for a batch of `n` (J): each segment's
+    /// active power over its own busy time.  Boundary transfers add
+    /// latency, not energy (the DMA draw is inside the PS-poll floor
+    /// every active-power figure already includes).
+    pub fn batch_energy_j(&self, n: u64) -> f64 {
+        self.segments
+            .iter()
+            .map(|s| s.power_w * (s.setup_s + n as f64 * s.per_item_s))
+            .sum()
+    }
+
+    /// Peak active draw over the plan (W) — segments run sequentially,
+    /// so this is what a mission power budget must clear.
+    pub fn peak_power_w(&self) -> f64 {
+        self.segments.iter().map(|s| s.power_w).fold(0.0, f64::max)
+    }
+
+    /// Human-readable partition, e.g. `cpu[0..2) -> dpu[2..5)`.
+    pub fn describe(&self) -> String {
+        self.segments
+            .iter()
+            .map(|s| format!("{}[{}..{})", s.target, s.start, s.end))
+            .collect::<Vec<_>>()
+            .join(" -> ")
+    }
+}
+
+/// A plan-only lane: a target the registry could not register for the
+/// whole model but whose subgraphs the planner can still place.
+#[derive(Debug, Clone)]
+struct DerivedLane {
+    name: String,
+}
+
+/// Builds and holds the candidate plan set for one model: one plan per
+/// lane that supports at least one layer (single-segment when the lane
+/// covers the whole model, hybrid otherwise).  Immutable once built —
+/// the dispatcher scores `plans()` per batch exactly as it scores
+/// registry targets.
+#[derive(Debug)]
+pub struct Planner {
+    model: String,
+    registry_len: usize,
+    derived: Vec<DerivedLane>,
+    plans: Vec<ExecutionPlan>,
+    primary_plan: Option<usize>,
+}
+
+impl Planner {
+    /// Partition `model` against every lane.  `set` is honored when
+    /// deriving plan-only lanes (an explicit `--targets` list without
+    /// `dpu` must not grow one).
+    pub fn build(
+        model: &str,
+        catalog: &Catalog,
+        calib: &Calibration,
+        registry: &TargetRegistry,
+        set: &TargetSet,
+    ) -> Result<Planner> {
+        let fp32 = catalog.manifest(model, Precision::Fp32)?;
+        if fp32.layers.is_empty() {
+            bail!("model {model:?} has no layers to partition");
+        }
+        let int8 = catalog.manifest(model, Precision::Int8).ok();
+        let mut derived = Vec::new();
+        let has_registry_dpu = registry.targets().iter().any(|t| t.slot() == Slot::Dpu);
+        let any_mappable = fp32.layers.iter().any(Layer::dpu_mappable);
+        if !has_registry_dpu && any_mappable && set.admits(DERIVED_DPU_NAME, true) {
+            derived.push(DerivedLane { name: DERIVED_DPU_NAME.to_string() });
+        }
+        let board = Zcu104::default();
+        let builder = PlanBuilder {
+            registry,
+            calib,
+            transfer: TransferModel::new(&board),
+            board,
+            fp32,
+            int8,
+            derived: &derived,
+        };
+        let lanes: Vec<Lane> = (0..registry.len())
+            .map(Lane::Registry)
+            .chain((0..derived.len()).map(Lane::Derived))
+            .collect();
+        let mut plans = Vec::new();
+        let mut primary_plan = None;
+        for lane in lanes {
+            let mask: Vec<bool> =
+                fp32.layers.iter().map(|l| builder.lane_supports(lane, l)).collect();
+            if !mask.iter().any(|&m| m) {
+                continue; // this lane runs nothing of the model
+            }
+            let Some(plan) = builder.build_plan(lane, &mask)? else {
+                continue; // an unsupported run had no fallback lane
+            };
+            if plan.segments.len() == 1 {
+                if let Lane::Registry(i) = lane {
+                    if registry.primary_index() == Some(i) {
+                        primary_plan = Some(plans.len());
+                    }
+                }
+            }
+            plans.push(plan);
+        }
+        if plans.is_empty() {
+            bail!("no executable plan for model {model:?}");
+        }
+        Ok(Planner {
+            model: model.to_string(),
+            registry_len: registry.len(),
+            derived,
+            plans,
+            primary_plan,
+        })
+    }
+
+    /// Model the plans partition.
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// The candidate plan set, lane order (registry lanes first).
+    pub fn plans(&self) -> &[ExecutionPlan] {
+        &self.plans
+    }
+
+    /// Index into [`Planner::plans`] of the single-segment plan on the
+    /// registry's primary (deployment-matrix) target, when one exists —
+    /// what the static policy picks.
+    pub fn primary_plan(&self) -> Option<usize> {
+        self.primary_plan
+    }
+
+    /// Total timeline lanes: every registry target plus every derived
+    /// lane (flat-indexed in that order).
+    pub fn lane_count(&self) -> usize {
+        self.registry_len + self.derived.len()
+    }
+
+    /// Flatten a [`Lane`] to its timeline index: registry lanes keep
+    /// their registry index, derived lanes follow.
+    pub fn flat(&self, lane: Lane) -> usize {
+        match lane {
+            Lane::Registry(i) => i,
+            Lane::Derived(d) => self.registry_len + d,
+        }
+    }
+
+    /// Names of the derived (plan-only) lanes, flat order.
+    pub fn derived_lane_names(&self) -> impl Iterator<Item = &str> {
+        self.derived.iter().map(|d| d.name.as_str())
+    }
+}
+
+/// Everything the partitioning pass needs, borrowed for the build.
+struct PlanBuilder<'a> {
+    registry: &'a TargetRegistry,
+    calib: &'a Calibration,
+    transfer: TransferModel,
+    board: Zcu104,
+    fp32: &'a Manifest,
+    int8: Option<&'a Manifest>,
+    derived: &'a [DerivedLane],
+}
+
+impl PlanBuilder<'_> {
+    fn lane_name(&self, lane: Lane) -> String {
+        match lane {
+            Lane::Registry(i) => self.registry.get(i).name().to_string(),
+            Lane::Derived(d) => self.derived[d].name.clone(),
+        }
+    }
+
+    fn lane_supports(&self, lane: Lane, layer: &Layer) -> bool {
+        match lane {
+            Lane::Registry(i) => self.registry.get(i).supports_layer(layer).is_ok(),
+            Lane::Derived(_) => layer.dpu_mappable(),
+        }
+    }
+
+    /// Int8 sub-manifest for a DPU segment: slice the deployed int8
+    /// variant when one exists, otherwise the PTQ byte-footprint view
+    /// of the fp32 slice (what quantizing the subgraph would yield).
+    fn int8_slice(&self, start: usize, end: usize) -> Manifest {
+        match self.int8 {
+            Some(m) => m.slice(start, end),
+            None => int8_view(&self.fp32.slice(start, end)),
+        }
+    }
+
+    /// Operating point of `layers[start..end)` on `lane`, from the
+    /// lane's own simulator.  A registry lane covering the whole model
+    /// returns its bound operating point bit-exactly (the degenerate
+    /// invariant).
+    fn seg_cost(&self, lane: Lane, start: usize, end: usize) -> Result<SegmentCost> {
+        match lane {
+            Lane::Registry(i) => {
+                let t = self.registry.get(i);
+                if start == 0 && end == self.fp32.layers.len() {
+                    return Ok(SegmentCost {
+                        setup_s: t.setup_s(),
+                        per_item_s: t.per_item_s(),
+                        active_power_w: t.active_power_w(),
+                    });
+                }
+                let sub = match t.precision() {
+                    Precision::Int8 => self.int8_slice(start, end),
+                    Precision::Fp32 => self.fp32.slice(start, end),
+                };
+                t.segment_cost(&sub)
+            }
+            Lane::Derived(_) => {
+                let sub = self.int8_slice(start, end);
+                let t = DpuTarget::new(&sub, DpuSize::B4096, self.calib, &self.board)?;
+                Ok(SegmentCost {
+                    setup_s: t.setup_s(),
+                    per_item_s: t.per_item_s(),
+                    active_power_w: t.active_power_w(),
+                })
+            }
+        }
+    }
+
+    /// Fastest registry lane supporting every layer of
+    /// `layers[start..end)` (strict-less argmin on single-inference
+    /// busy time: deterministic, registry-order tie-break).
+    fn fallback_lane(&self, start: usize, end: usize) -> Option<Lane> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, t) in self.registry.targets().iter().enumerate() {
+            let covered = self.fp32.layers[start..end]
+                .iter()
+                .all(|l| t.supports_layer(l).is_ok());
+            if !covered {
+                continue;
+            }
+            let Ok(c) = self.seg_cost(Lane::Registry(i), start, end) else {
+                continue;
+            };
+            let busy = c.setup_s + c.per_item_s;
+            let better = match best {
+                Some((_, b)) => busy < b,
+                None => true,
+            };
+            if better {
+                best = Some((i, busy));
+            }
+        }
+        best.map(|(i, _)| Lane::Registry(i))
+    }
+
+    /// Grow one plan around `preferred` from its support `mask`:
+    /// maximal supported runs stay on the preferred lane, unsupported
+    /// runs go to their fallback.  `None` when some unsupported run has
+    /// no covering lane (possible under narrow `--targets` lists).
+    fn build_plan(&self, preferred: Lane, mask: &[bool]) -> Result<Option<ExecutionPlan>> {
+        let n_layers = mask.len();
+        let mut ranges: Vec<(Lane, usize, usize)> = Vec::new();
+        let mut start = 0;
+        while start < n_layers {
+            let on_preferred = mask[start];
+            let mut end = start + 1;
+            while end < n_layers && mask[end] == on_preferred {
+                end += 1;
+            }
+            let lane = if on_preferred {
+                preferred
+            } else {
+                match self.fallback_lane(start, end) {
+                    Some(l) => l,
+                    None => return Ok(None),
+                }
+            };
+            ranges.push((lane, start, end));
+            start = end;
+        }
+        let last = ranges.len() - 1;
+        let mut segments = Vec::with_capacity(ranges.len());
+        let mut transfer_per_item_s = 0.0;
+        let mut transfer_bytes = 0u64;
+        for (k, &(lane, s, e)) in ranges.iter().enumerate() {
+            let cost = self.seg_cost(lane, s, e)?;
+            let (out_bytes, transfer_out_s) = if k == last {
+                (0, 0.0)
+            } else {
+                let bytes = self.fp32.layers[e - 1].act_bytes;
+                (bytes, self.transfer.boundary_s(bytes))
+            };
+            transfer_per_item_s += transfer_out_s;
+            transfer_bytes += out_bytes;
+            segments.push(Segment {
+                lane,
+                target: self.lane_name(lane),
+                start: s,
+                end: e,
+                setup_s: cost.setup_s,
+                per_item_s: cost.per_item_s,
+                power_w: cost.active_power_w,
+                out_bytes,
+                transfer_out_s,
+            });
+        }
+        Ok(Some(ExecutionPlan {
+            model: self.fp32.name.clone(),
+            preferred: self.lane_name(preferred),
+            segments,
+            transfer_per_item_s,
+            transfer_bytes,
+            n_layers,
+        }))
+    }
+}
+
+/// PTQ byte-footprint view of a manifest: int8 precision, one weight
+/// byte per parameter (the convention the real int8 artifacts follow).
+/// Shapes and counts are unchanged — quantization does not move MACs.
+fn int8_view(man: &Manifest) -> Manifest {
+    let mut m = man.clone();
+    m.precision = Precision::Int8;
+    for l in &mut m.layers {
+        l.weight_bytes = l.params;
+    }
+    m.weight_bytes = m.layers.iter().map(|l| l.weight_bytes).sum();
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn build(model: &str, set: &TargetSet) -> (TargetRegistry, Planner) {
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        let registry = TargetRegistry::build(model, &catalog, &calib, set).unwrap();
+        let planner = Planner::build(model, &catalog, &calib, &registry, set).unwrap();
+        (registry, planner)
+    }
+
+    #[test]
+    fn fully_supported_model_yields_exact_single_segment_plans() {
+        let (registry, planner) = build("vae", &TargetSet::Default);
+        assert_eq!(planner.plans().len(), 3, "one plan per registry lane");
+        assert_eq!(planner.primary_plan(), Some(1), "static picks the DPU plan");
+        assert_eq!(planner.lane_count(), registry.len(), "no derived lanes");
+        for (i, plan) in planner.plans().iter().enumerate() {
+            assert_eq!(plan.segments.len(), 1);
+            assert!(!plan.is_hybrid());
+            let seg = &plan.segments[0];
+            assert_eq!(seg.lane, Lane::Registry(i));
+            assert_eq!((seg.start, seg.end), (0, plan.n_layers));
+            let t = registry.get(i);
+            assert_eq!(seg.target, t.name());
+            // the degenerate invariant, cost side: bit-identical point
+            assert_eq!(seg.setup_s.to_bits(), t.setup_s().to_bits());
+            assert_eq!(seg.per_item_s.to_bits(), t.per_item_s().to_bits());
+            assert_eq!(seg.power_w.to_bits(), t.active_power_w().to_bits());
+            assert_eq!(plan.transfer_per_item_s.to_bits(), 0.0f64.to_bits());
+            for n in [1u64, 8] {
+                assert_eq!(
+                    plan.batch_latency_s(n).to_bits(),
+                    t.batch_latency_s(n).to_bits()
+                );
+                assert_eq!(plan.batch_energy_j(n).to_bits(), t.batch_energy_j(n).to_bits());
+            }
+            assert_eq!(plan.peak_power_w().to_bits(), t.active_power_w().to_bits());
+        }
+    }
+
+    #[test]
+    fn incompatible_model_grows_a_derived_dpu_hybrid() {
+        let (registry, planner) = build("baseline", &TargetSet::Default);
+        assert_eq!(planner.lane_count(), registry.len() + 1, "one derived lane");
+        assert_eq!(planner.derived_lane_names().collect::<Vec<_>>(), vec!["dpu"]);
+        let hybrid = planner
+            .plans()
+            .iter()
+            .find(|p| p.is_hybrid())
+            .expect("baseline must produce a hybrid plan");
+        assert_eq!(hybrid.preferred, "dpu");
+        assert_eq!(hybrid.segments.len(), 2);
+        // conv3d+maxpool3d fall back (CPU beats naive HLS on 3-D ops),
+        // flatten+dense+dense run on the derived DPU lane
+        assert_eq!(hybrid.segments[0].target, "cpu");
+        assert_eq!((hybrid.segments[0].start, hybrid.segments[0].end), (0, 2));
+        assert_eq!(hybrid.segments[1].target, "dpu");
+        assert_eq!((hybrid.segments[1].start, hybrid.segments[1].end), (2, 5));
+        assert_eq!(hybrid.segments[1].lane, Lane::Derived(0));
+        assert_eq!(planner.flat(hybrid.segments[1].lane), registry.len());
+        assert!(hybrid.transfer_per_item_s > 0.0, "boundary toll is real");
+        assert!(hybrid.transfer_bytes > 0);
+        assert_eq!(hybrid.segments[1].out_bytes, 0, "final segment hands off nothing");
+        // the hybrid must beat every whole-model plan on latency — the
+        // reason the paper's flow partitions at all
+        let best_single = planner
+            .plans()
+            .iter()
+            .filter(|p| !p.is_hybrid())
+            .map(|p| p.batch_latency_s(1))
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            hybrid.batch_latency_s(1) < best_single,
+            "hybrid {} vs best single {}",
+            hybrid.batch_latency_s(1),
+            best_single
+        );
+    }
+
+    #[test]
+    fn esperta_bank_has_no_dpu_lane() {
+        // the bank layer itself is off the DPU (sigmoid + comparator),
+        // so there is nothing to partition: whole-model plans only
+        let (registry, planner) = build("esperta", &TargetSet::Default);
+        assert_eq!(planner.lane_count(), registry.len());
+        assert!(planner.plans().iter().all(|p| !p.is_hybrid()));
+        assert_eq!(planner.plans().len(), 2); // cpu + hls
+    }
+
+    #[test]
+    fn named_set_exclusion_suppresses_the_derived_lane() {
+        let set = TargetSet::parse("cpu,hls").unwrap();
+        let (_registry, planner) = build("baseline", &set);
+        assert_eq!(planner.derived_lane_names().count(), 0);
+        assert!(planner.plans().iter().all(|p| !p.is_hybrid()));
+    }
+
+    #[test]
+    fn mappable_fp32_model_gets_a_quantize_whatif_plan() {
+        // LogisticNet is operator-compatible but ships no int8 variant:
+        // the derived lane prices what quantize-and-deploy would buy
+        let (registry, planner) = build("logistic", &TargetSet::Default);
+        let dpu_plan = planner
+            .plans()
+            .iter()
+            .find(|p| p.preferred == "dpu")
+            .expect("derived whole-model DPU plan");
+        assert_eq!(dpu_plan.segments.len(), 1);
+        assert_eq!(dpu_plan.segments[0].lane, Lane::Derived(0));
+        assert!(registry.index_of("dpu").is_none(), "not a registry target");
+    }
+
+    #[test]
+    fn plans_partition_exactly_and_deterministically() {
+        for model in ["vae", "cnet", "esperta", "logistic", "reduced", "baseline"] {
+            let (_r1, a) = build(model, &TargetSet::Default);
+            let (_r2, b) = build(model, &TargetSet::Default);
+            assert_eq!(a.plans().len(), b.plans().len(), "{model}");
+            for (pa, pb) in a.plans().iter().zip(b.plans()) {
+                // same seed-free inputs => bit-identical plan
+                assert_eq!(pa.describe(), pb.describe(), "{model}");
+                assert_eq!(
+                    pa.batch_latency_s(8).to_bits(),
+                    pb.batch_latency_s(8).to_bits(),
+                    "{model}"
+                );
+                // segments partition [0, n_layers) in order
+                assert_eq!(pa.segments[0].start, 0);
+                assert_eq!(pa.segments.last().unwrap().end, pa.n_layers);
+                for w in pa.segments.windows(2) {
+                    assert_eq!(w[0].end, w[1].start, "{model}: contiguous");
+                }
+                assert!(pa.transfer_per_item_s >= 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Host↔accelerator boundary-transfer cost model.
+//!
+//! Every boundary between two segments of a hybrid execution plan moves
+//! the producing layer's output activation across the PS↔PL boundary:
+//! the finishing target DMA-writes it to DDR and the next target reads
+//! it back.  The cost is modeled over the same calibrated AXI/DDR path
+//! the naive HLS designs pay for spilled weights ([`AxiMaster`] /
+//! `board::Zcu104::ddr_word_cycles`), except that a segment handoff is
+//! a streaming DMA, so burst inference amortizes the per-word DDR
+//! round-trip — this is why the Vitis-AI CPU fallback is viable at all,
+//! and why the partitioner still charges a real, nonzero toll per
+//! boundary per inference.
+
+use crate::board::Zcu104;
+use crate::hls::AxiMaster;
+
+/// Burst length a segment-handoff DMA achieves on the AXI HP ports
+/// (streaming transfer, unlike the naive word-by-word weight fetch).
+pub const HANDOFF_BURST_LEN: u64 = 16;
+
+/// Calibrated boundary-transfer model for one board.
+#[derive(Debug, Clone, Copy)]
+pub struct TransferModel {
+    axi: AxiMaster,
+    clock_hz: f64,
+}
+
+impl TransferModel {
+    /// Build from the board description: DDR word latency from
+    /// `ddr_word_cycles`, amortized over [`HANDOFF_BURST_LEN`]-beat
+    /// bursts, clocked at the PL (HLS) clock the DMA shares.
+    pub fn new(board: &Zcu104) -> TransferModel {
+        TransferModel {
+            axi: AxiMaster::bursting(board.ddr_word_cycles, HANDOFF_BURST_LEN),
+            clock_hz: board.hls_clock_hz,
+        }
+    }
+
+    /// Seconds to hand `bytes` of boundary activation from one segment
+    /// to the next, per inference: a DDR write by the producer plus a
+    /// DDR read by the consumer.  Exactly zero for an empty boundary
+    /// (and therefore for every single-segment plan).
+    pub fn boundary_s(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        2.0 * self.axi.fetch_cycles(bytes) / self.clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> TransferModel {
+        TransferModel::new(&Zcu104::default())
+    }
+
+    #[test]
+    fn zero_bytes_cost_exactly_zero() {
+        assert_eq!(model().boundary_s(0).to_bits(), 0.0f64.to_bits());
+    }
+
+    #[test]
+    fn cost_is_positive_and_monotone() {
+        let t = model();
+        let small = t.boundary_s(1024);
+        let big = t.boundary_s(1024 * 1024);
+        assert!(small > 0.0);
+        assert!(big > small);
+    }
+
+    #[test]
+    fn bursting_beats_the_naive_weight_path() {
+        // the handoff DMA must be far cheaper than word-by-word fetch
+        let board = Zcu104::default();
+        let naive = AxiMaster::naive(board.ddr_word_cycles);
+        let t = model();
+        let bytes = 64 * 1024;
+        let naive_s = 2.0 * naive.fetch_cycles(bytes) / board.hls_clock_hz;
+        assert!(t.boundary_s(bytes) < naive_s / 4.0);
+    }
+
+    #[test]
+    fn typical_boundary_is_sub_millisecond() {
+        // a 64 KiB fp32 activation (the synthetic VAE conv output) must
+        // not dominate a ~1 ms DPU invoke — sanity for hybrid viability
+        assert!(model().boundary_s(64 * 1024) < 1e-3);
+    }
+}

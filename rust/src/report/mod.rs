@@ -4,6 +4,7 @@
 pub mod ablation;
 pub mod evaluate;
 pub mod figures;
+pub mod plan;
 pub mod policy;
 pub mod related;
 pub mod targets;
@@ -11,5 +12,6 @@ pub mod whatif;
 pub mod tables;
 
 pub use evaluate::{evaluate_model, Evaluation};
+pub use plan::plan_report;
 pub use policy::{policy_comparison, PolicyRun};
 pub use targets::target_matrix;

@@ -1,0 +1,176 @@
+//! `spaceinfer plan <model>` — render the candidate execution plans for
+//! one model and the partition each dispatch policy would choose.
+//!
+//! Two tables: the candidate set (every plan the partitioner grew, with
+//! predicted latency / energy / peak power / boundary-transfer toll at
+//! the chosen batch size), then the per-policy verdict on idle queues —
+//! which plan static / min-latency / min-energy / deadline would
+//! dispatch, and why hybrid plans earn their keep (or don't).
+
+use anyhow::Result;
+
+use crate::backend::{TargetRegistry, TargetSet};
+use crate::board::Calibration;
+use crate::coordinator::scheduler::AccelTimeline;
+use crate::coordinator::{default_deadline_s, Dispatcher, Policy};
+use crate::model::catalog::{model_info, Catalog};
+use crate::model::UseCase;
+use crate::plan::Planner;
+use crate::util::table::Table;
+
+/// Use case a catalog model serves (the MMS sub-models all serve the
+/// MMS stream).
+fn use_case_of(model: &str) -> UseCase {
+    match model {
+        "vae" => UseCase::Vae,
+        "cnet" => UseCase::Cnet,
+        "esperta" => UseCase::Esperta,
+        _ => UseCase::Mms,
+    }
+}
+
+/// Fresh idle lane timelines for one planner (registry lanes first,
+/// then derived lanes — `Planner::flat` order).
+fn idle_timelines(d: &Dispatcher, planner: &Planner) -> Vec<AccelTimeline> {
+    let mut tls = d.timelines();
+    for name in planner.derived_lane_names() {
+        tls.push(AccelTimeline::new(name));
+    }
+    tls
+}
+
+/// Render the candidate-plan table and the per-policy choices for
+/// `model` at batch size `batch`.  Artifact-free (synthetic catalog
+/// works); `deadline_s` / `power_budget_w` default like the pipeline.
+pub fn plan_report(
+    catalog: &Catalog,
+    calib: &Calibration,
+    model: &str,
+    set: &TargetSet,
+    batch: u64,
+    deadline_s: Option<f64>,
+    power_budget_w: Option<f64>,
+) -> Result<String> {
+    model_info(model)?; // reject unknown models with the catalog error
+    let use_case = use_case_of(model);
+    let deadline_s = deadline_s.unwrap_or_else(|| default_deadline_s(use_case));
+    let registry = TargetRegistry::build(model, catalog, calib, set)?;
+    let planner = Planner::build(model, catalog, calib, &registry, set)?;
+    let mut d = Dispatcher { policy: Policy::MinLatency, registry, deadline_s, power_budget_w };
+
+    let mut out = String::new();
+    let mut candidates = Table::new(
+        &format!(
+            "Candidate execution plans [{model}] batch={batch} ({} lanes, {} plans)",
+            planner.lane_count(),
+            planner.plans().len(),
+        ),
+        &[
+            "Preferred",
+            "Partition",
+            "Segs",
+            "Latency (ms)",
+            "Energy (mJ)",
+            "Peak W",
+            "Transfer (us/inf)",
+        ],
+    );
+    for plan in planner.plans() {
+        candidates.row(vec![
+            plan.preferred.clone(),
+            plan.describe(),
+            plan.segments.len().to_string(),
+            format!("{:.3}", plan.batch_latency_s(batch) * 1e3),
+            format!("{:.3}", plan.batch_energy_j(batch) * 1e3),
+            format!("{:.2}", plan.peak_power_w()),
+            format!("{:.2}", plan.transfer_per_item_s * 1e6),
+        ]);
+    }
+    out.push_str(&candidates.render());
+    out.push('\n');
+
+    let mut chosen = Table::new(
+        &format!(
+            "Chosen partition per policy [{model}] (deadline {:.0} ms{})",
+            deadline_s * 1e3,
+            match power_budget_w {
+                Some(w) => format!(", power budget {w:.1} W"),
+                None => String::new(),
+            },
+        ),
+        &["Policy", "Partition", "Hybrid", "Latency (ms)", "Energy (mJ)", "Meets deadline"],
+    );
+    let mut policies = Vec::new();
+    if d.registry.primary_index().is_some() {
+        policies.push(Policy::Static);
+    }
+    policies.extend([Policy::MinLatency, Policy::MinEnergy, Policy::Deadline]);
+    for policy in policies {
+        d.policy = policy;
+        let tls = idle_timelines(&d, &planner);
+        let pc = d.choose_plan(&planner, &tls, 0.0, 0.0, batch);
+        let plan = &planner.plans()[pc.index];
+        chosen.row(vec![
+            policy.as_str().to_string(),
+            plan.describe(),
+            (if plan.is_hybrid() { "yes" } else { "no" }).to_string(),
+            format!("{:.3}", pc.cost.latency_s * 1e3),
+            format!("{:.3}", pc.cost.energy_j * 1e3),
+            (if pc.cost.meets_deadline { "yes" } else { "no" }).to_string(),
+        ]);
+    }
+    out.push_str(&chosen.render());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_report_shows_a_hybrid_partition() {
+        let out = plan_report(
+            &Catalog::synthetic(),
+            &Calibration::default(),
+            "baseline",
+            &TargetSet::Default,
+            8,
+            None,
+            None,
+        )
+        .unwrap();
+        assert!(out.contains("dpu["), "a DPU segment must appear:\n{out}");
+        assert!(out.contains("->"), "a multi-segment partition must appear");
+        assert!(out.contains("min-latency"));
+    }
+
+    #[test]
+    fn vae_report_is_single_segment_only() {
+        let out = plan_report(
+            &Catalog::synthetic(),
+            &Calibration::default(),
+            "vae",
+            &TargetSet::Default,
+            8,
+            None,
+            None,
+        )
+        .unwrap();
+        assert!(!out.contains("->"), "no hybrid exists for vae:\n{out}");
+        assert!(out.contains("static"));
+    }
+
+    #[test]
+    fn unknown_model_is_rejected() {
+        assert!(plan_report(
+            &Catalog::synthetic(),
+            &Calibration::default(),
+            "warp-net",
+            &TargetSet::Default,
+            8,
+            None,
+            None,
+        )
+        .is_err());
+    }
+}

@@ -14,7 +14,7 @@
 
 use crate::board::zcu104::PlResources;
 use crate::hls::BramPlan;
-use crate::model::{LayerKind, Manifest};
+use crate::model::{Activation, LayerKind, Manifest};
 
 /// Estimated utilization of one design.
 #[derive(Debug, Clone, Copy)]
@@ -102,7 +102,7 @@ pub fn estimate_hls(man: &Manifest, plan: &BramPlan) -> Utilization {
             }
             _ => {}
         }
-        if l.act == "sigmoid" {
+        if l.act == Activation::Sigmoid {
             luts += SIGMOID_LUTS;
             ffs += SIGMOID_FFS;
             dsps += SIGMOID_DSPS;
@@ -182,7 +182,7 @@ mod tests {
     #[test]
     fn sigmoid_costs_luts_and_dsps() {
         let mut man = mini();
-        man.layers[2].act = "sigmoid".into();
+        man.layers[2].act = Activation::Sigmoid;
         let base = util(&mini());
         let sig = util(&man);
         assert!(sig.luts > base.luts);

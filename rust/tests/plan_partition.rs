@@ -1,0 +1,316 @@
+//! Property tests for the execution-plan partitioner and plan-level
+//! dispatch.
+//!
+//! Invariants pinned here:
+//!
+//! * segments exactly partition the layer list, in order, for every
+//!   model × target-set combination;
+//! * every segment's lane supports all of its layers (per-layer gate);
+//! * boundary transfer cost is ≥ 0, and exactly 0 for single-segment
+//!   plans;
+//! * the same model + catalog ⇒ a bit-identical plan set (the planner
+//!   is deterministic — no RNG, no ambient state);
+//! * degenerate-plan invariant: for a model fully supported by every
+//!   lane, `choose_plan` agrees with `choose` — same winner, bit-equal
+//!   predicted cost — across the policy / budget / deadline / backlog
+//!   grid the golden suite uses;
+//! * acceptance: a 3-D model (synthetic BaselineNet) dispatches as a
+//!   multi-segment DPU+fallback plan under min-latency.
+
+use spaceinfer::backend::{AccelModel, TargetRegistry, TargetSet};
+use spaceinfer::board::Calibration;
+use spaceinfer::coordinator::{AccelTimeline, Dispatcher, Policy, ScheduledRun};
+use spaceinfer::model::{Catalog, Precision};
+use spaceinfer::plan::{Lane, Planner};
+
+const ALL_MODELS: [&str; 6] =
+    ["vae", "cnet", "esperta", "logistic", "reduced", "baseline"];
+
+fn build(model: &str, set: &TargetSet) -> (TargetRegistry, Planner) {
+    let catalog = Catalog::synthetic();
+    let calib = Calibration::default();
+    let registry = TargetRegistry::build(model, &catalog, &calib, set).unwrap();
+    let planner = Planner::build(model, &catalog, &calib, &registry, set).unwrap();
+    (registry, planner)
+}
+
+#[test]
+fn segments_exactly_partition_every_model() {
+    let catalog = Catalog::synthetic();
+    for set in [TargetSet::Default, TargetSet::All] {
+        for model in ALL_MODELS {
+            let (_registry, planner) = build(model, &set);
+            let n_layers =
+                catalog.manifest(model, Precision::Fp32).unwrap().layers.len();
+            assert!(!planner.plans().is_empty(), "{model}: no plans");
+            for plan in planner.plans() {
+                assert_eq!(plan.n_layers, n_layers, "{model}");
+                assert!(!plan.segments.is_empty(), "{model}");
+                assert_eq!(plan.segments[0].start, 0, "{model}: starts at layer 0");
+                assert_eq!(
+                    plan.segments.last().unwrap().end,
+                    n_layers,
+                    "{model}: ends at the last layer"
+                );
+                for w in plan.segments.windows(2) {
+                    assert_eq!(
+                        w[0].end, w[1].start,
+                        "{model}: segments must be contiguous and ordered"
+                    );
+                }
+                for seg in &plan.segments {
+                    assert!(seg.start < seg.end, "{model}: non-empty segment");
+                    assert!(seg.layer_count() > 0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_segment_lane_supports_all_its_layers() {
+    let catalog = Catalog::synthetic();
+    for set in [TargetSet::Default, TargetSet::All] {
+        for model in ALL_MODELS {
+            let (registry, planner) = build(model, &set);
+            let man = catalog.manifest(model, Precision::Fp32).unwrap();
+            for plan in planner.plans() {
+                for seg in &plan.segments {
+                    for layer in &man.layers[seg.start..seg.end] {
+                        match seg.lane {
+                            Lane::Registry(i) => registry
+                                .get(i)
+                                .supports_layer(layer)
+                                .unwrap_or_else(|e| {
+                                    panic!(
+                                        "{model}: {} got layer it rejects: {e}",
+                                        seg.target
+                                    )
+                                }),
+                            Lane::Derived(_) => assert!(
+                                layer.dpu_mappable(),
+                                "{model}: derived DPU lane got a non-mappable layer"
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn transfer_cost_is_nonnegative_and_zero_for_single_segment() {
+    for model in ALL_MODELS {
+        let (_registry, planner) = build(model, &TargetSet::Default);
+        for plan in planner.plans() {
+            assert!(plan.transfer_per_item_s >= 0.0, "{model}");
+            let boundary_sum: f64 =
+                plan.segments.iter().map(|s| s.transfer_out_s).sum();
+            assert_eq!(
+                plan.transfer_per_item_s.to_bits(),
+                boundary_sum.to_bits(),
+                "{model}: plan total is the sum of its boundaries"
+            );
+            assert_eq!(
+                plan.segments.last().unwrap().transfer_out_s.to_bits(),
+                0.0f64.to_bits(),
+                "{model}: the final segment hands off nothing"
+            );
+            if plan.segments.len() == 1 {
+                assert_eq!(
+                    plan.transfer_per_item_s.to_bits(),
+                    0.0f64.to_bits(),
+                    "{model}: single-segment plans pay exactly zero transfer"
+                );
+                assert_eq!(plan.transfer_bytes, 0, "{model}");
+            } else {
+                assert!(
+                    plan.transfer_per_item_s > 0.0,
+                    "{model}: hybrid boundaries carry real activations"
+                );
+                assert!(plan.transfer_bytes > 0, "{model}");
+            }
+        }
+    }
+}
+
+#[test]
+fn planner_is_bitwise_deterministic() {
+    for model in ALL_MODELS {
+        let (_r1, a) = build(model, &TargetSet::All);
+        let (_r2, b) = build(model, &TargetSet::All);
+        assert_eq!(a.plans().len(), b.plans().len(), "{model}");
+        assert_eq!(a.primary_plan(), b.primary_plan(), "{model}");
+        for (pa, pb) in a.plans().iter().zip(b.plans()) {
+            assert_eq!(pa.preferred, pb.preferred, "{model}");
+            assert_eq!(pa.segments.len(), pb.segments.len(), "{model}");
+            for (sa, sb) in pa.segments.iter().zip(&pb.segments) {
+                assert_eq!(sa.lane, sb.lane, "{model}");
+                assert_eq!(sa.target, sb.target, "{model}");
+                assert_eq!((sa.start, sa.end), (sb.start, sb.end), "{model}");
+                assert_eq!(sa.setup_s.to_bits(), sb.setup_s.to_bits(), "{model}");
+                assert_eq!(sa.per_item_s.to_bits(), sb.per_item_s.to_bits(), "{model}");
+                assert_eq!(sa.power_w.to_bits(), sb.power_w.to_bits(), "{model}");
+                assert_eq!(
+                    sa.transfer_out_s.to_bits(),
+                    sb.transfer_out_s.to_bits(),
+                    "{model}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn degenerate_plans_reproduce_whole_model_dispatch_bit_for_bit() {
+    // vae / cnet: every default lane supports the whole model, so the
+    // plan set is exactly the single-segment image of the registry and
+    // plan dispatch must agree with target dispatch — winner and cost
+    let catalog = Catalog::synthetic();
+    let calib = Calibration::default();
+    for model in ["vae", "cnet"] {
+        for policy in
+            [Policy::Static, Policy::MinLatency, Policy::MinEnergy, Policy::Deadline]
+        {
+            for budget in [None, Some(4.0), Some(2.0)] {
+                for deadline_s in [0.0005, 0.1, 10.0] {
+                    let d = Dispatcher::new(
+                        model,
+                        &catalog,
+                        &calib,
+                        policy,
+                        deadline_s,
+                        budget,
+                        &TargetSet::Default,
+                    )
+                    .unwrap();
+                    let planner = Planner::build(
+                        model,
+                        &catalog,
+                        &calib,
+                        &d.registry,
+                        &TargetSet::Default,
+                    )
+                    .unwrap();
+                    assert_eq!(planner.plans().len(), d.registry.len());
+                    for wait_s in [0.0, 0.06, 0.3] {
+                        for n in [1u64, 8] {
+                            // load the primary's queue so backlog
+                            // steering is exercised
+                            let mut tls: Vec<AccelTimeline> = d.timelines();
+                            tls[d.primary_index()].schedule(
+                                wait_s,
+                                1,
+                                ScheduledRun {
+                                    setup_s: 0.25,
+                                    per_item_s: 0.0,
+                                    power_w: 0.0,
+                                },
+                            );
+                            let whole = d.choose(&tls, wait_s, 0.0, n);
+                            let plan = d.choose_plan(&planner, &tls, wait_s, 0.0, n);
+                            // plan index == registry index by construction
+                            assert_eq!(
+                                plan.index, whole.index,
+                                "{model} {policy:?} budget={budget:?} \
+                                 deadline={deadline_s} wait={wait_s} n={n}"
+                            );
+                            assert_eq!(
+                                plan.cost.latency_s.to_bits(),
+                                whole.cost.latency_s.to_bits()
+                            );
+                            assert_eq!(
+                                plan.cost.energy_j.to_bits(),
+                                whole.cost.energy_j.to_bits()
+                            );
+                            assert_eq!(
+                                plan.cost.meets_deadline,
+                                whole.cost.meets_deadline
+                            );
+                            assert_eq!(plan.power_shed, whole.power_shed);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn baseline_min_latency_chooses_a_dpu_fallback_hybrid() {
+    // acceptance criterion: a sigmoid/3-D model dispatches as a
+    // multi-segment DPU+fallback plan under --policy min-latency
+    let catalog = Catalog::synthetic();
+    let calib = Calibration::default();
+    let d = Dispatcher::new(
+        "baseline",
+        &catalog,
+        &calib,
+        Policy::MinLatency,
+        0.5,
+        None,
+        &TargetSet::Default,
+    )
+    .unwrap();
+    let planner =
+        Planner::build("baseline", &catalog, &calib, &d.registry, &TargetSet::Default)
+            .unwrap();
+    let mut tls = d.timelines();
+    for name in planner.derived_lane_names() {
+        tls.push(AccelTimeline::new(name));
+    }
+    let choice = d.choose_plan(&planner, &tls, 0.0, 0.0, 8);
+    let plan = &planner.plans()[choice.index];
+    assert!(plan.is_hybrid(), "min-latency must pick the hybrid: {}", plan.describe());
+    let lanes: Vec<&str> = plan.segments.iter().map(|s| s.target.as_str()).collect();
+    assert!(lanes.contains(&"dpu"), "a DPU segment runs the dense tail: {lanes:?}");
+    assert!(
+        lanes.iter().any(|&l| l != "dpu"),
+        "a fallback segment covers the 3-D head: {lanes:?}"
+    );
+    // under min-energy the same model keeps its whole-model mapping or
+    // better — either way the decision stays deterministic
+    let mut d2 = d;
+    d2.policy = Policy::MinEnergy;
+    let c2 = d2.choose_plan(&planner, &tls, 0.0, 0.0, 8);
+    assert_eq!(
+        c2.index,
+        d2.choose_plan(&planner, &tls, 0.0, 0.0, 8).index,
+        "deterministic under repeat"
+    );
+}
+
+#[test]
+fn power_budget_filters_plans_by_peak_draw() {
+    // a 3 W budget excludes every plan touching the ~5.3 W DPU lane:
+    // min-latency on baseline must shed to an all-PS/PL-lite plan
+    let catalog = Catalog::synthetic();
+    let calib = Calibration::default();
+    let d = Dispatcher::new(
+        "baseline",
+        &catalog,
+        &calib,
+        Policy::MinLatency,
+        0.5,
+        Some(3.0),
+        &TargetSet::Default,
+    )
+    .unwrap();
+    let planner =
+        Planner::build("baseline", &catalog, &calib, &d.registry, &TargetSet::Default)
+            .unwrap();
+    let mut tls = d.timelines();
+    for name in planner.derived_lane_names() {
+        tls.push(AccelTimeline::new(name));
+    }
+    let choice = d.choose_plan(&planner, &tls, 0.0, 0.0, 8);
+    let plan = &planner.plans()[choice.index];
+    assert!(
+        plan.peak_power_w() <= 3.0,
+        "chosen plan {} draws {} W over the 3 W budget",
+        plan.describe(),
+        plan.peak_power_w()
+    );
+    assert!(choice.power_shed, "the budget changed the decision");
+}
