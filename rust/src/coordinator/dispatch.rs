@@ -355,6 +355,91 @@ impl Dispatcher {
         Choice { index, cost: costs[index].clone(), power_shed }
     }
 
+    /// [`Dispatcher::choose`] under recovery-layer constraints: an
+    /// `excluded` mask (targets the retry escalation has already
+    /// burned for this batch) and an optional brownout power budget
+    /// that tightens — never loosens — the dispatcher's own.
+    ///
+    /// Candidate order: in-service and not excluded; if that empties,
+    /// any not-excluded target; if everything is excluded, the full
+    /// set (a spacecraft cannot stop deciding).  Unlike
+    /// [`Dispatcher::choose`], the budget applies to *every* policy
+    /// including `static` — a brownout overrides the deployment matrix
+    /// by design.  `choose` itself is untouched, so fault-free runs
+    /// stay byte-identical.
+    pub fn choose_constrained(
+        &self,
+        timelines: &[AccelTimeline],
+        now_s: f64,
+        oldest_t_s: f64,
+        n: u64,
+        excluded: &[bool],
+        budget_override_w: Option<f64>,
+    ) -> Choice {
+        let costs: Vec<BatchCost> = (0..self.registry.len())
+            .zip(timelines)
+            .map(|(i, tl)| self.cost(i, tl, now_s, oldest_t_s, n))
+            .collect();
+        let mut avail: Vec<usize> = (0..costs.len())
+            .filter(|&i| self.registry.is_available(i) && !excluded[i])
+            .collect();
+        if avail.is_empty() {
+            avail = (0..costs.len()).filter(|&i| !excluded[i]).collect();
+        }
+        if avail.is_empty() {
+            avail = (0..costs.len()).collect();
+        }
+        let budget = match (self.power_budget_w, budget_override_w) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        let pick = |idxs: &[usize]| -> usize {
+            match self.policy {
+                Policy::Static => {
+                    let primary = self.primary_index();
+                    if idxs.contains(&primary) {
+                        primary
+                    } else {
+                        argmin(idxs, &costs, |c| c.latency_s)
+                    }
+                }
+                Policy::MinLatency => argmin(idxs, &costs, |c| c.latency_s),
+                Policy::MinEnergy => argmin(idxs, &costs, |c| c.energy_j),
+                Policy::Deadline => {
+                    let meeting: Vec<usize> = idxs
+                        .iter()
+                        .copied()
+                        .filter(|&i| costs[i].meets_deadline)
+                        .collect();
+                    if meeting.is_empty() {
+                        argmin(idxs, &costs, |c| c.latency_s)
+                    } else {
+                        argmin(&meeting, &costs, |c| c.energy_j)
+                    }
+                }
+            }
+        };
+        let (index, power_shed) = match budget {
+            None => (pick(&avail), false),
+            Some(budget) => {
+                let fits: Vec<usize> = avail
+                    .iter()
+                    .copied()
+                    .filter(|&i| costs[i].power_w <= budget)
+                    .collect();
+                let index = if fits.is_empty() {
+                    // nothing fits the sagging bus: shed to the
+                    // lowest-power candidate outright
+                    argmin(&avail, &costs, |c| c.power_w)
+                } else {
+                    pick(&fits)
+                };
+                (index, index != pick(&avail))
+            }
+        };
+        Choice { index, cost: costs[index].clone(), power_shed }
+    }
+
     /// Score one execution plan for a batch of `n` events flushed at
     /// `now_s`.  `timelines` is the run's *lane* queue state (registry
     /// lanes first, then the planner's derived lanes — see
@@ -696,6 +781,55 @@ mod tests {
         // the spacecraft cannot stop deciding: the full set is scored
         let tl = d.timelines();
         assert_eq!(slot_of(&d, &tl), Slot::Dpu);
+    }
+
+    #[test]
+    fn constrained_matches_choose_when_unconstrained() {
+        for policy in [Policy::Static, Policy::MinLatency, Policy::MinEnergy, Policy::Deadline]
+        {
+            let d = table(policy, 0.010, Some(4.0));
+            let tl = d.timelines();
+            let plain = d.choose(&tl, 0.0, 0.0, 4);
+            let none = [false; 3];
+            let constrained = d.choose_constrained(&tl, 0.0, 0.0, 4, &none, None);
+            if policy == Policy::Static {
+                // static ignores the budget in `choose` but not here
+                assert_eq!(constrained.index, 1, "4 W excludes the 6 W primary");
+            } else {
+                assert_eq!(plain.index, constrained.index, "{policy:?}");
+                assert_eq!(plain.power_shed, constrained.power_shed);
+            }
+        }
+    }
+
+    #[test]
+    fn exclusion_forces_the_next_best_target() {
+        let d = table(Policy::MinLatency, 1.0, None);
+        let tl = d.timelines();
+        // burn the fast DPU for this batch: the HLS stub takes over
+        let c = d.choose_constrained(&tl, 0.0, 0.0, 1, &[true, false, false], None);
+        assert_eq!(d.registry.get(c.index).slot(), Slot::Hls);
+        // burn both accelerators: the CPU is the last resort
+        let c = d.choose_constrained(&tl, 0.0, 0.0, 1, &[true, true, false], None);
+        assert_eq!(d.registry.get(c.index).slot(), Slot::Cpu);
+        // everything burned: the full set returns (cannot stop deciding)
+        let c = d.choose_constrained(&tl, 0.0, 0.0, 1, &[true, true, true], None);
+        assert_eq!(d.registry.get(c.index).slot(), Slot::Dpu);
+    }
+
+    #[test]
+    fn brownout_override_tightens_the_budget_for_every_policy() {
+        // static normally never sheds; a 2 W brownout forces the 1.5 W HLS
+        let d = table(Policy::Static, 1.0, None);
+        let tl = d.timelines();
+        let none = [false; 3];
+        let c = d.choose_constrained(&tl, 0.0, 0.0, 1, &none, Some(2.0));
+        assert_eq!(d.registry.get(c.index).slot(), Slot::Hls);
+        assert!(c.power_shed, "the sag changed the decision");
+        // the override can only tighten an existing budget
+        let d = table(Policy::MinLatency, 1.0, Some(3.0));
+        let c = d.choose_constrained(&tl, 0.0, 0.0, 1, &none, Some(10.0));
+        assert_eq!(d.registry.get(c.index).slot(), Slot::Hls, "3 W still binds");
     }
 
     #[test]

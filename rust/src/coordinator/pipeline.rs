@@ -42,7 +42,7 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::backend::{AccelModel, TargetSet};
-use crate::board::Calibration;
+use crate::board::{Calibration, Zcu104};
 use crate::coordinator::backpressure::{BoundedQueue, OverflowPolicy};
 use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::decision::{decide, Decision};
@@ -50,9 +50,14 @@ use crate::coordinator::dispatch::{default_deadline_s, Dispatcher, Policy};
 use crate::coordinator::downlink::{DownlinkManager, DownlinkVerdict};
 use crate::coordinator::router::{Route, Router, Slot};
 use crate::coordinator::scheduler::{AccelTimeline, ScheduledRun};
+use crate::fault::{
+    tmr_cost_of, FaultInjector, FaultKind, FaultProfile, FaultState, FaultStats,
+    RecoveryPolicy, TmrCost,
+};
 use crate::model::catalog::Catalog;
 use crate::model::{Precision, UseCase};
 use crate::plan::{Lane, Planner};
+use crate::rad::seu::essential_bits_of;
 use crate::runtime::{ExecRequest, ExecResult, ExecutorPool};
 use crate::sensors::{SensorEvent, SensorStream};
 use crate::telemetry::Metrics;
@@ -114,6 +119,18 @@ pub struct PipelineConfig {
     /// target produce single-segment plans whose decisions and charges
     /// are bit-identical to `plan_mode: false`.
     pub plan_mode: bool,
+    /// Seed for the deterministic [`FaultInjector`].  `None` (default)
+    /// runs fault-free — dispatch decisions and reports stay
+    /// bit-identical to a build without the fault layer.  `Some(seed)`
+    /// arms the injector: same seed ⇒ bit-identical fault timeline.
+    /// Incompatible with [`PipelineConfig::plan_mode`].
+    pub fault_seed: Option<u64>,
+    /// Fault-class probabilities and severities drawn by the injector
+    /// (only read when [`PipelineConfig::fault_seed`] is set).
+    pub fault_profile: FaultProfile,
+    /// How dispatch recovers from injected (or forced) faults: retry
+    /// bounds, backoff, quarantine, TMR voting.
+    pub recovery: RecoveryPolicy,
 }
 
 impl Default for PipelineConfig {
@@ -135,6 +152,9 @@ impl Default for PipelineConfig {
             ingress_policy: OverflowPolicy::DropNewest,
             ingress_max_backlog_s: 0.25,
             plan_mode: false,
+            fault_seed: None,
+            fault_profile: FaultProfile::default(),
+            recovery: RecoveryPolicy::default(),
         }
     }
 }
@@ -174,6 +194,19 @@ pub struct PhaseReport {
     pub downlink_sent: u64,
     /// Decisions the downlink shed, for batches dispatched this phase.
     pub downlink_shed: u64,
+    /// Faults injected (or forced) against this phase's dispatches,
+    /// plus environment fault windows opened during the phase.
+    pub faults: u64,
+    /// Same-target retry attempts scheduled during the phase.
+    pub retries: u64,
+    /// Targets quarantined during the phase.
+    pub quarantines: u64,
+    /// Single-replica faults masked by TMR during the phase.
+    pub tmr_masked: u64,
+    /// Batches dispatched under a brownout-degraded budget.
+    pub degraded: u64,
+    /// Decisions dropped to a downlink dropout window.
+    pub link_dropped: u64,
 }
 
 /// Summary of a pipeline run.
@@ -244,6 +277,11 @@ pub struct PipelineReport {
     /// `"run"`) for a legacy single-phase run; one entry per
     /// [`PipelineRun::begin_phase`] otherwise.
     pub phases: Vec<PhaseReport>,
+    /// Fault / recovery accounting (all zero for a fault-free run).
+    pub faults: FaultStats,
+    /// Typed execution errors survived on the serving path (real
+    /// executor batches whose results were lost); capped, oldest first.
+    pub exec_errors: Vec<String>,
     /// Counters + histograms collected during the run.
     pub metrics: Metrics,
 }
@@ -303,6 +341,27 @@ impl PipelineReport {
                 self.plan_batches, self.plan_hybrid_batches, self.plan_transfer_s
             ));
         }
+        if self.faults.any() {
+            let f = &self.faults;
+            out.push_str(&format!(
+                "  faults: injected {}  retries {}  redispatches {}  \
+                 quarantines {}/{}  tmr {}/{} masked  degraded {}  \
+                 link_dropped {}  forced {}\n",
+                f.faults_injected,
+                f.retries,
+                f.redispatches,
+                f.quarantines,
+                f.reinstates,
+                f.tmr_masked,
+                f.tmr_batches,
+                f.degraded_batches,
+                f.link_dropped,
+                f.forced_completions,
+            ));
+        }
+        for err in &self.exec_errors {
+            out.push_str(&format!("  exec error: {err}\n"));
+        }
         out.push_str(&format!(
             "  downlink: sent {} ({} B) shed {}  compression {:.0}:1\n",
             self.downlink_sent, self.downlink_sent_bytes, self.downlink_shed,
@@ -334,6 +393,25 @@ impl PipelineReport {
                     p.downlink_sent,
                     p.downlink_shed,
                 ));
+                let fault_activity = p.faults
+                    + p.retries
+                    + p.quarantines
+                    + p.tmr_masked
+                    + p.degraded
+                    + p.link_dropped;
+                if fault_activity > 0 {
+                    out.push_str(&format!(
+                        "                     faults {}  retries {}  \
+                         quarantines {}  tmr_masked {}  degraded {}  \
+                         link_dropped {}\n",
+                        p.faults,
+                        p.retries,
+                        p.quarantines,
+                        p.tmr_masked,
+                        p.degraded,
+                        p.link_dropped,
+                    ));
+                }
             }
         }
         out
@@ -356,6 +434,12 @@ struct PhaseAccum {
     dropped: u64,
     downlink_sent: u64,
     downlink_shed: u64,
+    faults: u64,
+    retries: u64,
+    quarantines: u64,
+    tmr_masked: u64,
+    degraded: u64,
+    link_dropped: u64,
     latencies: Vec<f64>,
 }
 
@@ -374,6 +458,12 @@ impl PhaseAccum {
             dropped: 0,
             downlink_sent: 0,
             downlink_shed: 0,
+            faults: 0,
+            retries: 0,
+            quarantines: 0,
+            tmr_masked: 0,
+            degraded: 0,
+            link_dropped: 0,
             latencies: Vec::new(),
         }
     }
@@ -408,6 +498,12 @@ impl PhaseAccum {
             dropped: self.dropped,
             downlink_sent: self.downlink_sent,
             downlink_shed: self.downlink_shed,
+            faults: self.faults,
+            retries: self.retries,
+            quarantines: self.quarantines,
+            tmr_masked: self.tmr_masked,
+            degraded: self.degraded,
+            link_dropped: self.link_dropped,
         }
     }
 }
@@ -437,6 +533,12 @@ struct RunState {
     /// Phase accumulators; the last entry is the current phase.  Never
     /// empty — `begin` seeds the `"run"` placeholder.
     phases: Vec<PhaseAccum>,
+    /// Fault injection + recovery working state.  Inactive (and
+    /// byte-invisible to dispatch) unless armed by `fault_seed`, a
+    /// fault mission event, or a test knob.
+    fault: FaultState,
+    /// Typed executor errors survived on the serving path (capped).
+    exec_errors: Vec<String>,
 }
 
 impl RunState {
@@ -449,7 +551,9 @@ impl RunState {
     /// Post-inference stages for one event: decision, truth scoring,
     /// downlink verdict.  `phase` is the phase the event's batch was
     /// *dispatched* in, so executor-path decisions reaped after a phase
-    /// transition still land in the right segment.
+    /// transition still land in the right segment.  `done_s` is the
+    /// batch's virtual completion time — a decision ready inside a
+    /// downlink dropout window is lost before the budget is consulted.
     fn decide_one(
         &mut self,
         use_case: UseCase,
@@ -457,6 +561,7 @@ impl RunState {
         output: &[f32],
         input_bytes: u64,
         phase: usize,
+        done_s: f64,
     ) {
         let d = decide(use_case, output, &mut self.rng);
         if let Some(truth) = ev.truth {
@@ -466,6 +571,12 @@ impl RunState {
             }
         }
         *self.decisions.entry(decision_key(&d)).or_insert(0) += 1;
+        if self.fault.link_down(done_s) {
+            self.fault.stats.link_dropped += 1;
+            self.phases[phase].link_dropped += 1;
+            self.metrics.inc("downlink_dropped_link");
+            return;
+        }
         match self.downlink.offer(&d, input_bytes) {
             DownlinkVerdict::Sent => {
                 self.metrics.inc("downlink_sent");
@@ -490,8 +601,9 @@ struct Reaper<'a> {
     next_id: u64,
     /// Next batch id to process (strict submission order).
     next_done: u64,
-    /// (dispatch phase, events) of submitted batches, keyed by batch id.
-    pending: BTreeMap<u64, (usize, Vec<SensorEvent>)>,
+    /// (dispatch phase, events, virtual completion time) of submitted
+    /// batches, keyed by batch id.
+    pending: BTreeMap<u64, (usize, Vec<SensorEvent>, f64)>,
     /// Completions that arrived ahead of `next_done`.
     arrived: BTreeMap<u64, ExecResult>,
 }
@@ -520,11 +632,12 @@ impl<'a> Reaper<'a> {
         precision: Precision,
         phase: usize,
         batch: Batch,
+        done_s: f64,
     ) -> Result<()> {
         let items = batch.input_sets(); // Arc clones, zero-copy
         let id = self.next_id;
         self.next_id += 1;
-        self.pending.insert(id, (phase, batch.events));
+        self.pending.insert(id, (phase, batch.events, done_s));
         self.pool.submit(ExecRequest {
             model: model.to_string(),
             precision,
@@ -539,6 +652,14 @@ impl<'a> Reaper<'a> {
     }
 
     /// Process every completion whose turn has come.
+    ///
+    /// Panic-audit contract: a batch whose execution failed (worker
+    /// panic, engine error, output-count mismatch) is *recorded* — a
+    /// typed line in the report's `exec_errors`, a counter, a
+    /// `FaultStats` increment — and skipped, instead of aborting a
+    /// mission run that has healthy batches still in flight.  Only a
+    /// structurally impossible condition (an id we never submitted)
+    /// remains a hard error.
     fn process_arrived(
         &mut self,
         use_case: UseCase,
@@ -546,21 +667,31 @@ impl<'a> Reaper<'a> {
         state: &mut RunState,
     ) -> Result<()> {
         while let Some(res) = self.arrived.remove(&self.next_done) {
-            let (phase, events) = self
+            let (phase, events, done_s) = self
                 .pending
                 .remove(&res.id)
                 .ok_or_else(|| anyhow!("reaped unknown batch id {}", res.id))?;
-            let outputs = res
-                .outputs
-                .with_context(|| format!("executing batch {}", res.id))?;
-            if outputs.len() != events.len() {
-                bail!(
-                    "batch {}: {} outputs for {} events",
-                    res.id,
-                    outputs.len(),
-                    events.len()
-                );
-            }
+            let outputs = match res.outputs {
+                Ok(o) if o.len() == events.len() => o,
+                Ok(o) => {
+                    record_exec_error(
+                        state,
+                        format!(
+                            "batch {}: {} outputs for {} events",
+                            res.id,
+                            o.len(),
+                            events.len()
+                        ),
+                    );
+                    self.next_done += 1;
+                    continue;
+                }
+                Err(e) => {
+                    record_exec_error(state, format!("batch {}: {e:#}", res.id));
+                    self.next_done += 1;
+                    continue;
+                }
+            };
             state.metrics.inc("exec_batches_reaped");
             state.metrics.observe("host_batch_execute", res.host_elapsed);
             state.metrics.observe(
@@ -569,7 +700,7 @@ impl<'a> Reaper<'a> {
             );
             state.metrics.inc(&format!("exec_worker_{}", res.worker));
             for (ev, out) in events.iter().zip(&outputs) {
-                state.decide_one(use_case, ev, out, input_bytes, phase);
+                state.decide_one(use_case, ev, out, input_bytes, phase, done_s);
             }
             self.next_done += 1;
         }
@@ -647,6 +778,12 @@ pub struct Pipeline {
     /// plans instead of whole-model targets.
     planner: Option<Planner>,
     input_bytes: u64,
+    /// Per-target TMR cost mode, index-aligned with the registry
+    /// (derived once at construction from `rad::tmr` on the ZU7EV pool).
+    tmr_costs: Vec<TmrCost>,
+    /// Reconfiguration time (s) from calibration — what a quarantined
+    /// target's scrub-and-reinstate window adds past the scrub period.
+    t_config_s: f64,
 }
 
 impl Pipeline {
@@ -673,6 +810,12 @@ impl Pipeline {
             &config.targets,
         )?;
         let planner = if config.plan_mode {
+            if config.fault_seed.is_some() {
+                bail!(
+                    "fault injection is not supported in plan mode \
+                     (drop --plan or --faults)"
+                );
+            }
             Some(Planner::build(
                 &route.model,
                 catalog,
@@ -683,7 +826,23 @@ impl Pipeline {
         } else {
             None
         };
-        Ok(Pipeline { config, route, dispatcher, planner, input_bytes })
+        let pl = Zcu104::default().pl;
+        let tmr_costs = dispatcher
+            .registry
+            .targets()
+            .iter()
+            .map(|t| tmr_cost_of(t.as_ref(), &pl))
+            .collect();
+        let t_config_s = calib.t_config;
+        Ok(Pipeline {
+            config,
+            route,
+            dispatcher,
+            planner,
+            input_bytes,
+            tmr_costs,
+            t_config_s,
+        })
     }
 
     /// The candidate plan set, when the pipeline runs in plan mode.
@@ -694,15 +853,22 @@ impl Pipeline {
     /// Pick a target for one batch, advance its virtual-clock timeline,
     /// then hand the batch to the executor (one request per batch) or
     /// run the surrogate inline.  In plan mode the batch dispatches
-    /// over execution plans instead ([`Pipeline::dispatch_plan`]).
+    /// over execution plans instead ([`Pipeline::dispatch_plan`]);
+    /// with any fault source armed it takes the recovery path
+    /// ([`Pipeline::dispatch_recovering`]).  The fault check costs no
+    /// RNG draws and no float ops, so fault-free runs stay
+    /// byte-identical to the pre-fault-layer pipeline.
     fn dispatch(
-        &self,
+        &mut self,
         batch: Batch,
         state: &mut RunState,
         reaper: &mut Option<Reaper<'_>>,
     ) -> Result<()> {
         if self.planner.is_some() {
             return self.dispatch_plan(batch, state, reaper);
+        }
+        if state.fault.active() {
+            return self.dispatch_recovering(batch, state, reaper);
         }
         let phase = state.phase_index();
         let n = batch.len() as u64;
@@ -763,7 +929,235 @@ impl Pipeline {
                 ph.latencies.push(done - ev.t_s);
             }
         }
-        self.run_numerics(batch, phase, target.precision(), state, reaper)
+        self.run_numerics(batch, phase, target.precision(), state, reaper, done)
+    }
+
+    /// Dispatch one batch with the fault layer armed: every attempt
+    /// rolls the injector (or consumes a forced fault), a faulted
+    /// attempt burns its virtual time and power and then retries with
+    /// exponential backoff on the same target (bounded by
+    /// [`RecoveryPolicy::max_retries_per_target`]), escalates to the
+    /// next-best non-excluded target when retries run out, and
+    /// quarantines a target whose consecutive-fault streak crosses the
+    /// threshold (reinstated after the next scrub window +
+    /// reconfiguration).  Under TMR each attempt rolls three replicas
+    /// — a single faulty replica is outvoted (masked), two or more
+    /// fail the attempt.  A brownout window tightens the power budget
+    /// for every policy (degraded-mode dispatch).  The attempt at
+    /// [`RecoveryPolicy::max_attempts`] is forced to complete, so
+    /// every admitted batch finishes and the accounting invariants
+    /// (events, batches, downlink conservation) hold under any fault
+    /// timeline.
+    fn dispatch_recovering(
+        &mut self,
+        batch: Batch,
+        state: &mut RunState,
+        reaper: &mut Option<Reaper<'_>>,
+    ) -> Result<()> {
+        let phase = state.phase_index();
+        let n = batch.len() as u64;
+        let oldest_t_s = batch.events.first().map(|e| e.t_s).unwrap_or(batch.flushed_at_s);
+        let mut excluded = vec![false; self.dispatcher.registry.len()];
+        let mut at = batch.flushed_at_s;
+        let mut attempt: u32 = 0;
+        let mut retries_same: u32 = 0;
+        enum Outcome {
+            Success { masked: u64 },
+            Failure(FaultKind),
+        }
+        loop {
+            attempt += 1;
+            let forced = attempt >= state.fault.recovery.max_attempts;
+            let budget = state.fault.brownout_budget(at);
+            let choice = self.dispatcher.choose_constrained(
+                &state.timelines,
+                at,
+                oldest_t_s,
+                n,
+                &excluded,
+                budget,
+            );
+            let index = choice.index;
+            let (tname, precision) = {
+                let t = self.dispatcher.registry.get(index);
+                (t.name(), t.precision())
+            };
+            let mut srun = self.dispatcher.run_of(index);
+            let throttle = state.fault.throttle_factor(index, at);
+            if throttle != 1.0 {
+                srun.setup_s *= throttle;
+                srun.per_item_s *= throttle;
+            }
+            let tmr = state.fault.recovery.tmr;
+            if tmr {
+                match self.tmr_costs[index] {
+                    TmrCost::Spatial(pf) => srun.power_w *= pf,
+                    TmrCost::Temporal => {
+                        srun.setup_s *= 3.0;
+                        srun.per_item_s *= 3.0;
+                    }
+                }
+            }
+            let (outcome, thermal) = if forced {
+                // the attempt cap: complete unconditionally, no rolls
+                (Outcome::Success { masked: 0 }, false)
+            } else if tmr {
+                let mut faults: Vec<FaultKind> = Vec::new();
+                let mut thermal = false;
+                for _ in 0..3 {
+                    let (f, th) = state.fault.roll_attempt(index);
+                    if let Some(kind) = f {
+                        faults.push(kind);
+                    }
+                    thermal |= th;
+                }
+                let out = match faults.len() {
+                    0 => Outcome::Success { masked: 0 },
+                    1 => Outcome::Success { masked: 1 },
+                    _ => Outcome::Failure(faults[0]),
+                };
+                (out, thermal)
+            } else {
+                let (f, th) = state.fault.roll_attempt(index);
+                let out = match f {
+                    None => Outcome::Success { masked: 0 },
+                    Some(kind) => Outcome::Failure(kind),
+                };
+                (out, th)
+            };
+            if let Outcome::Failure(FaultKind::ExecTimeout) = outcome {
+                // a hung attempt occupies the target well past budget
+                let tf = state.fault.timeout_factor();
+                srun.setup_s *= tf;
+                srun.per_item_s *= tf;
+            }
+            let (start, done) = state.timelines[index].schedule(at, n, srun);
+            state.sim_end = state.sim_end.max(done);
+            if thermal {
+                if let Some((derate, duration)) = state.fault.thermal_params() {
+                    state.fault.open_throttle(index, derate, start + duration);
+                    state.fault.stats.faults_injected += 1;
+                    state.phases[phase].faults += 1;
+                    state.metrics.inc("fault_thermal_throttle");
+                }
+            }
+            match outcome {
+                Outcome::Failure(kind) => {
+                    // the failed attempt still burned real time + power
+                    state.fault.stats.faults_injected += 1;
+                    state.phases[phase].faults += 1;
+                    state.phases[phase].energy_j += srun.power_w * (done - start);
+                    state.metrics.inc(&format!("fault_{}", kind.label()));
+                    if tmr {
+                        state.fault.stats.tmr_batches += 1;
+                        state.metrics.inc("tmr_batches");
+                    }
+                    let streak = state.fault.note_fault(index);
+                    let threshold = state.fault.recovery.quarantine_threshold;
+                    if threshold > 0
+                        && streak >= threshold
+                        && !state.fault.is_quarantined(index)
+                        && self.dispatcher.registry.is_available(index)
+                    {
+                        // flaky target: out of service until the next
+                        // scrub window repairs it (plus reconfiguration)
+                        self.dispatcher.registry.set_available(index, false);
+                        let period = state.fault.recovery.quarantine_scrub_period_s;
+                        let wait = period - (done % period);
+                        state.fault.quarantine(index, done + wait + self.t_config_s);
+                        state.fault.stats.quarantines += 1;
+                        state.phases[phase].quarantines += 1;
+                        state.metrics.inc("quarantine");
+                    }
+                    let retry_ok = retries_same
+                        < state.fault.recovery.max_retries_per_target
+                        && self.dispatcher.registry.is_available(index)
+                        && !excluded[index];
+                    if retry_ok {
+                        retries_same += 1;
+                        state.fault.stats.retries += 1;
+                        state.phases[phase].retries += 1;
+                        state.metrics.inc("fault_retry");
+                    } else {
+                        // escalate: burn this target for the batch and
+                        // let the policy pick the next-best candidate
+                        excluded[index] = true;
+                        retries_same = 0;
+                        state.fault.stats.redispatches += 1;
+                        state.metrics.inc("redispatch_escalation");
+                    }
+                    let exp = (attempt.min(20) - 1) as i32;
+                    at = done + state.fault.recovery.backoff_base_s * 2f64.powi(exp);
+                }
+                Outcome::Success { masked } => {
+                    state.events_done += n;
+                    state.metrics.add("batches", 1);
+                    state.metrics.add("inferences", n);
+                    state.metrics.inc(&format!("dispatch_{tname}"));
+                    *state.target_batches.entry(tname.to_string()).or_insert(0) += 1;
+                    state.predicted_energy_j += choice.cost.energy_j;
+                    state.metrics.observe(
+                        "predicted_batch_latency",
+                        Duration::from_secs_f64(choice.cost.latency_s.max(0.0)),
+                    );
+                    state.metrics.observe(
+                        "measured_batch_latency",
+                        Duration::from_secs_f64((done - batch.flushed_at_s).max(0.0)),
+                    );
+                    let missed = done - oldest_t_s > self.dispatcher.deadline_s;
+                    if missed {
+                        state.deadline_misses += 1;
+                        state.metrics.inc("deadline_miss_batches");
+                    }
+                    if choice.power_shed {
+                        state.power_sheds += 1;
+                        state.metrics.inc("power_shed_batches");
+                    }
+                    for ev in &batch.events {
+                        state.latencies.push(done - ev.t_s);
+                    }
+                    if tmr {
+                        state.fault.stats.tmr_batches += 1;
+                        state.metrics.inc("tmr_batches");
+                    }
+                    if masked > 0 {
+                        // a single faulty replica was outvoted: the
+                        // fault happened, the batch still stands
+                        state.fault.stats.tmr_masked += masked;
+                        state.fault.stats.faults_injected += masked;
+                        state.phases[phase].tmr_masked += masked;
+                        state.phases[phase].faults += masked;
+                        state.metrics.add("tmr_masked", masked);
+                    }
+                    if budget.is_some() {
+                        state.fault.stats.degraded_batches += 1;
+                        state.phases[phase].degraded += 1;
+                        state.metrics.inc("degraded_batches");
+                    }
+                    if forced && attempt > 1 {
+                        state.fault.stats.forced_completions += 1;
+                        state.metrics.inc("forced_completions");
+                    }
+                    state.fault.note_success(index);
+                    {
+                        let ph = &mut state.phases[phase];
+                        ph.batches += 1;
+                        *ph.target_mix.entry(tname.to_string()).or_insert(0) += 1;
+                        ph.energy_j += srun.power_w * (done - start);
+                        if missed {
+                            ph.deadline_misses += 1;
+                        }
+                        if choice.power_shed {
+                            ph.power_sheds += 1;
+                        }
+                        for ev in &batch.events {
+                            ph.latencies.push(done - ev.t_s);
+                        }
+                    }
+                    return self.run_numerics(batch, phase, precision, state, reaper, done);
+                }
+            }
+        }
     }
 
     /// Pick an execution plan for one batch, advance every segment's
@@ -775,7 +1169,10 @@ impl Pipeline {
         state: &mut RunState,
         reaper: &mut Option<Reaper<'_>>,
     ) -> Result<()> {
-        let planner = self.planner.as_ref().expect("dispatch_plan needs plan mode");
+        let planner = match self.planner.as_ref() {
+            Some(p) => p,
+            None => bail!("dispatch_plan called without plan mode (internal error)"),
+        };
         let phase = state.phase_index();
         let n = batch.len() as u64;
         let oldest_t_s = batch.events.first().map(|e| e.t_s).unwrap_or(batch.flushed_at_s);
@@ -864,12 +1261,13 @@ impl Pipeline {
             (1, Lane::Registry(i)) => self.dispatcher.registry.get(i).precision(),
             _ => Precision::Fp32,
         };
-        self.run_numerics(batch, phase, precision, state, reaper)
+        self.run_numerics(batch, phase, precision, state, reaper, done)
     }
 
-    /// Post-scheduling numerics, shared by both dispatch paths: one
+    /// Post-scheduling numerics, shared by all dispatch paths: one
     /// `ExecRequest` per batch through the pool, or the inline
-    /// deterministic surrogate for timing-only runs.
+    /// deterministic surrogate for timing-only runs.  `done_s` is the
+    /// batch's virtual completion time (the downlink dropout check).
     fn run_numerics(
         &self,
         batch: Batch,
@@ -877,11 +1275,12 @@ impl Pipeline {
         precision: Precision,
         state: &mut RunState,
         reaper: &mut Option<Reaper<'_>>,
+        done_s: f64,
     ) -> Result<()> {
         let cfg = &self.config;
         match reaper {
             Some(r) => {
-                r.submit(&self.route.model, precision, phase, batch)?;
+                r.submit(&self.route.model, precision, phase, batch, done_s)?;
                 // overlap: absorb any batches that already finished,
                 // then apply backpressure so in-flight work is bounded
                 r.drain_ready(cfg.use_case, self.input_bytes, state)?;
@@ -897,7 +1296,14 @@ impl Pipeline {
                 // processed inline (same RNG order as the PJRT path)
                 for ev in &batch.events {
                     let out = surrogate_output(cfg.use_case, ev, &mut state.rng);
-                    state.decide_one(cfg.use_case, ev, &out, self.input_bytes, phase);
+                    state.decide_one(
+                        cfg.use_case,
+                        ev,
+                        &out,
+                        self.input_bytes,
+                        phase,
+                        done_s,
+                    );
                 }
                 Ok(())
             }
@@ -932,6 +1338,22 @@ impl Pipeline {
                 timelines.push(AccelTimeline::new(name));
             }
         }
+        // SEU exposure scales per-target corruption probability by
+        // essential configuration bits, normalized to the fleet max
+        // (the A53 exposes none and never draws a corruption)
+        let injector = cfg.fault_seed.map(|seed| {
+            let bits: Vec<u64> = self
+                .dispatcher
+                .registry
+                .targets()
+                .iter()
+                .map(|t| essential_bits_of(&t.resources()))
+                .collect();
+            let max = bits.iter().copied().max().unwrap_or(0).max(1);
+            let exposure = bits.iter().map(|&b| b as f64 / max as f64).collect();
+            FaultInjector::new(seed, cfg.fault_profile, exposure)
+        });
+        let fault = FaultState::new(self.dispatcher.registry.len(), injector, cfg.recovery);
         let state = RunState {
             timelines,
             downlink: DownlinkManager::new(cfg.downlink_budget),
@@ -951,6 +1373,8 @@ impl Pipeline {
             with_truth: 0,
             sim_end: 0.0,
             phases: vec![PhaseAccum::new("run", 0.0)],
+            fault,
+            exec_errors: Vec::new(),
         };
         let base_cadence_s = cfg.cadence_s;
         let reaper = executor.map(Reaper::new);
@@ -1034,13 +1458,14 @@ impl PipelineRun<'_, '_> {
         self.pipeline.dispatcher.power_budget_w = budget_w;
     }
 
-    /// Retune the end-to-end deadline (s).
-    pub fn set_deadline_s(&mut self, deadline_s: f64) {
-        assert!(
-            deadline_s > 0.0 && deadline_s.is_finite(),
-            "deadline must be positive and finite"
-        );
+    /// Retune the end-to-end deadline (s).  Errors on a non-positive
+    /// or non-finite value instead of aborting a mission run.
+    pub fn set_deadline_s(&mut self, deadline_s: f64) -> Result<()> {
+        if !(deadline_s > 0.0 && deadline_s.is_finite()) {
+            bail!("deadline must be positive and finite, got {deadline_s}");
+        }
         self.pipeline.dispatcher.deadline_s = deadline_s;
+        Ok(())
     }
 
     /// Change the sensor cadence (s between samples) from the next
@@ -1051,13 +1476,14 @@ impl PipelineRun<'_, '_> {
 
     /// Multiply the *base* event rate: `set_burst(100.0)` runs the
     /// sensor 100× faster than the configured cadence,
-    /// `set_burst(1.0)` restores it.
-    pub fn set_burst(&mut self, burst_x: f64) {
-        assert!(
-            burst_x > 0.0 && burst_x.is_finite(),
-            "burst multiplier must be positive and finite"
-        );
+    /// `set_burst(1.0)` restores it.  Errors on a non-positive or
+    /// non-finite multiplier instead of aborting a mission run.
+    pub fn set_burst(&mut self, burst_x: f64) -> Result<()> {
+        if !(burst_x > 0.0 && burst_x.is_finite()) {
+            bail!("burst multiplier must be positive and finite, got {burst_x}");
+        }
         self.stream.set_cadence(self.base_cadence_s / burst_x);
+        Ok(())
     }
 
     /// Grant additional downlink byte budget (a ground-station pass).
@@ -1082,6 +1508,120 @@ impl PipelineRun<'_, '_> {
         } else {
             "target_knocked_out"
         });
+    }
+
+    /// Open a downlink dropout window from the current virtual time:
+    /// decisions whose batch completes inside it are lost before the
+    /// byte budget is consulted.  Overlapping windows extend.
+    pub fn set_link_dropout(&mut self, duration_s: f64) -> Result<()> {
+        if !(duration_s > 0.0 && duration_s.is_finite()) {
+            bail!("dropout duration must be positive and finite, got {duration_s}");
+        }
+        let until = self.stream.t_s + duration_s;
+        self.state.fault.open_link_dropout(until);
+        self.count_window_fault("fault_link_dropout");
+        Ok(())
+    }
+
+    /// Open a brownout window from the current virtual time: every
+    /// policy (including `static`) dispatches under `budget_w` until it
+    /// closes — degraded-mode dispatch.  Re-opening overwrites.
+    pub fn set_brownout(&mut self, budget_w: f64, duration_s: f64) -> Result<()> {
+        if !(budget_w > 0.0 && budget_w.is_finite()) {
+            bail!("brownout budget must be positive and finite, got {budget_w}");
+        }
+        if !(duration_s > 0.0 && duration_s.is_finite()) {
+            bail!("brownout duration must be positive and finite, got {duration_s}");
+        }
+        let until = self.stream.t_s + duration_s;
+        self.state.fault.open_brownout(until, budget_w);
+        self.count_window_fault("fault_brownout");
+        Ok(())
+    }
+
+    /// Open a thermal throttle window on one registry target from the
+    /// current virtual time: its setup and per-item latencies multiply
+    /// by `derate_x` until the window closes.
+    pub fn set_thermal_throttle(
+        &mut self,
+        index: usize,
+        derate_x: f64,
+        duration_s: f64,
+    ) -> Result<()> {
+        if index >= self.pipeline.dispatcher.registry.len() {
+            bail!("thermal throttle: no registry target at index {index}");
+        }
+        if !(derate_x >= 1.0 && derate_x.is_finite()) {
+            bail!("thermal derate must be >= 1 and finite, got {derate_x}");
+        }
+        if !(duration_s > 0.0 && duration_s.is_finite()) {
+            bail!("throttle duration must be positive and finite, got {duration_s}");
+        }
+        let until = self.stream.t_s + duration_s;
+        self.state.fault.open_throttle(index, derate_x, until);
+        self.count_window_fault("fault_thermal_throttle");
+        Ok(())
+    }
+
+    /// Queue one forced transient execution failure against a registry
+    /// target — consumed (and counted) by the next attempt dispatched
+    /// there.  The deterministic handle mission events and tests use.
+    pub fn inject_transient_fault(&mut self, index: usize) -> Result<()> {
+        if index >= self.pipeline.dispatcher.registry.len() {
+            bail!("transient fault: no registry target at index {index}");
+        }
+        self.state.fault.force_exec_fail(index);
+        Ok(())
+    }
+
+    /// Queue one forced SEU corruption against a registry target —
+    /// consumed by the next attempt there (a single TMR replica
+    /// outvotes it; without TMR the attempt fails and recovers).
+    pub fn inject_corruption(&mut self, index: usize) -> Result<()> {
+        if index >= self.pipeline.dispatcher.registry.len() {
+            bail!("corruption: no registry target at index {index}");
+        }
+        self.state.fault.force_corrupt(index);
+        Ok(())
+    }
+
+    /// Count one opened environment fault window (aggregate + current
+    /// phase + metric).
+    fn count_window_fault(&mut self, metric: &str) {
+        let idx = self.state.phase_index();
+        self.state.fault.stats.faults_injected += 1;
+        self.state.phases[idx].faults += 1;
+        self.state.metrics.inc(metric);
+    }
+
+    /// Per-tick fault housekeeping: reinstate quarantined targets whose
+    /// scrub window elapsed, then roll the injector's tick-granularity
+    /// environment faults (brownout, downlink dropout).  A no-op — no
+    /// RNG, no float ops — while the fault layer is inactive.
+    fn tick_faults(&mut self, now_s: f64) {
+        if !self.state.fault.active() {
+            return;
+        }
+        for index in self.state.fault.take_due_reinstates(now_s) {
+            self.pipeline.dispatcher.registry.set_available(index, true);
+            self.state.fault.stats.reinstates += 1;
+            self.state.metrics.inc("quarantine_reinstate");
+        }
+        if let Some((ticks, profile)) = self.state.fault.roll_tick() {
+            if ticks.brownout {
+                self.state.fault.open_brownout(
+                    now_s + profile.brownout_duration_s,
+                    profile.brownout_budget_w,
+                );
+                self.count_window_fault("fault_brownout");
+            }
+            if ticks.dropout {
+                self.state
+                    .fault
+                    .open_link_dropout(now_s + profile.dropout_duration_s);
+                self.count_window_fault("fault_link_dropout");
+            }
+        }
     }
 
     /// Start a new report phase at the current virtual time.  All
@@ -1134,6 +1674,7 @@ impl PipelineRun<'_, '_> {
     pub fn tick(&mut self) -> Result<()> {
         let ev = self.stream.next_event();
         let now = ev.t_s;
+        self.tick_faults(now);
         self.emitted += 1;
         {
             let idx = self.state.phase_index();
@@ -1246,6 +1787,8 @@ impl PipelineRun<'_, '_> {
             with_truth,
             sim_end,
             mut phases,
+            fault,
+            exec_errors,
             ..
         } = self.state;
         latencies.sort_by(f64::total_cmp);
@@ -1297,6 +1840,8 @@ impl PipelineRun<'_, '_> {
             },
             decisions,
             phases,
+            faults: fault.stats,
+            exec_errors,
             metrics,
         })
     }
@@ -1316,6 +1861,20 @@ fn percentile_nearest_rank(sorted: &[f64], q: f64) -> f64 {
 
 /// Salt separating the decision RNG stream from the sensor stream.
 const DECISION_RNG_SALT: u64 = 0xD01E_57A7;
+
+/// Cap on execution-error lines kept for the report (oldest first);
+/// the counter keeps the full count.
+const MAX_EXEC_ERRORS: usize = 8;
+
+/// Record a survived serving-path execution error: counted and
+/// surfaced in the report instead of aborting the run.
+fn record_exec_error(state: &mut RunState, line: String) {
+    state.metrics.inc("exec_failed_batches");
+    state.fault.stats.exec_failed_batches += 1;
+    if state.exec_errors.len() < MAX_EXEC_ERRORS {
+        state.exec_errors.push(line);
+    }
+}
 
 /// Backpressure cap on batches submitted but not yet reaped: enough to
 /// keep every worker busy with headroom, small enough that pending
@@ -1719,14 +2278,14 @@ mod tests {
             run.tick().unwrap();
         }
         let t_quiet = run.now_s();
-        run.set_burst(100.0);
-        run.set_deadline_s(0.05);
+        run.set_burst(100.0).unwrap();
+        run.set_deadline_s(0.05).unwrap();
         for _ in 0..20 {
             run.tick().unwrap();
         }
         let t_storm = run.now_s();
-        run.set_burst(1.0);
-        run.set_deadline_s(base);
+        run.set_burst(1.0).unwrap();
+        run.set_deadline_s(base).unwrap();
         for _ in 0..10 {
             run.tick().unwrap();
         }

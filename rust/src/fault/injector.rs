@@ -1,0 +1,226 @@
+//! Seeded, deterministic fault injection — the typed fault vocabulary.
+//!
+//! The injector owns its own xorshift stream (salted so it never aliases
+//! the decision jitter RNG) and draws a **fixed number of variates per
+//! query**: two per batch attempt, two per pipeline tick.  Fixing the
+//! draw count is what makes the fault timeline reproducible — a fault
+//! that fires (or doesn't) never shifts the stream position of the next
+//! roll, so the same seed replays the same campaign bit for bit.
+//!
+//! Per-target SEU susceptibility is scaled by the target's essential
+//! configuration bits (`rad::seu::essential_bits_of`): the A53 software
+//! path exposes zero CRAM and therefore never draws a corruption fault,
+//! while the DPU's large footprint makes it the most SEU-prone slot.
+
+use crate::util::prng::Prng;
+
+/// Salt XORed into the fault seed so the injector's stream is decoupled
+/// from the pipeline's decision RNG even when both use the same seed.
+const FAULT_RNG_SALT: u64 = 0xFA17_5EED;
+
+/// One injected fault drawn against a batch attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The batch execution fails outright (worker fault, bus error).
+    ExecFail,
+    /// The batch completes but far over budget (hung DMA, retried bus).
+    ExecTimeout,
+    /// SEU configuration/weight corruption — output untrustworthy.
+    SeuCorrupt,
+}
+
+impl FaultKind {
+    /// Stable metric/report label for the fault kind.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::ExecFail => "exec_fail",
+            FaultKind::ExecTimeout => "exec_timeout",
+            FaultKind::SeuCorrupt => "seu_corrupt",
+        }
+    }
+}
+
+/// Tick-granularity environment faults rolled once per pipeline tick.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TickFaults {
+    /// A brownout power sag begins this tick.
+    pub brownout: bool,
+    /// A downlink dropout begins this tick.
+    pub dropout: bool,
+}
+
+/// Per-fault-class probabilities and severities.
+///
+/// Probabilities are per *attempt* (batch-level faults) or per *tick*
+/// (environment faults); severities parameterize the injected effect.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultProfile {
+    /// P(transient execution failure) per batch attempt, per target.
+    pub exec_fail_p: f64,
+    /// P(execution timeout) per batch attempt, per target.
+    pub timeout_p: f64,
+    /// Latency multiplier applied to a timed-out attempt.
+    pub timeout_factor_x: f64,
+    /// Base P(SEU corruption) per attempt — scaled by the target's
+    /// essential-bit exposure (0 for the CPU, ~1 for the largest slot).
+    pub seu_corrupt_p: f64,
+    /// P(thermal throttle trips) per batch attempt, per target.
+    pub thermal_p: f64,
+    /// Latency derate applied while a throttle window is open.
+    pub thermal_derate_x: f64,
+    /// Duration of one thermal throttle window (virtual seconds).
+    pub thermal_duration_s: f64,
+    /// P(brownout power sag begins) per pipeline tick.
+    pub brownout_p: f64,
+    /// Power budget enforced while a brownout window is open (W).
+    pub brownout_budget_w: f64,
+    /// Duration of one brownout window (virtual seconds).
+    pub brownout_duration_s: f64,
+    /// P(downlink dropout begins) per pipeline tick.
+    pub dropout_p: f64,
+    /// Duration of one downlink dropout window (virtual seconds).
+    pub dropout_duration_s: f64,
+}
+
+impl Default for FaultProfile {
+    fn default() -> Self {
+        FaultProfile {
+            exec_fail_p: 0.02,
+            timeout_p: 0.01,
+            timeout_factor_x: 4.0,
+            seu_corrupt_p: 0.02,
+            thermal_p: 0.01,
+            thermal_derate_x: 2.0,
+            thermal_duration_s: 4.0,
+            brownout_p: 0.002,
+            brownout_budget_w: 2.5,
+            brownout_duration_s: 5.0,
+            dropout_p: 0.003,
+            dropout_duration_s: 8.0,
+        }
+    }
+}
+
+/// Deterministic fault source: a salted PRNG plus the profile and the
+/// per-target SEU exposure weights (essential bits, normalized).
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    rng: Prng,
+    profile: FaultProfile,
+    exposure: Vec<f64>,
+}
+
+impl FaultInjector {
+    /// Build an injector for `exposure.len()` targets.  `exposure[i]`
+    /// scales target `i`'s SEU corruption probability and should be in
+    /// [0, 1] (essential bits over the fleet maximum).
+    pub fn new(seed: u64, profile: FaultProfile, exposure: Vec<f64>) -> Self {
+        FaultInjector { rng: Prng::new(seed ^ FAULT_RNG_SALT), profile, exposure }
+    }
+
+    /// The profile this injector draws from.
+    pub fn profile(&self) -> &FaultProfile {
+        &self.profile
+    }
+
+    /// Roll the batch-attempt faults for `target`.  Always consumes
+    /// exactly two variates: one for the mutually-exclusive batch fault
+    /// (fail | timeout | corrupt), one for the thermal trip.
+    pub fn roll_attempt(&mut self, target: usize) -> (Option<FaultKind>, bool) {
+        let expo = self.exposure.get(target).copied().unwrap_or(0.0);
+        let u = self.rng.f64();
+        let fail_edge = self.profile.exec_fail_p;
+        let timeout_edge = fail_edge + self.profile.timeout_p;
+        let corrupt_edge = timeout_edge + self.profile.seu_corrupt_p * expo;
+        let fault = if u < fail_edge {
+            Some(FaultKind::ExecFail)
+        } else if u < timeout_edge {
+            Some(FaultKind::ExecTimeout)
+        } else if u < corrupt_edge {
+            Some(FaultKind::SeuCorrupt)
+        } else {
+            None
+        };
+        let thermal = self.rng.chance(self.profile.thermal_p);
+        (fault, thermal)
+    }
+
+    /// Roll the tick-granularity environment faults.  Always consumes
+    /// exactly two variates (brownout, dropout).
+    pub fn roll_tick(&mut self) -> TickFaults {
+        let brownout = self.rng.chance(self.profile.brownout_p);
+        let dropout = self.rng.chance(self.profile.dropout_p);
+        TickFaults { brownout, dropout }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_timeline() {
+        let profile = FaultProfile { exec_fail_p: 0.3, ..Default::default() };
+        let mut a = FaultInjector::new(9, profile, vec![1.0, 0.0]);
+        let mut b = FaultInjector::new(9, profile, vec![1.0, 0.0]);
+        for i in 0..200 {
+            assert_eq!(a.roll_attempt(i % 2), b.roll_attempt(i % 2));
+            let (ta, tb) = (a.roll_tick(), b.roll_tick());
+            assert_eq!(ta.brownout, tb.brownout);
+            assert_eq!(ta.dropout, tb.dropout);
+        }
+    }
+
+    #[test]
+    fn zero_exposure_never_corrupts() {
+        let profile = FaultProfile {
+            exec_fail_p: 0.0,
+            timeout_p: 0.0,
+            seu_corrupt_p: 1.0,
+            ..Default::default()
+        };
+        let mut inj = FaultInjector::new(3, profile, vec![0.0]);
+        for _ in 0..500 {
+            assert_eq!(inj.roll_attempt(0).0, None);
+        }
+    }
+
+    #[test]
+    fn full_exposure_always_corrupts_at_p1() {
+        let profile = FaultProfile {
+            exec_fail_p: 0.0,
+            timeout_p: 0.0,
+            seu_corrupt_p: 1.0,
+            ..Default::default()
+        };
+        let mut inj = FaultInjector::new(3, profile, vec![1.0]);
+        for _ in 0..100 {
+            assert_eq!(inj.roll_attempt(0).0, Some(FaultKind::SeuCorrupt));
+        }
+    }
+
+    #[test]
+    fn draw_count_is_fixed() {
+        // a fault firing must not shift the stream vs. one not firing
+        let quiet = FaultProfile {
+            exec_fail_p: 0.0,
+            timeout_p: 0.0,
+            seu_corrupt_p: 0.0,
+            thermal_p: 0.0,
+            ..Default::default()
+        };
+        let noisy = FaultProfile {
+            exec_fail_p: 1.0,
+            thermal_p: 1.0,
+            ..quiet
+        };
+        let mut a = FaultInjector::new(77, quiet, vec![1.0]);
+        let mut b = FaultInjector::new(77, noisy, vec![1.0]);
+        for _ in 0..50 {
+            a.roll_attempt(0);
+            b.roll_attempt(0);
+        }
+        // after equal draw counts the raw streams realign
+        assert_eq!(a.rng.next_u64(), b.rng.next_u64());
+    }
+}

@@ -1,0 +1,330 @@
+//! Deterministic fault injection + recovery policies for the pipeline.
+//!
+//! The space survey literature (and the paper's §VI future work) treats
+//! radiation upsets, power sags, and link dropouts as the *operating
+//! norm* of on-board inference, not exceptional conditions.  This layer
+//! makes them first-class and reproducible:
+//!
+//! * [`FaultInjector`] — a seeded, salted PRNG stream drawing from a
+//!   typed fault vocabulary ([`FaultKind`] per batch attempt, brownout
+//!   and downlink dropout per tick, thermal throttling), with SEU
+//!   corruption scaled by each target's essential configuration bits;
+//! * [`RecoveryPolicy`] — bounded same-target retries with exponential
+//!   virtual-clock backoff, escalation to the next-best covering
+//!   target, consecutive-fault quarantine healed on the scrub cadence,
+//!   and optional TMR voting costed through `rad::tmr` ([`TmrCost`]);
+//! * [`FaultState`] — the per-run working state the coordinator
+//!   threads through dispatch: open fault windows, forced one-shot
+//!   faults (for tests and mission events), quarantine bookkeeping,
+//!   and the [`FaultStats`] accounting surfaced in `PipelineReport`.
+//!
+//! Determinism contract: the injector draws a **fixed** number of
+//! variates per query, so the same `--faults <seed>` replays the same
+//! campaign bit for bit; with no injector and no fault mission events,
+//! [`FaultState::active`] stays `false` and the coordinator's dispatch
+//! path is byte-identical to the fault-free build.
+
+pub mod injector;
+pub mod recovery;
+
+pub use injector::{FaultInjector, FaultKind, FaultProfile, TickFaults};
+pub use recovery::{tmr_cost_of, RecoveryPolicy, TmrCost};
+
+/// Fault / recovery accounting for one pipeline run (and, mirrored
+/// field-by-field, per phase).  All counters are exact event counts.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Faults drawn or forced against batch attempts (incl. masked
+    /// TMR replica faults) plus opened environment fault windows.
+    pub faults_injected: u64,
+    /// Same-target retry attempts scheduled after a fault.
+    pub retries: u64,
+    /// Escalations to the next-best target after retries ran out.
+    pub redispatches: u64,
+    /// Targets quarantined for repeated consecutive faults.
+    pub quarantines: u64,
+    /// Quarantined targets reinstated after a scrub window.
+    pub reinstates: u64,
+    /// Batch attempts executed under TMR voting.
+    pub tmr_batches: u64,
+    /// Single-replica faults masked (outvoted) by TMR.
+    pub tmr_masked: u64,
+    /// Batches dispatched under a brownout-degraded power budget.
+    pub degraded_batches: u64,
+    /// Decisions dropped because the downlink was in a dropout window.
+    pub link_dropped: u64,
+    /// Batches forced to complete at the attempt cap.
+    pub forced_completions: u64,
+    /// Real executor batches whose results were lost to a typed
+    /// execution error (panic audit path) rather than aborting the run.
+    pub exec_failed_batches: u64,
+}
+
+impl FaultStats {
+    /// Any fault/recovery activity at all?  Gates report rendering.
+    pub fn any(&self) -> bool {
+        *self != FaultStats::default()
+    }
+}
+
+/// Per-run fault working state the coordinator owns: the (optional)
+/// injector, the recovery policy, open fault windows, forced one-shot
+/// faults, quarantine bookkeeping, and the running [`FaultStats`].
+#[derive(Debug)]
+pub struct FaultState {
+    /// Seeded injector; `None` runs fault-free unless a mission event
+    /// or test knob forces a fault.
+    pub injector: Option<FaultInjector>,
+    /// The recovery policy in force for this run.
+    pub recovery: RecoveryPolicy,
+    /// Running fault/recovery counters (aggregate; phases keep their
+    /// own slices).
+    pub stats: FaultStats,
+    /// True once any fault source exists — gates the recovery dispatch
+    /// path so fault-free runs stay byte-identical to the legacy path.
+    touched: bool,
+    /// Per-target thermal throttle window: (open until, latency derate).
+    throttle: Vec<(f64, f64)>,
+    /// Open brownout window: (until, budget W).  Re-opening overwrites.
+    brownout: Option<(f64, f64)>,
+    /// Downlink dropout window end; re-opening extends (max).
+    link_down_until: f64,
+    /// Pending forced transient execution failures per target.
+    forced_fail: Vec<u32>,
+    /// Pending forced SEU corruptions per target.
+    forced_corrupt: Vec<u32>,
+    /// Consecutive-fault streak per target (quarantine trigger).
+    consecutive_faults: Vec<u32>,
+    /// Is the target currently quarantined by the recovery layer?
+    quarantined: Vec<bool>,
+    /// Scheduled reinstatements: (target index, ready-at virtual time).
+    reinstates: Vec<(usize, f64)>,
+}
+
+impl FaultState {
+    /// Fault-state for `n_targets` registry entries.
+    pub fn new(
+        n_targets: usize,
+        injector: Option<FaultInjector>,
+        recovery: RecoveryPolicy,
+    ) -> Self {
+        let touched = injector.is_some();
+        FaultState {
+            injector,
+            recovery,
+            stats: FaultStats::default(),
+            touched,
+            throttle: vec![(f64::NEG_INFINITY, 1.0); n_targets],
+            brownout: None,
+            link_down_until: f64::NEG_INFINITY,
+            forced_fail: vec![0; n_targets],
+            forced_corrupt: vec![0; n_targets],
+            consecutive_faults: vec![0; n_targets],
+            quarantined: vec![false; n_targets],
+            reinstates: Vec::new(),
+        }
+    }
+
+    /// Has any fault source ever been armed?  While `false`, dispatch
+    /// takes the legacy byte-identical path.
+    pub fn active(&self) -> bool {
+        self.touched
+    }
+
+    /// Is the downlink inside a dropout window at virtual time `t_s`?
+    pub fn link_down(&self, t_s: f64) -> bool {
+        t_s < self.link_down_until
+    }
+
+    /// Latency derate for `target` at virtual time `t_s` (1.0 = none).
+    pub fn throttle_factor(&self, target: usize, t_s: f64) -> f64 {
+        let (until, derate) = self.throttle[target];
+        if t_s < until {
+            derate
+        } else {
+            1.0
+        }
+    }
+
+    /// Brownout power budget in force at virtual time `t_s`, if any.
+    pub fn brownout_budget(&self, t_s: f64) -> Option<f64> {
+        match self.brownout {
+            Some((until, budget)) if t_s < until => Some(budget),
+            _ => None,
+        }
+    }
+
+    /// Open (or overwrite) a thermal throttle window on `target`.
+    pub fn open_throttle(&mut self, target: usize, derate_x: f64, until_s: f64) {
+        self.touched = true;
+        self.throttle[target] = (until_s, derate_x);
+    }
+
+    /// Open (or overwrite) a brownout power-sag window.
+    pub fn open_brownout(&mut self, until_s: f64, budget_w: f64) {
+        self.touched = true;
+        self.brownout = Some((until_s, budget_w));
+    }
+
+    /// Open (or extend) a downlink dropout window.
+    pub fn open_link_dropout(&mut self, until_s: f64) {
+        self.touched = true;
+        self.link_down_until = self.link_down_until.max(until_s);
+    }
+
+    /// Queue one forced transient execution failure against `target` —
+    /// consumed (and counted) by the next attempt dispatched there.
+    pub fn force_exec_fail(&mut self, target: usize) {
+        self.touched = true;
+        self.forced_fail[target] += 1;
+    }
+
+    /// Queue one forced SEU corruption against `target`.
+    pub fn force_corrupt(&mut self, target: usize) {
+        self.touched = true;
+        self.forced_corrupt[target] += 1;
+    }
+
+    /// Roll the batch-attempt faults for `target`: forced one-shots
+    /// first (no RNG), then the injector (exactly two variates), else
+    /// nothing.  Returns `(fault, thermal trip)`.
+    pub fn roll_attempt(&mut self, target: usize) -> (Option<FaultKind>, bool) {
+        if self.forced_fail[target] > 0 {
+            self.forced_fail[target] -= 1;
+            return (Some(FaultKind::ExecFail), false);
+        }
+        if self.forced_corrupt[target] > 0 {
+            self.forced_corrupt[target] -= 1;
+            return (Some(FaultKind::SeuCorrupt), false);
+        }
+        match self.injector.as_mut() {
+            Some(inj) => inj.roll_attempt(target),
+            None => (None, false),
+        }
+    }
+
+    /// Roll the tick-granularity environment faults; `None` without an
+    /// injector.  Returns the rolls plus a copy of the profile so the
+    /// caller can size the windows it opens.
+    pub fn roll_tick(&mut self) -> Option<(TickFaults, FaultProfile)> {
+        let inj = self.injector.as_mut()?;
+        let ticks = inj.roll_tick();
+        let profile = *inj.profile();
+        Some((ticks, profile))
+    }
+
+    /// Latency multiplier for a timed-out attempt.
+    pub fn timeout_factor(&self) -> f64 {
+        match &self.injector {
+            Some(inj) => inj.profile().timeout_factor_x,
+            None => FaultProfile::default().timeout_factor_x,
+        }
+    }
+
+    /// Thermal window parameters `(derate, duration s)` when an
+    /// injector is armed.
+    pub fn thermal_params(&self) -> Option<(f64, f64)> {
+        let inj = self.injector.as_ref()?;
+        Some((inj.profile().thermal_derate_x, inj.profile().thermal_duration_s))
+    }
+
+    /// Is `target` currently quarantined by the recovery layer?
+    pub fn is_quarantined(&self, target: usize) -> bool {
+        self.quarantined[target]
+    }
+
+    /// Consecutive-fault streak on `target`.
+    pub fn streak(&self, target: usize) -> u32 {
+        self.consecutive_faults[target]
+    }
+
+    /// Record a fault on `target`; returns the new streak length.
+    pub fn note_fault(&mut self, target: usize) -> u32 {
+        self.consecutive_faults[target] += 1;
+        self.consecutive_faults[target]
+    }
+
+    /// Record a successful completion on `target` (resets the streak).
+    pub fn note_success(&mut self, target: usize) {
+        self.consecutive_faults[target] = 0;
+    }
+
+    /// Quarantine `target` and schedule its reinstatement.
+    pub fn quarantine(&mut self, target: usize, ready_at_s: f64) {
+        self.touched = true;
+        self.quarantined[target] = true;
+        self.reinstates.push((target, ready_at_s));
+    }
+
+    /// Drain the reinstatements due by `now_s`, clearing their
+    /// quarantine marks and fault streaks.  Returned in schedule order.
+    pub fn take_due_reinstates(&mut self, now_s: f64) -> Vec<usize> {
+        let mut due = Vec::new();
+        self.reinstates.retain(|&(target, ready_at)| {
+            if ready_at <= now_s {
+                due.push(target);
+                false
+            } else {
+                true
+            }
+        });
+        for &target in &due {
+            self.quarantined[target] = false;
+            self.consecutive_faults[target] = 0;
+        }
+        due
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn untouched_until_armed() {
+        let mut fs = FaultState::new(2, None, RecoveryPolicy::default());
+        assert!(!fs.active());
+        assert_eq!(fs.roll_attempt(0), (None, false));
+        assert!(fs.roll_tick().is_none());
+        assert!(!fs.active(), "rolling without a source must not arm");
+        fs.open_link_dropout(5.0);
+        assert!(fs.active());
+        assert!(fs.link_down(4.0));
+        assert!(!fs.link_down(5.0));
+    }
+
+    #[test]
+    fn forced_faults_consume_once() {
+        let mut fs = FaultState::new(1, None, RecoveryPolicy::default());
+        fs.force_exec_fail(0);
+        assert_eq!(fs.roll_attempt(0).0, Some(FaultKind::ExecFail));
+        assert_eq!(fs.roll_attempt(0).0, None);
+        fs.force_corrupt(0);
+        assert_eq!(fs.roll_attempt(0).0, Some(FaultKind::SeuCorrupt));
+        assert_eq!(fs.roll_attempt(0).0, None);
+    }
+
+    #[test]
+    fn quarantine_reinstates_on_schedule() {
+        let mut fs = FaultState::new(2, None, RecoveryPolicy::default());
+        fs.quarantine(1, 10.0);
+        assert!(fs.is_quarantined(1));
+        assert!(fs.take_due_reinstates(9.9).is_empty());
+        assert_eq!(fs.take_due_reinstates(10.0), vec![1]);
+        assert!(!fs.is_quarantined(1));
+        assert!(fs.take_due_reinstates(11.0).is_empty());
+    }
+
+    #[test]
+    fn fault_windows_expire() {
+        let mut fs = FaultState::new(1, None, RecoveryPolicy::default());
+        assert_eq!(fs.throttle_factor(0, 0.0), 1.0);
+        fs.open_throttle(0, 2.5, 3.0);
+        assert_eq!(fs.throttle_factor(0, 2.9), 2.5);
+        assert_eq!(fs.throttle_factor(0, 3.0), 1.0);
+        assert_eq!(fs.brownout_budget(0.0), None);
+        fs.open_brownout(4.0, 2.0);
+        assert_eq!(fs.brownout_budget(3.9), Some(2.0));
+        assert_eq!(fs.brownout_budget(4.0), None);
+    }
+}

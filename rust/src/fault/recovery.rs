@@ -1,0 +1,140 @@
+//! Recovery policy knobs and the TMR cost model for hardened dispatch.
+//!
+//! The policy is deliberately small: bounded same-target retries with
+//! exponential virtual-clock backoff, escalation to the next-best
+//! covering target, consecutive-fault quarantine healed by the scrub
+//! schedule, and optional TMR voting.  TMR costing reuses `rad::tmr`:
+//! a PL target whose triplicated footprint still fits the ZU7EV pays
+//! the spatial power factor at unchanged latency; anything else (the
+//! A53, or a design too large to triplicate) votes temporally by
+//! running the batch three times.
+
+use crate::backend::AccelModel;
+use crate::board::zcu104::PlResources;
+use crate::rad::seu::essential_bits_of;
+use crate::rad::tmr::apply_tmr;
+
+/// Bounded-retry / quarantine / TMR recovery configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryPolicy {
+    /// Same-target retries before escalating to the next-best target.
+    pub max_retries_per_target: u32,
+    /// Hard cap on attempts per batch; the final attempt is forced to
+    /// complete (no fault rolls) so every admitted batch finishes.
+    pub max_attempts: u32,
+    /// First backoff delay; doubles per attempt (virtual seconds).
+    pub backoff_base_s: f64,
+    /// Consecutive faults on one target before it is quarantined.
+    pub quarantine_threshold: u32,
+    /// Scrub cadence used to schedule quarantine reinstatement (s).
+    pub quarantine_scrub_period_s: f64,
+    /// Run every batch under triple-modular-redundancy voting.
+    pub tmr: bool,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy {
+            max_retries_per_target: 1,
+            max_attempts: 5,
+            backoff_base_s: 0.005,
+            quarantine_threshold: 3,
+            quarantine_scrub_period_s: 30.0,
+            tmr: false,
+        }
+    }
+}
+
+/// How a target pays for TMR voting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TmrCost {
+    /// Triplicated fabric fits: power multiplies, latency unchanged.
+    Spatial(f64),
+    /// No fabric to triplicate (or it would not fit): the batch runs
+    /// three times back-to-back at unchanged power.
+    Temporal,
+}
+
+/// Derive the TMR cost mode for one target on the given device pool.
+pub fn tmr_cost_of(target: &dyn AccelModel, pl: &PlResources) -> TmrCost {
+    let util = target.resources();
+    if essential_bits_of(&util) == 0 {
+        // pure software path — nothing to triplicate spatially
+        return TmrCost::Temporal;
+    }
+    let overhead = apply_tmr(util, pl);
+    if overhead.fits {
+        TmrCost::Spatial(overhead.power_factor)
+    } else {
+        TmrCost::Temporal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Slot;
+    use crate::board::Zcu104;
+    use crate::model::{Manifest, Precision};
+    use crate::resources::Utilization;
+
+    #[derive(Debug)]
+    struct Stub {
+        util: Utilization,
+    }
+
+    impl AccelModel for Stub {
+        fn name(&self) -> &'static str {
+            "stub"
+        }
+        fn slot(&self) -> Slot {
+            Slot::Hls
+        }
+        fn precision(&self) -> Precision {
+            Precision::Fp32
+        }
+        fn supports(&self, _man: &Manifest) -> anyhow::Result<()> {
+            Ok(())
+        }
+        fn setup_s(&self) -> f64 {
+            0.001
+        }
+        fn per_item_s(&self) -> f64 {
+            0.001
+        }
+        fn active_power_w(&self) -> f64 {
+            1.0
+        }
+        fn resources(&self) -> Utilization {
+            self.util
+        }
+    }
+
+    #[test]
+    fn defaults_are_bounded() {
+        let p = RecoveryPolicy::default();
+        assert!(p.max_attempts > p.max_retries_per_target);
+        assert!(p.backoff_base_s > 0.0);
+        assert!(!p.tmr);
+    }
+
+    #[test]
+    fn spatial_power_factor_exceeds_one() {
+        let pl = Zcu104::default().pl;
+        // a tiny fabric design triplicated on the ZU7EV still fits
+        let tiny = Stub {
+            util: Utilization { luts: 5_000, ffs: 4_000, dsps: 10, brams: 4.0, urams: 0 },
+        };
+        match tmr_cost_of(&tiny, &pl) {
+            TmrCost::Spatial(f) => assert!(f > 1.0, "factor {f}"),
+            TmrCost::Temporal => panic!("a tiny design must triplicate spatially"),
+        }
+    }
+
+    #[test]
+    fn zero_fabric_votes_temporally() {
+        let pl = Zcu104::default().pl;
+        let soft = Stub { util: Utilization::none() };
+        assert_eq!(tmr_cost_of(&soft, &pl), TmrCost::Temporal);
+    }
+}

@@ -30,6 +30,14 @@
 //! timelines (`spaceinfer scenario <name>`), producing phase-segmented
 //! reports.
 //!
+//! Faults are first-class: the [`fault`] layer injects a seeded,
+//! deterministic fault vocabulary (transient execution failures,
+//! timeouts, SEU corruption scaled by essential bits, thermal
+//! throttling, brownout, downlink dropout) through dispatch, and a
+//! [`fault::RecoveryPolicy`] answers with bounded retries, escalation,
+//! quarantine-and-scrub, TMR voting, and degraded-mode dispatch
+//! (`pipeline --faults <seed>`, `spaceinfer fuzz`).
+//!
 //! Start with `docs/ARCHITECTURE.md` for the module map, the
 //! batch-native dispatch lifecycle, and the cost-model dispatch flow.
 
@@ -45,6 +53,7 @@ pub mod power;
 pub mod rad;
 pub mod resources;
 pub mod backend;
+pub mod fault;
 pub mod plan;
 pub mod runtime;
 pub mod sensors;

@@ -13,10 +13,11 @@
 //! spaceinfer pipeline --use-case mms [--real]     end-to-end coordinator
 //!     [--policy static|min-latency|min-energy|deadline]
 //!     [--power-budget W] [--deadline-ms MS] [--targets default|all|...]
-//!     [--plan]
+//!     [--plan] [--faults SEED] [--tmr]
 //! spaceinfer plan <model>                         execution-plan table
 //! spaceinfer policies [--use-case vae]            policy comparison table
 //! spaceinfer scenario <name> | --list             mission scenario engine
+//! spaceinfer fuzz [--seeds N] [--base-seed S]     scenario fuzzer
 //! spaceinfer targets [--use-case vae]             target-matrix table
 //! spaceinfer inspect --model vae                  manifests, DPU program
 //! spaceinfer calibrate [--save calib.json]        dump calibration
@@ -29,6 +30,7 @@ use anyhow::{bail, Context, Result};
 use spaceinfer::backend::TargetSet;
 use spaceinfer::board::Calibration;
 use spaceinfer::coordinator::{Pipeline, PipelineConfig, Policy};
+use spaceinfer::fault::RecoveryPolicy;
 use spaceinfer::model::catalog::{model_info, Catalog};
 use spaceinfer::model::{Precision, UseCase};
 use spaceinfer::report::{ablation, figures, policy, related, tables, targets, whatif};
@@ -135,6 +137,7 @@ fn run() -> Result<()> {
         "plan" => plan_cmd(&args, &dir, calib),
         "policies" => policies_cmd(&args, &dir, calib),
         "scenario" => scenario_cmd(&args, &dir, calib),
+        "fuzz" => fuzz_cmd(&args, &dir, calib),
         "targets" => targets_cmd(&args, &dir, calib),
         "inspect" => inspect(&args, &dir, &calib),
         "calibrate" => {
@@ -243,6 +246,15 @@ fn parse_ingress_cap(args: &Args) -> Result<Option<usize>> {
     })
 }
 
+/// `--faults SEED` -> arm the deterministic fault injector; absent ->
+/// fault-free (bit-identical to a build without the fault layer).
+fn parse_fault_seed(args: &Args) -> Result<Option<u64>> {
+    Ok(match args.flags.get("faults") {
+        Some(_) => Some(args.get_usize("faults", 0)? as u64),
+        None => None,
+    })
+}
+
 /// Catalog from `--artifacts`, or the synthetic stand-in catalog when
 /// the artifacts directory does not exist (policy exploration works
 /// without `make artifacts`; simulated numbers are stand-ins then).
@@ -274,8 +286,13 @@ fn pipeline_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
         targets: TargetSet::parse(args.get("targets", "default"))?,
         ingress_cap: parse_ingress_cap(args)?,
         plan_mode: args.has("plan"),
+        fault_seed: parse_fault_seed(args)?,
+        recovery: RecoveryPolicy { tmr: args.has("tmr"), ..Default::default() },
         ..Default::default()
     };
+    if args.has("tmr") && cfg.fault_seed.is_none() {
+        bail!("--tmr votes against injected faults; arm the injector with --faults SEED");
+    }
     if cfg.policy == Policy::Static && cfg.power_budget_w.is_some() {
         bail!(
             "--power-budget only applies to dynamic policies (static \
@@ -423,6 +440,48 @@ fn scenario_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
     Ok(())
 }
 
+/// `spaceinfer fuzz` — seeded scenario fuzzer: each seed expands into
+/// a random fault-campaign scenario, runs twice, and must replay
+/// bit-for-bit while the global accounting invariants hold.
+fn fuzz_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
+    use spaceinfer::scenario::fuzz;
+    use spaceinfer::util::table::Table;
+    let catalog = catalog_or_synthetic(dir)?;
+    let seeds = args.get_usize("seeds", 25)?;
+    if seeds == 0 {
+        bail!("--seeds must be >= 1");
+    }
+    let base = args.get_usize("base-seed", 1)? as u64;
+    let outcomes = fuzz::fuzz_many(base, seeds, &catalog, &calib)?;
+    let mut t = Table::new(
+        "Scenario fuzz (deterministic replay + invariant checks)",
+        &[
+            "Seed", "Use case", "Policy", "Phases", "Events", "Dropped",
+            "Faults", "Retries", "Quar",
+        ],
+    );
+    for o in &outcomes {
+        t.row(vec![
+            o.seed.to_string(),
+            o.use_case.to_string(),
+            o.policy.clone(),
+            o.phases.to_string(),
+            o.events.to_string(),
+            o.dropped.to_string(),
+            o.faults.faults_injected.to_string(),
+            o.faults.retries.to_string(),
+            o.faults.quarantines.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "{} seed(s) passed: bit-identical replay, conservation and \
+         partition invariants hold",
+        outcomes.len()
+    );
+    Ok(())
+}
+
 /// `spaceinfer targets` — enumerate every registrable backend for one
 /// (or every) use case: the design-space table behind `--targets all`.
 fn targets_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
@@ -499,6 +558,9 @@ usage: spaceinfer <subcommand> [--artifacts DIR] [--calib FILE]
                       [--power-budget W] [--deadline-ms MS]
                       [--targets default|all|cpu,dpu-b1024,hls-pipe,...]
                       [--ingress-cap N] [--plan]
+                      [--faults SEED] [--tmr]  (deterministic fault
+                      injection + recovery: retries, escalation,
+                      quarantine, TMR voting, degraded dispatch)
   plan                execution-plan table for one model: candidate
                       partitions (hybrid DPU-subgraph + fallback plans
                       next to whole-model deployments) and the choice
@@ -514,6 +576,10 @@ usage: spaceinfer <subcommand> [--artifacts DIR] [--calib FILE]
                       pipeline + declarative timeline; artifact-free,
                       phase-segmented report)
                       scenario --list | scenario <name> [--seed N]
+  fuzz                seeded scenario fuzzer: random fault campaigns,
+                      each replayed bit-for-bit and checked against the
+                      accounting invariants
+                      [--seeds N] [--base-seed S]
   targets             registered-target comparison matrix (latency,
                       energy, power, footprint, essential bits)
                       [--use-case ...] [--mms-model NAME] [--batch B]

@@ -58,6 +58,43 @@ pub struct ExecResult {
     pub worker: usize,
 }
 
+/// Typed batch-execution failures the pool surfaces through
+/// [`ExecResult::outputs`].  The coordinator downcasts these to record
+/// a survivable error in the run report instead of aborting a mission
+/// run with healthy batches still in flight.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExecError {
+    /// The worker thread panicked mid-batch (poisoned lock, FFI abort).
+    WorkerPanic {
+        /// Index of the worker that panicked.
+        worker: usize,
+        /// Model the batch was running.
+        model: String,
+    },
+    /// The engine failed to load or execute the model.
+    Engine {
+        /// Model the batch was running.
+        model: String,
+        /// Underlying engine error, rendered with its cause chain.
+        detail: String,
+    },
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::WorkerPanic { worker, model } => {
+                write!(f, "executor worker {worker} panicked executing {model}")
+            }
+            ExecError::Engine { model, detail } => {
+                write!(f, "engine failed executing {model}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
 enum Msg {
     Exec(ExecRequest),
     Shutdown,
@@ -216,13 +253,19 @@ fn worker_loop(idx: usize, engine: Arc<Engine>, rx: mpsc::Receiver<Msg>) {
                         engine
                             .load(&req.model, req.precision)
                             .and_then(|m| m.run_batch(&req.items))
+                            .map_err(|e| {
+                                anyhow::Error::new(ExecError::Engine {
+                                    model: req.model.clone(),
+                                    detail: format!("{e:#}"),
+                                })
+                            })
                     }),
                 )
                 .unwrap_or_else(|_| {
-                    Err(anyhow!(
-                        "executor worker {idx} panicked executing {}",
-                        req.model
-                    ))
+                    Err(anyhow::Error::new(ExecError::WorkerPanic {
+                        worker: idx,
+                        model: req.model.clone(),
+                    }))
                 });
                 let _ = req.reply.send(ExecResult {
                     id: req.id,

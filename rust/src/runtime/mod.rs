@@ -14,4 +14,4 @@ pub mod executor;
 
 pub use artifact::{GoldenIo, IoSpec};
 pub use client::{Backend, Engine, InputSet, LoadedModel};
-pub use executor::{ExecRequest, ExecResult, ExecutorPool, PoolConfig};
+pub use executor::{ExecError, ExecRequest, ExecResult, ExecutorPool, PoolConfig};

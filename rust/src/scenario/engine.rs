@@ -9,7 +9,7 @@
 //! the bitstream reconfiguration time (`Calibration::t_config`), the
 //! same reload the Fig 13 power spike prices.
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::board::Calibration;
 use crate::coordinator::{Pipeline, PipelineReport, PipelineRun};
@@ -78,13 +78,13 @@ fn apply_event(
         }
         MissionEvent::ExitEclipse => run.set_power_budget_w(None),
         MissionEvent::SepStorm { burst_x, deadline_s } => {
-            run.set_burst(*burst_x);
-            run.set_deadline_s(*deadline_s);
+            run.set_burst(*burst_x)?;
+            run.set_deadline_s(*deadline_s)?;
         }
         MissionEvent::StormSubsides => {
-            run.set_burst(1.0);
+            run.set_burst(1.0)?;
             let base = run.base_deadline_s();
-            run.set_deadline_s(base);
+            run.set_deadline_s(base)?;
         }
         MissionEvent::DownlinkPass { budget_bytes } => {
             run.grant_downlink_bytes(*budget_bytes);
@@ -101,6 +101,13 @@ fn apply_event(
             run.set_target_available(index, false);
             let now = run.now_s();
             let period = scenario.scrub.period_s;
+            if !(period > 0.0 && period.is_finite()) {
+                bail!(
+                    "scenario {:?}: scrub period must be positive and finite \
+                     to schedule the SEU repair, got {period}",
+                    scenario.name
+                );
+            }
             // a re-strike supersedes any repair already scheduled for
             // this target — otherwise the stale (earlier) repair would
             // end the new outage prematurely
@@ -109,6 +116,32 @@ fn apply_event(
             // for the next boundary, then pays the reconfiguration time
             let wait = period - (now % period);
             repairs.push(PendingRepair { index, ready_at_s: now + wait + calib.t_config });
+        }
+        MissionEvent::LinkDropout { duration_s } => {
+            run.set_link_dropout(*duration_s)?;
+        }
+        MissionEvent::ThermalThrottle { target, derate_x, duration_s } => {
+            let index = run.target_index(target).ok_or_else(|| {
+                anyhow!(
+                    "scenario {:?} throttles unknown target {target:?} \
+                     (not registered for this model)",
+                    scenario.name
+                )
+            })?;
+            run.set_thermal_throttle(index, *derate_x, *duration_s)?;
+        }
+        MissionEvent::Brownout { budget_w, duration_s } => {
+            run.set_brownout(*budget_w, *duration_s)?;
+        }
+        MissionEvent::TransientFault { target } => {
+            let index = run.target_index(target).ok_or_else(|| {
+                anyhow!(
+                    "scenario {:?} faults unknown target {target:?} \
+                     (not registered for this model)",
+                    scenario.name
+                )
+            })?;
+            run.inject_transient_fault(index)?;
         }
     }
     Ok(())

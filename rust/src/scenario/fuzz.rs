@@ -1,0 +1,406 @@
+//! Seeded scenario fuzzer: generated mission timelines with the fault
+//! layer armed, replayed twice and checked against global invariants.
+//!
+//! Each fuzz seed deterministically expands into a random scenario
+//! (use case, policy, phases, mission events, fault profile, recovery
+//! policy) which then runs twice; [`fuzz_one`] asserts the two reports
+//! are bit-identical and that the accounting invariants hold under any
+//! fault timeline:
+//!
+//! * conservation — ingress accepted + dropped equals events emitted,
+//!   and every accepted event completes (the forced attempt cap
+//!   guarantees no batch is lost to faults);
+//! * partition — per-phase events, drops, batches, misses, sheds,
+//!   downlink verdicts, fault/recovery counters, energy, and target
+//!   mix each sum to the aggregate report;
+//! * downlink — every decision is sent, shed, or lost to a dropout
+//!   window, exactly once;
+//! * recovery — reinstatements never exceed quarantines.
+//!
+//! `spaceinfer fuzz --seeds N` drives this from the CLI (the CI smoke
+//! runs 25 seeds); `tests/fault_recovery.rs` runs a slice per build.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::board::Calibration;
+use crate::coordinator::{PipelineConfig, PipelineReport, Policy};
+use crate::fault::{FaultProfile, FaultStats, RecoveryPolicy};
+use crate::model::catalog::Catalog;
+use crate::model::UseCase;
+use crate::rad::ScrubPolicy;
+use crate::util::prng::Prng;
+
+use super::{run_scenario, MissionEvent, Phase, Scenario};
+
+/// Salt XORed into the fuzz seed so scenario generation never aliases
+/// the decision or fault RNG streams derived from the same seed.
+const FUZZ_RNG_SALT: u64 = 0x5CE7_A210;
+
+/// What one fuzz seed ran and observed (all invariants already held).
+#[derive(Debug, Clone)]
+pub struct FuzzOutcome {
+    /// The fuzz seed that generated and ran the scenario.
+    pub seed: u64,
+    /// Use case the generated scenario served.
+    pub use_case: UseCase,
+    /// Dispatch policy the scenario started under.
+    pub policy: String,
+    /// Mission phases in the generated timeline.
+    pub phases: usize,
+    /// Events completed on the virtual clock.
+    pub events: u64,
+    /// Events the ingress queue shed.
+    pub dropped: u64,
+    /// Fault / recovery accounting for the run.
+    pub faults: FaultStats,
+}
+
+/// Deterministically expand one fuzz seed into a scenario with the
+/// fault injector always armed.  Struck / throttled / faulted targets
+/// are limited to `"hls"` and `"cpu"`, which register for every model
+/// under the default target set.
+pub fn generate(seed: u64) -> Scenario {
+    let mut rng = Prng::new(seed ^ FUZZ_RNG_SALT);
+    let use_case =
+        [UseCase::Vae, UseCase::Cnet, UseCase::Esperta, UseCase::Mms][rng.below(4)];
+    let policy = [
+        Policy::Static,
+        Policy::MinLatency,
+        Policy::MinEnergy,
+        Policy::Deadline,
+    ][rng.below(4)];
+    let cadence_s = rng.range_f64(0.05, 0.2);
+    let n_phases = 1 + rng.below(3);
+    let mut phases = Vec::with_capacity(n_phases);
+    for i in 0..n_phases {
+        let n_events = 30 + rng.below(51);
+        let n_mission = rng.below(3);
+        let mut events = Vec::with_capacity(n_mission);
+        for _ in 0..n_mission {
+            events.push(random_event(&mut rng));
+        }
+        phases.push(Phase::new(&format!("phase-{i}"), n_events, events));
+    }
+    let total: usize = phases.iter().map(|p| p.n_events).sum();
+    // storm-scaled probabilities, capped so runs terminate briskly even
+    // at the top of the range
+    let scale = rng.range_f64(0.5, 4.0);
+    let base = FaultProfile::default();
+    let fault_profile = FaultProfile {
+        exec_fail_p: (base.exec_fail_p * scale).min(0.3),
+        timeout_p: (base.timeout_p * scale).min(0.2),
+        seu_corrupt_p: (base.seu_corrupt_p * scale).min(0.3),
+        thermal_p: (base.thermal_p * scale).min(0.2),
+        brownout_p: (base.brownout_p * scale).min(0.05),
+        dropout_p: (base.dropout_p * scale).min(0.05),
+        ..base
+    };
+    let recovery = RecoveryPolicy {
+        tmr: rng.chance(0.3),
+        quarantine_threshold: (2 + rng.below(3)) as u32,
+        max_retries_per_target: rng.below(3) as u32,
+        ..Default::default()
+    };
+    let ingress_cap = if rng.chance(0.3) { Some(16 + rng.below(49)) } else { None };
+    let downlink_budget = (4 + rng.below(61) as u64) * 1024;
+    let scrub_period_s = rng.range_f64(5.0, 60.0);
+    let fault_seed = Some(rng.next_u64());
+    Scenario {
+        name: format!("fuzz-{seed}"),
+        summary: format!("generated fault-campaign scenario, fuzz seed {seed}"),
+        config: PipelineConfig {
+            use_case,
+            n_events: total,
+            cadence_s,
+            policy,
+            downlink_budget,
+            ingress_cap,
+            fault_seed,
+            fault_profile,
+            recovery,
+            ..Default::default()
+        },
+        scrub: ScrubPolicy { period_s: scrub_period_s },
+        phases,
+    }
+}
+
+/// One random mission event from the full vocabulary.
+fn random_event(rng: &mut Prng) -> MissionEvent {
+    match rng.below(9) {
+        0 => MissionEvent::EnterEclipse { budget_w: rng.range_f64(2.0, 6.0) },
+        1 => MissionEvent::ExitEclipse,
+        2 => MissionEvent::DownlinkPass {
+            budget_bytes: (4 + rng.below(29) as u64) * 1024,
+        },
+        3 => MissionEvent::SeuUpset { target: "hls".into() },
+        4 => MissionEvent::LinkDropout { duration_s: rng.range_f64(1.0, 10.0) },
+        5 => MissionEvent::ThermalThrottle {
+            target: "hls".into(),
+            derate_x: rng.range_f64(1.5, 4.0),
+            duration_s: rng.range_f64(1.0, 8.0),
+        },
+        6 => MissionEvent::Brownout {
+            budget_w: rng.range_f64(2.0, 4.0),
+            duration_s: rng.range_f64(1.0, 8.0),
+        },
+        7 => MissionEvent::TransientFault {
+            target: if rng.chance(0.5) { "hls".into() } else { "cpu".into() },
+        },
+        _ => MissionEvent::SetPolicy {
+            policy: [
+                Policy::Static,
+                Policy::MinLatency,
+                Policy::MinEnergy,
+                Policy::Deadline,
+            ][rng.below(4)],
+        },
+    }
+}
+
+/// Generate, run twice, and check one fuzz seed.  Errors name the seed
+/// so a CI failure reproduces with `spaceinfer fuzz --base-seed <seed>
+/// --seeds 1`.
+pub fn fuzz_one(seed: u64, catalog: &Catalog, calib: &Calibration) -> Result<FuzzOutcome> {
+    let scenario = generate(seed);
+    let a = run_scenario(&scenario, catalog, calib, None)
+        .with_context(|| format!("fuzz seed {seed}: first run"))?;
+    let b = run_scenario(&scenario, catalog, calib, None)
+        .with_context(|| format!("fuzz seed {seed}: replay"))?;
+    ensure_identical(&a, &b, seed)?;
+    check_invariants(&a, &scenario, seed)?;
+    Ok(FuzzOutcome {
+        seed,
+        use_case: scenario.config.use_case,
+        policy: scenario.config.policy.as_str().to_string(),
+        phases: scenario.phases.len(),
+        events: a.events,
+        dropped: a.ingress_dropped,
+        faults: a.faults,
+    })
+}
+
+/// Run `n` consecutive fuzz seeds starting at `base_seed`.
+pub fn fuzz_many(
+    base_seed: u64,
+    n: usize,
+    catalog: &Catalog,
+    calib: &Calibration,
+) -> Result<Vec<FuzzOutcome>> {
+    (0..n)
+        .map(|i| fuzz_one(base_seed + i as u64, catalog, calib))
+        .collect()
+}
+
+/// Bit-level determinism: the same scenario and seed must replay to an
+/// identical report, fault timeline included.
+fn ensure_identical(a: &PipelineReport, b: &PipelineReport, seed: u64) -> Result<()> {
+    ensure!(a.target_mix == b.target_mix, "seed {seed}: target mix diverged");
+    ensure!(a.events == b.events, "seed {seed}: event count diverged");
+    ensure!(
+        a.sim_elapsed_s.to_bits() == b.sim_elapsed_s.to_bits(),
+        "seed {seed}: sim time diverged"
+    );
+    ensure!(
+        a.mean_latency_s.to_bits() == b.mean_latency_s.to_bits()
+            && a.p95_latency_s.to_bits() == b.p95_latency_s.to_bits(),
+        "seed {seed}: latency stats diverged"
+    );
+    ensure!(
+        a.energy_j.to_bits() == b.energy_j.to_bits()
+            && a.predicted_energy_j.to_bits() == b.predicted_energy_j.to_bits(),
+        "seed {seed}: energy diverged"
+    );
+    ensure!(
+        a.deadline_misses == b.deadline_misses && a.power_sheds == b.power_sheds,
+        "seed {seed}: miss/shed counts diverged"
+    );
+    ensure!(
+        a.ingress_accepted == b.ingress_accepted
+            && a.ingress_dropped == b.ingress_dropped,
+        "seed {seed}: ingress counts diverged"
+    );
+    ensure!(
+        a.downlink_sent == b.downlink_sent
+            && a.downlink_shed == b.downlink_shed
+            && a.downlink_sent_bytes == b.downlink_sent_bytes,
+        "seed {seed}: downlink counts diverged"
+    );
+    ensure!(a.decisions == b.decisions, "seed {seed}: decisions diverged");
+    ensure!(a.phases == b.phases, "seed {seed}: phase reports diverged");
+    ensure!(a.faults == b.faults, "seed {seed}: fault stats diverged");
+    ensure!(
+        a.exec_errors == b.exec_errors,
+        "seed {seed}: exec errors diverged"
+    );
+    Ok(())
+}
+
+/// The global accounting invariants that must hold under any fault
+/// timeline.
+fn check_invariants(r: &PipelineReport, scenario: &Scenario, seed: u64) -> Result<()> {
+    let emitted = scenario.total_events() as u64;
+    ensure!(
+        r.ingress_accepted + r.ingress_dropped == emitted,
+        "seed {seed}: accepted {} + dropped {} != emitted {emitted}",
+        r.ingress_accepted,
+        r.ingress_dropped
+    );
+    ensure!(
+        r.events == r.ingress_accepted,
+        "seed {seed}: {} accepted events but {} completed — a batch was lost",
+        r.ingress_accepted,
+        r.events
+    );
+
+    // per-phase totals partition every aggregate
+    let p_events: u64 = r.phases.iter().map(|p| p.events).sum();
+    ensure!(
+        p_events == emitted,
+        "seed {seed}: phase events {p_events} != emitted {emitted}"
+    );
+    let p_dropped: u64 = r.phases.iter().map(|p| p.dropped).sum();
+    ensure!(
+        p_dropped == r.ingress_dropped,
+        "seed {seed}: phase drops {p_dropped} != {}",
+        r.ingress_dropped
+    );
+    let p_batches: u64 = r.phases.iter().map(|p| p.batches).sum();
+    let batches = r.metrics.counter("batches");
+    ensure!(
+        p_batches == batches,
+        "seed {seed}: phase batches {p_batches} != dispatched {batches}"
+    );
+    let p_misses: u64 = r.phases.iter().map(|p| p.deadline_misses).sum();
+    ensure!(
+        p_misses == r.deadline_misses,
+        "seed {seed}: phase misses {p_misses} != {}",
+        r.deadline_misses
+    );
+    let p_sheds: u64 = r.phases.iter().map(|p| p.power_sheds).sum();
+    ensure!(
+        p_sheds == r.power_sheds,
+        "seed {seed}: phase sheds {p_sheds} != {}",
+        r.power_sheds
+    );
+    let p_sent: u64 = r.phases.iter().map(|p| p.downlink_sent).sum();
+    let p_shed: u64 = r.phases.iter().map(|p| p.downlink_shed).sum();
+    ensure!(
+        p_sent == r.downlink_sent && p_shed == r.downlink_shed,
+        "seed {seed}: phase downlink {p_sent}/{p_shed} != {}/{}",
+        r.downlink_sent,
+        r.downlink_shed
+    );
+    let p_faults: u64 = r.phases.iter().map(|p| p.faults).sum();
+    ensure!(
+        p_faults == r.faults.faults_injected,
+        "seed {seed}: phase faults {p_faults} != {}",
+        r.faults.faults_injected
+    );
+    let p_retries: u64 = r.phases.iter().map(|p| p.retries).sum();
+    ensure!(
+        p_retries == r.faults.retries,
+        "seed {seed}: phase retries {p_retries} != {}",
+        r.faults.retries
+    );
+    let p_quar: u64 = r.phases.iter().map(|p| p.quarantines).sum();
+    ensure!(
+        p_quar == r.faults.quarantines,
+        "seed {seed}: phase quarantines {p_quar} != {}",
+        r.faults.quarantines
+    );
+    let p_masked: u64 = r.phases.iter().map(|p| p.tmr_masked).sum();
+    ensure!(
+        p_masked == r.faults.tmr_masked,
+        "seed {seed}: phase tmr_masked {p_masked} != {}",
+        r.faults.tmr_masked
+    );
+    let p_degraded: u64 = r.phases.iter().map(|p| p.degraded).sum();
+    ensure!(
+        p_degraded == r.faults.degraded_batches,
+        "seed {seed}: phase degraded {p_degraded} != {}",
+        r.faults.degraded_batches
+    );
+    let p_link: u64 = r.phases.iter().map(|p| p.link_dropped).sum();
+    ensure!(
+        p_link == r.faults.link_dropped,
+        "seed {seed}: phase link drops {p_link} != {}",
+        r.faults.link_dropped
+    );
+    let p_energy: f64 = r.phases.iter().map(|p| p.energy_j).sum();
+    ensure!(
+        (p_energy - r.energy_j).abs() <= 1e-9 * r.energy_j.abs().max(1.0),
+        "seed {seed}: phase energy {p_energy} != {}",
+        r.energy_j
+    );
+    let mut p_mix = std::collections::BTreeMap::new();
+    for p in &r.phases {
+        for (name, n) in &p.target_mix {
+            *p_mix.entry(name.clone()).or_insert(0u64) += n;
+        }
+    }
+    ensure!(
+        p_mix == r.target_mix,
+        "seed {seed}: phase mix {p_mix:?} != {:?}",
+        r.target_mix
+    );
+
+    // every completed event decides exactly once, and every decision is
+    // sent, shed, or lost to a dropout window
+    let n_decisions: u64 = r.decisions.values().sum();
+    ensure!(
+        n_decisions == r.events,
+        "seed {seed}: {n_decisions} decisions for {} events",
+        r.events
+    );
+    ensure!(
+        r.downlink_sent + r.downlink_shed + r.faults.link_dropped == n_decisions,
+        "seed {seed}: downlink {} + {} + link-dropped {} != decisions {n_decisions}",
+        r.downlink_sent,
+        r.downlink_shed,
+        r.faults.link_dropped
+    );
+    ensure!(
+        r.faults.quarantines >= r.faults.reinstates,
+        "seed {seed}: {} reinstates exceed {} quarantines",
+        r.faults.reinstates,
+        r.faults.quarantines
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = generate(17);
+        let b = generate(17);
+        assert_eq!(a.config.fault_seed, b.config.fault_seed);
+        assert_eq!(a.phases, b.phases);
+        assert_eq!(a.config.use_case, b.config.use_case);
+        assert!(a.config.fault_seed.is_some(), "the injector is always armed");
+    }
+
+    #[test]
+    fn distinct_seeds_diverge() {
+        let mut distinct = false;
+        let base = generate(1);
+        for seed in 2..10 {
+            if generate(seed).phases != base.phases {
+                distinct = true;
+                break;
+            }
+        }
+        assert!(distinct, "nine seeds produced identical timelines");
+    }
+
+    #[test]
+    fn a_fuzz_seed_passes_end_to_end() {
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        let out = fuzz_one(1, &catalog, &calib).unwrap();
+        assert!(out.events > 0);
+    }
+}

@@ -12,6 +12,7 @@
 use anyhow::{bail, Result};
 
 use crate::coordinator::{PipelineConfig, Policy};
+use crate::fault::{FaultProfile, RecoveryPolicy};
 use crate::model::UseCase;
 use crate::rad::ScrubPolicy;
 
@@ -25,6 +26,7 @@ pub fn builtin_names() -> Vec<&'static str> {
         "onboard-downlink",
         "sep-alert",
         "solar-compress",
+        "sep-campaign",
     ]
 }
 
@@ -44,6 +46,7 @@ pub fn builtin(name: &str) -> Result<Scenario> {
         "onboard-downlink" => onboard_downlink(),
         "sep-alert" => sep_alert(),
         "solar-compress" => solar_compress(),
+        "sep-campaign" => sep_campaign(),
         other => bail!(
             "unknown scenario {other:?} (known: {})",
             builtin_names().join(", ")
@@ -227,6 +230,66 @@ fn solar_compress() -> Scenario {
     }
 }
 
+/// ESPERTA through a full SEP campaign with the fault layer armed: a
+/// seeded injector at storm-elevated rates, TMR voting, quarantine on a
+/// three-fault streak, plus scripted brownout / throttle / SEU /
+/// dropout events at phase boundaries.  The end-to-end exercise of the
+/// fault vocabulary and every recovery mechanism — deterministic, so
+/// the same build replays the same campaign bit for bit.
+fn sep_campaign() -> Scenario {
+    Scenario {
+        name: "sep-campaign".into(),
+        summary: "ESPERTA fault campaign: seeded injector at storm rates, \
+                  TMR voting and quarantine armed, scripted brownout, \
+                  throttle, SEU strike, and downlink dropout"
+            .into(),
+        config: PipelineConfig {
+            use_case: UseCase::Esperta,
+            n_events: 420,
+            cadence_s: 0.1,
+            policy: Policy::MinLatency,
+            fault_seed: Some(41),
+            fault_profile: FaultProfile {
+                exec_fail_p: 0.08,
+                timeout_p: 0.04,
+                seu_corrupt_p: 0.08,
+                ..Default::default()
+            },
+            recovery: RecoveryPolicy {
+                tmr: true,
+                quarantine_threshold: 3,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        scrub: ScrubPolicy { period_s: 12.0 },
+        phases: vec![
+            Phase::new("quiet-sun", 100, vec![]),
+            Phase::new(
+                "storm-onset",
+                120,
+                vec![
+                    MissionEvent::Brownout { budget_w: 2.5, duration_s: 4.0 },
+                    MissionEvent::ThermalThrottle {
+                        target: "hls".into(),
+                        derate_x: 2.0,
+                        duration_s: 5.0,
+                    },
+                ],
+            ),
+            Phase::new(
+                "peak-flux",
+                120,
+                vec![
+                    MissionEvent::SeuUpset { target: "hls".into() },
+                    MissionEvent::LinkDropout { duration_s: 6.0 },
+                ],
+            ),
+            Phase::new("recovery", 80, vec![]),
+        ],
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -234,7 +297,7 @@ mod tests {
     #[test]
     fn every_builtin_is_constructible_and_consistent() {
         let names = builtin_names();
-        assert_eq!(names.len(), 5, "the five former examples");
+        assert_eq!(names.len(), 6, "five former examples + the fault campaign");
         for sc in all_builtins() {
             assert!(names.contains(&sc.name.as_str()));
             assert!(!sc.phases.is_empty());

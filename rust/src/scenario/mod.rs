@@ -31,6 +31,7 @@
 //! `Pipeline::run` report exactly.
 
 pub mod engine;
+pub mod fuzz;
 pub mod library;
 
 use crate::coordinator::{PipelineConfig, Policy};
@@ -82,6 +83,37 @@ pub enum MissionEvent {
         /// The policy to dispatch under.
         policy: Policy,
     },
+    /// The ground link drops: decisions completing within the window
+    /// are lost before the downlink byte budget is consulted.
+    LinkDropout {
+        /// Dropout window length (virtual seconds).
+        duration_s: f64,
+    },
+    /// The named target overheats: its latencies multiply by `derate_x`
+    /// until the window closes.
+    ThermalThrottle {
+        /// Registry name of the throttled target (`"dpu"`, `"hls"`, ...).
+        target: String,
+        /// Latency multiplier while throttled (>= 1).
+        derate_x: f64,
+        /// Throttle window length (virtual seconds).
+        duration_s: f64,
+    },
+    /// Bus brownout: every policy (including `static`) dispatches under
+    /// `budget_w` until the window closes — degraded-mode dispatch.
+    Brownout {
+        /// Power budget enforced during the sag (W).
+        budget_w: f64,
+        /// Brownout window length (virtual seconds).
+        duration_s: f64,
+    },
+    /// One forced transient execution failure on the named target,
+    /// consumed by the next batch attempt dispatched there — exercises
+    /// the retry / escalation / quarantine machinery deterministically.
+    TransientFault {
+        /// Registry name of the faulted target.
+        target: String,
+    },
 }
 
 impl MissionEvent {
@@ -102,6 +134,18 @@ impl MissionEvent {
             MissionEvent::SeuUpset { target } => format!("seu({target})"),
             MissionEvent::SetPolicy { policy } => {
                 format!("policy({})", policy.as_str())
+            }
+            MissionEvent::LinkDropout { duration_s } => {
+                format!("link-dropout({duration_s} s)")
+            }
+            MissionEvent::ThermalThrottle { target, derate_x, duration_s } => {
+                format!("throttle({target}, {derate_x}x, {duration_s} s)")
+            }
+            MissionEvent::Brownout { budget_w, duration_s } => {
+                format!("brownout({budget_w} W, {duration_s} s)")
+            }
+            MissionEvent::TransientFault { target } => {
+                format!("transient({target})")
             }
         }
     }

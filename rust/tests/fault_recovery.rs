@@ -1,0 +1,261 @@
+//! Fault-injection + recovery guarantees, self-provisioning (synthetic
+//! catalog, timing-only — no artifacts):
+//!
+//! * **Determinism** — the same `--faults` seed replays a bit-identical
+//!   fault timeline and report, twice over.
+//! * **Inertness** — with the injector disabled, non-default fault
+//!   profiles and recovery policies change nothing: reports are
+//!   bit-identical to a plain default config (the golden pin for the
+//!   fault-layer refactor).
+//! * **Recovery mechanics** — retry stays on the faulted target,
+//!   escalation lands on the documented fallback (next-best available
+//!   target), a fault streak quarantines the target until the scrub
+//!   window reinstates it, and TMR outvotes a single corrupted replica.
+//! * **Fuzz** — a slice of the seeded scenario fuzzer runs per build.
+
+use spaceinfer::backend::TargetSet;
+use spaceinfer::board::Calibration;
+use spaceinfer::coordinator::{Pipeline, PipelineConfig, PipelineReport, Policy};
+use spaceinfer::fault::{FaultProfile, RecoveryPolicy};
+use spaceinfer::model::{Catalog, UseCase};
+use spaceinfer::scenario::fuzz;
+
+fn catalog() -> Catalog {
+    Catalog::synthetic()
+}
+
+fn report(cfg: PipelineConfig) -> PipelineReport {
+    Pipeline::new(cfg, &catalog(), &Calibration::default())
+        .unwrap()
+        .run(None)
+        .unwrap()
+}
+
+/// Bit equality of the aggregate report, the phase slices, and the
+/// fault accounting (f64 by bit pattern).
+fn assert_identical(a: &PipelineReport, b: &PipelineReport) {
+    assert_eq!(a.target_mix, b.target_mix);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.sim_elapsed_s.to_bits(), b.sim_elapsed_s.to_bits());
+    assert_eq!(a.mean_latency_s.to_bits(), b.mean_latency_s.to_bits());
+    assert_eq!(a.p95_latency_s.to_bits(), b.p95_latency_s.to_bits());
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+    assert_eq!(a.predicted_energy_j.to_bits(), b.predicted_energy_j.to_bits());
+    assert_eq!(a.deadline_misses, b.deadline_misses);
+    assert_eq!(a.power_sheds, b.power_sheds);
+    assert_eq!(a.downlink_sent, b.downlink_sent);
+    assert_eq!(a.downlink_shed, b.downlink_shed);
+    assert_eq!(a.decisions, b.decisions);
+    assert_eq!(a.phases, b.phases);
+    assert_eq!(a.faults, b.faults);
+    assert_eq!(a.exec_errors, b.exec_errors);
+}
+
+fn stormy_cfg() -> PipelineConfig {
+    PipelineConfig {
+        use_case: UseCase::Esperta,
+        n_events: 200,
+        cadence_s: 0.1,
+        policy: Policy::MinLatency,
+        fault_seed: Some(99),
+        fault_profile: FaultProfile {
+            exec_fail_p: 0.3,
+            timeout_p: 0.1,
+            seu_corrupt_p: 0.2,
+            thermal_p: 0.1,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn same_fault_seed_replays_bit_identically() {
+    let (a, b) = (report(stormy_cfg()), report(stormy_cfg()));
+    assert!(a.faults.faults_injected > 0, "storm rates must inject faults");
+    assert_identical(&a, &b);
+}
+
+#[test]
+fn distinct_fault_seeds_diverge() {
+    let a = report(stormy_cfg());
+    let b = report(PipelineConfig { fault_seed: Some(100), ..stormy_cfg() });
+    assert_ne!(
+        a.faults, b.faults,
+        "different seeds must draw different fault timelines"
+    );
+}
+
+#[test]
+fn disabled_injector_is_bit_identical_to_default_config() {
+    // non-default fault knobs with no seed must change NOTHING: the
+    // fault checks on the dispatch path draw no RNG and no float ops
+    let plain = report(PipelineConfig::default());
+    let armed_but_off = report(PipelineConfig {
+        fault_seed: None,
+        fault_profile: FaultProfile {
+            exec_fail_p: 0.9,
+            timeout_p: 0.9,
+            ..Default::default()
+        },
+        recovery: RecoveryPolicy {
+            tmr: true,
+            quarantine_threshold: 1,
+            max_retries_per_target: 3,
+            ..Default::default()
+        },
+        ..Default::default()
+    });
+    assert_identical(&plain, &armed_but_off);
+}
+
+fn two_target_cfg(recovery: RecoveryPolicy) -> PipelineConfig {
+    PipelineConfig {
+        use_case: UseCase::Esperta,
+        n_events: 40,
+        cadence_s: 0.15,
+        policy: Policy::Static,
+        targets: TargetSet::parse("cpu,hls").unwrap(),
+        recovery,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn escalation_lands_on_the_next_best_target() {
+    // zero retries: the forced fault on the static primary (hls) must
+    // escalate straight to the only other registered target (cpu)
+    let cfg = two_target_cfg(RecoveryPolicy {
+        max_retries_per_target: 0,
+        ..Default::default()
+    });
+    let mut p = Pipeline::new(cfg, &catalog(), &Calibration::default()).unwrap();
+    let mut run = p.begin(None);
+    let hls = run.target_index("hls").unwrap();
+    run.inject_transient_fault(hls).unwrap();
+    for _ in 0..40 {
+        run.tick().unwrap();
+    }
+    let r = run.finish().unwrap();
+    assert_eq!(r.faults.redispatches, 1, "{:?}", r.faults);
+    assert_eq!(r.faults.retries, 0);
+    assert_eq!(r.target_mix.get("cpu"), Some(&1), "{:?}", r.target_mix);
+    assert!(r.target_mix.get("hls").copied().unwrap_or(0) > 0);
+}
+
+#[test]
+fn retry_stays_on_the_faulted_target() {
+    let cfg = two_target_cfg(RecoveryPolicy {
+        max_retries_per_target: 2,
+        ..Default::default()
+    });
+    let mut p = Pipeline::new(cfg, &catalog(), &Calibration::default()).unwrap();
+    let mut run = p.begin(None);
+    let hls = run.target_index("hls").unwrap();
+    run.inject_transient_fault(hls).unwrap();
+    for _ in 0..40 {
+        run.tick().unwrap();
+    }
+    let r = run.finish().unwrap();
+    assert_eq!(r.faults.retries, 1, "{:?}", r.faults);
+    assert_eq!(r.faults.redispatches, 0);
+    assert_eq!(r.target_mix.get("cpu"), None, "{:?}", r.target_mix);
+}
+
+#[test]
+fn tmr_outvotes_a_single_corrupted_replica() {
+    let cfg = two_target_cfg(RecoveryPolicy { tmr: true, ..Default::default() });
+    let mut p = Pipeline::new(cfg, &catalog(), &Calibration::default()).unwrap();
+    let mut run = p.begin(None);
+    let hls = run.target_index("hls").unwrap();
+    run.inject_corruption(hls).unwrap();
+    for _ in 0..40 {
+        run.tick().unwrap();
+    }
+    let r = run.finish().unwrap();
+    assert_eq!(r.faults.tmr_masked, 1, "{:?}", r.faults);
+    assert_eq!(r.faults.retries, 0, "a masked fault must not retry");
+    assert_eq!(r.faults.redispatches, 0);
+    assert!(r.faults.tmr_batches > 0);
+    assert_eq!(r.target_mix.get("cpu"), None, "{:?}", r.target_mix);
+}
+
+#[test]
+fn without_tmr_the_same_corruption_costs_a_retry() {
+    let cfg = two_target_cfg(RecoveryPolicy {
+        tmr: false,
+        max_retries_per_target: 1,
+        ..Default::default()
+    });
+    let mut p = Pipeline::new(cfg, &catalog(), &Calibration::default()).unwrap();
+    let mut run = p.begin(None);
+    let hls = run.target_index("hls").unwrap();
+    run.inject_corruption(hls).unwrap();
+    for _ in 0..40 {
+        run.tick().unwrap();
+    }
+    let r = run.finish().unwrap();
+    assert_eq!(r.faults.tmr_masked, 0);
+    assert_eq!(r.faults.retries, 1, "{:?}", r.faults);
+}
+
+#[test]
+fn fault_streak_quarantines_until_the_scrub_window() {
+    // two forced faults on hls with one retry allowed: fault, retry,
+    // fault again -> streak 2 hits the threshold, hls quarantines, the
+    // batch escalates to cpu, and the 2 s scrub cadence reinstates hls
+    // well inside the 18 s run
+    let cfg = PipelineConfig {
+        n_events: 120,
+        recovery: RecoveryPolicy {
+            max_retries_per_target: 1,
+            quarantine_threshold: 2,
+            quarantine_scrub_period_s: 2.0,
+            ..Default::default()
+        },
+        ..two_target_cfg(RecoveryPolicy::default())
+    };
+    let mut p = Pipeline::new(cfg, &catalog(), &Calibration::default()).unwrap();
+    let mut run = p.begin(None);
+    let hls = run.target_index("hls").unwrap();
+    run.inject_transient_fault(hls).unwrap();
+    run.inject_transient_fault(hls).unwrap();
+    for _ in 0..120 {
+        run.tick().unwrap();
+    }
+    let r = run.finish().unwrap();
+    assert_eq!(r.faults.quarantines, 1, "{:?}", r.faults);
+    assert_eq!(r.faults.reinstates, 1, "scrub must reinstate the target");
+    assert_eq!(r.faults.retries, 1);
+    assert_eq!(r.faults.redispatches, 1);
+    assert!(r.target_mix.contains_key("cpu"), "{:?}", r.target_mix);
+    assert!(
+        r.target_mix.get("hls").copied().unwrap_or(0) > 1,
+        "reinstated target must serve again: {:?}",
+        r.target_mix
+    );
+}
+
+#[test]
+fn plan_mode_rejects_fault_injection() {
+    let cfg = PipelineConfig {
+        plan_mode: true,
+        fault_seed: Some(1),
+        ..Default::default()
+    };
+    let err = Pipeline::new(cfg, &catalog(), &Calibration::default())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("plan mode"), "{err}");
+}
+
+#[test]
+fn fuzz_slice_holds_all_invariants() {
+    let outcomes =
+        fuzz::fuzz_many(1, 8, &catalog(), &Calibration::default()).unwrap();
+    assert_eq!(outcomes.len(), 8);
+    assert!(
+        outcomes.iter().any(|o| o.faults.faults_injected > 0),
+        "eight armed campaigns should inject at least one fault"
+    );
+}
