@@ -15,7 +15,9 @@ use std::path::PathBuf;
 
 use spaceinfer::backend::{AccelModel, TargetRegistry, TargetSet};
 use spaceinfer::board::Calibration;
-use spaceinfer::coordinator::Router;
+use spaceinfer::coordinator::{
+    AccelTimeline, DispatchCache, Dispatcher, Policy, Router,
+};
 use spaceinfer::model::catalog::Catalog;
 use spaceinfer::model::{Precision, UseCase};
 use spaceinfer::plan::Planner;
@@ -25,6 +27,20 @@ use spaceinfer::util::json::Json;
 
 /// Batch size for the amortization comparison.
 const BATCH_N: usize = 8;
+
+/// CI regression floor: the cached dispatch hot path must clear this
+/// many × the uncached decision rate on both the whole-model
+/// (`policies`) and plan-mode (`plan`) paths.  Relative, so the gate is
+/// machine-independent; enforced only under `BENCH_ENFORCE_CACHE=1`.
+const MIN_CACHE_SPEEDUP_X: f64 = 5.0;
+
+/// CI regression floor for the steady-state cache hit rate.
+const MIN_CACHE_HIT_RATE: f64 = 0.5;
+
+/// Consecutive decisions per queue state in the steady-state stream —
+/// what a run's flush cadence produces (drained queues re-seen batch
+/// after batch).
+const CACHE_REPEAT: usize = 16;
 
 fn repo_root() -> PathBuf {
     let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
@@ -125,6 +141,135 @@ fn plan_rows(catalog: &Catalog) -> BTreeMap<String, Json> {
     rows
 }
 
+/// Dispatch hot-path section: decisions (batches) per second scored
+/// fresh vs through the [`DispatchCache`], on the whole-model
+/// (`policies`) path over the full target set and on the plan-mode
+/// (`plan`) path.  Returns the JSON rows and whether the CI gate holds.
+fn cache_rows(catalog: &Catalog) -> (BTreeMap<String, Json>, bool) {
+    let calib = Calibration::default();
+    let mut rows = BTreeMap::new();
+    let mut gate_ok = true;
+
+    // ---- whole-model (`policies`) path: vae over the full target set
+    let d = Dispatcher::new(
+        "vae",
+        catalog,
+        &calib,
+        Policy::MinLatency,
+        0.5,
+        Some(4.0),
+        &TargetSet::All,
+    )
+    .expect("dispatcher");
+    // a handful of queue states, each re-seen for a stretch of
+    // consecutive batches — the steady-state decision stream
+    let mut states: Vec<Vec<AccelTimeline>> = Vec::new();
+    for k in 0..4usize {
+        let mut tls = d.timelines();
+        if k > 0 {
+            let lane = k % tls.len();
+            tls[lane].schedule(0.0, 4 * k as u64, d.run_of(lane));
+        }
+        states.push(tls);
+    }
+    let decisions = (states.len() * CACHE_REPEAT) as u64;
+    // accumulate picks so the optimizer cannot drop the pure scoring
+    let mut acc = 0usize;
+    let before = bench("dispatch.choose uncached (vae, all targets)", 20, 200, || {
+        for tls in &states {
+            for _ in 0..CACHE_REPEAT {
+                acc += d.choose(tls, 0.5, 0.45, 8).index;
+            }
+        }
+    });
+    let mut cache = DispatchCache::new(true);
+    let after = bench("dispatch.choose cached   (vae, all targets)", 20, 200, || {
+        for tls in &states {
+            for _ in 0..CACHE_REPEAT {
+                acc += d.choose_cached(&mut cache, tls, 0.5, 0.45, 8).index;
+            }
+        }
+    });
+    let bps_before = throughput(decisions, before.median());
+    let bps_after = throughput(decisions, after.median());
+    let speedup = bps_after / bps_before.max(1e-12);
+    let hit_rate = cache.stats().hit_rate();
+    println!("{}  -> {:.0} batches/s", before.report(), bps_before);
+    println!("{}  -> {:.0} batches/s", after.report(), bps_after);
+    println!(
+        "  policies path: {speedup:.2}x  hit rate {:.1}%  (acc {acc})",
+        100.0 * hit_rate
+    );
+    rows.insert("policies_batches_per_s_before".into(), Json::Num(bps_before));
+    rows.insert("policies_batches_per_s_after".into(), Json::Num(bps_after));
+    rows.insert("policies_speedup_x".into(), Json::Num(speedup));
+    rows.insert("policies_hit_rate".into(), Json::Num(hit_rate));
+    gate_ok &= speedup >= MIN_CACHE_SPEEDUP_X && hit_rate >= MIN_CACHE_HIT_RATE;
+
+    // ---- plan-mode (`plan`) path: the hybrid-partitioned mms baseline
+    let d = Dispatcher::new(
+        "baseline",
+        catalog,
+        &calib,
+        Policy::MinLatency,
+        0.5,
+        Some(4.0),
+        &TargetSet::Default,
+    )
+    .expect("dispatcher");
+    let planner =
+        Planner::build("baseline", catalog, &calib, &d.registry, &TargetSet::Default)
+            .expect("planner");
+    let mut states: Vec<Vec<AccelTimeline>> = Vec::new();
+    for k in 0..4usize {
+        let mut tls = d.timelines();
+        for name in planner.derived_lane_names() {
+            tls.push(AccelTimeline::new(name));
+        }
+        if k > 0 {
+            let lane = k % d.registry.len();
+            tls[lane].schedule(0.0, 4 * k as u64, d.run_of(lane));
+        }
+        states.push(tls);
+    }
+    let mut acc = 0usize;
+    let before = bench("dispatch.choose_plan uncached (baseline)", 20, 200, || {
+        for tls in &states {
+            for _ in 0..CACHE_REPEAT {
+                acc += d.choose_plan(&planner, tls, 0.5, 0.45, 8).index;
+            }
+        }
+    });
+    let mut cache = DispatchCache::new(true);
+    let after = bench("dispatch.choose_plan cached   (baseline)", 20, 200, || {
+        for tls in &states {
+            for _ in 0..CACHE_REPEAT {
+                acc += d.choose_plan_cached(&mut cache, &planner, tls, 0.5, 0.45, 8).index;
+            }
+        }
+    });
+    let bps_before = throughput(decisions, before.median());
+    let bps_after = throughput(decisions, after.median());
+    let speedup = bps_after / bps_before.max(1e-12);
+    let hit_rate = cache.stats().hit_rate();
+    println!("{}  -> {:.0} batches/s", before.report(), bps_before);
+    println!("{}  -> {:.0} batches/s", after.report(), bps_after);
+    println!(
+        "  plan path: {speedup:.2}x  hit rate {:.1}%  (acc {acc})",
+        100.0 * hit_rate
+    );
+    rows.insert("plan_batches_per_s_before".into(), Json::Num(bps_before));
+    rows.insert("plan_batches_per_s_after".into(), Json::Num(bps_after));
+    rows.insert("plan_speedup_x".into(), Json::Num(speedup));
+    rows.insert("plan_hit_rate".into(), Json::Num(hit_rate));
+    gate_ok &= speedup >= MIN_CACHE_SPEEDUP_X && hit_rate >= MIN_CACHE_HIT_RATE;
+
+    rows.insert("min_speedup_x".into(), Json::Num(MIN_CACHE_SPEEDUP_X));
+    rows.insert("min_hit_rate".into(), Json::Num(MIN_CACHE_HIT_RATE));
+    rows.insert("gate_ok".into(), Json::Num(gate_ok as u8 as f64));
+    (rows, gate_ok)
+}
+
 fn main() {
     let dir = std::path::Path::new("artifacts");
     let have_artifacts = Catalog::is_present(dir);
@@ -143,6 +288,13 @@ fn main() {
     // (artifact-free — the perf trajectory of the partitioning win)
     println!("== execution plans (hybrid vs whole-model, batch-{BATCH_N}) ==");
     doc.insert("plans".to_string(), Json::Obj(plan_rows(&catalog)));
+    println!();
+
+    // dispatch-cache section: cached vs uncached decision rate on the
+    // policies and plan hot paths (artifact-free; CI gates on it)
+    println!("== dispatch cache (batches/s, cached vs uncached) ==");
+    let (cache_section, cache_gate_ok) = cache_rows(&catalog);
+    doc.insert("cache".to_string(), Json::Obj(cache_section));
     println!();
 
     let mut model_rows: BTreeMap<String, Json> = BTreeMap::new();
@@ -247,5 +399,19 @@ fn main() {
     match std::fs::write(&out, Json::Obj(doc).to_string()) {
         Ok(()) => println!("wrote {}", out.display()),
         Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+
+    // regression gate (opt-in so dev boxes under load don't flake):
+    // `BENCH_ENFORCE_CACHE=1 cargo bench --bench runtime` fails the
+    // build when the cached hot path regresses below the committed
+    // floors — CI sets it.
+    if std::env::var("BENCH_ENFORCE_CACHE").is_ok_and(|v| v == "1") && !cache_gate_ok {
+        eprintln!(
+            "cache gate FAILED: cached dispatch must clear \
+             {MIN_CACHE_SPEEDUP_X}x uncached and a {MIN_CACHE_HIT_RATE} hit rate \
+             (see the cache section of {})",
+            out.display()
+        );
+        std::process::exit(1);
     }
 }

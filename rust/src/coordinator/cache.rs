@@ -1,0 +1,632 @@
+//! Deterministic memoization of dispatch decisions — the raw-speed pass
+//! on the plan/dispatch hot path.
+//!
+//! The dispatcher re-derives the same verdict from scratch for every
+//! flushed batch, yet a steady-state run re-sees the same decision
+//! inputs for long stretches: constant batch size, drained queues, a
+//! fixed policy.  [`DispatchCache`] memoizes the *decision* — `(index,
+//! power_shed)` for whole-model dispatch, `(plan index, power_shed)` in
+//! plan mode — keyed by the exact bit patterns of every input the
+//! decision depends on.
+//!
+//! # Determinism argument
+//!
+//! A cache hit is provably bit-identical to a fresh
+//! [`Dispatcher::choose`] call because of two properties:
+//!
+//! 1. **Keys are exact.**  Every float that can influence the decision
+//!    (per-lane queue backlog, power budget, deadline, already-spent
+//!    wait) enters the key as its raw `f64::to_bits` pattern — no
+//!    rounding, no bucketing.  Two states that collide on a key are
+//!    states the policy cannot distinguish.
+//! 2. **Costs are recomputed, never replayed.**  On a hit only the
+//!    *pick* is reused; the chosen target's [`BatchCost`] is recomputed
+//!    from the live inputs via [`Dispatcher::cost`], a pure function.
+//!    Telemetry (`predicted_energy_j`, latency histograms) therefore
+//!    sees exactly the floats an uncached run would produce.
+//!
+//! Keys are *relaxed* per policy for hit rate: a field the active
+//! policy provably ignores (the deadline under `min-latency`, every
+//! queue backlog under `min-energy`) is pinned to a constant so states
+//! differing only in ignored inputs share an entry.  The relaxation
+//! rule is itself a function of fields kept in the key (policy byte,
+//! availability mask), so an entry can never be consulted under a rule
+//! other than the one that stored it.
+//!
+//! # Invalidation rules
+//!
+//! Correctness never depends on invalidation — a knob mutation changes
+//! a key field, so stale entries simply stop matching ("impossible by
+//! construction").  The explicit `invalidate_*` hooks exist to bound
+//! memory and to make knob churn observable: each drops exactly the
+//! entries the mutated knob orphaned and counts them.
+//!
+//! | knob                     | entries dropped                              |
+//! |--------------------------|----------------------------------------------|
+//! | `set_policy(p)`          | every entry not keyed under `p`              |
+//! | `set_power_budget_w(b)`  | dynamic-policy entries keyed under another budget |
+//! | `set_deadline_s(d)`      | `deadline`-policy entries keyed under another deadline |
+//! | `set_target_available`   | every entry keyed under another availability mask |
+//!
+//! The recovery path ([`Dispatcher::choose_constrained`]) never
+//! consults the cache: per-attempt exclusion masks and brownout budget
+//! overrides are transient, so fault-mode dispatch stays byte-identical
+//! to the pre-cache pipeline by *not participating* (counted as
+//! bypasses).
+
+use std::collections::BTreeMap;
+
+use crate::backend::TargetRegistry;
+use crate::coordinator::dispatch::{BatchCost, Choice, Dispatcher, PlanChoice, Policy};
+use crate::coordinator::scheduler::AccelTimeline;
+use crate::plan::Planner;
+
+// Imported for intra-doc links only.
+#[allow(unused_imports)]
+use crate::coordinator::pipeline::PipelineReport;
+
+/// Maximum timeline lanes a key can fingerprint.  Wide enough for the
+/// full `--targets all` registry (7) plus the derived plan lane; runs
+/// with more lanes bypass the cache rather than truncate a key.
+pub const MAX_CACHE_LANES: usize = 8;
+
+/// Entry cap per decision table; reaching it clears the table (a full
+/// rebuild costs one miss per live state — cheaper than tracking LRU
+/// order, and deterministic).
+const CACHE_CAPACITY: usize = 4096;
+
+/// Exact decision fingerprint: every input [`Dispatcher::choose`] /
+/// [`Dispatcher::choose_plan`] reads, as raw bit patterns.  Also the
+/// storage key after per-policy relaxation (ignored fields pinned to
+/// zero / `None`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct Key {
+    /// Discriminant of the active [`Policy`].
+    policy: u8,
+    /// Batch size.
+    n: u64,
+    /// Registry availability bitmask (bit i = target i in service).
+    avail: u64,
+    /// `power_budget_w` bits; `None` when unset or ignored (static).
+    budget: Option<u64>,
+    /// `deadline_s` bits; 0 when the policy ignores the deadline.
+    deadline: u64,
+    /// Already-spent wait `(now - oldest).max(0)` bits; 0 when ignored.
+    wait: u64,
+    /// Per-lane `backlog_s(now)` bits, zero-padded past `lanes`.
+    backlogs: [u64; MAX_CACHE_LANES],
+}
+
+fn policy_tag(p: Policy) -> u8 {
+    match p {
+        Policy::Static => 0,
+        Policy::MinLatency => 1,
+        Policy::MinEnergy => 2,
+        Policy::Deadline => 3,
+    }
+}
+
+/// Hit / miss / invalidation counters, surfaced in
+/// [`PipelineReport::cache`] and the `cache` section of
+/// `BENCH_runtime.json`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Decisions served from the cache (hot-entry or table).
+    pub hits: u64,
+    /// Decisions computed fresh and inserted.
+    pub misses: u64,
+    /// Entries dropped by knob-mutation invalidation.
+    pub invalidations: u64,
+    /// Decisions that skipped the cache (recovery-path dispatch, or
+    /// more timeline lanes than a key can fingerprint).
+    pub bypasses: u64,
+}
+
+impl CacheStats {
+    /// Total cache consultations (hits + misses).
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups served from the cache (0 when none).
+    pub fn hit_rate(&self) -> f64 {
+        let l = self.lookups();
+        if l == 0 {
+            0.0
+        } else {
+            self.hits as f64 / l as f64
+        }
+    }
+}
+
+/// Memoized dispatch decisions for one run.
+///
+/// Owned by the run (not the [`Dispatcher`], which stays immutable and
+/// shareable) and threaded explicitly through the dispatch path — no
+/// interior mutability, no locks.  Holds two decision tables
+/// (whole-model and plan-mode; a run only exercises one) plus a
+/// single-entry *hot* front cache per table: consecutive batches that
+/// re-see the exact same state — the steady-state common case — return
+/// a stored [`Choice`] without a table walk or a cost recomputation.
+///
+/// ```
+/// use spaceinfer::backend::TargetSet;
+/// use spaceinfer::board::Calibration;
+/// use spaceinfer::coordinator::{DispatchCache, Dispatcher, Policy};
+/// use spaceinfer::model::Catalog;
+///
+/// let catalog = Catalog::synthetic();
+/// let d = Dispatcher::new("vae", &catalog, &Calibration::default(),
+///                         Policy::MinLatency, 0.5, None,
+///                         &TargetSet::Default).unwrap();
+/// let tls = d.timelines();
+/// let mut cache = DispatchCache::new(true);
+/// let fresh = d.choose(&tls, 0.0, 0.0, 8);
+/// let a = d.choose_cached(&mut cache, &tls, 0.0, 0.0, 8); // miss
+/// let b = d.choose_cached(&mut cache, &tls, 0.0, 0.0, 8); // hit
+/// assert_eq!((a.index, b.index), (fresh.index, fresh.index));
+/// assert_eq!(cache.stats().hits, 1);
+/// assert_eq!(cache.stats().misses, 1);
+/// ```
+#[derive(Debug, Default)]
+pub struct DispatchCache {
+    enabled: bool,
+    map: BTreeMap<Key, (usize, bool)>,
+    hot: Option<(Key, Choice)>,
+    plan_map: BTreeMap<Key, (usize, bool)>,
+    plan_hot: Option<(Key, PlanChoice)>,
+    stats: CacheStats,
+}
+
+impl DispatchCache {
+    /// A fresh cache.  `enabled: false` builds the escape hatch: every
+    /// `choose_cached` call falls through to the uncached dispatcher
+    /// and no counter moves.
+    pub fn new(enabled: bool) -> DispatchCache {
+        DispatchCache { enabled, ..Default::default() }
+    }
+
+    /// Is memoization on for this run?
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Live entries across both decision tables (hot entries excluded —
+    /// they always mirror a table entry's decision).
+    pub fn entries(&self) -> usize {
+        self.map.len() + self.plan_map.len()
+    }
+
+    /// Count one decision that skipped the cache by design (the
+    /// recovery path's constrained dispatch).
+    pub fn note_bypass(&mut self) {
+        if self.enabled {
+            self.stats.bypasses += 1;
+        }
+    }
+
+    /// Registry availability bitmask — the `avail` key field, and the
+    /// argument `invalidate_availability` expects after a flip.
+    pub fn availability_mask(registry: &TargetRegistry) -> u64 {
+        let mut mask = 0u64;
+        for i in 0..registry.len().min(64) {
+            if registry.is_available(i) {
+                mask |= 1 << i;
+            }
+        }
+        mask
+    }
+
+    /// Drop every entry not keyed under `policy` (they cannot match
+    /// until the policy switches back; dropping bounds memory and makes
+    /// the switch observable).
+    pub fn invalidate_policy(&mut self, policy: Policy) {
+        let tag = policy_tag(policy);
+        self.retain(|k| k.policy == tag);
+    }
+
+    /// Drop dynamic-policy entries keyed under a different power
+    /// budget.  Static entries are untouched — [`Dispatcher::choose`]
+    /// ignores the budget under the static policy, so no static entry
+    /// is affected by the knob.
+    pub fn invalidate_power_budget(&mut self, budget_w: Option<f64>) {
+        let bits = budget_w.map(f64::to_bits);
+        let static_tag = policy_tag(Policy::Static);
+        self.retain(|k| k.policy == static_tag || k.budget == bits);
+    }
+
+    /// Drop `deadline`-policy entries keyed under a different deadline.
+    /// Every other policy's entries are untouched — the deadline is
+    /// pinned out of their keys because it cannot change their pick.
+    pub fn invalidate_deadline(&mut self, deadline_s: f64) {
+        let bits = deadline_s.to_bits();
+        let tag = policy_tag(Policy::Deadline);
+        self.retain(|k| k.policy != tag || k.deadline == bits);
+    }
+
+    /// Drop every entry keyed under an availability mask other than
+    /// `mask` (from [`DispatchCache::availability_mask`] after the
+    /// flip).  Availability shapes the candidate set under every
+    /// policy, so no policy's entries survive a mask change.
+    pub fn invalidate_availability(&mut self, mask: u64) {
+        self.retain(|k| k.avail == mask);
+    }
+
+    /// Keep entries satisfying `keep`; count the rest as invalidations.
+    /// The hot entries are screened with the same predicate.
+    fn retain(&mut self, keep: impl Fn(&Key) -> bool) {
+        let before = self.entries();
+        self.map.retain(|k, _| keep(k));
+        self.plan_map.retain(|k, _| keep(k));
+        self.stats.invalidations += (before - self.entries()) as u64;
+        if self.hot.as_ref().is_some_and(|(k, _)| !keep(k)) {
+            self.hot = None;
+        }
+        if self.plan_hot.as_ref().is_some_and(|(k, _)| !keep(k)) {
+            self.plan_hot = None;
+        }
+    }
+
+    /// Exact fingerprint of one whole-model decision's inputs.
+    fn raw_key(
+        d: &Dispatcher,
+        timelines: &[AccelTimeline],
+        now_s: f64,
+        oldest_t_s: f64,
+        n: u64,
+    ) -> Key {
+        let mut backlogs = [0u64; MAX_CACHE_LANES];
+        for (slot, tl) in backlogs.iter_mut().zip(timelines) {
+            *slot = tl.backlog_s(now_s).to_bits();
+        }
+        Key {
+            policy: policy_tag(d.policy),
+            n,
+            avail: DispatchCache::availability_mask(&d.registry),
+            budget: d.power_budget_w.map(f64::to_bits),
+            deadline: d.deadline_s.to_bits(),
+            wait: (now_s - oldest_t_s).max(0.0).to_bits(),
+            backlogs,
+        }
+    }
+
+    /// Pin the fields the active policy provably ignores.  The rule
+    /// only consults fields that stay in the key (policy, availability
+    /// mask), so storage and lookup always agree on the relaxation.
+    fn relax(d: &Dispatcher, mut key: Key, all_mask: u64, primary_bit: u64) -> Key {
+        match d.policy {
+            Policy::Static => {
+                // static never sheds and never checks the deadline
+                key.budget = None;
+                key.deadline = 0;
+                key.wait = 0;
+                // primary in service (or the all-down fallback): the
+                // pick is the primary regardless of queue state
+                if key.avail & primary_bit != 0 || key.avail == all_mask || key.avail == 0
+                {
+                    key.backlogs = [0; MAX_CACHE_LANES];
+                }
+            }
+            Policy::MinLatency => {
+                // latency_s carries no wait term and no deadline check
+                key.deadline = 0;
+                key.wait = 0;
+            }
+            Policy::MinEnergy => {
+                // batch energy is a function of n alone: queues, wait,
+                // and deadline cannot move the argmin
+                key.deadline = 0;
+                key.wait = 0;
+                key.backlogs = [0; MAX_CACHE_LANES];
+            }
+            Policy::Deadline => {} // reads everything
+        }
+        key
+    }
+
+    /// [`Dispatcher::choose`] through the cache: hot-entry fast path,
+    /// then the decision table (pick reused, cost recomputed exactly),
+    /// then a fresh scoring pass on a miss.
+    pub(crate) fn choose(
+        &mut self,
+        d: &Dispatcher,
+        timelines: &[AccelTimeline],
+        now_s: f64,
+        oldest_t_s: f64,
+        n: u64,
+    ) -> Choice {
+        if !self.enabled {
+            return d.choose(timelines, now_s, oldest_t_s, n);
+        }
+        if timelines.len() > MAX_CACHE_LANES {
+            self.stats.bypasses += 1;
+            return d.choose(timelines, now_s, oldest_t_s, n);
+        }
+        let raw = DispatchCache::raw_key(d, timelines, now_s, oldest_t_s, n);
+        if let Some((fp, choice)) = &self.hot {
+            if *fp == raw {
+                self.stats.hits += 1;
+                return choice.clone();
+            }
+        }
+        let all_mask = (1u64 << d.registry.len()) - 1;
+        let key = DispatchCache::relax(d, raw, all_mask, 1u64 << d.primary_index());
+        if let Some(&(index, power_shed)) = self.map.get(&key) {
+            self.stats.hits += 1;
+            let cost = d.cost(index, &timelines[index], now_s, oldest_t_s, n);
+            let choice = Choice { index, cost, power_shed };
+            self.hot = Some((raw, choice.clone()));
+            return choice;
+        }
+        self.stats.misses += 1;
+        let choice = d.choose(timelines, now_s, oldest_t_s, n);
+        if self.map.len() >= CACHE_CAPACITY {
+            self.map.clear();
+        }
+        self.map.insert(key, (choice.index, choice.power_shed));
+        self.hot = Some((raw, choice.clone()));
+        choice
+    }
+
+    /// [`Dispatcher::choose_plan`] through the cache — same contract as
+    /// [`DispatchCache::choose`] over the planner's candidate set, with
+    /// [`Dispatcher::plan_cost`] recomputing the chosen plan's cost
+    /// exactly on a hit.
+    pub(crate) fn choose_plan(
+        &mut self,
+        d: &Dispatcher,
+        planner: &Planner,
+        timelines: &[AccelTimeline],
+        now_s: f64,
+        oldest_t_s: f64,
+        n: u64,
+    ) -> PlanChoice {
+        if !self.enabled {
+            return d.choose_plan(planner, timelines, now_s, oldest_t_s, n);
+        }
+        if timelines.len() > MAX_CACHE_LANES {
+            self.stats.bypasses += 1;
+            return d.choose_plan(planner, timelines, now_s, oldest_t_s, n);
+        }
+        let raw = DispatchCache::raw_key(d, timelines, now_s, oldest_t_s, n);
+        // the plan-mode static pick is constant whenever every registry
+        // lane is in service (avail == all ⇒ every plan in service ⇒
+        // the primary plan wins); a partial outage falls back to the
+        // backlog-dependent argmin, so those keys keep their queues.
+        // Derived lanes have no availability state, so a mask of "all
+        // registry lanes up" is exactly "every plan in service".
+        let all_mask = (1u64 << d.registry.len()) - 1;
+        let key = match d.policy {
+            Policy::Static => {
+                let mut k = raw;
+                k.budget = None;
+                k.deadline = 0;
+                k.wait = 0;
+                if k.avail == all_mask {
+                    k.backlogs = [0; MAX_CACHE_LANES];
+                }
+                k
+            }
+            // plan energy is a function of n alone, as in whole-model
+            _ => DispatchCache::relax(d, raw, all_mask, 0),
+        };
+        if let Some((fp, choice)) = &self.plan_hot {
+            if *fp == raw {
+                self.stats.hits += 1;
+                return choice.clone();
+            }
+        }
+        if let Some(&(index, power_shed)) = self.plan_map.get(&key) {
+            self.stats.hits += 1;
+            let cost = d.plan_cost(
+                planner,
+                &planner.plans()[index],
+                timelines,
+                now_s,
+                oldest_t_s,
+                n,
+            );
+            let choice = PlanChoice { index, cost, power_shed };
+            self.plan_hot = Some((raw, choice.clone()));
+            return choice;
+        }
+        self.stats.misses += 1;
+        let choice = d.choose_plan(planner, timelines, now_s, oldest_t_s, n);
+        if self.plan_map.len() >= CACHE_CAPACITY {
+            self.plan_map.clear();
+        }
+        self.plan_map.insert(key, (choice.index, choice.power_shed));
+        self.plan_hot = Some((raw, choice.clone()));
+        choice
+    }
+}
+
+/// Bit-level equality of two choices (test / assertion helper shared by
+/// the regression harness and the benches).
+pub fn choices_identical(a: &Choice, b: &Choice) -> bool {
+    a.index == b.index && a.power_shed == b.power_shed && costs_identical(&a.cost, &b.cost)
+}
+
+fn costs_identical(a: &BatchCost, b: &BatchCost) -> bool {
+    a.target == b.target
+        && a.latency_s.to_bits() == b.latency_s.to_bits()
+        && a.oldest_latency_s.to_bits() == b.oldest_latency_s.to_bits()
+        && a.energy_j.to_bits() == b.energy_j.to_bits()
+        && a.power_w.to_bits() == b.power_w.to_bits()
+        && a.meets_deadline == b.meets_deadline
+}
+
+/// Bit-level equality of two plan choices.
+pub fn plan_choices_identical(a: &PlanChoice, b: &PlanChoice) -> bool {
+    a.index == b.index
+        && a.power_shed == b.power_shed
+        && a.cost.latency_s.to_bits() == b.cost.latency_s.to_bits()
+        && a.cost.oldest_latency_s.to_bits() == b.cost.oldest_latency_s.to_bits()
+        && a.cost.energy_j.to_bits() == b.cost.energy_j.to_bits()
+        && a.cost.power_w.to_bits() == b.cost.power_w.to_bits()
+        && a.cost.meets_deadline == b.cost.meets_deadline
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::TargetSet;
+    use crate::board::Calibration;
+    use crate::model::catalog::Catalog;
+
+    fn dispatcher(policy: Policy, budget: Option<f64>) -> Dispatcher {
+        let catalog = Catalog::synthetic();
+        Dispatcher::new(
+            "vae",
+            &catalog,
+            &Calibration::default(),
+            policy,
+            0.5,
+            budget,
+            &TargetSet::Default,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn hit_reproduces_the_fresh_choice_bit_for_bit() {
+        for policy in
+            [Policy::Static, Policy::MinLatency, Policy::MinEnergy, Policy::Deadline]
+        {
+            let d = dispatcher(policy, Some(4.0));
+            let mut tls = d.timelines();
+            tls[0].schedule(0.0, 40, d.run_of(0));
+            let mut cache = DispatchCache::new(true);
+            for (now, wait, n) in [(0.1, 0.05, 8u64), (0.1, 0.05, 8), (0.1, 0.05, 8)] {
+                let fresh = d.choose(&tls, now, now - wait, n);
+                let cached = d.choose_cached(&mut cache, &tls, now, now - wait, n);
+                assert!(choices_identical(&fresh, &cached), "{policy:?}");
+            }
+            assert_eq!(cache.stats().misses, 1, "{policy:?}");
+            assert_eq!(cache.stats().hits, 2, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn disabled_cache_never_counts() {
+        let d = dispatcher(Policy::MinLatency, None);
+        let tls = d.timelines();
+        let mut cache = DispatchCache::new(false);
+        let fresh = d.choose(&tls, 0.0, 0.0, 8);
+        let cached = d.choose_cached(&mut cache, &tls, 0.0, 0.0, 8);
+        assert!(choices_identical(&fresh, &cached));
+        assert_eq!(cache.stats(), CacheStats::default());
+        assert_eq!(cache.entries(), 0);
+    }
+
+    #[test]
+    fn min_energy_shares_entries_across_backlogs() {
+        let d = dispatcher(Policy::MinEnergy, None);
+        let mut tls = d.timelines();
+        let mut cache = DispatchCache::new(true);
+        d.choose_cached(&mut cache, &tls, 0.0, 0.0, 8);
+        // pile queue on a target: min-energy provably ignores it, so
+        // the relaxed key must hit (table path — the hot entry misses
+        // because the raw fingerprint changed)
+        tls[0].schedule(0.0, 100, d.run_of(0));
+        let fresh = d.choose(&tls, 0.0, 0.0, 8);
+        let cached = d.choose_cached(&mut cache, &tls, 0.0, 0.0, 8);
+        assert!(choices_identical(&fresh, &cached));
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(cache.entries(), 1, "one relaxed entry covers both states");
+    }
+
+    #[test]
+    fn min_latency_distinguishes_backlogs() {
+        let d = dispatcher(Policy::MinLatency, None);
+        let mut tls = d.timelines();
+        let mut cache = DispatchCache::new(true);
+        d.choose_cached(&mut cache, &tls, 0.0, 0.0, 8);
+        tls[0].schedule(0.0, 100, d.run_of(0));
+        let fresh = d.choose(&tls, 0.0, 0.0, 8);
+        let cached = d.choose_cached(&mut cache, &tls, 0.0, 0.0, 8);
+        assert!(choices_identical(&fresh, &cached));
+        assert_eq!(cache.stats().misses, 2, "queue state is decision-relevant");
+    }
+
+    #[test]
+    fn knob_invalidation_drops_exactly_the_affected_entries() {
+        let d = dispatcher(Policy::MinLatency, None);
+        let mut tls = d.timelines();
+        let mut cache = DispatchCache::new(true);
+        // three distinct backlog states => three min-latency entries
+        for _ in 0..3 {
+            tls[0].schedule(0.0, 50, d.run_of(0));
+            d.choose_cached(&mut cache, &tls, 0.0, 0.0, 8);
+        }
+        assert_eq!(cache.entries(), 3);
+        // the deadline knob cannot affect min-latency entries: zero drop
+        cache.invalidate_deadline(0.25);
+        assert_eq!(cache.entries(), 3);
+        assert_eq!(cache.stats().invalidations, 0);
+        // the budget knob affects every dynamic entry
+        cache.invalidate_power_budget(Some(4.0));
+        assert_eq!(cache.entries(), 0);
+        assert_eq!(cache.stats().invalidations, 3);
+    }
+
+    #[test]
+    fn availability_flip_invalidates_and_redecides() {
+        let mut d = dispatcher(Policy::MinLatency, None);
+        let tls = d.timelines();
+        let mut cache = DispatchCache::new(true);
+        let up = d.choose_cached(&mut cache, &tls, 0.0, 0.0, 8);
+        d.registry.set_available(up.index, false);
+        cache.invalidate_availability(DispatchCache::availability_mask(&d.registry));
+        assert_eq!(cache.stats().invalidations, 1);
+        let down = d.choose_cached(&mut cache, &tls, 0.0, 0.0, 8);
+        assert_ne!(up.index, down.index, "knocked-out target cannot be re-picked");
+        assert!(choices_identical(&down, &d.choose(&tls, 0.0, 0.0, 8)));
+    }
+
+    #[test]
+    fn plan_choices_are_cached_and_exact() {
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        for policy in
+            [Policy::Static, Policy::MinLatency, Policy::MinEnergy, Policy::Deadline]
+        {
+            let d = Dispatcher::new(
+                "baseline",
+                &catalog,
+                &calib,
+                policy,
+                0.5,
+                None,
+                &TargetSet::Default,
+            )
+            .unwrap();
+            let planner = Planner::build(
+                "baseline",
+                &catalog,
+                &calib,
+                &d.registry,
+                &TargetSet::Default,
+            )
+            .unwrap();
+            let mut tls = d.timelines();
+            for name in planner.derived_lane_names() {
+                tls.push(AccelTimeline::new(name));
+            }
+            let mut cache = DispatchCache::new(true);
+            for _ in 0..3 {
+                let fresh = d.choose_plan(&planner, &tls, 0.0, 0.0, 8);
+                let cached =
+                    d.choose_plan_cached(&mut cache, &planner, &tls, 0.0, 0.0, 8);
+                assert!(plan_choices_identical(&fresh, &cached), "{policy:?}");
+            }
+            assert_eq!(cache.stats().misses, 1, "{policy:?}");
+            assert_eq!(cache.stats().hits, 2, "{policy:?}");
+        }
+    }
+}

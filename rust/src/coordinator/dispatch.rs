@@ -25,6 +25,7 @@ use anyhow::{bail, Result};
 
 use crate::backend::{AccelModel, TargetRegistry, TargetSet};
 use crate::board::Calibration;
+use crate::coordinator::cache::DispatchCache;
 use crate::coordinator::scheduler::{AccelTimeline, ScheduledRun};
 use crate::model::catalog::Catalog;
 use crate::model::UseCase;
@@ -553,6 +554,36 @@ impl Dispatcher {
             }
         };
         PlanChoice { index, cost: costs[index].clone(), power_shed }
+    }
+
+    /// [`Dispatcher::choose`] through a [`DispatchCache`]: identical
+    /// verdicts (bit for bit — see the cache module's determinism
+    /// argument), served from the memo table when this decision state
+    /// has been scored before.  The hot path of the pipeline; with the
+    /// cache disabled this is exactly `choose`.
+    pub fn choose_cached(
+        &self,
+        cache: &mut DispatchCache,
+        timelines: &[AccelTimeline],
+        now_s: f64,
+        oldest_t_s: f64,
+        n: u64,
+    ) -> Choice {
+        cache.choose(self, timelines, now_s, oldest_t_s, n)
+    }
+
+    /// [`Dispatcher::choose_plan`] through a [`DispatchCache`] — the
+    /// plan-mode analogue of [`Dispatcher::choose_cached`].
+    pub fn choose_plan_cached(
+        &self,
+        cache: &mut DispatchCache,
+        planner: &Planner,
+        timelines: &[AccelTimeline],
+        now_s: f64,
+        oldest_t_s: f64,
+        n: u64,
+    ) -> PlanChoice {
+        cache.choose_plan(self, planner, timelines, now_s, oldest_t_s, n)
     }
 }
 

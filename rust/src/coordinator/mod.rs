@@ -27,6 +27,7 @@
 
 pub mod backpressure;
 pub mod batcher;
+pub mod cache;
 pub mod decision;
 pub mod dispatch;
 pub mod downlink;
@@ -36,6 +37,7 @@ pub mod scheduler;
 
 pub use backpressure::{BoundedQueue, OverflowPolicy};
 pub use batcher::{Batch, Batcher};
+pub use cache::{choices_identical, plan_choices_identical, CacheStats, DispatchCache};
 pub use decision::{decide, Decision};
 pub use dispatch::{
     default_deadline_s, BatchCost, Choice, Dispatcher, PlanChoice, PlanCost, Policy,

@@ -45,6 +45,7 @@ use crate::backend::{AccelModel, TargetSet};
 use crate::board::{Calibration, Zcu104};
 use crate::coordinator::backpressure::{BoundedQueue, OverflowPolicy};
 use crate::coordinator::batcher::{Batch, Batcher};
+use crate::coordinator::cache::{CacheStats, DispatchCache};
 use crate::coordinator::decision::{decide, Decision};
 use crate::coordinator::dispatch::{default_deadline_s, Dispatcher, Policy};
 use crate::coordinator::downlink::{DownlinkManager, DownlinkVerdict};
@@ -131,6 +132,12 @@ pub struct PipelineConfig {
     /// How dispatch recovers from injected (or forced) faults: retry
     /// bounds, backoff, quarantine, TMR voting.
     pub recovery: RecoveryPolicy,
+    /// Memoize dispatch decisions in a [`DispatchCache`] (default on).
+    /// Hits are provably bit-identical to fresh scoring — see the cache
+    /// module's determinism argument — so this knob changes throughput,
+    /// never behavior; `false` (`--no-dispatch-cache`) is the escape
+    /// hatch the equivalence harness diffs against.
+    pub dispatch_cache: bool,
 }
 
 impl Default for PipelineConfig {
@@ -155,6 +162,7 @@ impl Default for PipelineConfig {
             fault_seed: None,
             fault_profile: FaultProfile::default(),
             recovery: RecoveryPolicy::default(),
+            dispatch_cache: true,
         }
     }
 }
@@ -282,6 +290,11 @@ pub struct PipelineReport {
     /// Typed execution errors survived on the serving path (real
     /// executor batches whose results were lost); capped, oldest first.
     pub exec_errors: Vec<String>,
+    /// Dispatch-cache accounting (all zero when the cache is disabled).
+    /// Deliberately *outside* [`PipelineReport::metrics`]: cache-on and
+    /// cache-off runs must compare equal on every behavioral field, and
+    /// these counters are the one legitimate difference.
+    pub cache: CacheStats,
     /// Counters + histograms collected during the run.
     pub metrics: Metrics,
 }
@@ -339,6 +352,17 @@ impl PipelineReport {
             out.push_str(&format!(
                 "  plans: {} dispatched ({} hybrid)  transfer {:.4}s\n",
                 self.plan_batches, self.plan_hybrid_batches, self.plan_transfer_s
+            ));
+        }
+        if self.cache.lookups() + self.cache.bypasses > 0 {
+            out.push_str(&format!(
+                "  cache: {} hits / {} lookups ({:.0}% hit rate)  \
+                 invalidations {}  bypasses {}\n",
+                self.cache.hits,
+                self.cache.lookups(),
+                100.0 * self.cache.hit_rate(),
+                self.cache.invalidations,
+                self.cache.bypasses,
             ));
         }
         if self.faults.any() {
@@ -539,6 +563,8 @@ struct RunState {
     fault: FaultState,
     /// Typed executor errors survived on the serving path (capped).
     exec_errors: Vec<String>,
+    /// Memoized dispatch decisions (a no-op passthrough when disabled).
+    cache: DispatchCache,
 }
 
 impl RunState {
@@ -873,9 +899,13 @@ impl Pipeline {
         let phase = state.phase_index();
         let n = batch.len() as u64;
         let oldest_t_s = batch.events.first().map(|e| e.t_s).unwrap_or(batch.flushed_at_s);
-        let choice =
-            self.dispatcher
-                .choose(&state.timelines, batch.flushed_at_s, oldest_t_s, n);
+        let choice = self.dispatcher.choose_cached(
+            &mut state.cache,
+            &state.timelines,
+            batch.flushed_at_s,
+            oldest_t_s,
+            n,
+        );
         let target = self.dispatcher.registry.get(choice.index);
         let srun = self.dispatcher.run_of(choice.index);
         let (start, done) =
@@ -957,6 +987,10 @@ impl Pipeline {
         let phase = state.phase_index();
         let n = batch.len() as u64;
         let oldest_t_s = batch.events.first().map(|e| e.t_s).unwrap_or(batch.flushed_at_s);
+        // recovery-mode dispatch never consults the cache: per-attempt
+        // exclusion masks and brownout overrides are transient inputs a
+        // cache key does not carry
+        state.cache.note_bypass();
         let mut excluded = vec![false; self.dispatcher.registry.len()];
         let mut at = batch.flushed_at_s;
         let mut attempt: u32 = 0;
@@ -1062,6 +1096,9 @@ impl Pipeline {
                         // flaky target: out of service until the next
                         // scrub window repairs it (plus reconfiguration)
                         self.dispatcher.registry.set_available(index, false);
+                        state.cache.invalidate_availability(
+                            DispatchCache::availability_mask(&self.dispatcher.registry),
+                        );
                         let period = state.fault.recovery.quarantine_scrub_period_s;
                         let wait = period - (done % period);
                         state.fault.quarantine(index, done + wait + self.t_config_s);
@@ -1176,7 +1213,8 @@ impl Pipeline {
         let phase = state.phase_index();
         let n = batch.len() as u64;
         let oldest_t_s = batch.events.first().map(|e| e.t_s).unwrap_or(batch.flushed_at_s);
-        let pc = self.dispatcher.choose_plan(
+        let pc = self.dispatcher.choose_plan_cached(
+            &mut state.cache,
             planner,
             &state.timelines,
             batch.flushed_at_s,
@@ -1375,6 +1413,7 @@ impl Pipeline {
             phases: vec![PhaseAccum::new("run", 0.0)],
             fault,
             exec_errors: Vec::new(),
+            cache: DispatchCache::new(cfg.dispatch_cache),
         };
         let base_cadence_s = cfg.cadence_s;
         let reaper = executor.map(Reaper::new);
@@ -1447,24 +1486,42 @@ impl PipelineRun<'_, '_> {
         self.base_deadline_s
     }
 
+    /// Dispatch-cache counters so far (all zero when the cache is off).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.state.cache.stats()
+    }
+
+    /// Live dispatch-cache entries — what the invalidation-exactness
+    /// tests count before and after a knob mutation.
+    pub fn cache_entries(&self) -> usize {
+        self.state.cache.entries()
+    }
+
     /// Switch the dispatch policy; the next batch is scored under it.
+    /// Cache entries keyed under any other policy are invalidated.
     pub fn set_policy(&mut self, policy: Policy) {
         self.pipeline.dispatcher.policy = policy;
+        self.state.cache.invalidate_policy(policy);
     }
 
     /// Set or lift the mission power budget (cap on active MPSoC draw,
-    /// W).  Only dynamic policies consult it.
+    /// W).  Only dynamic policies consult it — and only their cache
+    /// entries are invalidated.
     pub fn set_power_budget_w(&mut self, budget_w: Option<f64>) {
         self.pipeline.dispatcher.power_budget_w = budget_w;
+        self.state.cache.invalidate_power_budget(budget_w);
     }
 
     /// Retune the end-to-end deadline (s).  Errors on a non-positive
-    /// or non-finite value instead of aborting a mission run.
+    /// or non-finite value instead of aborting a mission run.  Only
+    /// `deadline`-policy cache entries are invalidated — no other
+    /// policy reads the deadline.
     pub fn set_deadline_s(&mut self, deadline_s: f64) -> Result<()> {
         if !(deadline_s > 0.0 && deadline_s.is_finite()) {
             bail!("deadline must be positive and finite, got {deadline_s}");
         }
         self.pipeline.dispatcher.deadline_s = deadline_s;
+        self.state.cache.invalidate_deadline(deadline_s);
         Ok(())
     }
 
@@ -1503,6 +1560,9 @@ impl PipelineRun<'_, '_> {
     /// batch re-dispatches around an out-of-service target.
     pub fn set_target_available(&mut self, index: usize, available: bool) {
         self.pipeline.dispatcher.registry.set_available(index, available);
+        self.state.cache.invalidate_availability(DispatchCache::availability_mask(
+            &self.pipeline.dispatcher.registry,
+        ));
         self.state.metrics.inc(if available {
             "target_restored"
         } else {
@@ -1604,6 +1664,9 @@ impl PipelineRun<'_, '_> {
         }
         for index in self.state.fault.take_due_reinstates(now_s) {
             self.pipeline.dispatcher.registry.set_available(index, true);
+            self.state.cache.invalidate_availability(
+                DispatchCache::availability_mask(&self.pipeline.dispatcher.registry),
+            );
             self.state.fault.stats.reinstates += 1;
             self.state.metrics.inc("quarantine_reinstate");
         }
@@ -1789,6 +1852,7 @@ impl PipelineRun<'_, '_> {
             mut phases,
             fault,
             exec_errors,
+            cache,
             ..
         } = self.state;
         latencies.sort_by(f64::total_cmp);
@@ -1842,6 +1906,7 @@ impl PipelineRun<'_, '_> {
             phases,
             faults: fault.stats,
             exec_errors,
+            cache: cache.stats(),
             metrics,
         })
     }

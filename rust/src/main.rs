@@ -13,7 +13,7 @@
 //! spaceinfer pipeline --use-case mms [--real]     end-to-end coordinator
 //!     [--policy static|min-latency|min-energy|deadline]
 //!     [--power-budget W] [--deadline-ms MS] [--targets default|all|...]
-//!     [--plan] [--faults SEED] [--tmr]
+//!     [--plan] [--faults SEED] [--tmr] [--no-dispatch-cache]
 //! spaceinfer plan <model>                         execution-plan table
 //! spaceinfer policies [--use-case vae]            policy comparison table
 //! spaceinfer scenario <name> | --list             mission scenario engine
@@ -288,6 +288,7 @@ fn pipeline_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
         plan_mode: args.has("plan"),
         fault_seed: parse_fault_seed(args)?,
         recovery: RecoveryPolicy { tmr: args.has("tmr"), ..Default::default() },
+        dispatch_cache: !args.has("no-dispatch-cache"),
         ..Default::default()
     };
     if args.has("tmr") && cfg.fault_seed.is_none() {
@@ -561,6 +562,8 @@ usage: spaceinfer <subcommand> [--artifacts DIR] [--calib FILE]
                       [--faults SEED] [--tmr]  (deterministic fault
                       injection + recovery: retries, escalation,
                       quarantine, TMR voting, degraded dispatch)
+                      [--no-dispatch-cache]  (disable decision
+                      memoization; bit-identical output, slower)
   plan                execution-plan table for one model: candidate
                       partitions (hybrid DPU-subgraph + fallback plans
                       next to whole-model deployments) and the choice

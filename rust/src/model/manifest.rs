@@ -364,6 +364,71 @@ impl Manifest {
             layers,
         }
     }
+
+    /// Borrowed view of `layers[start..end)` — the allocation-free
+    /// front door to [`Manifest::slice`].  Same bounds contract.
+    pub fn view(&self, start: usize, end: usize) -> ManifestView<'_> {
+        ManifestView::new(self, start, end)
+    }
+}
+
+/// A borrowed layer range over a [`Manifest`].
+///
+/// The plan partitioner prices every candidate segment of every
+/// candidate partition; materializing a fresh sub-manifest clone per
+/// candidate (layer vectors, shape vectors, a formatted name) dominated
+/// the planning hot path.  A view carries only `(&Manifest, start,
+/// end)`: range queries read the parent in place, and
+/// [`ManifestView::materialize`] returns `Cow::Borrowed` for the
+/// full-range view — the common single-segment case prices with **zero
+/// clones** — deferring the [`Manifest::slice`] allocation to proper
+/// sub-ranges that genuinely need a standalone manifest.
+#[derive(Debug, Clone, Copy)]
+pub struct ManifestView<'a> {
+    man: &'a Manifest,
+    start: usize,
+    end: usize,
+}
+
+impl<'a> ManifestView<'a> {
+    /// View of `man.layers[start..end)`.  Panics on an empty or
+    /// out-of-bounds range, exactly like [`Manifest::slice`].
+    pub fn new(man: &'a Manifest, start: usize, end: usize) -> ManifestView<'a> {
+        assert!(start < end && end <= man.layers.len(), "bad view {start}..{end}");
+        ManifestView { man, start, end }
+    }
+
+    /// The viewed layers, borrowed from the parent manifest.
+    pub fn layers(&self) -> &'a [Layer] {
+        &self.man.layers[self.start..self.end]
+    }
+
+    /// Number of layers in view.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// Always false (construction rejects empty ranges); present for
+    /// clippy's `len`/`is_empty` pairing convention.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Does the view cover the whole parent manifest?
+    pub fn is_full(&self) -> bool {
+        self.start == 0 && self.end == self.man.layers.len()
+    }
+
+    /// A manifest for the viewed range: the parent itself (borrowed, no
+    /// allocation) when the view is full, a [`Manifest::slice`] clone
+    /// otherwise.
+    pub fn materialize(&self) -> std::borrow::Cow<'a, Manifest> {
+        if self.is_full() {
+            std::borrow::Cow::Borrowed(self.man)
+        } else {
+            std::borrow::Cow::Owned(self.man.slice(self.start, self.end))
+        }
+    }
 }
 
 /// Shared test fixture (used by several modules' unit tests).
@@ -419,6 +484,35 @@ mod tests {
         assert!(m.dpu_compatible());
         assert_eq!(m.input_bytes(), 64);
         assert_eq!(m.output_elems(), 2);
+    }
+
+    #[test]
+    fn full_view_materializes_without_cloning() {
+        let m = Manifest::from_json(&Json::parse(MINI).unwrap()).unwrap();
+        let v = m.view(0, m.layers.len());
+        assert!(v.is_full());
+        assert_eq!(v.len(), 3);
+        let cow = v.materialize();
+        assert!(
+            matches!(cow, std::borrow::Cow::Borrowed(_)),
+            "full-range view must borrow, not clone"
+        );
+        assert!(std::ptr::eq(&*cow, &m), "borrowed manifest is the parent itself");
+    }
+
+    #[test]
+    fn partial_view_matches_slice_bit_for_bit() {
+        let m = Manifest::from_json(&Json::parse(MINI).unwrap()).unwrap();
+        let v = m.view(1, 3);
+        assert!(!v.is_full());
+        assert_eq!(v.layers().len(), 2);
+        let cow = v.materialize();
+        assert!(matches!(cow, std::borrow::Cow::Owned(_)));
+        let sliced = m.slice(1, 3);
+        assert_eq!(cow.name, sliced.name);
+        assert_eq!(cow.total_macs, sliced.total_macs);
+        assert_eq!(cow.weight_bytes, sliced.weight_bytes);
+        assert_eq!(cow.layers.len(), sliced.layers.len());
     }
 
     #[test]

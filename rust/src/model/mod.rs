@@ -6,4 +6,4 @@ pub mod counts;
 pub mod manifest;
 
 pub use catalog::{Catalog, ModelInfo, UseCase};
-pub use manifest::{Activation, Layer, LayerKind, Manifest, Precision};
+pub use manifest::{Activation, Layer, LayerKind, Manifest, ManifestView, Precision};

@@ -38,5 +38,5 @@
 pub mod partition;
 pub mod transfer;
 
-pub use partition::{ExecutionPlan, Lane, Planner, Segment, DERIVED_DPU_NAME};
+pub use partition::{BuildStats, ExecutionPlan, Lane, Planner, Segment, DERIVED_DPU_NAME};
 pub use transfer::TransferModel;

@@ -9,9 +9,11 @@
 //! assigns each unsupported run to the fastest registry lane that
 //! covers all of its layers.  Segment operating points come from the
 //! *existing simulators evaluated on sub-manifests*
-//! ([`AccelModel::segment_cost`] on [`Manifest::slice`]); boundary
-//! transfers are priced by [`TransferModel`] from the producing layer's
-//! output bytes.
+//! ([`AccelModel::segment_cost`] on a borrowed
+//! [`crate::model::ManifestView`] range, materialized only for proper
+//! sub-ranges and memoized per `(lane, range)` — see [`BuildStats`]);
+//! boundary transfers are priced by [`TransferModel`] from the
+//! producing layer's output bytes.
 //!
 //! Degenerate invariant: a lane that supports the whole model yields a
 //! **single-segment plan carrying the registry target's exact
@@ -19,6 +21,9 @@
 //! transfer term), so plan-level dispatch over such plans is
 //! bit-identical to the whole-model dispatcher — the golden suite's
 //! guarantee.
+
+use std::borrow::Cow;
+use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
@@ -151,6 +156,23 @@ struct DerivedLane {
     name: String,
 }
 
+/// Instrumentation of one planner build — what the segment-cost memo
+/// and the borrowed [`crate::model::ManifestView`] ranges actually
+/// bought.  Exposed so tests can pin the zero-clone invariant.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BuildStats {
+    /// Simulator evaluations of a `(lane, layer range)` pair (memo
+    /// misses).  Each distinct pair is priced at most once per build:
+    /// the fallback search and plan growth share the table, so
+    /// partition search is incremental rather than re-pricing.
+    pub ranges_priced: usize,
+    /// Owned sub-manifest materializations ([`Manifest::slice`]
+    /// clones).  Exactly 0 when every priced range is whole-model —
+    /// single-segment plans carry bound operating points or borrowed
+    /// full-range views.
+    pub manifests_sliced: usize,
+}
+
 /// Builds and holds the candidate plan set for one model: one plan per
 /// lane that supports at least one layer (single-segment when the lane
 /// covers the whole model, hybrid otherwise).  Immutable once built —
@@ -163,6 +185,7 @@ pub struct Planner {
     derived: Vec<DerivedLane>,
     plans: Vec<ExecutionPlan>,
     primary_plan: Option<usize>,
+    stats: BuildStats,
 }
 
 impl Planner {
@@ -188,7 +211,7 @@ impl Planner {
             derived.push(DerivedLane { name: DERIVED_DPU_NAME.to_string() });
         }
         let board = Zcu104::default();
-        let builder = PlanBuilder {
+        let mut builder = PlanBuilder {
             registry,
             calib,
             transfer: TransferModel::new(&board),
@@ -196,6 +219,9 @@ impl Planner {
             fp32,
             int8,
             derived: &derived,
+            cost_memo: BTreeMap::new(),
+            fallback_memo: BTreeMap::new(),
+            stats: BuildStats::default(),
         };
         let lanes: Vec<Lane> = (0..registry.len())
             .map(Lane::Registry)
@@ -224,13 +250,21 @@ impl Planner {
         if plans.is_empty() {
             bail!("no executable plan for model {model:?}");
         }
+        let stats = builder.stats;
         Ok(Planner {
             model: model.to_string(),
             registry_len: registry.len(),
             derived,
             plans,
             primary_plan,
+            stats,
         })
+    }
+
+    /// Instrumentation of this build: simulator evaluations and
+    /// sub-manifest clones the partition search actually performed.
+    pub fn build_stats(&self) -> BuildStats {
+        self.stats
     }
 
     /// Model the plans partition.
@@ -271,7 +305,11 @@ impl Planner {
     }
 }
 
-/// Everything the partitioning pass needs, borrowed for the build.
+/// Everything the partitioning pass needs, borrowed for the build,
+/// plus the segment-cost tables the search fills incrementally: every
+/// `(lane, layer range)` pair is priced at most once per build and
+/// every fallback search is resolved at most once per range, shared
+/// across all preferred lanes' plans.
 struct PlanBuilder<'a> {
     registry: &'a TargetRegistry,
     calib: &'a Calibration,
@@ -280,9 +318,14 @@ struct PlanBuilder<'a> {
     fp32: &'a Manifest,
     int8: Option<&'a Manifest>,
     derived: &'a [DerivedLane],
+    /// `(flat lane, start, end)` -> `(setup_s, per_item_s, power_w)`.
+    cost_memo: BTreeMap<(usize, usize, usize), (f64, f64, f64)>,
+    /// `(start, end)` -> resolved fallback lane (or none).
+    fallback_memo: BTreeMap<(usize, usize), Option<Lane>>,
+    stats: BuildStats,
 }
 
-impl PlanBuilder<'_> {
+impl<'a> PlanBuilder<'a> {
     fn lane_name(&self, lane: Lane) -> String {
         match lane {
             Lane::Registry(i) => self.registry.get(i).name().to_string(),
@@ -297,21 +340,62 @@ impl PlanBuilder<'_> {
         }
     }
 
-    /// Int8 sub-manifest for a DPU segment: slice the deployed int8
-    /// variant when one exists, otherwise the PTQ byte-footprint view
-    /// of the fp32 slice (what quantizing the subgraph would yield).
-    fn int8_slice(&self, start: usize, end: usize) -> Manifest {
+    /// Memo key for a lane: registry index, derived lanes after.
+    fn flat_key(&self, lane: Lane) -> usize {
+        match lane {
+            Lane::Registry(i) => i,
+            Lane::Derived(d) => self.registry.len() + d,
+        }
+    }
+
+    /// Fp32 manifest for `layers[start..end)` — borrowed for the full
+    /// range, a counted [`Manifest::slice`] clone otherwise.
+    fn fp32_range(&mut self, start: usize, end: usize) -> Cow<'a, Manifest> {
+        let cow = self.fp32.view(start, end).materialize();
+        if matches!(cow, Cow::Owned(_)) {
+            self.stats.manifests_sliced += 1;
+        }
+        cow
+    }
+
+    /// Int8 manifest for a DPU segment: the deployed int8 variant's
+    /// range when one exists, otherwise the PTQ byte-footprint view of
+    /// the fp32 range (what quantizing the subgraph would yield; the
+    /// PTQ conversion clone is inherent and not counted as a slice).
+    fn int8_range(&mut self, start: usize, end: usize) -> Cow<'a, Manifest> {
         match self.int8 {
-            Some(m) => m.slice(start, end),
-            None => int8_view(&self.fp32.slice(start, end)),
+            Some(m) => {
+                let cow = m.view(start, end).materialize();
+                if matches!(cow, Cow::Owned(_)) {
+                    self.stats.manifests_sliced += 1;
+                }
+                cow
+            }
+            None => {
+                let fp32 = self.fp32_range(start, end);
+                Cow::Owned(int8_view(&fp32))
+            }
         }
     }
 
     /// Operating point of `layers[start..end)` on `lane`, from the
     /// lane's own simulator.  A registry lane covering the whole model
     /// returns its bound operating point bit-exactly (the degenerate
-    /// invariant).
-    fn seg_cost(&self, lane: Lane, start: usize, end: usize) -> Result<SegmentCost> {
+    /// invariant).  Memoized: a repeated `(lane, range)` query returns
+    /// the tabled point without touching a simulator or a manifest.
+    fn seg_cost(&mut self, lane: Lane, start: usize, end: usize) -> Result<SegmentCost> {
+        let key = (self.flat_key(lane), start, end);
+        if let Some(&(setup_s, per_item_s, active_power_w)) = self.cost_memo.get(&key) {
+            return Ok(SegmentCost { setup_s, per_item_s, active_power_w });
+        }
+        let c = self.price_range(lane, start, end)?;
+        self.stats.ranges_priced += 1;
+        self.cost_memo.insert(key, (c.setup_s, c.per_item_s, c.active_power_w));
+        Ok(c)
+    }
+
+    /// The uncached pricing pass behind [`PlanBuilder::seg_cost`].
+    fn price_range(&mut self, lane: Lane, start: usize, end: usize) -> Result<SegmentCost> {
         match lane {
             Lane::Registry(i) => {
                 let t = self.registry.get(i);
@@ -323,13 +407,13 @@ impl PlanBuilder<'_> {
                     });
                 }
                 let sub = match t.precision() {
-                    Precision::Int8 => self.int8_slice(start, end),
-                    Precision::Fp32 => self.fp32.slice(start, end),
+                    Precision::Int8 => self.int8_range(start, end),
+                    Precision::Fp32 => self.fp32_range(start, end),
                 };
                 t.segment_cost(&sub)
             }
             Lane::Derived(_) => {
-                let sub = self.int8_slice(start, end);
+                let sub = self.int8_range(start, end);
                 let t = DpuTarget::new(&sub, DpuSize::B4096, self.calib, &self.board)?;
                 Ok(SegmentCost {
                     setup_s: t.setup_s(),
@@ -342,10 +426,15 @@ impl PlanBuilder<'_> {
 
     /// Fastest registry lane supporting every layer of
     /// `layers[start..end)` (strict-less argmin on single-inference
-    /// busy time: deterministic, registry-order tie-break).
-    fn fallback_lane(&self, start: usize, end: usize) -> Option<Lane> {
+    /// busy time: deterministic, registry-order tie-break).  Memoized —
+    /// every preferred lane's plan shares the resolution for a range.
+    fn fallback_lane(&mut self, start: usize, end: usize) -> Option<Lane> {
+        if let Some(&cached) = self.fallback_memo.get(&(start, end)) {
+            return cached;
+        }
         let mut best: Option<(usize, f64)> = None;
-        for (i, t) in self.registry.targets().iter().enumerate() {
+        for i in 0..self.registry.len() {
+            let t = self.registry.get(i);
             let covered = self.fp32.layers[start..end]
                 .iter()
                 .all(|l| t.supports_layer(l).is_ok());
@@ -364,14 +453,16 @@ impl PlanBuilder<'_> {
                 best = Some((i, busy));
             }
         }
-        best.map(|(i, _)| Lane::Registry(i))
+        let lane = best.map(|(i, _)| Lane::Registry(i));
+        self.fallback_memo.insert((start, end), lane);
+        lane
     }
 
     /// Grow one plan around `preferred` from its support `mask`:
     /// maximal supported runs stay on the preferred lane, unsupported
     /// runs go to their fallback.  `None` when some unsupported run has
     /// no covering lane (possible under narrow `--targets` lists).
-    fn build_plan(&self, preferred: Lane, mask: &[bool]) -> Result<Option<ExecutionPlan>> {
+    fn build_plan(&mut self, preferred: Lane, mask: &[bool]) -> Result<Option<ExecutionPlan>> {
         let n_layers = mask.len();
         let mut ranges: Vec<(Lane, usize, usize)> = Vec::new();
         let mut start = 0;
@@ -482,6 +573,34 @@ mod tests {
             }
             assert_eq!(plan.peak_power_w().to_bits(), t.active_power_w().to_bits());
         }
+    }
+
+    #[test]
+    fn single_segment_pricing_is_zero_clone() {
+        // every lane covers the whole model: pricing must never slice
+        let (_r, planner) = build("vae", &TargetSet::Default);
+        let s = planner.build_stats();
+        assert_eq!(s.manifests_sliced, 0, "whole-model plans must not clone");
+        assert_eq!(s.ranges_priced, planner.plans().len(), "one pricing per lane");
+        // the derived whole-model lane prices a borrowed full view too
+        // (the PTQ conversion is inherent, not a slice)
+        let (_r, planner) = build("logistic", &TargetSet::Default);
+        assert_eq!(planner.build_stats().manifests_sliced, 0);
+    }
+
+    #[test]
+    fn hybrid_build_prices_each_range_at_most_once() {
+        let (_r, planner) = build("baseline", &TargetSet::Default);
+        let s = planner.build_stats();
+        // the fallback search pre-prices the ranges plan growth reuses,
+        // so slices stay strictly below simulator evaluations
+        assert!(s.ranges_priced > 0);
+        assert!(
+            s.manifests_sliced < s.ranges_priced,
+            "sliced {} vs priced {}",
+            s.manifests_sliced,
+            s.ranges_priced
+        );
     }
 
     #[test]

@@ -1,0 +1,483 @@
+//! Dispatch-cache regression harness: the cache must be a pure
+//! throughput knob — **zero behavioral drift**.
+//!
+//! Three layers of evidence, from end to end down to single decisions:
+//!
+//! * **Pipeline bit-identity** — `dispatch_cache: true` vs `false` over
+//!   the full grid of policies × use cases × target sets × plan mode ×
+//!   power budgets, every built-in scenario, and ≥8 fuzz seeds (armed
+//!   and defused): every behavioral `PipelineReport` field must match
+//!   bit for bit (`f64` compared by bit pattern).  The `cache` counter
+//!   block is the *only* field allowed to differ.
+//! * **Invalidation exactness** — each knob setter (`set_policy`,
+//!   `set_power_budget_w`, `set_deadline_s`, `set_target_available`)
+//!   drops exactly the entries the mutated knob orphaned, verified by
+//!   counting live entries around mid-run mutations.
+//! * **Staleness impossible by construction** — a deterministic knob
+//!   storm mutates policy / budget / deadline / availability between
+//!   decisions and compares the cached pick against a fresh-computed
+//!   one at *every* step; a second storm never invalidates at all, so
+//!   any stale-entry reuse the key structure permitted would surface as
+//!   a divergence.
+
+use spaceinfer::backend::TargetSet;
+use spaceinfer::board::Calibration;
+use spaceinfer::coordinator::{
+    choices_identical, plan_choices_identical, AccelTimeline, CacheStats, DispatchCache,
+    Dispatcher, Pipeline, PipelineConfig, PipelineReport, Policy, ScheduledRun,
+};
+use spaceinfer::model::{Catalog, UseCase};
+use spaceinfer::plan::Planner;
+use spaceinfer::scenario::{self, fuzz};
+use spaceinfer::util::prng::Prng;
+
+const POLICIES: [Policy; 4] =
+    [Policy::Static, Policy::MinLatency, Policy::MinEnergy, Policy::Deadline];
+
+fn catalog() -> Catalog {
+    Catalog::synthetic()
+}
+
+fn calib() -> Calibration {
+    Calibration::default()
+}
+
+/// Run `cfg` with the dispatch cache forced on or off.
+fn run_with_cache(cfg: &PipelineConfig, cache_on: bool) -> PipelineReport {
+    let mut cfg = cfg.clone();
+    cfg.dispatch_cache = cache_on;
+    Pipeline::new(cfg, &catalog(), &calib())
+        .unwrap()
+        .run(None)
+        .unwrap()
+}
+
+/// Every behavioral report field must match bit for bit; only the
+/// `cache` counter block may differ between a cached and an uncached
+/// run.
+fn assert_behavior_identical(a: &PipelineReport, b: &PipelineReport, ctx: &str) {
+    assert_eq!(a.use_case, b.use_case, "{ctx}: use_case");
+    assert_eq!(a.model, b.model, "{ctx}: model");
+    assert_eq!(a.slot, b.slot, "{ctx}: slot");
+    assert_eq!(a.policy, b.policy, "{ctx}: policy");
+    assert_eq!(a.target_mix, b.target_mix, "{ctx}: target_mix");
+    assert_eq!(a.events, b.events, "{ctx}: events");
+    assert_eq!(
+        a.sim_elapsed_s.to_bits(),
+        b.sim_elapsed_s.to_bits(),
+        "{ctx}: sim_elapsed_s"
+    );
+    assert_eq!(
+        a.mean_latency_s.to_bits(),
+        b.mean_latency_s.to_bits(),
+        "{ctx}: mean_latency_s"
+    );
+    assert_eq!(
+        a.p95_latency_s.to_bits(),
+        b.p95_latency_s.to_bits(),
+        "{ctx}: p95_latency_s"
+    );
+    assert_eq!(a.busy_fps.to_bits(), b.busy_fps.to_bits(), "{ctx}: busy_fps");
+    assert_eq!(
+        a.accel_utilization.to_bits(),
+        b.accel_utilization.to_bits(),
+        "{ctx}: accel_utilization"
+    );
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{ctx}: energy_j");
+    assert_eq!(
+        a.predicted_energy_j.to_bits(),
+        b.predicted_energy_j.to_bits(),
+        "{ctx}: predicted_energy_j"
+    );
+    assert_eq!(a.deadline_misses, b.deadline_misses, "{ctx}: deadline_misses");
+    assert_eq!(a.power_sheds, b.power_sheds, "{ctx}: power_sheds");
+    assert_eq!(a.ingress_accepted, b.ingress_accepted, "{ctx}: ingress_accepted");
+    assert_eq!(a.ingress_dropped, b.ingress_dropped, "{ctx}: ingress_dropped");
+    assert_eq!(a.plan_batches, b.plan_batches, "{ctx}: plan_batches");
+    assert_eq!(
+        a.plan_hybrid_batches, b.plan_hybrid_batches,
+        "{ctx}: plan_hybrid_batches"
+    );
+    assert_eq!(
+        a.plan_transfer_s.to_bits(),
+        b.plan_transfer_s.to_bits(),
+        "{ctx}: plan_transfer_s"
+    );
+    assert_eq!(a.downlink_sent, b.downlink_sent, "{ctx}: downlink_sent");
+    assert_eq!(a.downlink_shed, b.downlink_shed, "{ctx}: downlink_shed");
+    assert_eq!(
+        a.downlink_sent_bytes, b.downlink_sent_bytes,
+        "{ctx}: downlink_sent_bytes"
+    );
+    assert_eq!(
+        a.compression_ratio.to_bits(),
+        b.compression_ratio.to_bits(),
+        "{ctx}: compression_ratio"
+    );
+    assert_eq!(
+        a.accuracy.map(f64::to_bits),
+        b.accuracy.map(f64::to_bits),
+        "{ctx}: accuracy"
+    );
+    assert_eq!(a.decisions, b.decisions, "{ctx}: decisions");
+    assert_eq!(a.phases, b.phases, "{ctx}: phases");
+    assert_eq!(a.faults, b.faults, "{ctx}: faults");
+    assert_eq!(a.exec_errors, b.exec_errors, "{ctx}: exec_errors");
+    assert_eq!(
+        a.metrics.counter("batches"),
+        b.metrics.counter("batches"),
+        "{ctx}: batches counter"
+    );
+}
+
+#[test]
+fn cache_on_and_off_runs_are_bit_identical_across_the_grid() {
+    for use_case in [UseCase::Vae, UseCase::Cnet, UseCase::Esperta, UseCase::Mms] {
+        for policy in POLICIES {
+            for targets in [TargetSet::Default, TargetSet::All] {
+                for plan_mode in [false, true] {
+                    for budget in [None, Some(4.0)] {
+                        let cfg = PipelineConfig {
+                            use_case,
+                            n_events: 96,
+                            policy,
+                            targets: targets.clone(),
+                            plan_mode,
+                            power_budget_w: budget,
+                            ..Default::default()
+                        };
+                        let on = run_with_cache(&cfg, true);
+                        let off = run_with_cache(&cfg, false);
+                        let ctx = format!(
+                            "{use_case} {policy:?} {targets:?} plan={plan_mode} \
+                             budget={budget:?}"
+                        );
+                        assert_behavior_identical(&on, &off, &ctx);
+                        // the cache-off leg must not count anything ...
+                        assert_eq!(off.cache, CacheStats::default(), "{ctx}: off");
+                        // ... and the cache-on leg must actually engage
+                        assert!(
+                            on.cache.lookups() + on.cache.bypasses > 0,
+                            "{ctx}: cache never consulted"
+                        );
+                        if matches!(targets, TargetSet::Default) {
+                            assert!(
+                                on.cache.hits > 0,
+                                "{ctx}: steady-state run never hit the cache"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn builtin_scenarios_are_bit_identical_with_cache_on_and_off() {
+    for name in scenario::builtin_names() {
+        let mut sc = scenario::builtin(name).unwrap();
+        sc.config.dispatch_cache = true;
+        let on = scenario::run_scenario(&sc, &catalog(), &calib(), None).unwrap();
+        sc.config.dispatch_cache = false;
+        let off = scenario::run_scenario(&sc, &catalog(), &calib(), None).unwrap();
+        assert_behavior_identical(&on, &off, name);
+        assert_eq!(off.cache, CacheStats::default(), "{name}: off leg counted");
+    }
+}
+
+#[test]
+fn fuzz_scenarios_are_bit_identical_with_cache_on_and_off() {
+    // the generated scenarios always arm the fault injector, so every
+    // batch takes the recovery path: the cache must stand aside
+    // (bypasses only) and change nothing
+    for seed in 1..=10u64 {
+        let mut sc = fuzz::generate(seed);
+        sc.config.dispatch_cache = true;
+        let on = scenario::run_scenario(&sc, &catalog(), &calib(), None).unwrap();
+        sc.config.dispatch_cache = false;
+        let off = scenario::run_scenario(&sc, &catalog(), &calib(), None).unwrap();
+        let ctx = format!("fuzz seed {seed}");
+        assert_behavior_identical(&on, &off, &ctx);
+        assert_eq!(on.cache.lookups(), 0, "{ctx}: armed runs must bypass");
+        assert!(on.cache.bypasses > 0, "{ctx}: bypasses uncounted");
+    }
+}
+
+#[test]
+fn defused_fuzz_scenarios_engage_the_cache_and_stay_bit_identical() {
+    // strip the injector seed so the generated mission timelines (knob
+    // storms included: SetPolicy, Brownout, EnterEclipse, throttle and
+    // SEU events) exercise the *cached* dispatch path for real
+    let mut total_lookups = 0u64;
+    for seed in 1..=10u64 {
+        let mut sc = fuzz::generate(seed);
+        sc.config.fault_seed = None;
+        sc.config.dispatch_cache = true;
+        let on = scenario::run_scenario(&sc, &catalog(), &calib(), None).unwrap();
+        sc.config.dispatch_cache = false;
+        let off = scenario::run_scenario(&sc, &catalog(), &calib(), None).unwrap();
+        let ctx = format!("defused fuzz seed {seed}");
+        assert_behavior_identical(&on, &off, &ctx);
+        assert!(
+            on.cache.lookups() + on.cache.bypasses > 0,
+            "{ctx}: no batch dispatched"
+        );
+        total_lookups += on.cache.lookups();
+    }
+    assert!(total_lookups > 0, "no defused seed ever consulted the cache");
+}
+
+#[test]
+fn pipeline_knob_setters_invalidate_exactly_the_affected_entries() {
+    let catalog = catalog();
+    let calib = calib();
+    let cfg = PipelineConfig {
+        use_case: UseCase::Vae,
+        n_events: 600,
+        policy: Policy::MinLatency,
+        ..Default::default()
+    };
+    let mut p = Pipeline::new(cfg, &catalog, &calib).unwrap();
+    let mut run = p.begin(None);
+    for _ in 0..150 {
+        run.tick().unwrap();
+    }
+    let entries = run.cache_entries();
+    assert!(entries > 0, "steady-state ticks populated no entries");
+    let inv0 = run.cache_stats().invalidations;
+
+    // the deadline knob cannot orphan min-latency entries: zero drops
+    run.set_deadline_s(0.123).unwrap();
+    assert_eq!(run.cache_entries(), entries, "deadline dropped min-latency entries");
+    assert_eq!(run.cache_stats().invalidations, inv0);
+
+    // the budget knob orphans every dynamic-policy entry keyed under
+    // another budget — here, all of them
+    run.set_power_budget_w(Some(3.0));
+    assert_eq!(run.cache_entries(), 0, "budget flip must drop dynamic entries");
+    assert_eq!(run.cache_stats().invalidations, inv0 + entries as u64);
+
+    // repopulate, then a policy switch drops every entry keyed under
+    // another policy (no min-energy entries exist yet)
+    for _ in 0..150 {
+        run.tick().unwrap();
+    }
+    let repop = run.cache_entries();
+    assert!(repop > 0, "post-invalidation ticks repopulated nothing");
+    let inv1 = run.cache_stats().invalidations;
+    run.set_policy(Policy::MinEnergy);
+    assert_eq!(run.cache_entries(), 0, "policy switch must drop old-policy entries");
+    assert_eq!(run.cache_stats().invalidations, inv1 + repop as u64);
+
+    // an availability flip changes the mask in every key: nothing survives
+    for _ in 0..150 {
+        run.tick().unwrap();
+    }
+    assert!(run.cache_entries() > 0);
+    run.set_target_available(0, false);
+    assert_eq!(run.cache_entries(), 0, "mask flip must drop every entry");
+    run.set_target_available(0, true);
+
+    let report = run.finish().unwrap();
+    assert!(report.cache.hits > 0, "the run never hit the cache");
+    assert!(report.cache.invalidations > 0);
+}
+
+/// One deterministic storm step: maybe mutate a knob, maybe grow a
+/// queue, then pick the next decision point.  `invalidate: false`
+/// leaves every stale entry in the table — correctness must not care.
+fn storm_step(
+    rng: &mut Prng,
+    d: &mut Dispatcher,
+    cache: &mut DispatchCache,
+    tls: &mut [AccelTimeline],
+    now_s: f64,
+    invalidate: bool,
+) {
+    match rng.below(8) {
+        0 => {
+            let policy = POLICIES[rng.below(4)];
+            d.policy = policy;
+            if invalidate {
+                cache.invalidate_policy(policy);
+            }
+        }
+        1 => {
+            let budget =
+                if rng.chance(0.5) { Some(rng.range_f64(1.0, 8.0)) } else { None };
+            d.power_budget_w = budget;
+            if invalidate {
+                cache.invalidate_power_budget(budget);
+            }
+        }
+        2 => {
+            let deadline_s = rng.range_f64(0.001, 1.0);
+            d.deadline_s = deadline_s;
+            if invalidate {
+                cache.invalidate_deadline(deadline_s);
+            }
+        }
+        3 => {
+            let index = rng.below(d.registry.len());
+            d.registry.set_available(index, rng.chance(0.7));
+            if invalidate {
+                cache.invalidate_availability(DispatchCache::availability_mask(
+                    &d.registry,
+                ));
+            }
+        }
+        _ => {}
+    }
+    if rng.chance(0.5) {
+        let index = rng.below(d.registry.len());
+        let run = d.run_of(index);
+        tls[index].schedule(now_s, 1 + rng.below(16) as u64, run);
+    }
+}
+
+#[test]
+fn knob_storm_lockstep_cached_equals_fresh_every_step() {
+    for model in ["vae", "esperta", "baseline"] {
+        let mut d = Dispatcher::new(
+            model,
+            &catalog(),
+            &calib(),
+            Policy::MinLatency,
+            0.5,
+            None,
+            &TargetSet::Default,
+        )
+        .unwrap();
+        let mut tls = d.timelines();
+        let mut cache = DispatchCache::new(true);
+        let mut rng = Prng::new(0xCAC4E ^ model.len() as u64);
+        let mut now_s = 0.0;
+        for step in 0..400 {
+            storm_step(&mut rng, &mut d, &mut cache, &mut tls, now_s, true);
+            let n = [1u64, 4, 8][rng.below(3)];
+            let wait_s = rng.range_f64(0.0, 0.4);
+            let fresh = d.choose(&tls, now_s, now_s - wait_s, n);
+            let cached = d.choose_cached(&mut cache, &tls, now_s, now_s - wait_s, n);
+            assert!(
+                choices_identical(&fresh, &cached),
+                "{model} step {step}: cached decision diverged"
+            );
+            now_s += rng.range_f64(0.0, 0.05);
+        }
+        assert!(cache.stats().hits > 0, "{model}: the storm never hit the cache");
+        assert!(cache.stats().misses > 0, "{model}");
+    }
+}
+
+#[test]
+fn stale_entries_without_invalidation_are_unreachable() {
+    // invalidation bounds memory — it is *not* what keeps the cache
+    // correct.  Run the same knob storm but never invalidate: every
+    // orphaned entry stays in the table, and the key structure alone
+    // must keep it unreachable under the mutated knobs.
+    let mut d = Dispatcher::new(
+        "vae",
+        &catalog(),
+        &calib(),
+        Policy::Deadline,
+        0.05,
+        Some(4.0),
+        &TargetSet::Default,
+    )
+    .unwrap();
+    let mut tls = d.timelines();
+    let mut cache = DispatchCache::new(true);
+    let mut rng = Prng::new(0x57A1E);
+    let mut now_s = 0.0;
+    for step in 0..400 {
+        storm_step(&mut rng, &mut d, &mut cache, &mut tls, now_s, false);
+        let n = [1u64, 4, 8][rng.below(3)];
+        let wait_s = rng.range_f64(0.0, 0.4);
+        let fresh = d.choose(&tls, now_s, now_s - wait_s, n);
+        let cached = d.choose_cached(&mut cache, &tls, now_s, now_s - wait_s, n);
+        assert!(
+            choices_identical(&fresh, &cached),
+            "step {step}: a stale entry leaked through the key"
+        );
+        now_s += rng.range_f64(0.0, 0.05);
+    }
+    assert_eq!(cache.stats().invalidations, 0, "this storm never invalidates");
+    assert!(cache.stats().hits > 0);
+}
+
+#[test]
+fn plan_mode_knob_storm_cached_equals_fresh_every_step() {
+    for model in ["vae", "baseline"] {
+        let mut d = Dispatcher::new(
+            model,
+            &catalog(),
+            &calib(),
+            Policy::Static,
+            0.5,
+            None,
+            &TargetSet::Default,
+        )
+        .unwrap();
+        let planner =
+            Planner::build(model, &catalog(), &calib(), &d.registry, &TargetSet::Default)
+                .unwrap();
+        let mut tls = d.timelines();
+        for name in planner.derived_lane_names() {
+            tls.push(AccelTimeline::new(name));
+        }
+        let mut cache = DispatchCache::new(true);
+        let mut rng = Prng::new(0x9_1A4 ^ model.len() as u64);
+        let mut now_s = 0.0;
+        for step in 0..300 {
+            match rng.below(8) {
+                0 => {
+                    let policy = POLICIES[rng.below(4)];
+                    d.policy = policy;
+                    cache.invalidate_policy(policy);
+                }
+                1 => {
+                    let budget =
+                        if rng.chance(0.5) { Some(rng.range_f64(1.0, 8.0)) } else { None };
+                    d.power_budget_w = budget;
+                    cache.invalidate_power_budget(budget);
+                }
+                2 => {
+                    let index = rng.below(d.registry.len());
+                    d.registry.set_available(index, rng.chance(0.7));
+                    cache.invalidate_availability(DispatchCache::availability_mask(
+                        &d.registry,
+                    ));
+                }
+                _ => {}
+            }
+            if rng.chance(0.5) {
+                // grow a queue: registry lanes charge their own run, the
+                // derived lanes a filler of the same shape
+                let index = rng.below(tls.len());
+                let run = if index < d.registry.len() {
+                    d.run_of(index)
+                } else {
+                    ScheduledRun {
+                        setup_s: rng.range_f64(0.001, 0.05),
+                        per_item_s: 0.0,
+                        power_w: 0.0,
+                    }
+                };
+                tls[index].schedule(now_s, 1 + rng.below(16) as u64, run);
+            }
+            let n = [1u64, 4, 8][rng.below(3)];
+            let wait_s = rng.range_f64(0.0, 0.4);
+            let fresh = d.choose_plan(&planner, &tls, now_s, now_s - wait_s, n);
+            let cached =
+                d.choose_plan_cached(&mut cache, &planner, &tls, now_s, now_s - wait_s, n);
+            assert!(
+                plan_choices_identical(&fresh, &cached),
+                "{model} step {step}: cached plan decision diverged"
+            );
+            now_s += rng.range_f64(0.0, 0.05);
+        }
+        assert!(cache.stats().hits > 0, "{model}: the storm never hit the cache");
+        assert!(cache.stats().misses > 0, "{model}");
+    }
+}

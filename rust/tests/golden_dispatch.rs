@@ -27,7 +27,7 @@
 use spaceinfer::backend::{AccelModel, TargetRegistry, TargetSet};
 use spaceinfer::board::{Calibration, Zcu104};
 use spaceinfer::coordinator::{
-    AccelTimeline, Pipeline, PipelineConfig, Policy, ScheduledRun,
+    AccelTimeline, DispatchCache, Pipeline, PipelineConfig, Policy, ScheduledRun,
 };
 use spaceinfer::cpu::A53Model;
 use spaceinfer::dpu::{DpuArch, DpuSchedule};
@@ -341,6 +341,181 @@ fn default_pipeline_static_mix_and_prediction_identity() {
                     );
                 }
             }
+        }
+    }
+}
+
+#[test]
+fn cached_dispatch_matches_legacy_grid_on_off_and_after_invalidation_storm() {
+    // The dispatch-cache leg of the golden suite: walking the exact
+    // state grid of `default_dispatch_decisions_match_legacy_over_state_grid`
+    // through a `DispatchCache` must reproduce every legacy decision —
+    // with the cache enabled (three passes per state, so the second and
+    // third are served from the hot entry / decision table), disabled
+    // (pure fall-through), and immediately after a mid-grid
+    // invalidation storm that flips every knob away and back (dropping
+    // every live entry, as a scenario's knob churn would).
+    let catalog = Catalog::synthetic();
+    let calib = Calibration::default();
+    let policies =
+        [Policy::Static, Policy::MinLatency, Policy::MinEnergy, Policy::Deadline];
+    for model in ["vae", "cnet", "esperta", "baseline"] {
+        let legacy = legacy_targets(model, &catalog, &calib);
+        let primary = legacy
+            .iter()
+            .position(|t| t.0 == if model == "vae" || model == "cnet" { "dpu" } else { "hls" })
+            .unwrap();
+        for policy in policies {
+            for budget in [None, Some(4.0), Some(2.0)] {
+                for deadline_s in [0.0005, 0.1, 10.0] {
+                    let d = spaceinfer::coordinator::Dispatcher::new(
+                        model,
+                        &catalog,
+                        &calib,
+                        policy,
+                        deadline_s,
+                        budget,
+                        &TargetSet::Default,
+                    )
+                    .unwrap();
+                    // one cache per dispatcher, threaded across the whole
+                    // state walk exactly as a run threads it across batches
+                    let mut on = DispatchCache::new(true);
+                    let mut off = DispatchCache::new(false);
+                    let backlog_grid: [Vec<f64>; 3] = [
+                        vec![0.0; legacy.len()],
+                        {
+                            let mut v = vec![0.0; legacy.len()];
+                            v[primary] = 0.25;
+                            v
+                        },
+                        (0..legacy.len()).map(|i| 0.05 * (i + 1) as f64).collect(),
+                    ];
+                    for backlogs in &backlog_grid {
+                        for wait_s in [0.0, 0.06, 0.3] {
+                            for n in [1u64, 8] {
+                                let mut tls: Vec<AccelTimeline> = d.timelines();
+                                for (tl, &q) in tls.iter_mut().zip(backlogs) {
+                                    if q > 0.0 {
+                                        tl.schedule(
+                                            wait_s,
+                                            1,
+                                            ScheduledRun {
+                                                setup_s: q,
+                                                per_item_s: 0.0,
+                                                power_w: 0.0,
+                                            },
+                                        );
+                                    }
+                                }
+                                let want = legacy_choose(
+                                    &legacy, primary, policy, deadline_s,
+                                    budget, backlogs, wait_s, n,
+                                );
+                                for pass in 0..3 {
+                                    if pass == 2 {
+                                        // invalidation storm: every knob
+                                        // flips away and back, so every
+                                        // entry stored so far is dropped
+                                        on.invalidate_policy(policies
+                                            [(policies.iter().position(|&p| p == policy)
+                                                .unwrap()
+                                                + 1)
+                                                % policies.len()]);
+                                        on.invalidate_policy(policy);
+                                        on.invalidate_power_budget(Some(123.0));
+                                        on.invalidate_power_budget(budget);
+                                        on.invalidate_deadline(deadline_s + 1.0);
+                                        on.invalidate_deadline(deadline_s);
+                                        on.invalidate_availability(u64::MAX);
+                                        on.invalidate_availability(
+                                            DispatchCache::availability_mask(&d.registry),
+                                        );
+                                    }
+                                    let got_on = d
+                                        .choose_cached(&mut on, &tls, wait_s, 0.0, n)
+                                        .index;
+                                    let got_off = d
+                                        .choose_cached(&mut off, &tls, wait_s, 0.0, n)
+                                        .index;
+                                    assert_eq!(
+                                        got_on, want,
+                                        "{model} {policy:?} budget={budget:?} \
+                                         deadline={deadline_s} backlogs={backlogs:?} \
+                                         wait={wait_s} n={n} pass={pass} (cache on)"
+                                    );
+                                    assert_eq!(
+                                        got_off, want,
+                                        "{model} {policy:?} budget={budget:?} \
+                                         deadline={deadline_s} backlogs={backlogs:?} \
+                                         wait={wait_s} n={n} pass={pass} (cache off)"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                    assert!(
+                        on.stats().hits > 0,
+                        "{model} {policy:?}: repeat passes never hit the cache"
+                    );
+                    assert_eq!(off.stats(), spaceinfer::coordinator::CacheStats::default());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cached_pipeline_reproduces_the_golden_static_mix_and_predictions() {
+    // the pipeline-level golden pin, repeated with the cache explicitly
+    // on and off: both legs must agree with each other bit for bit and
+    // preserve the deployment-matrix static mix
+    let catalog = Catalog::synthetic();
+    let calib = Calibration::default();
+    for (use_case, expect_static_mix) in [
+        (UseCase::Vae, "dpu"),
+        (UseCase::Esperta, "hls"),
+        (UseCase::Mms, "hls"),
+    ] {
+        for policy in
+            [Policy::Static, Policy::MinLatency, Policy::MinEnergy, Policy::Deadline]
+        {
+            let mut cfg = PipelineConfig {
+                use_case,
+                n_events: 80,
+                seed: 7,
+                policy,
+                ..Default::default()
+            };
+            cfg.dispatch_cache = true;
+            let on = Pipeline::new(cfg.clone(), &catalog, &calib)
+                .unwrap()
+                .run(None)
+                .unwrap();
+            cfg.dispatch_cache = false;
+            let off =
+                Pipeline::new(cfg, &catalog, &calib).unwrap().run(None).unwrap();
+            assert_eq!(on.target_mix, off.target_mix, "{use_case} {policy:?}");
+            assert_eq!(
+                on.predicted_energy_j.to_bits(),
+                off.predicted_energy_j.to_bits(),
+                "{use_case} {policy:?}: predicted energy diverged"
+            );
+            assert_eq!(
+                on.mean_latency_s.to_bits(),
+                off.mean_latency_s.to_bits(),
+                "{use_case} {policy:?}: latency diverged"
+            );
+            assert_eq!(on.deadline_misses, off.deadline_misses);
+            assert_eq!(on.power_sheds, off.power_sheds);
+            if policy == Policy::Static {
+                assert_eq!(
+                    on.target_mix.keys().collect::<Vec<_>>(),
+                    vec![expect_static_mix],
+                    "{use_case}: cached static mix key"
+                );
+            }
+            assert!(on.cache.hits > 0, "{use_case} {policy:?}: cache never hit");
         }
     }
 }
