@@ -16,11 +16,14 @@ use std::path::PathBuf;
 use spaceinfer::backend::{AccelModel, TargetRegistry, TargetSet};
 use spaceinfer::board::Calibration;
 use spaceinfer::coordinator::{
-    AccelTimeline, DispatchCache, Dispatcher, Policy, Router,
+    AccelTimeline, DispatchCache, Dispatcher, PipelineConfig, Policy, Router,
 };
+use spaceinfer::fleet::{self, FleetConfig};
 use spaceinfer::model::catalog::Catalog;
 use spaceinfer::model::{Precision, UseCase};
 use spaceinfer::plan::Planner;
+use spaceinfer::rad::ScrubPolicy;
+use spaceinfer::scenario::{Phase, Scenario};
 use spaceinfer::runtime::{Engine, ExecutorPool, GoldenIo, InputSet, PoolConfig};
 use spaceinfer::util::benchkit::{bench, throughput};
 use spaceinfer::util::json::Json;
@@ -41,6 +44,19 @@ const MIN_CACHE_HIT_RATE: f64 = 0.5;
 /// what a run's flush cadence produces (drained queues re-seen batch
 /// after batch).
 const CACHE_REPEAT: usize = 16;
+
+/// Constellation size for the fleet-scaling section.
+const FLEET_CRAFTS: usize = 64;
+
+/// CI regression floor: the work-stealing fleet pool must clear this
+/// many × the single-thread craft rate at available parallelism.
+/// Enforced only under `BENCH_ENFORCE_FLEET=1` *and* on runners with at
+/// least [`MIN_FLEET_GATE_CORES`] cores — a 4x floor is meaningless on
+/// a 2-core box, so smaller machines report but never fail.
+const MIN_FLEET_SPEEDUP_X: f64 = 4.0;
+
+/// Minimum core count for the fleet speedup gate to be binding.
+const MIN_FLEET_GATE_CORES: usize = 8;
 
 fn repo_root() -> PathBuf {
     let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
@@ -270,6 +286,89 @@ fn cache_rows(catalog: &Catalog) -> (BTreeMap<String, Json>, bool) {
     (rows, gate_ok)
 }
 
+/// Fleet-scaling section: crafts/s for a contested constellation at 1
+/// worker thread vs available parallelism, plus the bit-identity
+/// cross-check (parallelism must be pure speedup).  Returns the JSON
+/// rows and whether the ≥[`MIN_FLEET_SPEEDUP_X`] gate holds.
+fn fleet_rows(catalog: &Catalog) -> (BTreeMap<String, Json>, bool) {
+    let calib = Calibration::default();
+    // a compact contested mission: tight per-craft downlink so pass
+    // arbitration always has demand, three phases so the epoch barrier
+    // fires more than once
+    let sc = Scenario {
+        name: "bench-fleet".into(),
+        summary: "fleet-scaling bench mission".into(),
+        config: PipelineConfig {
+            use_case: UseCase::Esperta,
+            cadence_s: 0.1,
+            downlink_budget: 64,
+            policy: Policy::Static,
+            ..Default::default()
+        },
+        scrub: ScrubPolicy { period_s: 60.0 },
+        phases: vec![
+            Phase::new("cruise", 30, vec![]),
+            Phase::new("dense", 40, vec![]),
+            Phase::new("quiet", 10, vec![]),
+        ],
+    };
+    let avail =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let cfg = |threads: usize| FleetConfig {
+        crafts: FLEET_CRAFTS,
+        threads,
+        master_seed: 42,
+        pass_budget_bytes: 4_096,
+        pass_link_bytes_per_s: 125_000.0,
+        relay: true,
+        planes: 4,
+        stagger_events: 7,
+    };
+    // determinism cross-check first: the parallel report must be
+    // byte-identical to the serial one before its speed means anything
+    let serial = fleet::run_fleet(&sc, catalog, &calib, &cfg(1)).expect("fleet");
+    let parallel =
+        fleet::run_fleet(&sc, catalog, &calib, &cfg(avail)).expect("fleet");
+    assert_eq!(
+        serial.render(),
+        parallel.render(),
+        "fleet report diverged between 1 and {avail} threads"
+    );
+
+    let s1 = bench(&format!("fleet {FLEET_CRAFTS} crafts, 1 thread"), 2, 8, || {
+        fleet::run_fleet(&sc, catalog, &calib, &cfg(1)).expect("fleet");
+    });
+    let sn = bench(
+        &format!("fleet {FLEET_CRAFTS} crafts, {avail} threads"),
+        2,
+        8,
+        || {
+            fleet::run_fleet(&sc, catalog, &calib, &cfg(avail)).expect("fleet");
+        },
+    );
+    let cps1 = throughput(FLEET_CRAFTS as u64, s1.median());
+    let cpsn = throughput(FLEET_CRAFTS as u64, sn.median());
+    let speedup = cpsn / cps1.max(1e-12);
+    println!("{}  -> {:.1} crafts/s", s1.report(), cps1);
+    println!("{}  -> {:.1} crafts/s", sn.report(), cpsn);
+    println!("  fleet scaling: {speedup:.2}x on {avail} core(s)");
+
+    let gate_ok = speedup >= MIN_FLEET_SPEEDUP_X;
+    let mut rows = BTreeMap::new();
+    rows.insert("crafts".into(), Json::Num(FLEET_CRAFTS as f64));
+    rows.insert("threads".into(), Json::Num(avail as f64));
+    rows.insert("crafts_per_s_1t".into(), Json::Num(cps1));
+    rows.insert("crafts_per_s_nt".into(), Json::Num(cpsn));
+    rows.insert("speedup_x".into(), Json::Num(speedup));
+    rows.insert("min_speedup_x".into(), Json::Num(MIN_FLEET_SPEEDUP_X));
+    rows.insert(
+        "gate_cores_min".into(),
+        Json::Num(MIN_FLEET_GATE_CORES as f64),
+    );
+    rows.insert("gate_ok".into(), Json::Num(gate_ok as u8 as f64));
+    (rows, gate_ok)
+}
+
 fn main() {
     let dir = std::path::Path::new("artifacts");
     let have_artifacts = Catalog::is_present(dir);
@@ -295,6 +394,14 @@ fn main() {
     println!("== dispatch cache (batches/s, cached vs uncached) ==");
     let (cache_section, cache_gate_ok) = cache_rows(&catalog);
     doc.insert("cache".to_string(), Json::Obj(cache_section));
+    println!();
+
+    // fleet-scaling section: work-stealing constellation shards,
+    // 1 thread vs available parallelism (artifact-free; CI gates on it
+    // when the runner has enough cores)
+    println!("== fleet scaling (crafts/s, 1 thread vs available parallelism) ==");
+    let (fleet_section, fleet_gate_ok) = fleet_rows(&catalog);
+    doc.insert("fleet".to_string(), Json::Obj(fleet_section));
     println!();
 
     let mut model_rows: BTreeMap<String, Json> = BTreeMap::new();
@@ -413,5 +520,29 @@ fn main() {
             out.display()
         );
         std::process::exit(1);
+    }
+
+    // fleet gate (opt-in + core-gated): `BENCH_ENFORCE_FLEET=1` fails
+    // the build when the work-stealing pool scales below the floor,
+    // but only on runners with enough cores for the floor to be
+    // physically reachable — small machines report, never fail.
+    if std::env::var("BENCH_ENFORCE_FLEET").is_ok_and(|v| v == "1") {
+        let cores =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if cores < MIN_FLEET_GATE_CORES {
+            eprintln!(
+                "fleet gate skipped: {cores} core(s) < {MIN_FLEET_GATE_CORES} \
+                 (the {MIN_FLEET_SPEEDUP_X}x floor assumes >= \
+                 {MIN_FLEET_GATE_CORES}-core runners)"
+            );
+        } else if !fleet_gate_ok {
+            eprintln!(
+                "fleet gate FAILED: {FLEET_CRAFTS}-craft fleet must clear \
+                 {MIN_FLEET_SPEEDUP_X}x the single-thread craft rate \
+                 (see the fleet section of {})",
+                out.display()
+            );
+            std::process::exit(1);
+        }
     }
 }

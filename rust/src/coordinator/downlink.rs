@@ -26,6 +26,11 @@ pub struct DownlinkManager {
     pub sent_bytes: u64,
     /// Decisions shed.
     pub shed_count: u64,
+    /// Bytes the shed decisions would have cost — the backlog a later
+    /// ground-station pass (or a relay neighbor) could still recover.
+    /// The fleet layer's barrier arbitration reads this as per-craft
+    /// downlink demand.
+    pub shed_bytes: u64,
     /// Decisions sent.
     pub sent_count: u64,
     /// Raw sensor bytes represented by everything offered (what a
@@ -40,6 +45,7 @@ impl DownlinkManager {
             budget_bytes,
             sent_bytes: 0,
             shed_count: 0,
+            shed_bytes: 0,
             sent_count: 0,
             raw_bytes_represented: 0,
         }
@@ -81,6 +87,7 @@ impl DownlinkManager {
             || (over_budget && decision.priority() < 200)
         {
             self.shed_count += 1;
+            self.shed_bytes += bytes;
             return DownlinkVerdict::Shed;
         }
         self.sent_bytes += bytes;
@@ -139,6 +146,8 @@ mod tests {
         // now routine labels are shed, alerts still pass
         assert_eq!(d.offer(&label(), 1000), DownlinkVerdict::Shed);
         assert_eq!(d.offer(&alert(), 1000), DownlinkVerdict::Sent);
+        // shed bytes track the demand the fleet layer arbitrates over
+        assert_eq!(d.shed_bytes, label().downlink_bytes());
     }
 
     #[test]

@@ -43,6 +43,8 @@ pub use dispatch::{
     default_deadline_s, BatchCost, Choice, Dispatcher, PlanChoice, PlanCost, Policy,
 };
 pub use downlink::{DownlinkManager, DownlinkVerdict};
-pub use pipeline::{PhaseReport, Pipeline, PipelineConfig, PipelineReport, PipelineRun};
+pub use pipeline::{
+    OwnedPipelineRun, PhaseReport, Pipeline, PipelineConfig, PipelineReport, PipelineRun,
+};
 pub use router::{Route, Router, Slot};
 pub use scheduler::{AccelTimeline, ScheduledRun};

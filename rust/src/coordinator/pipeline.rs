@@ -36,6 +36,7 @@
 //! to the mission phase that dispatched it.
 
 use std::collections::BTreeMap;
+use std::ops::{Deref, DerefMut};
 use std::sync::mpsc;
 use std::time::Duration;
 
@@ -275,6 +276,9 @@ pub struct PipelineReport {
     pub downlink_shed: u64,
     /// Bytes actually downlinked.
     pub downlink_sent_bytes: u64,
+    /// Bytes the shed decisions would have cost — the per-craft
+    /// downlink demand signal the fleet layer aggregates.
+    pub downlink_shed_bytes: u64,
     /// Raw sensor bytes represented per byte downlinked.
     pub compression_ratio: f64,
     /// Decision accuracy vs ground truth, when truth exists.
@@ -1362,16 +1366,117 @@ impl Pipeline {
         &mut self,
         executor: Option<&'e ExecutorPool>,
     ) -> PipelineRun<'_, 'e> {
-        let cfg = &self.config;
+        let reaper = executor.map(Reaper::new);
+        PipelineRun { core: RunCore::build(PipelineHandle::Borrowed(self)), reaper }
+    }
+
+    /// Open an *owned* run: like [`Pipeline::begin`] but the run takes
+    /// the pipeline with it, so the whole state machine is `Send` and
+    /// can migrate across threads — the seam `crate::fleet` uses to
+    /// shard one run per spacecraft over a scoped worker pool.
+    ///
+    /// Timing-only by construction: real-numerics reaping borrows the
+    /// executor pool for the life of the run, which would pin it to one
+    /// thread, so the owned form structurally excludes it.  Decisions
+    /// come from the deterministic surrogate, exactly as
+    /// `Pipeline::begin(None)`.
+    pub fn begin_owned(self) -> OwnedPipelineRun {
+        OwnedPipelineRun {
+            core: Some(RunCore::build(PipelineHandle::Owned(Box::new(self)))),
+        }
+    }
+
+    /// Run the pipeline: the thin driver loop over [`Pipeline::begin`],
+    /// `config.n_events` ticks, and [`PipelineRun::finish`].  `executor`
+    /// supplies real numerics through the sharded pool; pass `None` for
+    /// a timing-only (simulated outputs) run — decisions then come from
+    /// a deterministic surrogate so downstream stages still exercise.
+    pub fn run(&mut self, executor: Option<&ExecutorPool>) -> Result<PipelineReport> {
+        let n = self.config.n_events;
+        let mut run = self.begin(executor);
+        for _ in 0..n {
+            run.tick()?;
+        }
+        run.finish()
+    }
+}
+
+/// How a run holds its pipeline: borrowed (the classic
+/// [`Pipeline::begin`] form) or owned (the `Send`-able
+/// [`Pipeline::begin_owned`] form).  `Deref` to [`Pipeline`] keeps the
+/// run's method bodies identical across both, which is what makes the
+/// borrowed and owned state machines bit-identical by construction.
+enum PipelineHandle<'p> {
+    /// Run borrows the pipeline; knob mutations persist after `finish`.
+    Borrowed(&'p mut Pipeline),
+    /// Run owns the pipeline; the whole machine can cross threads.
+    Owned(Box<Pipeline>),
+}
+
+impl Deref for PipelineHandle<'_> {
+    type Target = Pipeline;
+    fn deref(&self) -> &Pipeline {
+        match self {
+            PipelineHandle::Borrowed(p) => p,
+            PipelineHandle::Owned(p) => p,
+        }
+    }
+}
+
+impl DerefMut for PipelineHandle<'_> {
+    fn deref_mut(&mut self) -> &mut Pipeline {
+        match self {
+            PipelineHandle::Borrowed(p) => p,
+            PipelineHandle::Owned(p) => p,
+        }
+    }
+}
+
+/// The run state machine proper — everything a [`PipelineRun`] is,
+/// *minus* the reaper (whose executor-pool borrow is the one thing
+/// that cannot move across threads).  Public entry points thread the
+/// reaper back in as a parameter, so the borrowed and owned run types
+/// are thin wrappers over identical logic.
+struct RunCore<'p> {
+    pipeline: PipelineHandle<'p>,
+    stream: SensorStream,
+    batcher: Batcher,
+    ingress: Option<BoundedQueue<SensorEvent>>,
+    state: RunState,
+    emitted: u64,
+    base_cadence_s: f64,
+    base_deadline_s: f64,
+}
+
+/// One in-progress pipeline run: the steppable state machine.
+///
+/// Obtained from [`Pipeline::begin`].  Each [`PipelineRun::tick`]
+/// advances the virtual clock by one sensor event (generate → ingress
+/// admission → batch → dispatch → decide/downlink); between ticks the
+/// caller may retune any operational knob — dispatch policy, power
+/// budget, deadline, cadence/burst, downlink budget, per-target
+/// availability — and the next dispatch obeys it.  `crate::scenario`
+/// drives this interface from declarative mission timelines, and
+/// `crate::fleet` drives it through [`OwnedPipelineRun::with_run`].
+pub struct PipelineRun<'p, 'e> {
+    core: RunCore<'p>,
+    reaper: Option<Reaper<'e>>,
+}
+
+impl<'p> RunCore<'p> {
+    /// Shared constructor behind [`Pipeline::begin`] (borrowed handle)
+    /// and [`Pipeline::begin_owned`] (owned handle).
+    fn build(pipeline: PipelineHandle<'p>) -> RunCore<'p> {
+        let cfg = &pipeline.config;
         let stream = SensorStream::new(cfg.use_case, cfg.seed, cfg.cadence_s);
-        let batcher = Batcher::new(&self.route.model, cfg.max_batch, cfg.max_wait_s);
+        let batcher = Batcher::new(&pipeline.route.model, cfg.max_batch, cfg.max_wait_s);
         let ingress = cfg
             .ingress_cap
             .map(|cap| BoundedQueue::new(cap, cfg.ingress_policy));
         // plan mode appends one timeline per derived (plan-only) lane
         // after the registry lanes, matching `Planner::flat` indexing
-        let mut timelines = self.dispatcher.timelines();
-        if let Some(p) = &self.planner {
+        let mut timelines = pipeline.dispatcher.timelines();
+        if let Some(p) = &pipeline.planner {
             for name in p.derived_lane_names() {
                 timelines.push(AccelTimeline::new(name));
             }
@@ -1380,7 +1485,7 @@ impl Pipeline {
         // essential configuration bits, normalized to the fleet max
         // (the A53 exposes none and never draws a corruption)
         let injector = cfg.fault_seed.map(|seed| {
-            let bits: Vec<u64> = self
+            let bits: Vec<u64> = pipeline
                 .dispatcher
                 .registry
                 .targets()
@@ -1391,7 +1496,8 @@ impl Pipeline {
             let exposure = bits.iter().map(|&b| b as f64 / max as f64).collect();
             FaultInjector::new(seed, cfg.fault_profile, exposure)
         });
-        let fault = FaultState::new(self.dispatcher.registry.len(), injector, cfg.recovery);
+        let fault =
+            FaultState::new(pipeline.dispatcher.registry.len(), injector, cfg.recovery);
         let state = RunState {
             timelines,
             downlink: DownlinkManager::new(cfg.downlink_budget),
@@ -1416,58 +1522,21 @@ impl Pipeline {
             cache: DispatchCache::new(cfg.dispatch_cache),
         };
         let base_cadence_s = cfg.cadence_s;
-        let reaper = executor.map(Reaper::new);
-        let base_deadline_s = self.dispatcher.deadline_s;
-        PipelineRun {
+        let base_deadline_s = pipeline.dispatcher.deadline_s;
+        RunCore {
             stream,
             batcher,
             ingress,
             state,
-            reaper,
             emitted: 0,
             base_cadence_s,
             base_deadline_s,
-            pipeline: self,
+            pipeline,
         }
-    }
-
-    /// Run the pipeline: the thin driver loop over [`Pipeline::begin`],
-    /// `config.n_events` ticks, and [`PipelineRun::finish`].  `executor`
-    /// supplies real numerics through the sharded pool; pass `None` for
-    /// a timing-only (simulated outputs) run — decisions then come from
-    /// a deterministic surrogate so downstream stages still exercise.
-    pub fn run(&mut self, executor: Option<&ExecutorPool>) -> Result<PipelineReport> {
-        let n = self.config.n_events;
-        let mut run = self.begin(executor);
-        for _ in 0..n {
-            run.tick()?;
-        }
-        run.finish()
     }
 }
 
-/// One in-progress pipeline run: the steppable state machine.
-///
-/// Obtained from [`Pipeline::begin`].  Each [`PipelineRun::tick`]
-/// advances the virtual clock by one sensor event (generate → ingress
-/// admission → batch → dispatch → decide/downlink); between ticks the
-/// caller may retune any operational knob — dispatch policy, power
-/// budget, deadline, cadence/burst, downlink budget, per-target
-/// availability — and the next dispatch obeys it.  `crate::scenario`
-/// drives this interface from declarative mission timelines.
-pub struct PipelineRun<'p, 'e> {
-    pipeline: &'p mut Pipeline,
-    stream: SensorStream,
-    batcher: Batcher,
-    ingress: Option<BoundedQueue<SensorEvent>>,
-    state: RunState,
-    reaper: Option<Reaper<'e>>,
-    emitted: u64,
-    base_cadence_s: f64,
-    base_deadline_s: f64,
-}
-
-impl PipelineRun<'_, '_> {
+impl RunCore<'_> {
     /// The virtual-clock frontier (s): the timestamp the next generated
     /// event will carry.
     pub fn now_s(&self) -> f64 {
@@ -1734,7 +1803,7 @@ impl PipelineRun<'_, '_> {
     /// Advance the virtual clock by exactly one sensor event: generate
     /// it, run ingress admission (when configured), feed the batcher,
     /// and dispatch whatever flushes.
-    pub fn tick(&mut self) -> Result<()> {
+    fn tick(&mut self, reaper: &mut Option<Reaper<'_>>) -> Result<()> {
         let ev = self.stream.next_event();
         let now = ev.t_s;
         self.tick_faults(now);
@@ -1744,22 +1813,22 @@ impl PipelineRun<'_, '_> {
             self.state.phases[idx].events += 1;
         }
         if let Some(b) = self.batcher.poll(now) {
-            self.pipeline.dispatch(b, &mut self.state, &mut self.reaper)?;
+            self.pipeline.dispatch(b, &mut self.state, reaper)?;
         }
         if self.ingress.is_none() {
             if let Some(b) = self.batcher.offer(ev, now) {
-                self.pipeline.dispatch(b, &mut self.state, &mut self.reaper)?;
+                self.pipeline.dispatch(b, &mut self.state, reaper)?;
             }
             return Ok(());
         }
         let dropped_before = self.ingress.as_ref().map(|q| q.dropped).unwrap_or(0);
         // free queue space first — if the backlog has drained since the
         // last tick, the pooled events leave before the new one arrives
-        self.drain_ingress(now)?;
+        self.drain_ingress(now, reaper)?;
         if let Some(q) = self.ingress.as_mut() {
             q.push(ev);
         }
-        self.drain_ingress(now)?;
+        self.drain_ingress(now, reaper)?;
         let dropped_now = self.ingress.as_ref().map(|q| q.dropped).unwrap_or(0);
         let shed = dropped_now - dropped_before;
         if shed > 0 {
@@ -1774,7 +1843,11 @@ impl PipelineRun<'_, '_> {
     /// some in-service target is keeping up.  Each release may flush a
     /// batch, which grows the backlog, so the gate is re-checked per
     /// event.
-    fn drain_ingress(&mut self, now_s: f64) -> Result<()> {
+    fn drain_ingress(
+        &mut self,
+        now_s: f64,
+        reaper: &mut Option<Reaper<'_>>,
+    ) -> Result<()> {
         loop {
             if !self.admission_open(now_s) {
                 return Ok(());
@@ -1784,7 +1857,7 @@ impl PipelineRun<'_, '_> {
                 None => return Ok(()),
             };
             if let Some(b) = self.batcher.offer(ev, now_s) {
-                self.pipeline.dispatch(b, &mut self.state, &mut self.reaper)?;
+                self.pipeline.dispatch(b, &mut self.state, reaper)?;
             }
         }
     }
@@ -1792,7 +1865,7 @@ impl PipelineRun<'_, '_> {
     /// Drain everything in flight and assemble the report.  For a
     /// constant-cadence single-phase run the aggregate fields are
     /// bit-identical to the pre-steppable `Pipeline::run`.
-    pub fn finish(mut self) -> Result<PipelineReport> {
+    fn finish(mut self, mut reaper: Option<Reaper<'_>>) -> Result<PipelineReport> {
         let cfg = self.pipeline.config.clone();
         // release any events still pooled at ingress: they were
         // accepted, so they run (the queue bounds memory, not the tail)
@@ -1803,7 +1876,7 @@ impl PipelineRun<'_, '_> {
                 None => break,
             };
             if let Some(b) = self.batcher.offer(ev, now) {
-                self.pipeline.dispatch(b, &mut self.state, &mut self.reaper)?;
+                self.pipeline.dispatch(b, &mut self.state, &mut reaper)?;
             }
         }
         // end-of-run drain: by drain_t the wait timer is always overdue,
@@ -1814,12 +1887,12 @@ impl PipelineRun<'_, '_> {
         // it equals n_events * cadence_s, the pre-steppable formula.)
         let drain_t = self.stream.t_s + cfg.max_wait_s;
         if let Some(b) = self.batcher.poll(drain_t) {
-            self.pipeline.dispatch(b, &mut self.state, &mut self.reaper)?;
+            self.pipeline.dispatch(b, &mut self.state, &mut reaper)?;
         }
         if let Some(b) = self.batcher.flush(drain_t) {
-            self.pipeline.dispatch(b, &mut self.state, &mut self.reaper)?;
+            self.pipeline.dispatch(b, &mut self.state, &mut reaper)?;
         }
-        if let Some(r) = &mut self.reaper {
+        if let Some(r) = &mut reaper {
             r.drain_all(cfg.use_case, self.pipeline.input_bytes, &mut self.state)?;
         }
 
@@ -1896,6 +1969,7 @@ impl PipelineRun<'_, '_> {
             downlink_sent: downlink.sent_count,
             downlink_shed: downlink.shed_count,
             downlink_sent_bytes: downlink.sent_bytes,
+            downlink_shed_bytes: downlink.shed_bytes,
             compression_ratio: downlink.compression_ratio(),
             accuracy: if with_truth > 0 {
                 Some(correct as f64 / with_truth as f64)
@@ -1911,6 +1985,214 @@ impl PipelineRun<'_, '_> {
         })
     }
 }
+
+impl PipelineRun<'_, '_> {
+    /// The virtual-clock frontier (s): the timestamp the next generated
+    /// event will carry.
+    pub fn now_s(&self) -> f64 {
+        self.core.now_s()
+    }
+
+    /// Sensor events generated so far.
+    pub fn events_emitted(&self) -> u64 {
+        self.core.events_emitted()
+    }
+
+    /// The deadline the run started with (s) — what
+    /// [`PipelineRun::set_deadline_s`] restores after a storm tightens
+    /// it.
+    pub fn base_deadline_s(&self) -> f64 {
+        self.core.base_deadline_s()
+    }
+
+    /// Dispatch-cache counters so far (all zero when the cache is off).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.core.cache_stats()
+    }
+
+    /// Live dispatch-cache entries — what the invalidation-exactness
+    /// tests count before and after a knob mutation.
+    pub fn cache_entries(&self) -> usize {
+        self.core.cache_entries()
+    }
+
+    /// Bytes sent over the downlink so far.
+    pub fn downlink_sent_bytes(&self) -> u64 {
+        self.core.state.downlink.sent_bytes
+    }
+
+    /// Bytes shed from the downlink so far — the unmet demand the
+    /// fleet layer arbitrates at ground-station pass barriers.
+    pub fn downlink_shed_bytes(&self) -> u64 {
+        self.core.state.downlink.shed_bytes
+    }
+
+    /// Switch the dispatch policy; the next batch is scored under it.
+    /// Cache entries keyed under any other policy are invalidated.
+    pub fn set_policy(&mut self, policy: Policy) {
+        self.core.set_policy(policy);
+    }
+
+    /// Set or lift the mission power budget (cap on active MPSoC draw,
+    /// W).  Only dynamic policies consult it — and only their cache
+    /// entries are invalidated.
+    pub fn set_power_budget_w(&mut self, budget_w: Option<f64>) {
+        self.core.set_power_budget_w(budget_w);
+    }
+
+    /// Retune the end-to-end deadline (s).  Errors on a non-positive
+    /// or non-finite value instead of aborting a mission run.  Only
+    /// `deadline`-policy cache entries are invalidated — no other
+    /// policy reads the deadline.
+    pub fn set_deadline_s(&mut self, deadline_s: f64) -> Result<()> {
+        self.core.set_deadline_s(deadline_s)
+    }
+
+    /// Change the sensor cadence (s between samples) from the next
+    /// inter-event gap on.
+    pub fn set_cadence_s(&mut self, cadence_s: f64) {
+        self.core.set_cadence_s(cadence_s);
+    }
+
+    /// Multiply the *base* event rate: `set_burst(100.0)` runs the
+    /// sensor 100× faster than the configured cadence,
+    /// `set_burst(1.0)` restores it.  Errors on a non-positive or
+    /// non-finite multiplier instead of aborting a mission run.
+    pub fn set_burst(&mut self, burst_x: f64) -> Result<()> {
+        self.core.set_burst(burst_x)
+    }
+
+    /// Grant additional downlink byte budget (a ground-station pass).
+    pub fn grant_downlink_bytes(&mut self, bytes: u64) {
+        self.core.grant_downlink_bytes(bytes);
+    }
+
+    /// Registry index of a dispatch target by name, if registered for
+    /// this run's model.
+    pub fn target_index(&self, name: &str) -> Option<usize> {
+        self.core.target_index(name)
+    }
+
+    /// Mark a dispatch target in or out of service (see
+    /// [`crate::backend::TargetRegistry::set_available`]).  The next
+    /// batch re-dispatches around an out-of-service target.
+    pub fn set_target_available(&mut self, index: usize, available: bool) {
+        self.core.set_target_available(index, available);
+    }
+
+    /// Open a downlink dropout window from the current virtual time:
+    /// decisions whose batch completes inside it are lost before the
+    /// byte budget is consulted.  Overlapping windows extend.
+    pub fn set_link_dropout(&mut self, duration_s: f64) -> Result<()> {
+        self.core.set_link_dropout(duration_s)
+    }
+
+    /// Open a brownout window from the current virtual time: every
+    /// policy (including `static`) dispatches under `budget_w` until it
+    /// closes — degraded-mode dispatch.  Re-opening overwrites.
+    pub fn set_brownout(&mut self, budget_w: f64, duration_s: f64) -> Result<()> {
+        self.core.set_brownout(budget_w, duration_s)
+    }
+
+    /// Open a thermal throttle window on one registry target from the
+    /// current virtual time: its setup and per-item latencies multiply
+    /// by `derate_x` until the window closes.
+    pub fn set_thermal_throttle(
+        &mut self,
+        index: usize,
+        derate_x: f64,
+        duration_s: f64,
+    ) -> Result<()> {
+        self.core.set_thermal_throttle(index, derate_x, duration_s)
+    }
+
+    /// Queue one forced transient execution failure against a registry
+    /// target — consumed (and counted) by the next attempt dispatched
+    /// there.  The deterministic handle mission events and tests use.
+    pub fn inject_transient_fault(&mut self, index: usize) -> Result<()> {
+        self.core.inject_transient_fault(index)
+    }
+
+    /// Queue one forced SEU corruption against a registry target —
+    /// consumed by the next attempt there (a single TMR replica
+    /// outvotes it; without TMR the attempt fails and recovers).
+    pub fn inject_corruption(&mut self, index: usize) -> Result<()> {
+        self.core.inject_corruption(index)
+    }
+
+    /// Start a new report phase at the current virtual time.  All
+    /// subsequent batches, drops, and downlink verdicts are credited to
+    /// it.  The very first call renames the initial `"run"` placeholder
+    /// in place (so a scenario's first phase is the report's first
+    /// phase); later calls close the current phase and open a new one.
+    pub fn begin_phase(&mut self, name: &str) {
+        self.core.begin_phase(name);
+    }
+
+    /// Advance the virtual clock by exactly one sensor event: generate
+    /// it, run ingress admission (when configured), feed the batcher,
+    /// and dispatch whatever flushes.
+    pub fn tick(&mut self) -> Result<()> {
+        self.core.tick(&mut self.reaper)
+    }
+
+    /// Drain everything in flight and assemble the report.  For a
+    /// constant-cadence single-phase run the aggregate fields are
+    /// bit-identical to the pre-steppable `Pipeline::run`.
+    pub fn finish(self) -> Result<PipelineReport> {
+        let PipelineRun { core, reaper } = self;
+        core.finish(reaper)
+    }
+}
+
+/// An owned, `Send` pipeline run from [`Pipeline::begin_owned`]: the
+/// fleet layer's per-spacecraft shard, free to migrate between worker
+/// threads because it holds no executor-pool borrow (timing-only by
+/// construction).
+///
+/// Drive it through [`OwnedPipelineRun::with_run`], which lends the
+/// state machine out as an ordinary [`PipelineRun`] so every scenario
+/// hook (`tick`, `begin_phase`, knob setters, `apply_event`) works
+/// unchanged, then [`OwnedPipelineRun::finish`] it for the report.
+pub struct OwnedPipelineRun {
+    /// `Some` until `finish`; `take`n around each `with_run` lend.
+    core: Option<RunCore<'static>>,
+}
+
+impl OwnedPipelineRun {
+    /// Lend the run out as a [`PipelineRun`] for `f` to drive.
+    ///
+    /// # Panics
+    /// Panics if called after [`OwnedPipelineRun::finish`] consumed the
+    /// run, or re-entrantly from inside `f` (the core is lent out).
+    pub fn with_run<T>(
+        &mut self,
+        f: impl FnOnce(&mut PipelineRun<'static, 'static>) -> T,
+    ) -> T {
+        let core = self.core.take().expect("owned run already finished");
+        let mut run = PipelineRun { core, reaper: None };
+        let out = f(&mut run);
+        self.core = Some(run.core);
+        out
+    }
+
+    /// Drain everything in flight and assemble the report — the owned
+    /// counterpart of [`PipelineRun::finish`].
+    ///
+    /// # Panics
+    /// Panics if the run was already finished.
+    pub fn finish(mut self) -> Result<PipelineReport> {
+        let core = self.core.take().expect("owned run already finished");
+        core.finish(None)
+    }
+}
+
+/// Compile-time pin: an owned run must stay `Send`, or fleet shards
+/// could not migrate between scoped worker threads.  Breaks the build
+/// (rather than a distant fleet test) if a non-`Send` type ever lands
+/// inside the pipeline state machine.
+const fn assert_send<T: Send>() {}
+const _: () = assert_send::<OwnedPipelineRun>();
 
 /// Nearest-rank percentile over a sorted sample: the smallest value
 /// with at least `q` of the mass at or below it (`ceil(q*n)` as a

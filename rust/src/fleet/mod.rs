@@ -1,0 +1,452 @@
+//! Constellation-scale fleet simulation: N spacecraft fly the same
+//! mission scenario in parallel shards, contending for shared
+//! ground-station passes.
+//!
+//! # Sharding
+//!
+//! Each craft is one [`OwnedPipelineRun`] (its own pipeline, sensor
+//! stream, and RNG streams) driven by its own
+//! [`ScenarioCursor`], seeded with
+//! [`stream_seed`]`(master, craft)` so craft *i* is bit-identical
+//! regardless of fleet size or thread count.  Crafts advance in
+//! *epochs*: one scenario phase per epoch, fanned across the
+//! work-stealing pool in [`shard`], with a barrier after every epoch.
+//!
+//! # Barrier arbitration
+//!
+//! Each epoch barrier is one ground-station pass.  A shared byte
+//! budget ([`FleetConfig::pass_budget_bytes`]) is granted to crafts
+//! *in craft-id order* against their accumulated downlink demand
+//! (bytes their own manager shed), so contention deterministically
+//! starves late claimants; unmet demand stalls the craft
+//! (demand / link rate) and, with [`FleetConfig::relay`], routes to
+//! the next craft's following pass.  Arbitration runs on the calling
+//! thread between epochs — never inside the pool.
+//!
+//! # Determinism argument
+//!
+//! Workers only ever mutate *their claimed craft*; every cross-craft
+//! byte flows through the sequential barrier.  Per-craft seeds are a
+//! pure function of `(master, craft)`.  Hence the [`FleetReport`] is
+//! bit-identical for `--threads 1` and any `--threads T` — parallelism
+//! is pure speedup, which the determinism suite pins at 256 crafts and
+//! `benches/runtime.rs` prices.
+
+pub mod report;
+pub mod shard;
+
+use anyhow::{bail, Result};
+use std::sync::Mutex;
+
+use crate::board::Calibration;
+use crate::coordinator::{OwnedPipelineRun, Pipeline};
+use crate::model::catalog::Catalog;
+use crate::scenario::{Phase, Scenario, ScenarioCursor};
+use crate::util::hash::fnv1a;
+use crate::util::prng::stream_seed;
+
+pub use report::{CraftSummary, Dispersion, FleetReport};
+pub use shard::{resolve_threads, try_parallel_for};
+
+/// Fleet-run configuration.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of spacecraft.
+    pub crafts: usize,
+    /// Worker threads (clamped to `1..=crafts`); 1 runs inline on the
+    /// caller.  Any value yields the same [`FleetReport`].
+    pub threads: usize,
+    /// Master seed; craft `i` flies under `stream_seed(master, i)`.
+    pub master_seed: u64,
+    /// Shared downlink budget granted per ground-station pass (one
+    /// pass per epoch barrier).  0 disables pass arbitration entirely
+    /// — every craft keeps exactly its solo behavior.
+    pub pass_budget_bytes: u64,
+    /// Pass link rate (bytes/s) converting unmet demand into
+    /// contention-stall time.
+    pub pass_link_bytes_per_s: f64,
+    /// Route a craft's unmet demand through craft `(i+1) % n`'s next
+    /// pass (needs `crafts >= 2` to have any effect).
+    pub relay: bool,
+    /// Orbital planes for phase staggering: craft `i` flies a silent
+    /// prelude of `(i % planes) * stagger_events` events before the
+    /// scenario proper, offsetting eclipse/storm phases across planes.
+    pub planes: usize,
+    /// Prelude events per plane step (0 disables staggering).
+    pub stagger_events: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            crafts: 8,
+            threads: 1,
+            master_seed: 7,
+            pass_budget_bytes: 0,
+            pass_link_bytes_per_s: 125_000.0,
+            relay: false,
+            planes: 1,
+            stagger_events: 0,
+        }
+    }
+}
+
+/// The per-craft flavor of `base` that craft `i` flies: the same
+/// mission with this craft's stream-split seeds and (when staggering
+/// is configured) its plane's silent prelude phase prepended.
+///
+/// Pure function of `(base, cfg, i)` — the seam the single-craft
+/// equivalence test uses to compare a fleet member against a plain
+/// [`crate::scenario::run_scenario`] of the identical scenario.
+pub fn craft_scenario(base: &Scenario, cfg: &FleetConfig, i: usize) -> Scenario {
+    let mut sc = base.clone();
+    sc.config.seed = stream_seed(cfg.master_seed, i as u64);
+    if let Some(fs) = sc.config.fault_seed {
+        // fault streams split per craft too, salted by the master so
+        // fleet faults never alias the sensor/decision streams
+        sc.config.fault_seed = Some(stream_seed(fs ^ cfg.master_seed, i as u64));
+    }
+    let offset = (i % cfg.planes.max(1)) * cfg.stagger_events;
+    if offset > 0 {
+        sc.phases.insert(0, Phase::new("stagger", offset, vec![]));
+    }
+    sc
+}
+
+/// One spacecraft shard plus its pass-arbitration ledger.
+struct Craft {
+    scenario: Scenario,
+    cursor: ScenarioCursor,
+    run: OwnedPipelineRun,
+    seed: u64,
+    /// Did the last epoch advance a phase?
+    stepped: bool,
+    /// Shed-bytes watermark at the last barrier.
+    shed_seen: u64,
+    /// Accumulated unmet downlink demand (bytes).
+    demand_bytes: u64,
+    /// Shared budget granted to this craft so far.
+    granted_bytes: u64,
+    /// Neighbor backlog this craft carried.
+    relayed_bytes: u64,
+    /// Neighbor backlog parked here awaiting this craft's next pass.
+    relay_queue: u64,
+    /// Contention-stall time (s).
+    stall_s: f64,
+}
+
+/// Fly `scenario` across a fleet and aggregate the [`FleetReport`].
+///
+/// One shared `catalog`/`calib` serves every craft (no per-craft
+/// catalog rebuild — pinned by a unit test below); craft pipelines are
+/// built on the calling thread, stepped epoch-by-epoch across the
+/// worker pool, arbitrated at each barrier, and finished in craft-id
+/// order.
+pub fn run_fleet(
+    scenario: &Scenario,
+    catalog: &Catalog,
+    calib: &Calibration,
+    cfg: &FleetConfig,
+) -> Result<FleetReport> {
+    if cfg.crafts == 0 {
+        bail!("fleet needs at least one craft (--crafts >= 1)");
+    }
+    if !(cfg.pass_link_bytes_per_s > 0.0 && cfg.pass_link_bytes_per_s.is_finite()) {
+        bail!(
+            "pass link rate must be positive and finite, got {}",
+            cfg.pass_link_bytes_per_s
+        );
+    }
+    let n = cfg.crafts;
+    let threads = cfg.threads.clamp(1, n);
+    let mut slots: Vec<Mutex<Craft>> = Vec::with_capacity(n);
+    for i in 0..n {
+        let sc = craft_scenario(scenario, cfg, i);
+        let seed = sc.config.seed;
+        let run = Pipeline::new(sc.config.clone(), catalog, calib)?.begin_owned();
+        slots.push(Mutex::new(Craft {
+            scenario: sc,
+            cursor: ScenarioCursor::new(),
+            run,
+            seed,
+            stepped: false,
+            shed_seen: 0,
+            demand_bytes: 0,
+            granted_bytes: 0,
+            relayed_bytes: 0,
+            relay_queue: 0,
+            stall_s: 0.0,
+        }));
+    }
+    loop {
+        // epoch: every craft advances one scenario phase, in parallel
+        try_parallel_for(n, threads, |i| {
+            let mut slot = slots[i].lock().expect("craft slot");
+            let craft = &mut *slot;
+            let stepped = {
+                let Craft { scenario, cursor, run, .. } = craft;
+                run.with_run(|r| cursor.step_phase(scenario, calib, r))?
+            };
+            craft.stepped = stepped;
+            Ok(())
+        })?;
+        let mut any = false;
+        for slot in slots.iter_mut() {
+            any |= slot.get_mut().expect("craft slot").stepped;
+        }
+        if !any {
+            break;
+        }
+        // barrier: one ground-station pass, arbitrated sequentially
+        if cfg.pass_budget_bytes > 0 {
+            arbitrate_pass(&mut slots, cfg);
+        }
+    }
+    let mut rows = Vec::with_capacity(n);
+    for (i, slot) in slots.into_iter().enumerate() {
+        let craft = slot.into_inner().expect("craft slot");
+        let backlog_bytes = craft.demand_bytes + craft.relay_queue;
+        let report = craft.run.finish()?;
+        rows.push(CraftSummary {
+            craft: i,
+            seed: craft.seed,
+            events: report.events,
+            energy_j: report.energy_j,
+            sent_bytes: report.downlink_sent_bytes,
+            shed_bytes: report.downlink_shed_bytes,
+            granted_bytes: craft.granted_bytes,
+            relayed_bytes: craft.relayed_bytes,
+            backlog_bytes,
+            deadline_misses: report.deadline_misses,
+            stall_s: craft.stall_s,
+            report_digest: fnv1a(report.render().bytes()),
+        });
+    }
+    Ok(FleetReport::assemble(&scenario.name, rows))
+}
+
+/// One ground-station pass: refresh per-craft demand from the shed
+/// watermarks, grant the shared budget in craft-id order, drain relay
+/// backlog parked at each craft, then stall (and optionally hand off)
+/// whatever stayed unmet.  Sequential and craft-id ordered throughout
+/// — the entire cross-craft surface of the fleet model.
+fn arbitrate_pass(slots: &mut [Mutex<Craft>], cfg: &FleetConfig) {
+    let n = slots.len();
+    for slot in slots.iter_mut() {
+        let craft = slot.get_mut().expect("craft slot");
+        let shed_now = craft.run.with_run(|r| r.downlink_shed_bytes());
+        craft.demand_bytes += shed_now - craft.shed_seen;
+        craft.shed_seen = shed_now;
+    }
+    let mut budget = cfg.pass_budget_bytes;
+    // own demand first, craft-id order: late claimants starve
+    for slot in slots.iter_mut() {
+        let craft = slot.get_mut().expect("craft slot");
+        let grant = craft.demand_bytes.min(budget);
+        if grant > 0 {
+            budget -= grant;
+            craft.demand_bytes -= grant;
+            craft.granted_bytes += grant;
+            // a zero grant must NOT touch the run: granting 0 bytes
+            // would still create a metrics counter entry and break
+            // bit-identity with the solo (non-fleet) run
+            craft.run.with_run(|r| r.grant_downlink_bytes(grant));
+        }
+    }
+    // relay backlog parked by earlier passes drains after own demand
+    if cfg.relay {
+        for slot in slots.iter_mut() {
+            let craft = slot.get_mut().expect("craft slot");
+            let grant = craft.relay_queue.min(budget);
+            if grant > 0 {
+                budget -= grant;
+                craft.relay_queue -= grant;
+                craft.relayed_bytes += grant;
+            }
+        }
+    }
+    // unmet demand stalls the craft until the next pass; with relay it
+    // also re-parks at the neighbor, whose next pass may carry it
+    for i in 0..n {
+        let unmet = {
+            let craft = slots[i].get_mut().expect("craft slot");
+            let unmet = craft.demand_bytes;
+            if unmet > 0 {
+                craft.stall_s += unmet as f64 / cfg.pass_link_bytes_per_s;
+                if cfg.relay && n > 1 {
+                    craft.demand_bytes = 0;
+                }
+            }
+            unmet
+        };
+        if cfg.relay && n > 1 && unmet > 0 {
+            slots[(i + 1) % n].get_mut().expect("craft slot").relay_queue += unmet;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{PipelineConfig, Policy};
+    use crate::model::catalog::synthetic_builds_this_thread;
+    use crate::model::UseCase;
+    use crate::rad::ScrubPolicy;
+    use crate::scenario::MissionEvent;
+
+    /// A small two-phase mission that sheds downlink: a tight budget
+    /// plus steady traffic guarantees nonzero demand at every pass.
+    fn tight_scenario() -> Scenario {
+        Scenario {
+            name: "fleet-test".into(),
+            summary: "tight downlink for pass-contention tests".into(),
+            config: PipelineConfig {
+                use_case: UseCase::Esperta,
+                cadence_s: 0.1,
+                downlink_budget: 64,
+                policy: Policy::Static,
+                ..Default::default()
+            },
+            scrub: ScrubPolicy { period_s: 60.0 },
+            phases: vec![
+                Phase::new("cruise", 30, vec![]),
+                Phase::new(
+                    "storm",
+                    30,
+                    vec![MissionEvent::SepStorm { burst_x: 4.0, deadline_s: 0.5 }],
+                ),
+            ],
+        }
+    }
+
+    fn fleet_cfg(crafts: usize, threads: usize) -> FleetConfig {
+        FleetConfig {
+            crafts,
+            threads,
+            master_seed: 11,
+            pass_budget_bytes: 96,
+            relay: true,
+            planes: 2,
+            stagger_events: 5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn one_catalog_serves_the_whole_fleet() {
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        let before = synthetic_builds_this_thread();
+        run_fleet(&tight_scenario(), &catalog, &calib, &fleet_cfg(6, 1))
+            .unwrap();
+        assert_eq!(
+            synthetic_builds_this_thread(),
+            before,
+            "fleet must not rebuild Catalog::synthetic() per craft"
+        );
+    }
+
+    #[test]
+    fn craft_scenario_is_pure_and_seed_split() {
+        let base = tight_scenario();
+        let cfg = fleet_cfg(8, 1);
+        let a = craft_scenario(&base, &cfg, 3);
+        let b = craft_scenario(&base, &cfg, 3);
+        assert_eq!(a.config.seed, b.config.seed);
+        assert_eq!(a.phases.len(), b.phases.len());
+        assert_ne!(
+            craft_scenario(&base, &cfg, 0).config.seed,
+            craft_scenario(&base, &cfg, 1).config.seed
+        );
+        // plane 0 crafts fly the base phase chain; plane 1 gets the
+        // stagger prelude
+        assert_eq!(craft_scenario(&base, &cfg, 0).phases.len(), 2);
+        assert_eq!(craft_scenario(&base, &cfg, 1).phases.len(), 3);
+        assert_eq!(craft_scenario(&base, &cfg, 1).phases[0].name, "stagger");
+    }
+
+    #[test]
+    fn pass_contention_starves_late_claimants() {
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        let mut cfg = fleet_cfg(4, 1);
+        cfg.relay = false;
+        cfg.planes = 1;
+        cfg.stagger_events = 0;
+        // budget far below fleet demand: craft 0 must be granted at
+        // least as much as craft 3, and someone must stall
+        cfg.pass_budget_bytes = 40;
+        let r = run_fleet(&tight_scenario(), &catalog, &calib, &cfg).unwrap();
+        assert!(
+            r.per_craft[0].granted_bytes >= r.per_craft[3].granted_bytes,
+            "craft-id order must favor early claimants: {:#?}",
+            r.per_craft
+        );
+        assert!(r.total_stall_s > 0.0, "contention must stall someone");
+        assert!(r.total_granted_bytes > 0, "someone must be granted");
+    }
+
+    #[test]
+    fn relay_routes_unmet_demand_through_neighbors() {
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        // dense phase: demand far exceeds the pass budget, so unmet
+        // bytes park at neighbors; quiet phase: almost no new demand,
+        // so the next pass has headroom to drain the relay queues
+        let mut sc = tight_scenario();
+        sc.phases = vec![
+            Phase::new("dense", 60, vec![]),
+            Phase::new("quiet", 1, vec![]),
+        ];
+        let mut cfg = fleet_cfg(4, 1);
+        cfg.planes = 1;
+        cfg.stagger_events = 0;
+        cfg.pass_budget_bytes = 100;
+        let r = run_fleet(&sc, &catalog, &calib, &cfg).unwrap();
+        assert!(
+            r.total_shed_bytes > cfg.pass_budget_bytes,
+            "dense phase must oversubscribe the pass: {:#?}",
+            r.per_craft
+        );
+        assert!(
+            r.total_relayed_bytes > 0,
+            "quiet-pass headroom must drain neighbor backlog: {:#?}",
+            r.per_craft
+        );
+    }
+
+    #[test]
+    fn thread_count_does_not_change_the_report() {
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        let sc = tight_scenario();
+        let r1 = run_fleet(&sc, &catalog, &calib, &fleet_cfg(12, 1)).unwrap();
+        let r3 = run_fleet(&sc, &catalog, &calib, &fleet_cfg(12, 3)).unwrap();
+        assert_eq!(r1, r3);
+        assert_eq!(r1.digest(), r3.digest());
+    }
+
+    #[test]
+    fn fleet_size_does_not_change_a_craft() {
+        // craft 2 of a 4-fleet == craft 2 of an 8-fleet, bit for bit
+        // (arbitration off: passes couple crafts by design)
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        let sc = tight_scenario();
+        let mut cfg = fleet_cfg(4, 1);
+        cfg.pass_budget_bytes = 0;
+        cfg.relay = false;
+        let small = run_fleet(&sc, &catalog, &calib, &cfg).unwrap();
+        cfg.crafts = 8;
+        let big = run_fleet(&sc, &catalog, &calib, &cfg).unwrap();
+        assert_eq!(small.per_craft[2], big.per_craft[2]);
+    }
+
+    #[test]
+    fn zero_crafts_is_an_error() {
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        let cfg = FleetConfig { crafts: 0, ..Default::default() };
+        assert!(run_fleet(&tight_scenario(), &catalog, &calib, &cfg).is_err());
+    }
+}

@@ -1,0 +1,270 @@
+//! Fleet-level aggregation: per-craft summaries rolled up into one
+//! [`FleetReport`].
+//!
+//! Everything in the report is a pure function of the per-craft
+//! [`crate::coordinator::PipelineReport`]s plus the barrier
+//! arbitration's byte/stall ledgers — no wall-clock time, no thread
+//! count — so `#[derive(PartialEq)]` equality *is* the fleet
+//! determinism check: two runs that compare equal rendered the same
+//! bytes from the same per-craft state.
+
+use crate::util::hash::fnv1a;
+use crate::util::table::Table;
+
+/// One spacecraft's contribution to the fleet rollup.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CraftSummary {
+    /// Craft index (also its arbitration priority: lower goes first).
+    pub craft: usize,
+    /// The stream-split seed this craft ran under.
+    pub seed: u64,
+    /// Events processed end to end.
+    pub events: u64,
+    /// Energy spent (J, virtual ZCU104 clock).
+    pub energy_j: f64,
+    /// Science bytes downlinked.
+    pub sent_bytes: u64,
+    /// Bytes shed by the craft's own downlink manager.
+    pub shed_bytes: u64,
+    /// Shared pass budget granted to this craft across all barriers.
+    pub granted_bytes: u64,
+    /// Neighbor backlog this craft carried over its own passes.
+    pub relayed_bytes: u64,
+    /// Backlog still parked (unrecovered demand + undrained relay).
+    pub backlog_bytes: u64,
+    /// Deadline misses.
+    pub deadline_misses: u64,
+    /// Time spent waiting on pass contention (s).
+    pub stall_s: f64,
+    /// FNV-1a digest of the craft's full rendered `PipelineReport` —
+    /// the bit-identity witness: per-craft reports agree if and only
+    /// if these agree.
+    pub report_digest: u64,
+}
+
+/// Min/mean/max spread of one per-craft statistic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Dispersion {
+    /// Smallest per-craft value.
+    pub min: f64,
+    /// Fleet mean.
+    pub mean: f64,
+    /// Largest per-craft value.
+    pub max: f64,
+}
+
+impl Dispersion {
+    /// Dispersion of a sample; all zeros for an empty fleet.
+    pub fn of(values: &[f64]) -> Dispersion {
+        if values.is_empty() {
+            return Dispersion { min: 0.0, mean: 0.0, max: 0.0 };
+        }
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        let mut sum = 0.0;
+        for &v in values {
+            min = min.min(v);
+            max = max.max(v);
+            sum += v;
+        }
+        Dispersion { min, mean: sum / values.len() as f64, max }
+    }
+}
+
+/// The aggregate fleet report: per-craft rows plus rollups.
+///
+/// Bit-identical across `--threads 1` and any `--threads T` — the
+/// headline invariant `spaceinfer fleet` and the determinism suite
+/// assert with plain `==`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetReport {
+    /// Scenario every craft flew (with per-craft seeds/stagger).
+    pub scenario: String,
+    /// Fleet size.
+    pub crafts: usize,
+    /// Per-craft rows, in craft-id order.
+    pub per_craft: Vec<CraftSummary>,
+    /// Total events processed.
+    pub total_events: u64,
+    /// Total energy (J).
+    pub total_energy_j: f64,
+    /// Total science downlinked (bytes).
+    pub total_sent_bytes: u64,
+    /// Total bytes shed across the fleet.
+    pub total_shed_bytes: u64,
+    /// Total shared pass budget granted.
+    pub total_granted_bytes: u64,
+    /// Total bytes relayed through neighbors.
+    pub total_relayed_bytes: u64,
+    /// Total contention-stall time (s).
+    pub total_stall_s: f64,
+    /// Deadline-miss CDF: `(misses, fraction of crafts with <= misses)`
+    /// over the distinct per-craft miss counts, ascending.
+    pub miss_cdf: Vec<(u64, f64)>,
+    /// Per-craft energy spread.
+    pub energy_dispersion: Dispersion,
+    /// Per-craft downlinked-bytes spread.
+    pub sent_dispersion: Dispersion,
+}
+
+impl FleetReport {
+    /// Assemble the rollup from per-craft rows (kept in craft order).
+    pub fn assemble(scenario: &str, per_craft: Vec<CraftSummary>) -> FleetReport {
+        let energies: Vec<f64> = per_craft.iter().map(|c| c.energy_j).collect();
+        let sents: Vec<f64> =
+            per_craft.iter().map(|c| c.sent_bytes as f64).collect();
+        let mut misses: Vec<u64> =
+            per_craft.iter().map(|c| c.deadline_misses).collect();
+        misses.sort_unstable();
+        let n = per_craft.len();
+        let mut miss_cdf = Vec::new();
+        for (rank, &m) in misses.iter().enumerate() {
+            let frac = (rank + 1) as f64 / n as f64;
+            // collapse ties: keep the highest fraction per miss value
+            match miss_cdf.last_mut() {
+                Some(entry) if entry.0 == m => entry.1 = frac,
+                _ => miss_cdf.push((m, frac)),
+            }
+        }
+        FleetReport {
+            scenario: scenario.to_string(),
+            crafts: n,
+            total_events: per_craft.iter().map(|c| c.events).sum(),
+            total_energy_j: energies.iter().sum(),
+            total_sent_bytes: per_craft.iter().map(|c| c.sent_bytes).sum(),
+            total_shed_bytes: per_craft.iter().map(|c| c.shed_bytes).sum(),
+            total_granted_bytes: per_craft.iter().map(|c| c.granted_bytes).sum(),
+            total_relayed_bytes: per_craft.iter().map(|c| c.relayed_bytes).sum(),
+            total_stall_s: per_craft.iter().map(|c| c.stall_s).sum(),
+            miss_cdf,
+            energy_dispersion: Dispersion::of(&energies),
+            sent_dispersion: Dispersion::of(&sents),
+            per_craft,
+        }
+    }
+
+    /// Digest of the whole rendered report — one u64 that changes if
+    /// any craft's report, any ledger, or any rollup changes.
+    pub fn digest(&self) -> u64 {
+        fnv1a(self.render().bytes())
+    }
+
+    /// Render the fleet table plus rollup lines.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!("Fleet: {} x {}", self.crafts, self.scenario),
+            &[
+                "Craft", "Seed", "Events", "Energy J", "Sent B", "Shed B",
+                "Grant B", "Relay B", "Backlog", "Miss", "Stall s", "Digest",
+            ],
+        );
+        for c in &self.per_craft {
+            t.row(vec![
+                c.craft.to_string(),
+                format!("{:016x}", c.seed),
+                c.events.to_string(),
+                format!("{:.3}", c.energy_j),
+                c.sent_bytes.to_string(),
+                c.shed_bytes.to_string(),
+                c.granted_bytes.to_string(),
+                c.relayed_bytes.to_string(),
+                c.backlog_bytes.to_string(),
+                c.deadline_misses.to_string(),
+                format!("{:.3}", c.stall_s),
+                format!("{:016x}", c.report_digest),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "fleet totals: {} events, {:.3} J, {} B sent, {} B shed, \
+             {} B granted, {} B relayed, {:.3} s stalled\n",
+            self.total_events,
+            self.total_energy_j,
+            self.total_sent_bytes,
+            self.total_shed_bytes,
+            self.total_granted_bytes,
+            self.total_relayed_bytes,
+            self.total_stall_s,
+        ));
+        out.push_str(&format!(
+            "energy/craft: min {:.3} mean {:.3} max {:.3} J   \
+             sent/craft: min {:.0} mean {:.1} max {:.0} B\n",
+            self.energy_dispersion.min,
+            self.energy_dispersion.mean,
+            self.energy_dispersion.max,
+            self.sent_dispersion.min,
+            self.sent_dispersion.mean,
+            self.sent_dispersion.max,
+        ));
+        out.push_str("deadline-miss CDF:");
+        for (m, frac) in &self.miss_cdf {
+            out.push_str(&format!("  <={m}: {:.1}%", frac * 100.0));
+        }
+        out.push('\n');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(craft: usize, misses: u64, energy: f64) -> CraftSummary {
+        CraftSummary {
+            craft,
+            seed: craft as u64,
+            events: 10,
+            energy_j: energy,
+            sent_bytes: 100,
+            shed_bytes: 5,
+            granted_bytes: 0,
+            relayed_bytes: 0,
+            backlog_bytes: 0,
+            deadline_misses: misses,
+            stall_s: 0.0,
+            report_digest: 0xABCD,
+        }
+    }
+
+    #[test]
+    fn cdf_is_monotone_and_collapses_ties() {
+        let r = FleetReport::assemble(
+            "t",
+            vec![row(0, 0, 1.0), row(1, 0, 2.0), row(2, 3, 3.0), row(3, 7, 4.0)],
+        );
+        assert_eq!(
+            r.miss_cdf,
+            vec![(0, 0.5), (3, 0.75), (7, 1.0)],
+            "{:?}",
+            r.miss_cdf
+        );
+    }
+
+    #[test]
+    fn dispersion_of_sample() {
+        let d = Dispersion::of(&[1.0, 2.0, 3.0]);
+        assert_eq!((d.min, d.mean, d.max), (1.0, 2.0, 3.0));
+        let empty = Dispersion::of(&[]);
+        assert_eq!((empty.min, empty.mean, empty.max), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn equality_tracks_every_field() {
+        let a = FleetReport::assemble("t", vec![row(0, 1, 2.0)]);
+        let mut b = a.clone();
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+        b.per_craft[0].report_digest ^= 1;
+        assert_ne!(a, b);
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn render_mentions_totals_and_cdf() {
+        let r = FleetReport::assemble("eclipse", vec![row(0, 0, 1.5)]);
+        let s = r.render();
+        assert!(s.contains("fleet totals"), "{s}");
+        assert!(s.contains("deadline-miss CDF"), "{s}");
+        assert!(s.contains("eclipse"), "{s}");
+    }
+}

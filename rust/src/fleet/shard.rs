@@ -1,0 +1,133 @@
+//! Zero-dependency work-stealing pool for fleet shards.
+//!
+//! Built on `std::thread::scope` plus one shared atomic work index:
+//! each worker claims the next unclaimed craft index with a
+//! `fetch_add`, so a worker that finishes a cheap craft immediately
+//! steals the next one instead of idling behind a static partition.
+//! The pool imposes *no* ordering of its own — callers get determinism
+//! by making each index's work independent of every other index (one
+//! spacecraft per index) and doing all cross-craft work on the calling
+//! thread between pool invocations.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+/// Run `f(i)` for every `i in 0..n` across up to `threads` scoped
+/// workers, claiming indices from a shared atomic counter.
+///
+/// `threads <= 1` (or `n <= 1`) runs inline on the calling thread —
+/// no spawn, no atomics — which is what lets thread-local assertions
+/// (e.g. the catalog no-rebuild pin) observe a single-threaded fleet.
+///
+/// Errors are collected per index; the error for the *lowest* failing
+/// index is returned, so the reported failure is deterministic no
+/// matter which worker hit it first.  Remaining indices still run
+/// (no cancellation) — a fleet epoch is cheap enough that draining
+/// beats the non-determinism of a mid-epoch abort.
+pub fn try_parallel_for<F>(n: usize, threads: usize, f: F) -> Result<()>
+where
+    F: Fn(usize) -> Result<()> + Sync,
+{
+    if threads <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i).with_context(|| format!("craft {i}"))?;
+        }
+        return Ok(());
+    }
+    let next = AtomicUsize::new(0);
+    let errors: Mutex<Vec<(usize, anyhow::Error)>> = Mutex::new(Vec::new());
+    let workers = threads.min(n);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                if let Err(e) = f(i) {
+                    errors.lock().expect("error sink").push((i, e));
+                }
+            });
+        }
+    });
+    let mut errors = errors.into_inner().expect("error sink");
+    errors.sort_by_key(|(i, _)| *i);
+    match errors.into_iter().next() {
+        Some((i, e)) => Err(e).with_context(|| format!("craft {i}")),
+        None => Ok(()),
+    }
+}
+
+/// Resolve a `--threads` request against the fleet size.
+///
+/// `None` defaults to [`std::thread::available_parallelism`] (1 when
+/// the runtime cannot tell); an explicit 0 is rejected; anything above
+/// the craft count is capped there — extra workers could never claim
+/// an index and would only pay spawn cost.
+pub fn resolve_threads(requested: Option<usize>, crafts: usize) -> Result<usize> {
+    let t = match requested {
+        Some(0) => bail!("--threads must be >= 1 (omit the flag for auto)"),
+        Some(t) => t,
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    };
+    Ok(t.min(crafts.max(1)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        for threads in [1, 2, 4] {
+            let hits: Vec<AtomicU64> =
+                (0..97).map(|_| AtomicU64::new(0)).collect();
+            try_parallel_for(97, threads, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            })
+            .unwrap();
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn lowest_failing_index_wins() {
+        // run a few times: whichever worker errors first, the reported
+        // craft must always be the lowest failing index
+        for _ in 0..5 {
+            let err = try_parallel_for(64, 4, |i| {
+                if i % 2 == 1 {
+                    bail!("odd craft {i}");
+                }
+                Ok(())
+            })
+            .unwrap_err();
+            assert!(err.to_string().contains("craft 1"), "{err:#}");
+        }
+    }
+
+    #[test]
+    fn zero_items_is_a_no_op() {
+        try_parallel_for(0, 4, |_| bail!("must not run")).unwrap();
+    }
+
+    #[test]
+    fn threads_validation() {
+        assert!(resolve_threads(Some(0), 8).is_err());
+        assert_eq!(resolve_threads(Some(3), 8).unwrap(), 3);
+        // capped at the craft count
+        assert_eq!(resolve_threads(Some(64), 8).unwrap(), 8);
+        // default is available_parallelism, still capped
+        let auto = resolve_threads(None, 2).unwrap();
+        assert!((1..=2).contains(&auto));
+        // degenerate fleet still yields a worker
+        assert_eq!(resolve_threads(Some(4), 0).unwrap(), 1);
+    }
+}

@@ -30,6 +30,14 @@
 //! timelines (`spaceinfer scenario <name>`), producing phase-segmented
 //! reports.
 //!
+//! The [`fleet`] layer scales one scenario to a constellation:
+//! `spaceinfer fleet` shards N spacecraft (stream-split seeds, one
+//! [`coordinator::OwnedPipelineRun`] each) across a zero-dependency
+//! work-stealing pool, arbitrates shared ground-station passes
+//! deterministically at epoch barriers, and rolls per-craft reports
+//! into a [`fleet::FleetReport`] that is bit-identical at any thread
+//! count.
+//!
 //! Faults are first-class: the [`fault`] layer injects a seeded,
 //! deterministic fault vocabulary (transient execution failures,
 //! timeouts, SEU corruption scaled by essential bits, thermal
@@ -60,6 +68,7 @@ pub mod sensors;
 pub mod telemetry;
 pub mod coordinator;
 pub mod scenario;
+pub mod fleet;
 pub mod report;
 
 /// Crate-wide result type.

@@ -17,6 +17,7 @@
 //! spaceinfer plan <model>                         execution-plan table
 //! spaceinfer policies [--use-case vae]            policy comparison table
 //! spaceinfer scenario <name> | --list             mission scenario engine
+//! spaceinfer fleet <name> [--crafts N] [--threads T]  constellation shards
 //! spaceinfer fuzz [--seeds N] [--base-seed S]     scenario fuzzer
 //! spaceinfer targets [--use-case vae]             target-matrix table
 //! spaceinfer inspect --model vae                  manifests, DPU program
@@ -137,6 +138,7 @@ fn run() -> Result<()> {
         "plan" => plan_cmd(&args, &dir, calib),
         "policies" => policies_cmd(&args, &dir, calib),
         "scenario" => scenario_cmd(&args, &dir, calib),
+        "fleet" => fleet_cmd(&args, &dir, calib),
         "fuzz" => fuzz_cmd(&args, &dir, calib),
         "targets" => targets_cmd(&args, &dir, calib),
         "inspect" => inspect(&args, &dir, &calib),
@@ -441,6 +443,59 @@ fn scenario_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
     Ok(())
 }
 
+/// `spaceinfer fleet <scenario>` — constellation-scale simulation: N
+/// spacecraft fly the scenario in parallel shards (stream-split seeds,
+/// work-stealing pool) with ground-station passes arbitrated
+/// deterministically at epoch barriers.  The printed `FleetReport` is
+/// bit-identical for `--threads 1` and any `--threads T`; only the
+/// trailing wall-clock line varies.
+fn fleet_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
+    use spaceinfer::fleet::{self, FleetConfig};
+    use spaceinfer::scenario;
+    let name = match args.positional.first() {
+        Some(n) => n.as_str(),
+        None => bail!(
+            "usage: spaceinfer fleet <scenario> [--crafts N] [--threads T] \
+             — see `spaceinfer scenario --list` for scenario names"
+        ),
+    };
+    let sc = scenario::builtin(name)?;
+    let crafts = args.get_usize("crafts", 8)?;
+    let requested = if args.flags.contains_key("threads") {
+        Some(args.get_usize("threads", 1)?)
+    } else {
+        None
+    };
+    let threads = fleet::resolve_threads(requested, crafts)?;
+    let cfg = FleetConfig {
+        crafts,
+        threads,
+        master_seed: args.get_usize("seed", 7)? as u64,
+        pass_budget_bytes: args.get_usize("pass-budget", 0)? as u64,
+        pass_link_bytes_per_s: args.get_f64("link-rate", 125_000.0)?,
+        relay: args.has("relay"),
+        planes: args.get_usize("planes", 1)?,
+        stagger_events: args.get_usize("stagger", 0)?,
+    };
+    let catalog = catalog_or_synthetic(dir)?;
+    println!(
+        "fleet [{} x {}] — {}\n  threads: {}  pass budget: {} B  relay: {}\n",
+        cfg.crafts, sc.name, sc.summary, threads, cfg.pass_budget_bytes, cfg.relay,
+    );
+    let t0 = std::time::Instant::now();
+    let report = fleet::run_fleet(&sc, &catalog, &calib, &cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+    print!("{}", report.render());
+    // wall-clock note stays outside the deterministic report surface
+    println!(
+        "wall: {:.2} s on {} thread(s) — {:.1} crafts/s",
+        wall,
+        threads,
+        crafts as f64 / wall.max(1e-9),
+    );
+    Ok(())
+}
+
 /// `spaceinfer fuzz` — seeded scenario fuzzer: each seed expands into
 /// a random fault-campaign scenario, runs twice, and must replay
 /// bit-for-bit while the global accounting invariants hold.
@@ -448,6 +503,24 @@ fn fuzz_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
     use spaceinfer::scenario::fuzz;
     use spaceinfer::util::table::Table;
     let catalog = catalog_or_synthetic(dir)?;
+    // --exact-seed replays one derived case verbatim: `fuzz_many`
+    // stream-splits the base seed, so the seed a failure names is the
+    // derived value, not something `--base-seed` can reach directly
+    if args.flags.contains_key("exact-seed") {
+        let seed = args.get_usize("exact-seed", 0)? as u64;
+        let o = fuzz::fuzz_one(seed, &catalog, &calib)?;
+        println!(
+            "seed {} ({}, {}): {} events, {} dropped, {} fault(s) — \
+             bit-identical replay, invariants hold",
+            o.seed,
+            o.use_case,
+            o.policy,
+            o.events,
+            o.dropped,
+            o.faults.faults_injected,
+        );
+        return Ok(());
+    }
     let seeds = args.get_usize("seeds", 25)?;
     if seeds == 0 {
         bail!("--seeds must be >= 1");
@@ -579,10 +652,20 @@ usage: spaceinfer <subcommand> [--artifacts DIR] [--calib FILE]
                       pipeline + declarative timeline; artifact-free,
                       phase-segmented report)
                       scenario --list | scenario <name> [--seed N]
+  fleet               constellation-scale run of one scenario: N craft
+                      shards (per-craft stream-split seeds) on a
+                      work-stealing pool, shared ground-station passes
+                      arbitrated deterministically at epoch barriers;
+                      the report is bit-identical at any --threads
+                      fleet <name> [--crafts N] [--seed S]
+                      [--threads T]  (default: available parallelism;
+                      0 rejected; capped at the craft count)
+                      [--pass-budget BYTES] [--link-rate B/S] [--relay]
+                      [--planes P] [--stagger EVENTS]
   fuzz                seeded scenario fuzzer: random fault campaigns,
                       each replayed bit-for-bit and checked against the
                       accounting invariants
-                      [--seeds N] [--base-seed S]
+                      [--seeds N] [--base-seed S] [--exact-seed S]
   targets             registered-target comparison matrix (latency,
                       energy, power, footprint, essential bits)
                       [--use-case ...] [--mms-model NAME] [--batch B]

@@ -326,6 +326,7 @@ impl Catalog {
     /// assert!(c.manifest("baseline", Precision::Int8).is_err()); // HLS-only
     /// ```
     pub fn synthetic() -> Catalog {
+        SYNTHETIC_BUILDS.with(|c| c.set(c.get() + 1));
         let mut manifests = BTreeMap::new();
         for prec in [Precision::Fp32, Precision::Int8] {
             for man in [synthetic_vae(prec), synthetic_cnet(prec)] {
@@ -346,6 +347,21 @@ impl Catalog {
             executable: Vec::new(),
         }
     }
+}
+
+thread_local! {
+    /// How many times [`Catalog::synthetic`] ran on this thread.
+    /// Thread-local (not a global atomic) so parallel test threads
+    /// cannot race the counter a sharing test reads.
+    static SYNTHETIC_BUILDS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Number of [`Catalog::synthetic`] builds performed *on the calling
+/// thread*.  The fleet layer shares one catalog across every craft; the
+/// no-per-craft-rebuild test pins that by asserting this counter rises
+/// by exactly one across a whole fleet run.
+pub fn synthetic_builds_this_thread() -> u64 {
+    SYNTHETIC_BUILDS.with(|c| c.get())
 }
 
 // ---------------------------------------------------------------------------

@@ -19,11 +19,79 @@ use crate::runtime::ExecutorPool;
 use super::{MissionEvent, Scenario};
 
 /// A target awaiting its scrub repair.
+#[derive(Debug)]
 struct PendingRepair {
     /// Registry index of the struck target.
     index: usize,
     /// Virtual time the repair completes (s).
     ready_at_s: f64,
+}
+
+/// Stepwise scenario execution state: which phase runs next, plus the
+/// SEU repairs still pending from earlier phases.
+///
+/// Deliberately holds no reference to the [`Scenario`] or the run, so a
+/// fleet craft can own its cursor alongside both and step one phase per
+/// epoch — [`ScenarioCursor::step_phase`] is exactly one iteration of
+/// [`run_scenario`]'s phase loop, so stepping every phase and finishing
+/// is bit-identical to the one-shot driver.
+#[derive(Debug)]
+pub struct ScenarioCursor {
+    repairs: Vec<PendingRepair>,
+    next_phase: usize,
+}
+
+impl Default for ScenarioCursor {
+    fn default() -> ScenarioCursor {
+        ScenarioCursor::new()
+    }
+}
+
+impl ScenarioCursor {
+    /// Fresh cursor: first phase next, no pending repairs.
+    pub fn new() -> ScenarioCursor {
+        ScenarioCursor { repairs: Vec::new(), next_phase: 0 }
+    }
+
+    /// True once every phase of `scenario` has been stepped.
+    pub fn done(&self, scenario: &Scenario) -> bool {
+        self.next_phase >= scenario.phases.len()
+    }
+
+    /// Drive `run` through the next phase: open the report phase, apply
+    /// its mission events, then tick `n_events` times completing scrub
+    /// repairs on schedule.  Returns `Ok(false)` without touching the
+    /// run when the cursor is already past the last phase.
+    pub fn step_phase(
+        &mut self,
+        scenario: &Scenario,
+        calib: &Calibration,
+        run: &mut PipelineRun<'_, '_>,
+    ) -> Result<bool> {
+        let phase = match scenario.phases.get(self.next_phase) {
+            Some(p) => p,
+            None => return Ok(false),
+        };
+        self.next_phase += 1;
+        run.begin_phase(&phase.name);
+        for event in &phase.events {
+            apply_event(event, run, &mut self.repairs, scenario, calib)?;
+        }
+        for _ in 0..phase.n_events {
+            let now = run.now_s();
+            let repairs = &mut self.repairs;
+            repairs.retain(|r| {
+                if now >= r.ready_at_s {
+                    run.set_target_available(r.index, true);
+                    false
+                } else {
+                    true
+                }
+            });
+            run.tick()?;
+        }
+        Ok(true)
+    }
 }
 
 /// Run a scenario end to end and return the phase-segmented report.
@@ -41,25 +109,8 @@ pub fn run_scenario(
 ) -> Result<PipelineReport> {
     let mut pipeline = Pipeline::new(scenario.config.clone(), catalog, calib)?;
     let mut run = pipeline.begin(executor);
-    let mut repairs: Vec<PendingRepair> = Vec::new();
-    for phase in &scenario.phases {
-        run.begin_phase(&phase.name);
-        for event in &phase.events {
-            apply_event(event, &mut run, &mut repairs, scenario, calib)?;
-        }
-        for _ in 0..phase.n_events {
-            let now = run.now_s();
-            repairs.retain(|r| {
-                if now >= r.ready_at_s {
-                    run.set_target_available(r.index, true);
-                    false
-                } else {
-                    true
-                }
-            });
-            run.tick()?;
-        }
-    }
+    let mut cursor = ScenarioCursor::new();
+    while cursor.step_phase(scenario, calib, &mut run)? {}
     run.finish()
 }
 

@@ -37,7 +37,7 @@ pub mod library;
 use crate::coordinator::{PipelineConfig, Policy};
 use crate::rad::ScrubPolicy;
 
-pub use engine::run_scenario;
+pub use engine::{run_scenario, ScenarioCursor};
 pub use library::{all_builtins, builtin, builtin_names};
 
 /// A mid-run change of mission conditions, applied between ticks of the

@@ -33,7 +33,10 @@ pub struct SensorEvent {
 /// Deterministic generator of interleaved sensor events.
 pub struct SensorStream {
     rng: Prng,
-    t_s: f64,
+    /// Virtual-clock frontier (s): the timestamp the next generated
+    /// event will carry.  Read-only outside the stream — advance it by
+    /// generating events, retune it via `set_cadence`.
+    pub t_s: f64,
     seq: u64,
     /// Cadence per use case (s between samples).
     pub cadence_s: f64,

@@ -1,0 +1,144 @@
+//! Fleet-layer guarantees, self-provisioning (synthetic catalog,
+//! timing-only — no artifacts):
+//!
+//! * **Thread-count invariance** — a 256-craft constellation with pass
+//!   contention, relay, and plane staggering armed produces a
+//!   byte-identical `FleetReport` on 1, 2, and 8 worker threads.
+//! * **Solo equivalence** — craft 0 of a single-craft fleet (pass
+//!   arbitration off) is bit-identical to a plain `run_scenario` of
+//!   the same per-craft scenario: the fleet layer adds nothing to a
+//!   craft's own physics.
+//! * **`--threads` resolution** — 0 rejected, explicit values capped
+//!   at the craft count, default bounded by available parallelism.
+
+use spaceinfer::board::Calibration;
+use spaceinfer::coordinator::{PipelineConfig, Policy};
+use spaceinfer::fleet::{self, craft_scenario, FleetConfig};
+use spaceinfer::model::{Catalog, UseCase};
+use spaceinfer::rad::ScrubPolicy;
+use spaceinfer::scenario::{self, Phase, Scenario};
+use spaceinfer::util::hash::fnv1a;
+
+fn catalog() -> Catalog {
+    Catalog::synthetic()
+}
+
+/// A compact three-phase mission with a tight per-craft downlink budget
+/// so pass arbitration always has demand to starve.
+fn contested_scenario() -> Scenario {
+    Scenario {
+        name: "fleet-contested".into(),
+        summary: "tight downlink, storm mid-mission".into(),
+        config: PipelineConfig {
+            use_case: UseCase::Esperta,
+            cadence_s: 0.1,
+            downlink_budget: 64,
+            policy: Policy::Static,
+            ..Default::default()
+        },
+        scrub: ScrubPolicy { period_s: 60.0 },
+        phases: vec![
+            Phase::new("cruise", 20, vec![]),
+            Phase::new("dense", 25, vec![]),
+            Phase::new("quiet", 5, vec![]),
+        ],
+    }
+}
+
+fn contested_cfg(threads: usize) -> FleetConfig {
+    FleetConfig {
+        crafts: 256,
+        threads,
+        master_seed: 42,
+        pass_budget_bytes: 4_096,
+        pass_link_bytes_per_s: 125_000.0,
+        relay: true,
+        planes: 4,
+        stagger_events: 7,
+    }
+}
+
+#[test]
+fn report_is_byte_identical_across_thread_counts() {
+    let catalog = catalog();
+    let calib = Calibration::default();
+    let sc = contested_scenario();
+    let base =
+        fleet::run_fleet(&sc, &catalog, &calib, &contested_cfg(1)).unwrap();
+    assert_eq!(base.crafts, 256);
+    assert!(base.total_shed_bytes > 0, "contention needs demand");
+    for threads in [2, 8] {
+        let other = fleet::run_fleet(&sc, &catalog, &calib, &contested_cfg(threads))
+            .unwrap();
+        // structural equality first (field-by-field, craft-by-craft)...
+        assert_eq!(base, other, "threads=1 vs threads={threads}");
+        // ...then literal byte identity of the rendered report
+        assert_eq!(
+            base.render(),
+            other.render(),
+            "rendered bytes diverge at threads={threads}"
+        );
+        assert_eq!(base.digest(), other.digest());
+    }
+}
+
+#[test]
+fn single_craft_fleet_matches_plain_run_scenario() {
+    let catalog = catalog();
+    let calib = Calibration::default();
+    let sc = contested_scenario();
+    // arbitration off: a fleet of one must add nothing to the craft
+    let cfg = FleetConfig {
+        crafts: 1,
+        threads: 1,
+        master_seed: 42,
+        pass_budget_bytes: 0,
+        relay: false,
+        planes: 1,
+        stagger_events: 0,
+        ..Default::default()
+    };
+    let fleet_report = fleet::run_fleet(&sc, &catalog, &calib, &cfg).unwrap();
+    let solo_sc = craft_scenario(&sc, &cfg, 0);
+    let solo =
+        scenario::run_scenario(&solo_sc, &catalog, &calib, None).unwrap();
+    let craft = &fleet_report.per_craft[0];
+    assert_eq!(craft.seed, solo_sc.config.seed);
+    assert_eq!(craft.events, solo.events);
+    assert_eq!(craft.sent_bytes, solo.downlink_sent_bytes);
+    assert_eq!(craft.shed_bytes, solo.downlink_shed_bytes);
+    assert_eq!(craft.deadline_misses, solo.deadline_misses);
+    assert_eq!(
+        craft.report_digest,
+        fnv1a(solo.render().bytes()),
+        "craft 0's full rendered PipelineReport must be bit-identical \
+         to the plain run_scenario report"
+    );
+}
+
+#[test]
+fn builtin_scenario_fleet_is_thread_invariant() {
+    // the CLI path: a real builtin, smaller fleet, contention armed
+    let catalog = catalog();
+    let calib = Calibration::default();
+    let sc = scenario::builtin("eclipse-ops").unwrap();
+    let mut cfg = contested_cfg(1);
+    cfg.crafts = 12;
+    let a = fleet::run_fleet(&sc, &catalog, &calib, &cfg).unwrap();
+    cfg.threads = 4;
+    let b = fleet::run_fleet(&sc, &catalog, &calib, &cfg).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(a.render(), b.render());
+}
+
+#[test]
+fn threads_resolution_contract() {
+    assert!(fleet::resolve_threads(Some(0), 8).is_err());
+    assert_eq!(fleet::resolve_threads(Some(5), 8).unwrap(), 5);
+    assert_eq!(fleet::resolve_threads(Some(500), 8).unwrap(), 8);
+    let auto = fleet::resolve_threads(None, 256).unwrap();
+    assert!(auto >= 1);
+    let avail =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    assert!(auto <= avail.max(1));
+}
