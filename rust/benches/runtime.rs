@@ -16,7 +16,7 @@ use std::path::PathBuf;
 use spaceinfer::backend::{AccelModel, TargetRegistry, TargetSet};
 use spaceinfer::board::Calibration;
 use spaceinfer::coordinator::{
-    AccelTimeline, DispatchCache, Dispatcher, PipelineConfig, Policy, Router,
+    AccelTimeline, DispatchCache, Dispatcher, Pipeline, PipelineConfig, Policy, Router,
 };
 use spaceinfer::fleet::{self, FleetConfig};
 use spaceinfer::model::catalog::Catalog;
@@ -44,6 +44,16 @@ const MIN_CACHE_HIT_RATE: f64 = 0.5;
 /// what a run's flush cadence produces (drained queues re-seen batch
 /// after batch).
 const CACHE_REPEAT: usize = 16;
+
+/// Events per timing-only run in the tick-loop section.
+const TICK_EVENTS: usize = 256;
+
+/// CI regression floor: the allocation-free tick loop (frame pool +
+/// interned counters + husked image synthesis) must clear this many ×
+/// the pool-off events/sec on the image-heavy use cases (vae, cnet).
+/// Relative, so machine-independent; enforced only under
+/// `BENCH_ENFORCE_TICK=1`.
+const MIN_TICK_SPEEDUP_X: f64 = 5.0;
 
 /// Constellation size for the fleet-scaling section.
 const FLEET_CRAFTS: usize = 64;
@@ -286,6 +296,56 @@ fn cache_rows(catalog: &Catalog) -> (BTreeMap<String, Json>, bool) {
     (rows, gate_ok)
 }
 
+/// Tick-loop section: end-to-end timing-only pipeline events/sec per
+/// use case with the frame pool off (the old allocating hot path) vs
+/// on (pooled frames, interned counters, husked image synthesis).
+/// Returns the JSON rows and whether the ≥[`MIN_TICK_SPEEDUP_X`] gate
+/// holds on the image-heavy use cases.
+fn tick_rows(catalog: &Catalog) -> (BTreeMap<String, Json>, bool) {
+    let calib = Calibration::default();
+    let mut rows = BTreeMap::new();
+    let mut gate_ok = true;
+    for uc in UseCase::ALL {
+        let run = |pool: bool| {
+            let cfg = PipelineConfig {
+                use_case: uc,
+                n_events: TICK_EVENTS,
+                frame_pool: pool,
+                ..Default::default()
+            };
+            Pipeline::new(cfg, catalog, &calib)
+                .expect("pipeline")
+                .run(None)
+                .expect("run");
+        };
+        let before = bench(&format!("tick loop pool-off {uc}"), 1, 5, || run(false));
+        let after = bench(&format!("tick loop pool-on  {uc}"), 1, 5, || run(true));
+        let eps_before = throughput(TICK_EVENTS as u64, before.median());
+        let eps_after = throughput(TICK_EVENTS as u64, after.median());
+        let speedup = eps_after / eps_before.max(1e-12);
+        let gated = matches!(uc, UseCase::Vae | UseCase::Cnet);
+        if gated {
+            gate_ok &= speedup >= MIN_TICK_SPEEDUP_X;
+        }
+        println!("{}  -> {:.0} events/s", before.report(), eps_before);
+        println!("{}  -> {:.0} events/s", after.report(), eps_after);
+        println!(
+            "  tick path {uc}: {speedup:.2}x{}",
+            if gated { "  (gated)" } else { "" }
+        );
+        let mut row = BTreeMap::new();
+        row.insert("events_per_s_before".into(), Json::Num(eps_before));
+        row.insert("events_per_s_after".into(), Json::Num(eps_after));
+        row.insert("speedup_x".into(), Json::Num(speedup));
+        row.insert("gated".into(), Json::Num(gated as u8 as f64));
+        rows.insert(format!("{uc}"), Json::Obj(row));
+    }
+    rows.insert("events".into(), Json::Num(TICK_EVENTS as f64));
+    rows.insert("min_speedup_x".into(), Json::Num(MIN_TICK_SPEEDUP_X));
+    rows.insert("gate_ok".into(), Json::Num(gate_ok as u8 as f64));
+    (rows, gate_ok)
+}
+
 /// Fleet-scaling section: crafts/s for a contested constellation at 1
 /// worker thread vs available parallelism, plus the bit-identity
 /// cross-check (parallelism must be pure speedup).  Returns the JSON
@@ -394,6 +454,14 @@ fn main() {
     println!("== dispatch cache (batches/s, cached vs uncached) ==");
     let (cache_section, cache_gate_ok) = cache_rows(&catalog);
     doc.insert("cache".to_string(), Json::Obj(cache_section));
+    println!();
+
+    // tick-loop section: the allocation-free steady-state hot path,
+    // pool-off vs pool-on events/sec per use case (artifact-free;
+    // CI gates on the image-heavy cases)
+    println!("== tick loop (events/s, frame pool off vs on) ==");
+    let (tick_section, tick_gate_ok) = tick_rows(&catalog);
+    doc.insert("tick".to_string(), Json::Obj(tick_section));
     println!();
 
     // fleet-scaling section: work-stealing constellation shards,
@@ -517,6 +585,19 @@ fn main() {
             "cache gate FAILED: cached dispatch must clear \
              {MIN_CACHE_SPEEDUP_X}x uncached and a {MIN_CACHE_HIT_RATE} hit rate \
              (see the cache section of {})",
+            out.display()
+        );
+        std::process::exit(1);
+    }
+
+    // tick gate (opt-in): `BENCH_ENFORCE_TICK=1` fails the build when
+    // the allocation-free tick loop regresses below the floor on the
+    // image-heavy use cases — CI sets it.
+    if std::env::var("BENCH_ENFORCE_TICK").is_ok_and(|v| v == "1") && !tick_gate_ok {
+        eprintln!(
+            "tick gate FAILED: the pooled tick loop must clear \
+             {MIN_TICK_SPEEDUP_X}x the pool-off events/sec on vae and cnet \
+             (see the tick section of {})",
             out.display()
         );
         std::process::exit(1);

@@ -14,8 +14,9 @@ use crate::sensors::SensorEvent;
 /// A flushed batch of same-route requests.
 #[derive(Debug)]
 pub struct Batch {
-    /// Model the batch routes to.
-    pub model: String,
+    /// Model the batch routes to (shared with the batcher — a flush
+    /// bumps a refcount instead of cloning a `String`).
+    pub model: Arc<str>,
     /// Member events, arrival order.
     pub events: Vec<SensorEvent>,
     /// Virtual time when the batch was flushed.
@@ -46,7 +47,7 @@ impl Batch {
 #[derive(Debug)]
 pub struct Batcher {
     /// Model this batcher accumulates for.
-    pub model: String,
+    pub model: Arc<str>,
     /// Flush threshold (events).
     pub max_batch: usize,
     /// Max time the oldest request may wait before a forced flush (s).
@@ -71,7 +72,7 @@ impl Batcher {
     pub fn new(model: &str, max_batch: usize, max_wait_s: f64) -> Batcher {
         assert!(max_batch >= 1, "batch size must be >= 1");
         Batcher {
-            model: model.to_string(),
+            model: Arc::from(model),
             max_batch,
             max_wait_s,
             pending: Vec::new(),
@@ -118,6 +119,18 @@ impl Batcher {
             events: std::mem::take(&mut self.pending),
             flushed_at_s: now_s,
         })
+    }
+
+    /// Hand back a drained event vector from a finished batch so its
+    /// capacity feeds the next accumulation — the allocation-free
+    /// steady state.  Stale contents are discarded; no-op unless the
+    /// open batch is empty (pending events must not be disturbed) and
+    /// the spare actually adds capacity.
+    pub fn restock(&mut self, mut spare: Vec<SensorEvent>) {
+        if self.pending.is_empty() && spare.capacity() > self.pending.capacity() {
+            spare.clear();
+            self.pending = spare;
+        }
     }
 
     /// Events waiting in the open batch.
@@ -169,6 +182,24 @@ mod tests {
         for (set, event) in sets.iter().zip(&batch.events) {
             assert!(Arc::ptr_eq(set, &event.inputs), "must be zero-copy");
         }
+    }
+
+    #[test]
+    fn restock_discards_stale_events_and_spares_open_batches() {
+        let mut s = SensorStream::new(UseCase::Esperta, 1, 0.1);
+        let mut b = Batcher::new("esperta", 4, 10.0);
+        // restock into an empty batcher: stale contents are discarded,
+        // only the capacity survives
+        b.restock(vec![ev(&mut s), ev(&mut s)]);
+        assert_eq!(b.pending_len(), 0);
+        // an open batch is never disturbed by a restock
+        b.offer(ev(&mut s), 0.3);
+        b.restock(Vec::with_capacity(64));
+        assert_eq!(b.pending_len(), 1);
+        // the flushed model tag is the batcher's, shared not copied
+        let mut full = Batcher::new("esperta", 1, 10.0);
+        let batch = full.offer(ev(&mut s), 0.4).expect("full at 1");
+        assert!(Arc::ptr_eq(&batch.model, &full.model));
     }
 
     #[test]

@@ -37,7 +37,7 @@
 
 use std::collections::BTreeMap;
 use std::ops::{Deref, DerefMut};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -60,9 +60,9 @@ use crate::model::catalog::Catalog;
 use crate::model::{Precision, UseCase};
 use crate::plan::{Lane, Planner};
 use crate::rad::seu::essential_bits_of;
-use crate::runtime::{ExecRequest, ExecResult, ExecutorPool};
-use crate::sensors::{SensorEvent, SensorStream};
-use crate::telemetry::Metrics;
+use crate::runtime::{ExecRequest, ExecResult, ExecutorPool, InputSet};
+use crate::sensors::{Frame, FramePool, PoolStats, SensorEvent, SensorStream};
+use crate::telemetry::{Histogram, Metrics};
 use crate::util::prng::Prng;
 
 /// Pipeline configuration.
@@ -139,6 +139,14 @@ pub struct PipelineConfig {
     /// never behavior; `false` (`--no-dispatch-cache`) is the escape
     /// hatch the equivalence harness diffs against.
     pub dispatch_cache: bool,
+    /// Recycle sensor input frames through a [`FramePool`] (default
+    /// on), and skip pixel synthesis outright on timing-only runs of
+    /// the truth-free image streams (the pixels are never read — see
+    /// [`SensorStream::synthesis_is_pixels_only`]).  Both are
+    /// throughput knobs, never behavior: reports stay bit-identical
+    /// with the pool off; `false` (`--no-frame-pool`) is the escape
+    /// hatch the equivalence harness diffs against.
+    pub frame_pool: bool,
 }
 
 impl Default for PipelineConfig {
@@ -164,6 +172,7 @@ impl Default for PipelineConfig {
             fault_profile: FaultProfile::default(),
             recovery: RecoveryPolicy::default(),
             dispatch_cache: true,
+            frame_pool: true,
         }
     }
 }
@@ -455,7 +464,10 @@ struct PhaseAccum {
     end_s: f64,
     events: u64,
     batches: u64,
-    target_mix: BTreeMap<String, u64>,
+    /// Batches per flat lane index (registry targets, then derived
+    /// plan lanes).  Rendered to a name-keyed map only at `finalize` —
+    /// the hot path never touches a string key.
+    target_mix: Vec<u64>,
     energy_j: f64,
     deadline_misses: u64,
     power_sheds: u64,
@@ -472,14 +484,17 @@ struct PhaseAccum {
 }
 
 impl PhaseAccum {
-    fn new(name: &str, start_s: f64) -> PhaseAccum {
+    /// `lanes` sizes the per-lane mix array; `latency_cap` pre-sizes
+    /// the latency sample buffer so steady-state pushes never
+    /// reallocate (the zero-allocation tick invariant).
+    fn new(name: &str, start_s: f64, lanes: usize, latency_cap: usize) -> PhaseAccum {
         PhaseAccum {
             name: name.to_string(),
             start_s,
             end_s: start_s,
             events: 0,
             batches: 0,
-            target_mix: BTreeMap::new(),
+            target_mix: vec![0; lanes],
             energy_j: 0.0,
             deadline_misses: 0,
             power_sheds: 0,
@@ -492,7 +507,7 @@ impl PhaseAccum {
             tmr_masked: 0,
             degraded: 0,
             link_dropped: 0,
-            latencies: Vec::new(),
+            latencies: Vec::with_capacity(latency_cap),
         }
     }
 
@@ -507,17 +522,23 @@ impl PhaseAccum {
             && self.latencies.is_empty()
     }
 
-    fn finalize(&mut self) -> PhaseReport {
+    fn finalize(&mut self, lane_names: &[String]) -> PhaseReport {
         self.latencies.sort_by(f64::total_cmp);
         let mean =
             self.latencies.iter().sum::<f64>() / self.latencies.len().max(1) as f64;
+        let target_mix: BTreeMap<String, u64> = lane_names
+            .iter()
+            .zip(&self.target_mix)
+            .filter(|(_, &n)| n > 0)
+            .map(|(name, &n)| (name.clone(), n))
+            .collect();
         PhaseReport {
             name: self.name.clone(),
             start_s: self.start_s,
             end_s: self.end_s,
             events: self.events,
             batches: self.batches,
-            target_mix: self.target_mix.clone(),
+            target_mix,
             energy_j: self.energy_j,
             mean_latency_s: mean,
             p95_latency_s: percentile_nearest_rank(&self.latencies, 0.95),
@@ -542,10 +563,27 @@ struct RunState {
     timelines: Vec<AccelTimeline>,
     downlink: DownlinkManager,
     metrics: Metrics,
+    /// Interned hot-path counters and histograms — resolved to slot
+    /// indices at `RunCore::build`, folded into `metrics` (and the
+    /// report's name-keyed maps) once at `finish`.
+    bank: MetricBank,
+    /// Recycled sensor input frames (a no-op passthrough when
+    /// `frame_pool` is off).
+    pool: FramePool,
+    /// Scratch output buffer for the inline surrogate (timing-only
+    /// runs) — reused across every event of every batch.
+    surrogate_buf: Vec<f32>,
+    /// Drained event vector from the last completed batch, handed back
+    /// to the batcher at the next tick so its capacity is reused.
+    spare_events: Vec<SensorEvent>,
+    /// Recycled input-set vector for executor submissions — the
+    /// capacity cycles submit → reap → submit.
+    spare_items: Vec<InputSet>,
+    /// Per-dispatch exclusion mask scratch for the recovery path
+    /// (cleared and resized per batch, allocated once).
+    excluded: Vec<bool>,
     rng: Prng,
     latencies: Vec<f64>,
-    decisions: BTreeMap<String, u64>,
-    target_batches: BTreeMap<String, u64>,
     predicted_energy_j: f64,
     deadline_misses: u64,
     power_sheds: u64,
@@ -600,23 +638,164 @@ impl RunState {
                 self.correct += 1;
             }
         }
-        *self.decisions.entry(decision_key(&d)).or_insert(0) += 1;
+        self.bank.decisions[decision_slot(&d)] += 1;
         if self.fault.link_down(done_s) {
             self.fault.stats.link_dropped += 1;
             self.phases[phase].link_dropped += 1;
-            self.metrics.inc("downlink_dropped_link");
+            self.bank.downlink_dropped_link += 1;
             return;
         }
         match self.downlink.offer(&d, input_bytes) {
             DownlinkVerdict::Sent => {
-                self.metrics.inc("downlink_sent");
+                self.bank.downlink_sent += 1;
                 self.phases[phase].downlink_sent += 1;
             }
             DownlinkVerdict::Shed => {
-                self.metrics.inc("downlink_shed");
+                self.bank.downlink_shed += 1;
                 self.phases[phase].downlink_shed += 1;
             }
         }
+    }
+}
+
+/// Decision-counter slots, index-aligned with [`decision_slot`].  The
+/// report's `decisions` map is rebuilt from these at `finish`; the
+/// `#[cfg(test)]` twin `decision_key` pins the legacy string for each
+/// slot so the rendered map cannot drift.
+const DECISION_KEYS: [&str; 9] = [
+    "region_SW",
+    "region_IF",
+    "region_MSH",
+    "region_MSP",
+    "sep_quiet",
+    "sep_alert",
+    "latent",
+    "flux_nominal",
+    "flux_alert",
+];
+
+/// Slot in [`DECISION_KEYS`] for a decision — constant-time, no string
+/// construction on the per-event path.
+fn decision_slot(d: &Decision) -> usize {
+    match d {
+        Decision::MmsRegion { region, .. } => region.index(),
+        Decision::SepAlert { warning, .. } => 4 + *warning as usize,
+        Decision::Latent { .. } => 6,
+        Decision::FluxForecast { alert, .. } => 7 + *alert as usize,
+    }
+}
+
+/// Static metric name for an injected fault kind — the recovery path's
+/// counterpart of the interned dispatch counters (no per-fault
+/// `format!`).
+fn fault_metric(kind: FaultKind) -> &'static str {
+    match kind {
+        FaultKind::ExecFail => "fault_exec_fail",
+        FaultKind::ExecTimeout => "fault_exec_timeout",
+        FaultKind::SeuCorrupt => "fault_seu_corrupt",
+    }
+}
+
+/// Interned metric storage for the tick hot path.  Every counter the
+/// steady state touches is a struct field or a slot in a fixed array,
+/// resolved once at `RunCore::build`; names exist only at the edges —
+/// built at `fold_into` / `target_batches_map` time, once per run.
+struct MetricBank {
+    /// Flat lane names: registry targets in index order, then derived
+    /// plan lanes (matching `Planner::flat`).
+    lane_names: Vec<String>,
+    /// Batches dispatched per flat lane — serves both the
+    /// `dispatch_{name}` counters and the report's `target_mix`.
+    lane_batches: Vec<u64>,
+    /// Decision counts, slot-aligned with [`DECISION_KEYS`].
+    decisions: [u64; DECISION_KEYS.len()],
+    batches: u64,
+    inferences: u64,
+    deadline_miss_batches: u64,
+    power_shed_batches: u64,
+    downlink_sent: u64,
+    downlink_shed: u64,
+    downlink_dropped_link: u64,
+    /// Reaped batches per executor worker index (grown on demand —
+    /// bounded by the pool's worker count).
+    worker_reaps: Vec<u64>,
+    predicted_batch_latency: Histogram,
+    measured_batch_latency: Histogram,
+}
+
+impl MetricBank {
+    fn new(lane_names: Vec<String>) -> MetricBank {
+        let lanes = lane_names.len();
+        MetricBank {
+            lane_names,
+            lane_batches: vec![0; lanes],
+            decisions: [0; DECISION_KEYS.len()],
+            batches: 0,
+            inferences: 0,
+            deadline_miss_batches: 0,
+            power_shed_batches: 0,
+            downlink_sent: 0,
+            downlink_shed: 0,
+            downlink_dropped_link: 0,
+            worker_reaps: Vec::new(),
+            predicted_batch_latency: Histogram::default(),
+            measured_batch_latency: Histogram::default(),
+        }
+    }
+
+    /// Fold every interned counter into the name-keyed metrics — the
+    /// same final state as incrementing the named counters per event
+    /// (zero counters leave no key, matching the on-demand behavior).
+    fn fold_into(&self, m: &mut Metrics) {
+        let named = [
+            ("batches", self.batches),
+            ("inferences", self.inferences),
+            ("deadline_miss_batches", self.deadline_miss_batches),
+            ("power_shed_batches", self.power_shed_batches),
+            ("downlink_sent", self.downlink_sent),
+            ("downlink_shed", self.downlink_shed),
+            ("downlink_dropped_link", self.downlink_dropped_link),
+        ];
+        for (name, v) in named {
+            if v > 0 {
+                m.add(name, v);
+            }
+        }
+        for (name, &n) in self.lane_names.iter().zip(&self.lane_batches) {
+            if n > 0 {
+                m.add(&format!("dispatch_{name}"), n);
+            }
+        }
+        for (w, &n) in self.worker_reaps.iter().enumerate() {
+            if n > 0 {
+                m.add(&format!("exec_worker_{w}"), n);
+            }
+        }
+        m.merge_histogram("predicted_batch_latency", &self.predicted_batch_latency);
+        m.merge_histogram("measured_batch_latency", &self.measured_batch_latency);
+    }
+
+    /// The report's `target_mix`: lane counts rendered to a name-keyed
+    /// map (dispatched lanes only, matching the legacy entry-on-demand
+    /// behavior).
+    fn target_batches_map(&self) -> BTreeMap<String, u64> {
+        self.lane_names
+            .iter()
+            .zip(&self.lane_batches)
+            .filter(|(_, &n)| n > 0)
+            .map(|(name, &n)| (name.clone(), n))
+            .collect()
+    }
+
+    /// The report's `decisions` map from the slot array (taken
+    /// decisions only).
+    fn decisions_map(&self) -> BTreeMap<String, u64> {
+        DECISION_KEYS
+            .iter()
+            .zip(&self.decisions)
+            .filter(|(_, &n)| n > 0)
+            .map(|(&k, &n)| (k.to_string(), n))
+            .collect()
     }
 }
 
@@ -663,8 +842,13 @@ impl<'a> Reaper<'a> {
         phase: usize,
         batch: Batch,
         done_s: f64,
+        spare_items: &mut Vec<InputSet>,
     ) -> Result<()> {
-        let items = batch.input_sets(); // Arc clones, zero-copy
+        // Arc clones, zero-copy; the item vector itself reuses the
+        // capacity handed back by the last reaped batch
+        let mut items = std::mem::take(spare_items);
+        items.clear();
+        items.extend(batch.events.iter().map(|ev| ev.inputs.clone()));
         let id = self.next_id;
         self.next_id += 1;
         self.pending.insert(id, (phase, batch.events, done_s));
@@ -728,9 +912,30 @@ impl<'a> Reaper<'a> {
                 "host_per_inference",
                 res.host_elapsed / events.len().max(1) as u32,
             );
-            state.metrics.inc(&format!("exec_worker_{}", res.worker));
+            if state.bank.worker_reaps.len() <= res.worker {
+                state.bank.worker_reaps.resize(res.worker + 1, 0);
+            }
+            state.bank.worker_reaps[res.worker] += 1;
             for (ev, out) in events.iter().zip(&outputs) {
                 state.decide_one(use_case, ev, out, input_bytes, phase, done_s);
+            }
+            // recycle the batch: the executor's input-set clones drop
+            // first, then each event's own clone is the last reference
+            // and its frame returns to the pool; the drained event
+            // vector's capacity goes back to the batcher via restock
+            let mut items = res.items;
+            for item in items.drain(..) {
+                state.pool.reclaim(item);
+            }
+            if items.capacity() > state.spare_items.capacity() {
+                state.spare_items = items;
+            }
+            let mut events = events;
+            for ev in events.drain(..) {
+                state.pool.reclaim(ev.inputs);
+            }
+            if events.capacity() > state.spare_events.capacity() {
+                state.spare_events = events;
             }
             self.next_done += 1;
         }
@@ -916,33 +1121,27 @@ impl Pipeline {
             state.timelines[choice.index].schedule(batch.flushed_at_s, n, srun);
         state.sim_end = state.sim_end.max(done);
         state.events_done += n;
-        state.metrics.add("batches", 1);
-        state.metrics.add("inferences", n);
-        state.metrics.inc(&format!("dispatch_{}", target.name()));
-        *state
-            .target_batches
-            .entry(target.name().to_string())
-            .or_insert(0) += 1;
+        state.bank.batches += 1;
+        state.bank.inferences += n;
+        state.bank.lane_batches[choice.index] += 1;
         // predicted-vs-"measured" (virtual clock) telemetry: equal while
         // the cost model and the timeline share calibration; drift here
         // means the dispatcher is optimizing against a stale model
         state.predicted_energy_j += choice.cost.energy_j;
-        state.metrics.observe(
-            "predicted_batch_latency",
+        state.bank.predicted_batch_latency.record(
             Duration::from_secs_f64(choice.cost.latency_s.max(0.0)),
         );
-        state.metrics.observe(
-            "measured_batch_latency",
+        state.bank.measured_batch_latency.record(
             Duration::from_secs_f64((done - batch.flushed_at_s).max(0.0)),
         );
         let missed = done - oldest_t_s > self.dispatcher.deadline_s;
         if missed {
             state.deadline_misses += 1;
-            state.metrics.inc("deadline_miss_batches");
+            state.bank.deadline_miss_batches += 1;
         }
         if choice.power_shed {
             state.power_sheds += 1;
-            state.metrics.inc("power_shed_batches");
+            state.bank.power_shed_batches += 1;
         }
         for ev in &batch.events {
             state.latencies.push(done - ev.t_s);
@@ -951,7 +1150,7 @@ impl Pipeline {
         {
             let ph = &mut state.phases[phase];
             ph.batches += 1;
-            *ph.target_mix.entry(target.name().to_string()).or_insert(0) += 1;
+            ph.target_mix[choice.index] += 1;
             ph.energy_j += srun.power_w * (done - start);
             if missed {
                 ph.deadline_misses += 1;
@@ -995,7 +1194,9 @@ impl Pipeline {
         // exclusion masks and brownout overrides are transient inputs a
         // cache key does not carry
         state.cache.note_bypass();
-        let mut excluded = vec![false; self.dispatcher.registry.len()];
+        let mut excluded = std::mem::take(&mut state.excluded);
+        excluded.clear();
+        excluded.resize(self.dispatcher.registry.len(), false);
         let mut at = batch.flushed_at_s;
         let mut attempt: u32 = 0;
         let mut retries_same: u32 = 0;
@@ -1016,10 +1217,7 @@ impl Pipeline {
                 budget,
             );
             let index = choice.index;
-            let (tname, precision) = {
-                let t = self.dispatcher.registry.get(index);
-                (t.name(), t.precision())
-            };
+            let precision = self.dispatcher.registry.get(index).precision();
             let mut srun = self.dispatcher.run_of(index);
             let throttle = state.fault.throttle_factor(index, at);
             if throttle != 1.0 {
@@ -1040,19 +1238,23 @@ impl Pipeline {
                 // the attempt cap: complete unconditionally, no rolls
                 (Outcome::Success { masked: 0 }, false)
             } else if tmr {
-                let mut faults: Vec<FaultKind> = Vec::new();
+                let mut faults = [None; 3];
+                let mut n_faults = 0usize;
                 let mut thermal = false;
-                for _ in 0..3 {
+                for slot in &mut faults {
                     let (f, th) = state.fault.roll_attempt(index);
-                    if let Some(kind) = f {
-                        faults.push(kind);
+                    if f.is_some() {
+                        *slot = f;
+                        n_faults += 1;
                     }
                     thermal |= th;
                 }
-                let out = match faults.len() {
+                let out = match n_faults {
                     0 => Outcome::Success { masked: 0 },
                     1 => Outcome::Success { masked: 1 },
-                    _ => Outcome::Failure(faults[0]),
+                    _ => Outcome::Failure(
+                        faults.iter().flatten().copied().next().expect("n_faults >= 2"),
+                    ),
                 };
                 (out, thermal)
             } else {
@@ -1085,7 +1287,7 @@ impl Pipeline {
                     state.fault.stats.faults_injected += 1;
                     state.phases[phase].faults += 1;
                     state.phases[phase].energy_j += srun.power_w * (done - start);
-                    state.metrics.inc(&format!("fault_{}", kind.label()));
+                    state.metrics.inc(fault_metric(kind));
                     if tmr {
                         state.fault.stats.tmr_batches += 1;
                         state.metrics.inc("tmr_batches");
@@ -1132,27 +1334,24 @@ impl Pipeline {
                 }
                 Outcome::Success { masked } => {
                     state.events_done += n;
-                    state.metrics.add("batches", 1);
-                    state.metrics.add("inferences", n);
-                    state.metrics.inc(&format!("dispatch_{tname}"));
-                    *state.target_batches.entry(tname.to_string()).or_insert(0) += 1;
+                    state.bank.batches += 1;
+                    state.bank.inferences += n;
+                    state.bank.lane_batches[index] += 1;
                     state.predicted_energy_j += choice.cost.energy_j;
-                    state.metrics.observe(
-                        "predicted_batch_latency",
+                    state.bank.predicted_batch_latency.record(
                         Duration::from_secs_f64(choice.cost.latency_s.max(0.0)),
                     );
-                    state.metrics.observe(
-                        "measured_batch_latency",
+                    state.bank.measured_batch_latency.record(
                         Duration::from_secs_f64((done - batch.flushed_at_s).max(0.0)),
                     );
                     let missed = done - oldest_t_s > self.dispatcher.deadline_s;
                     if missed {
                         state.deadline_misses += 1;
-                        state.metrics.inc("deadline_miss_batches");
+                        state.bank.deadline_miss_batches += 1;
                     }
                     if choice.power_shed {
                         state.power_sheds += 1;
-                        state.metrics.inc("power_shed_batches");
+                        state.bank.power_shed_batches += 1;
                     }
                     for ev in &batch.events {
                         state.latencies.push(done - ev.t_s);
@@ -1183,7 +1382,7 @@ impl Pipeline {
                     {
                         let ph = &mut state.phases[phase];
                         ph.batches += 1;
-                        *ph.target_mix.entry(tname.to_string()).or_insert(0) += 1;
+                        ph.target_mix[index] += 1;
                         ph.energy_j += srun.power_w * (done - start);
                         if missed {
                             ph.deadline_misses += 1;
@@ -1195,6 +1394,7 @@ impl Pipeline {
                             ph.latencies.push(done - ev.t_s);
                         }
                     }
+                    state.excluded = excluded;
                     return self.run_numerics(batch, phase, precision, state, reaper, done);
                 }
             }
@@ -1242,13 +1442,12 @@ impl Pipeline {
             energy += seg.power_w * (d - start);
             done = d;
             at = d + n as f64 * seg.transfer_out_s;
-            state.metrics.inc(&format!("dispatch_{}", seg.target));
-            *state.target_batches.entry(seg.target.clone()).or_insert(0) += 1;
+            state.bank.lane_batches[planner.flat(seg.lane)] += 1;
         }
         state.sim_end = state.sim_end.max(done);
         state.events_done += n;
-        state.metrics.add("batches", 1);
-        state.metrics.add("inferences", n);
+        state.bank.batches += 1;
+        state.bank.inferences += n;
         state.metrics.inc("plan_batches");
         state.plan_batches += 1;
         if plan.is_hybrid() {
@@ -1257,22 +1456,20 @@ impl Pipeline {
         }
         state.plan_transfer_s += n as f64 * plan.transfer_per_item_s;
         state.predicted_energy_j += pc.cost.energy_j;
-        state.metrics.observe(
-            "predicted_batch_latency",
+        state.bank.predicted_batch_latency.record(
             Duration::from_secs_f64(pc.cost.latency_s.max(0.0)),
         );
-        state.metrics.observe(
-            "measured_batch_latency",
+        state.bank.measured_batch_latency.record(
             Duration::from_secs_f64((done - batch.flushed_at_s).max(0.0)),
         );
         let missed = done - oldest_t_s > self.dispatcher.deadline_s;
         if missed {
             state.deadline_misses += 1;
-            state.metrics.inc("deadline_miss_batches");
+            state.bank.deadline_miss_batches += 1;
         }
         if pc.power_shed {
             state.power_sheds += 1;
-            state.metrics.inc("power_shed_batches");
+            state.bank.power_shed_batches += 1;
         }
         for ev in &batch.events {
             state.latencies.push(done - ev.t_s);
@@ -1281,7 +1478,7 @@ impl Pipeline {
             let ph = &mut state.phases[phase];
             ph.batches += 1;
             for seg in &plan.segments {
-                *ph.target_mix.entry(seg.target.clone()).or_insert(0) += 1;
+                ph.target_mix[planner.flat(seg.lane)] += 1;
             }
             ph.energy_j += energy;
             if missed {
@@ -1322,7 +1519,14 @@ impl Pipeline {
         let cfg = &self.config;
         match reaper {
             Some(r) => {
-                r.submit(&self.route.model, precision, phase, batch, done_s)?;
+                r.submit(
+                    &self.route.model,
+                    precision,
+                    phase,
+                    batch,
+                    done_s,
+                    &mut state.spare_items,
+                )?;
                 // overlap: absorb any batches that already finished,
                 // then apply backpressure so in-flight work is bounded
                 r.drain_ready(cfg.use_case, self.input_bytes, state)?;
@@ -1336,8 +1540,9 @@ impl Pipeline {
             None => {
                 // timing-only run: deterministic surrogate numerics,
                 // processed inline (same RNG order as the PJRT path)
+                let mut out = std::mem::take(&mut state.surrogate_buf);
                 for ev in &batch.events {
-                    let out = surrogate_output(cfg.use_case, ev, &mut state.rng);
+                    surrogate_output_into(cfg.use_case, ev, &mut state.rng, &mut out);
                     state.decide_one(
                         cfg.use_case,
                         ev,
@@ -1346,6 +1551,17 @@ impl Pipeline {
                         phase,
                         done_s,
                     );
+                }
+                state.surrogate_buf = out;
+                // recycle the batch: frames back to the pool (each
+                // event's clone is the last reference on this path),
+                // the drained vector's capacity back to the batcher
+                let Batch { mut events, .. } = batch;
+                for ev in events.drain(..) {
+                    state.pool.reclaim(ev.inputs);
+                }
+                if events.capacity() > state.spare_events.capacity() {
+                    state.spare_events = events;
                 }
                 Ok(())
             }
@@ -1446,6 +1662,10 @@ struct RunCore<'p> {
     emitted: u64,
     base_cadence_s: f64,
     base_deadline_s: f64,
+    /// One shared empty frame for pixel-free husk events (timing-only
+    /// image streams) — every husk event bumps its refcount instead of
+    /// allocating.
+    husk_frame: Frame,
 }
 
 /// One in-progress pipeline run: the steppable state machine.
@@ -1498,14 +1718,34 @@ impl<'p> RunCore<'p> {
         });
         let fault =
             FaultState::new(pipeline.dispatcher.registry.len(), injector, cfg.recovery);
+        // intern every hot-path counter once: flat lane names follow
+        // `Planner::flat` (registry targets, then derived plan lanes)
+        let registry = &pipeline.dispatcher.registry;
+        let mut lane_names: Vec<String> =
+            (0..registry.len()).map(|i| registry.get(i).name().to_string()).collect();
+        if let Some(p) = &pipeline.planner {
+            lane_names.extend(p.derived_lane_names().map(String::from));
+        }
+        let lanes = lane_names.len();
+        let pool = if cfg.frame_pool {
+            // enough free frames to cover every batch the coordinator
+            // can hold in flight between flush and reap
+            FramePool::new((4 * cfg.max_batch).max(16))
+        } else {
+            FramePool::disabled()
+        };
         let state = RunState {
             timelines,
             downlink: DownlinkManager::new(cfg.downlink_budget),
             metrics: Metrics::default(),
+            bank: MetricBank::new(lane_names),
+            pool,
+            surrogate_buf: Vec::new(),
+            spare_events: Vec::new(),
+            spare_items: Vec::new(),
+            excluded: Vec::new(),
             rng: Prng::new(cfg.seed ^ DECISION_RNG_SALT),
             latencies: Vec::with_capacity(cfg.n_events),
-            decisions: BTreeMap::new(),
-            target_batches: BTreeMap::new(),
             predicted_energy_j: 0.0,
             deadline_misses: 0,
             power_sheds: 0,
@@ -1516,7 +1756,7 @@ impl<'p> RunCore<'p> {
             correct: 0,
             with_truth: 0,
             sim_end: 0.0,
-            phases: vec![PhaseAccum::new("run", 0.0)],
+            phases: vec![PhaseAccum::new("run", 0.0, lanes, cfg.n_events)],
             fault,
             exec_errors: Vec::new(),
             cache: DispatchCache::new(cfg.dispatch_cache),
@@ -1531,6 +1771,7 @@ impl<'p> RunCore<'p> {
             emitted: 0,
             base_cadence_s,
             base_deadline_s,
+            husk_frame: Arc::new(Vec::new()),
             pipeline,
         }
     }
@@ -1558,6 +1799,12 @@ impl RunCore<'_> {
     /// Dispatch-cache counters so far (all zero when the cache is off).
     pub fn cache_stats(&self) -> CacheStats {
         self.state.cache.stats()
+    }
+
+    /// Frame-pool counters so far (all zero when the pool is off) —
+    /// what the reuse tests assert recycling with.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.state.pool.stats()
     }
 
     /// Live dispatch-cache entries — what the invalidation-exactness
@@ -1763,7 +2010,9 @@ impl RunCore<'_> {
     /// phase); later calls close the current phase and open a new one.
     pub fn begin_phase(&mut self, name: &str) {
         let now = self.stream.t_s;
+        let latency_cap = self.pipeline.config.n_events;
         let phases = &mut self.state.phases;
+        let lanes = phases[0].target_mix.len();
         if phases.len() == 1 && phases[0].is_untouched() && phases[0].name == "run" {
             phases[0].name = name.to_string();
             phases[0].start_s = now;
@@ -1773,7 +2022,7 @@ impl RunCore<'_> {
         if let Some(last) = phases.last_mut() {
             last.end_s = now;
         }
-        phases.push(PhaseAccum::new(name, now));
+        phases.push(PhaseAccum::new(name, now, lanes, latency_cap));
     }
 
     /// Can the ingress queue release an event to the batcher right now?
@@ -1803,8 +2052,25 @@ impl RunCore<'_> {
     /// Advance the virtual clock by exactly one sensor event: generate
     /// it, run ingress admission (when configured), feed the batcher,
     /// and dispatch whatever flushes.
+    ///
+    /// Event generation is the allocation-free fast path when the
+    /// frame pool is on: frames recycle through the pool, and on
+    /// timing-only runs of the truth-free image streams the pixels are
+    /// never synthesized at all (nothing downstream reads them — the
+    /// batch is priced from the model manifest and decisions come from
+    /// the separately-seeded decision RNG).
     fn tick(&mut self, reaper: &mut Option<Reaper<'_>>) -> Result<()> {
-        let ev = self.stream.next_event();
+        if self.state.spare_events.capacity() > 0 {
+            let spare = std::mem::take(&mut self.state.spare_events);
+            self.batcher.restock(spare);
+        }
+        let ev = if !self.state.pool.is_enabled() {
+            self.stream.next_event()
+        } else if reaper.is_none() && self.stream.synthesis_is_pixels_only() {
+            self.stream.next_event_husk(&self.husk_frame)
+        } else {
+            self.stream.next_event_pooled(&mut self.state.pool)
+        };
         let now = ev.t_s;
         self.tick_faults(now);
         self.emitted += 1;
@@ -1908,10 +2174,9 @@ impl RunCore<'_> {
         let RunState {
             timelines,
             downlink,
-            metrics,
+            mut metrics,
+            bank,
             mut latencies,
-            decisions,
-            target_batches,
             predicted_energy_j,
             deadline_misses,
             power_sheds,
@@ -1944,13 +2209,18 @@ impl RunCore<'_> {
         if let Some(last) = phases.last_mut() {
             last.end_s = run_end;
         }
-        let phases: Vec<PhaseReport> = phases.iter_mut().map(PhaseAccum::finalize).collect();
+        let phases: Vec<PhaseReport> =
+            phases.iter_mut().map(|p| p.finalize(&bank.lane_names)).collect();
+        // interned counters fold into the name-keyed maps exactly once,
+        // at the run boundary — identical final state to per-event
+        // string-keyed increments
+        bank.fold_into(&mut metrics);
         Ok(PipelineReport {
             use_case: cfg.use_case,
             model: self.pipeline.route.model.clone(),
             slot: self.pipeline.route.slot,
             policy: self.pipeline.dispatcher.policy.as_str().to_string(),
-            target_mix: target_batches,
+            target_mix: bank.target_batches_map(),
             events: completed,
             sim_elapsed_s: sim_end,
             mean_latency_s: mean,
@@ -1976,7 +2246,7 @@ impl RunCore<'_> {
             } else {
                 None
             },
-            decisions,
+            decisions: bank.decisions_map(),
             phases,
             faults: fault.stats,
             exec_errors,
@@ -2008,6 +2278,11 @@ impl PipelineRun<'_, '_> {
     /// Dispatch-cache counters so far (all zero when the cache is off).
     pub fn cache_stats(&self) -> CacheStats {
         self.core.cache_stats()
+    }
+
+    /// Frame-pool counters so far (all zero when the pool is off).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.core.pool_stats()
     }
 
     /// Live dispatch-cache entries — what the invalidation-exactness
@@ -2228,32 +2503,55 @@ fn record_exec_error(state: &mut RunState, line: String) {
 /// input buffers stay O(cap * max_batch) rather than O(n_events).
 const MAX_INFLIGHT_BATCHES: u64 = 64;
 
-/// Deterministic surrogate outputs for timing-only runs (no executor).
+/// Deterministic surrogate outputs for timing-only runs (no executor),
+/// written into a reusable scratch buffer — the steady state allocates
+/// nothing.  RNG draw order and every produced value are identical to
+/// the historical allocating form (kept below for the unit tests).
 /// Exhaustive over [`UseCase`] — infallible by construction.
-fn surrogate_output(use_case: UseCase, ev: &SensorEvent, rng: &mut Prng) -> Vec<f32> {
+fn surrogate_output_into(
+    use_case: UseCase,
+    ev: &SensorEvent,
+    rng: &mut Prng,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
     match use_case {
         UseCase::Mms => {
-            let mut v = vec![0.0f32; 4];
+            out.resize(4, 0.0);
             if let Some(t) = ev.truth {
-                v[t] = 1.0 + rng.f32();
+                out[t] = 1.0 + rng.f32();
             }
-            v
         }
         UseCase::Esperta => {
-            let mut v = vec![0.2f32; 12];
+            out.resize(12, 0.2);
             if ev.truth == Some(1) {
                 for i in 0..6 {
-                    v[i] = 0.9;
-                    v[6 + i] = 1.0;
+                    out[i] = 0.9;
+                    out[6 + i] = 1.0;
                 }
             }
-            v
         }
-        UseCase::Vae => (0..12).map(|_| rng.normal() as f32).collect(),
-        UseCase::Cnet => vec![-6.0 + 2.0 * rng.f32()],
+        UseCase::Vae => {
+            for _ in 0..12 {
+                out.push(rng.normal() as f32);
+            }
+        }
+        UseCase::Cnet => out.push(-6.0 + 2.0 * rng.f32()),
     }
 }
 
+/// Allocating wrapper over [`surrogate_output_into`] — test-only.
+#[cfg(test)]
+fn surrogate_output(use_case: UseCase, ev: &SensorEvent, rng: &mut Prng) -> Vec<f32> {
+    let mut out = Vec::new();
+    surrogate_output_into(use_case, ev, rng, &mut out);
+    out
+}
+
+/// The legacy string key for a decision — superseded by
+/// [`decision_slot`] on the hot path, kept so the tests can pin the
+/// slot table to the exact strings the report always used.
+#[cfg(test)]
 fn decision_key(d: &Decision) -> String {
     match d {
         Decision::MmsRegion { region, .. } => format!("region_{}", region.label()),
@@ -2309,6 +2607,32 @@ mod tests {
         let out = surrogate_output(UseCase::Mms, &ev, &mut rng);
         assert_eq!(out.len(), 4);
         assert!(out[1] >= 1.0, "truth class must carry the max logit");
+    }
+
+    #[test]
+    fn decision_slots_match_legacy_keys() {
+        use crate::sensors::Region;
+        let samples = [
+            Decision::MmsRegion { region: Region::Sw, roi: false, logits: [0.0; 4] },
+            Decision::MmsRegion { region: Region::If, roi: true, logits: [0.0; 4] },
+            Decision::MmsRegion { region: Region::Msh, roi: true, logits: [0.0; 4] },
+            Decision::MmsRegion { region: Region::Msp, roi: false, logits: [0.0; 4] },
+            Decision::SepAlert { warning: false, mask: [false; 6], max_prob: 0.1 },
+            Decision::SepAlert { warning: true, mask: [true; 6], max_prob: 0.9 },
+            Decision::Latent { z: [0.0; 6] },
+            Decision::FluxForecast { log_flux: -6.5, alert: false },
+            Decision::FluxForecast { log_flux: -4.0, alert: true },
+        ];
+        // every slot is hit exactly once and renders the exact string
+        // the legacy per-event key built
+        let mut seen = [false; DECISION_KEYS.len()];
+        for d in &samples {
+            let slot = decision_slot(d);
+            assert_eq!(DECISION_KEYS[slot], decision_key(d), "slot {slot}");
+            assert!(!seen[slot], "slot {slot} hit twice");
+            seen[slot] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "every slot covered");
     }
 
     #[test]

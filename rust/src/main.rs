@@ -14,6 +14,7 @@
 //!     [--policy static|min-latency|min-energy|deadline]
 //!     [--power-budget W] [--deadline-ms MS] [--targets default|all|...]
 //!     [--plan] [--faults SEED] [--tmr] [--no-dispatch-cache]
+//!     [--no-frame-pool]
 //! spaceinfer plan <model>                         execution-plan table
 //! spaceinfer policies [--use-case vae]            policy comparison table
 //! spaceinfer scenario <name> | --list             mission scenario engine
@@ -291,6 +292,7 @@ fn pipeline_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
         fault_seed: parse_fault_seed(args)?,
         recovery: RecoveryPolicy { tmr: args.has("tmr"), ..Default::default() },
         dispatch_cache: !args.has("no-dispatch-cache"),
+        frame_pool: !args.has("no-frame-pool"),
         ..Default::default()
     };
     if args.has("tmr") && cfg.fault_seed.is_none() {
@@ -637,6 +639,8 @@ usage: spaceinfer <subcommand> [--artifacts DIR] [--calib FILE]
                       quarantine, TMR voting, degraded dispatch)
                       [--no-dispatch-cache]  (disable decision
                       memoization; bit-identical output, slower)
+                      [--no-frame-pool]  (disable sensor-frame
+                      recycling; bit-identical output, slower)
   plan                execution-plan table for one model: candidate
                       partitions (hybrid DPU-subgraph + fallback plans
                       next to whole-model deployments) and the choice

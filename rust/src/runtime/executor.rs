@@ -51,6 +51,10 @@ pub struct ExecResult {
     /// One flat f32 output per item, batch order; a batch fails as a
     /// unit (the coordinator never half-processes a batch).
     pub outputs: Result<Vec<Vec<f32>>>,
+    /// The request's input sets, handed back so the producer can
+    /// recycle the underlying frame buffers (the coordinator's frame
+    /// pool); consumers that don't recycle just drop them.
+    pub items: Vec<InputSet>,
     /// Host wall-clock for the whole batch inside the worker (for
     /// coordinator telemetry; *not* the simulated ZCU104 latency).
     pub host_elapsed: Duration,
@@ -243,6 +247,7 @@ fn worker_loop(idx: usize, engine: Arc<Engine>, rx: mpsc::Receiver<Msg>) {
         match msg {
             Msg::Shutdown => break,
             Msg::Exec(req) => {
+                let ExecRequest { model, precision, items, reply, id } = req;
                 let t0 = Instant::now();
                 // a panic (poisoned lock, FFI abort) must still produce
                 // a reply — reapers block on exactly one result per
@@ -251,11 +256,11 @@ fn worker_loop(idx: usize, engine: Arc<Engine>, rx: mpsc::Receiver<Msg>) {
                 let outputs = std::panic::catch_unwind(
                     std::panic::AssertUnwindSafe(|| {
                         engine
-                            .load(&req.model, req.precision)
-                            .and_then(|m| m.run_batch(&req.items))
+                            .load(&model, precision)
+                            .and_then(|m| m.run_batch(&items))
                             .map_err(|e| {
                                 anyhow::Error::new(ExecError::Engine {
-                                    model: req.model.clone(),
+                                    model: model.clone(),
                                     detail: format!("{e:#}"),
                                 })
                             })
@@ -264,13 +269,14 @@ fn worker_loop(idx: usize, engine: Arc<Engine>, rx: mpsc::Receiver<Msg>) {
                 .unwrap_or_else(|_| {
                     Err(anyhow::Error::new(ExecError::WorkerPanic {
                         worker: idx,
-                        model: req.model.clone(),
+                        model: model.clone(),
                     }))
                 });
-                let _ = req.reply.send(ExecResult {
-                    id: req.id,
-                    model: req.model,
+                let _ = reply.send(ExecResult {
+                    id,
+                    model,
                     outputs,
+                    items,
                     host_elapsed: t0.elapsed(),
                     worker: idx,
                 });
@@ -396,6 +402,28 @@ mod tests {
             th.join().unwrap();
         }
         assert_eq!(pool.batches_submitted(), 100);
+    }
+
+    #[test]
+    fn results_hand_input_frames_back() {
+        let pool = surrogate_pool("handback", 1);
+        let (reply, rx) = mpsc::channel();
+        let item: InputSet = Arc::new(vec![vec![0.25; 16]]);
+        pool.submit(ExecRequest {
+            model: "mini".into(),
+            precision: Precision::Fp32,
+            items: vec![item.clone()],
+            reply,
+            id: 7,
+        })
+        .unwrap();
+        let res = rx.recv().unwrap();
+        assert_eq!(res.id, 7);
+        assert_eq!(res.items.len(), 1);
+        assert!(
+            Arc::ptr_eq(&res.items[0], &item),
+            "the result must return the submitted frames for recycling"
+        );
     }
 
     #[test]

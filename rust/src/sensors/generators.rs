@@ -1,4 +1,12 @@
 //! Structured synthetic inputs, rust side (mirrors python/compile/data.py).
+//!
+//! Every generator comes in two forms: the original allocating function
+//! and a `_into` variant that fills a caller-owned buffer — the frame
+//! pool's hot path.  Both produce bit-identical values: the `_into`
+//! bodies hoist loop-invariant coordinate grids but evaluate every
+//! per-element expression exactly as the inline versions did.
+
+use std::sync::OnceLock;
 
 use crate::util::prng::Prng;
 
@@ -30,21 +38,41 @@ impl Region {
     }
 
     /// Position in `Region::ALL` (the classifier's logit index).
+    /// Constant-time: this runs once per classified event.
     pub fn index(&self) -> usize {
-        Region::ALL.iter().position(|r| r == self).unwrap()
+        match self {
+            Region::Sw => 0,
+            Region::If => 1,
+            Region::Msh => 2,
+            Region::Msp => 3,
+        }
     }
 }
 
 /// Bipolar active-region magnetogram tile, 128x256x3 (flattened NHWC).
 pub fn magnetogram_tile(rng: &mut Prng) -> Vec<f32> {
+    let mut out = Vec::new();
+    magnetogram_tile_into(rng, &mut out);
+    out
+}
+
+/// [`magnetogram_tile`] into a caller-owned buffer (cleared first) —
+/// allocation-free once the buffer has capacity.  The x grid is hoisted
+/// out of the row loop but built with the exact inline expression, so
+/// every output element is bit-identical to the allocating version.
+pub fn magnetogram_tile_into(rng: &mut Prng, out: &mut Vec<f32>) {
     let (h, w) = (128usize, 256usize);
     let cx = rng.range_f64(-0.4, 0.4);
     let cy = rng.range_f64(-0.4, 0.4);
-    let mut out = Vec::with_capacity(h * w * 3);
+    let mut xs = [0.0f64; 256];
+    for (j, x) in xs.iter_mut().enumerate() {
+        *x = -1.0 + 2.0 * j as f64 / (w - 1) as f64;
+    }
+    out.clear();
+    out.reserve(h * w * 3);
     for i in 0..h {
         let y = -1.0 + 2.0 * i as f64 / (h - 1) as f64;
-        for j in 0..w {
-            let x = -1.0 + 2.0 * j as f64 / (w - 1) as f64;
+        for &x in &xs {
             let r2p = (x - cx).powi(2) + (y - cy).powi(2);
             let r2n = (x - cx - 0.25).powi(2) + (y - cy + 0.1).powi(2);
             let spot = (-r2p / 0.02).exp() - 0.7 * (-r2n / 0.04).exp();
@@ -52,26 +80,62 @@ pub fn magnetogram_tile(rng: &mut Prng) -> Vec<f32> {
             out.extend_from_slice(&[v, v, v]);
         }
     }
-    out
 }
 
 /// CNet image input: [AIA 193 | HMI] pair, 256x256x2 (flattened NHWC).
 pub fn aia_hmi_pair(rng: &mut Prng) -> Vec<f32> {
+    let mut out = Vec::new();
+    aia_hmi_pair_into(rng, &mut out);
+    out
+}
+
+/// The RNG-independent AIA term per pixel — the limb-darkened solar
+/// disk `0.3 * disk / mu.sqrt()` — built once per process with the
+/// exact per-pixel expressions the inline version used.
+fn aia_base() -> &'static [f64] {
+    static AIA_BASE: OnceLock<Vec<f64>> = OnceLock::new();
+    AIA_BASE.get_or_init(|| {
+        let n = 256usize;
+        let mut base = Vec::with_capacity(n * n);
+        for i in 0..n {
+            let y = -1.0 + 2.0 * i as f64 / (n - 1) as f64;
+            for j in 0..n {
+                let x = -1.0 + 2.0 * j as f64 / (n - 1) as f64;
+                let r = (x * x + y * y).sqrt();
+                let disk = if r < 0.95 { 1.0 } else { 0.0 };
+                let mu = (1.0 - (r / 0.95).powi(2)).clamp(1e-3, 1.0).sqrt();
+                base.push(0.3 * disk / mu.sqrt());
+            }
+        }
+        base
+    })
+}
+
+/// [`aia_hmi_pair`] into a caller-owned buffer (cleared first).  The
+/// solar-disk term depends only on pixel coordinates and comes from a
+/// process-wide table; the flare-loop and sunspot terms keep the
+/// original expressions and RNG draw order, so the output is
+/// bit-identical to the allocating version.
+pub fn aia_hmi_pair_into(rng: &mut Prng, out: &mut Vec<f32>) {
     let n = 256usize;
-    let loops: Vec<(f64, f64)> = (0..3)
-        .map(|_| (rng.range_f64(-0.5, 0.5), rng.range_f64(-0.5, 0.5)))
-        .collect();
+    let mut loops = [(0.0f64, 0.0f64); 3];
+    for l in loops.iter_mut() {
+        *l = (rng.range_f64(-0.5, 0.5), rng.range_f64(-0.5, 0.5));
+    }
     let cx = rng.range_f64(-0.4, 0.4);
     let cy = rng.range_f64(-0.4, 0.4);
-    let mut out = Vec::with_capacity(n * n * 2);
+    let base = aia_base();
+    let mut xs = [0.0f64; 256];
+    for (j, x) in xs.iter_mut().enumerate() {
+        *x = -1.0 + 2.0 * j as f64 / (n - 1) as f64;
+    }
+    out.clear();
+    out.reserve(n * n * 2);
     for i in 0..n {
         let y = -1.0 + 2.0 * i as f64 / (n - 1) as f64;
-        for j in 0..n {
-            let x = -1.0 + 2.0 * j as f64 / (n - 1) as f64;
-            let r = (x * x + y * y).sqrt();
-            let disk = if r < 0.95 { 1.0 } else { 0.0 };
-            let mu = (1.0 - (r / 0.95).powi(2)).clamp(1e-3, 1.0).sqrt();
-            let mut aia = 0.3 * disk / mu.sqrt();
+        let row = &base[i * n..(i + 1) * n];
+        for (j, &x) in xs.iter().enumerate() {
+            let mut aia = row[j];
             for (lx, ly) in &loops {
                 aia += (-((x - lx).powi(2) + (y - ly).powi(2)) / 0.01).exp();
             }
@@ -82,7 +146,6 @@ pub fn aia_hmi_pair(rng: &mut Prng) -> Vec<f32> {
             out.push(hmi);
         }
     }
-    out
 }
 
 /// log10 GOES background flux over the preceding 30 min.
@@ -93,18 +156,23 @@ pub fn background_flux(rng: &mut Prng) -> f32 {
 /// ESPERTA features: (heliolongitude/90, log SXR fluence, log radio
 /// fluence).  `sep_event` biases toward a large well-connected flare.
 pub fn flare_features(rng: &mut Prng, sep_event: bool) -> Vec<f32> {
+    let mut out = Vec::new();
+    flare_features_into(rng, sep_event, &mut out);
+    out
+}
+
+/// [`flare_features`] into a caller-owned buffer (cleared first);
+/// identical draw order, so identical values.
+pub fn flare_features_into(rng: &mut Prng, sep_event: bool, out: &mut Vec<f32>) {
+    out.clear();
     if sep_event {
-        vec![
-            rng.range_f64(0.3, 1.0) as f32,
-            rng.range_f64(1.2, 2.0) as f32,
-            rng.range_f64(1.2, 2.0) as f32,
-        ]
+        out.push(rng.range_f64(0.3, 1.0) as f32);
+        out.push(rng.range_f64(1.2, 2.0) as f32);
+        out.push(rng.range_f64(1.2, 2.0) as f32);
     } else {
-        vec![
-            rng.range_f64(-1.0, 1.0) as f32,
-            rng.range_f64(0.0, 0.8) as f32,
-            rng.range_f64(0.0, 0.8) as f32,
-        ]
+        out.push(rng.range_f64(-1.0, 1.0) as f32);
+        out.push(rng.range_f64(0.0, 0.8) as f32);
+        out.push(rng.range_f64(0.0, 0.8) as f32);
     }
 }
 
@@ -127,6 +195,14 @@ fn fast_normal(rng: &mut Prng) -> f64 {
 /// work is one multiply + noise + the log intensity mapping (§Perf L3:
 /// 2.0 ms -> ~0.5 ms per distribution).
 pub fn ion_distribution(rng: &mut Prng, region: Region) -> Vec<f32> {
+    let mut out = Vec::new();
+    ion_distribution_into(rng, region, &mut out);
+    out
+}
+
+/// [`ion_distribution`] into a caller-owned buffer (cleared first);
+/// same per-axis tables and per-voxel arithmetic, so identical values.
+pub fn ion_distribution_into(rng: &mut Prng, region: Region, out: &mut Vec<f32>) {
     let (e_n, t_n, p_n) = (32usize, 16usize, 32usize);
     let ln101 = 101.0f64.ln();
     // per-axis tables
@@ -156,7 +232,8 @@ pub fn ion_distribution(rng: &mut Prng, region: Region) -> Vec<f32> {
             }) as f32;
         }
     }
-    let mut out = Vec::with_capacity(e_n * t_n * p_n);
+    out.clear();
+    out.reserve(e_n * t_n * p_n);
     let inv_ln101 = (1.0 / ln101) as f32;
     for ei in 0..e_n {
         let (g, g2) = (ge[ei] as f32, ge2[ei] as f32);
@@ -166,7 +243,6 @@ pub fn ion_distribution(rng: &mut Prng, region: Region) -> Vec<f32> {
             out.push((100.0 * f).ln_1p() * inv_ln101);
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -222,5 +298,21 @@ mod tests {
         for r in Region::ALL {
             assert_eq!(Region::ALL[r.index()], r);
         }
+    }
+
+    #[test]
+    fn into_variants_reuse_dirty_buffers_bit_identically() {
+        let (mut a, mut b) = (Prng::new(11), Prng::new(11));
+        // one shared buffer, reused dirty across shapes: every fill must
+        // clear it and reproduce the allocating output exactly
+        let mut buf = vec![9.0f32; 7];
+        magnetogram_tile_into(&mut b, &mut buf);
+        assert_eq!(magnetogram_tile(&mut a), buf);
+        aia_hmi_pair_into(&mut b, &mut buf);
+        assert_eq!(aia_hmi_pair(&mut a), buf);
+        flare_features_into(&mut b, true, &mut buf);
+        assert_eq!(flare_features(&mut a, true), buf);
+        ion_distribution_into(&mut b, Region::If, &mut buf);
+        assert_eq!(ion_distribution(&mut a, Region::If), buf);
     }
 }

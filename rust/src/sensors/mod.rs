@@ -5,8 +5,10 @@
 //! both layers exercise the same input structure.
 
 pub mod generators;
+pub mod pool;
 pub mod stream;
 
 pub use generators::{aia_hmi_pair, flare_features, ion_distribution,
                      magnetogram_tile, Region};
+pub use pool::{Frame, FramePool, PoolStats};
 pub use stream::{SensorEvent, SensorStream};

@@ -1,0 +1,163 @@
+//! Recycled sensor-frame buffers — the allocation half of the tick
+//! hot path.
+//!
+//! Every sensor event carries its input tensors as an
+//! `Arc<Vec<Vec<f32>>>` *frame*.  Without a pool each event heap-
+//! allocates fresh tensors (~393 KB per magnetogram tile, ~524 KB per
+//! AIA/HMI pair); with one, frames drained from a finished batch are
+//! handed back and the next event fills the same capacity in place.
+//!
+//! Determinism contract: the pool recycles *capacity*, never values —
+//! a recycled frame is only handed out once its refcount is back to 1,
+//! and every generator `_into` fill clears the buffer before writing.
+//! The pool is owned per run (per craft in a fleet), so recycling is
+//! invisible to the PRNG streams and thread-count bit-identity holds.
+
+use std::sync::Arc;
+
+/// One input frame: the flat tensors of a single sensor event.
+pub type Frame = Arc<Vec<Vec<f32>>>;
+
+/// Effectiveness counters for one [`FramePool`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Frames handed out (fresh + recycled).
+    pub acquired: u64,
+    /// Acquisitions served from the free list (no allocation).
+    pub recycled: u64,
+    /// Frames handed back and kept for reuse.
+    pub returned: u64,
+    /// Frames handed back but dropped: still shared elsewhere, pool
+    /// at capacity, or pool disabled.
+    pub rejected: u64,
+}
+
+/// Pool of recycled input-frame buffers, owned by one pipeline run.
+#[derive(Debug)]
+pub struct FramePool {
+    free: Vec<Frame>,
+    cap: usize,
+    enabled: bool,
+    stats: PoolStats,
+}
+
+impl FramePool {
+    /// Pool holding at most `cap` free frames.
+    pub fn new(cap: usize) -> FramePool {
+        FramePool { free: Vec::with_capacity(cap), cap, enabled: true, stats: PoolStats::default() }
+    }
+
+    /// A pool that never recycles — the `--no-frame-pool` escape hatch.
+    /// `acquire` still works (always fresh), `reclaim` always drops.
+    pub fn disabled() -> FramePool {
+        FramePool { free: Vec::new(), cap: 0, enabled: false, stats: PoolStats::default() }
+    }
+
+    /// Is recycling armed?
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Frames currently on the free list.
+    pub fn free_len(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Effectiveness counters so far.
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    /// Hand out a frame: recycled capacity when available, else a
+    /// fresh empty frame.  The result is always uniquely owned
+    /// (`Arc::get_mut` succeeds).
+    pub fn acquire(&mut self) -> Frame {
+        self.stats.acquired += 1;
+        match self.free.pop() {
+            Some(f) => {
+                self.stats.recycled += 1;
+                f
+            }
+            None => Arc::new(Vec::new()),
+        }
+    }
+
+    /// Hand a frame back.  It is kept for reuse only when this was the
+    /// last reference (recycling a shared frame would let a later event
+    /// overwrite buffers someone still reads) and the free list has
+    /// room; otherwise it is dropped.  When one frame is reclaimed via
+    /// two clones (the batch event and the executor's input set), the
+    /// first call drops its clone and the second recycles — order
+    /// between the two does not matter.
+    pub fn reclaim(&mut self, frame: Frame) {
+        if self.enabled && self.free.len() < self.cap && Arc::strong_count(&frame) == 1 {
+            self.stats.returned += 1;
+            self.free.push(frame);
+        } else {
+            self.stats.rejected += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_prefers_recycled_capacity() {
+        let mut pool = FramePool::new(4);
+        let mut f = pool.acquire();
+        Arc::get_mut(&mut f).unwrap().push(vec![1.0; 64]);
+        pool.reclaim(f);
+        assert_eq!(pool.free_len(), 1);
+        let f = pool.acquire();
+        assert_eq!(pool.free_len(), 0);
+        assert_eq!(f[0].len(), 64, "recycled frame keeps its buffers");
+        let s = pool.stats();
+        assert_eq!((s.acquired, s.recycled, s.returned), (2, 1, 1));
+    }
+
+    #[test]
+    fn shared_frames_are_rejected_until_last_reference() {
+        let mut pool = FramePool::new(4);
+        let a = pool.acquire();
+        let b = a.clone();
+        pool.reclaim(a); // still shared via b -> dropped
+        assert_eq!(pool.free_len(), 0);
+        pool.reclaim(b); // last reference -> kept
+        assert_eq!(pool.free_len(), 1);
+        let s = pool.stats();
+        assert_eq!((s.returned, s.rejected), (1, 1));
+    }
+
+    #[test]
+    fn reclaim_order_of_two_clones_is_irrelevant() {
+        for flip in [false, true] {
+            let mut pool = FramePool::new(4);
+            let a = pool.acquire();
+            let b = a.clone();
+            let (first, second) = if flip { (a, b) } else { (b, a) };
+            pool.reclaim(first);
+            pool.reclaim(second);
+            assert_eq!(pool.free_len(), 1);
+            assert_eq!(pool.stats().returned, 1);
+            assert_eq!(pool.stats().rejected, 1);
+        }
+    }
+
+    #[test]
+    fn capacity_cap_and_disabled_pool_drop_frames() {
+        let mut pool = FramePool::new(1);
+        let (a, b) = (pool.acquire(), pool.acquire());
+        pool.reclaim(a);
+        pool.reclaim(b); // over cap -> dropped
+        assert_eq!(pool.free_len(), 1);
+
+        let mut off = FramePool::disabled();
+        assert!(!off.is_enabled());
+        let f = off.acquire();
+        off.reclaim(f);
+        assert_eq!(off.free_len(), 0);
+        assert_eq!(off.stats().rejected, 1);
+    }
+}

@@ -11,6 +11,7 @@ use crate::util::prng::Prng;
 
 use super::generators;
 use super::generators::Region;
+use super::pool::{Frame, FramePool};
 
 /// One sensor reading, routed by `use_case`.
 #[derive(Debug, Clone)]
@@ -59,42 +60,91 @@ impl SensorStream {
         }
     }
 
-    /// Produce the next event.
-    pub fn next_event(&mut self) -> SensorEvent {
-        let (inputs, truth) = match self.use_case {
-            UseCase::Vae => (vec![generators::magnetogram_tile(&mut self.rng)], None),
-            UseCase::Cnet => (
-                vec![
-                    generators::aia_hmi_pair(&mut self.rng),
-                    vec![generators::background_flux(&mut self.rng)],
-                ],
-                None,
-            ),
+    /// Fill `bufs` in place with the next event's input tensors and
+    /// return its ground-truth label.  One shared body for the
+    /// allocating and pooled paths: identical RNG draw order, identical
+    /// per-element arithmetic, so both produce bit-identical events.
+    fn fill_inputs(&mut self, bufs: &mut Vec<Vec<f32>>) -> Option<usize> {
+        match self.use_case {
+            UseCase::Vae => {
+                bufs.resize_with(1, Vec::new);
+                generators::magnetogram_tile_into(&mut self.rng, &mut bufs[0]);
+                None
+            }
+            UseCase::Cnet => {
+                bufs.resize_with(2, Vec::new);
+                generators::aia_hmi_pair_into(&mut self.rng, &mut bufs[0]);
+                let flux = generators::background_flux(&mut self.rng);
+                bufs[1].clear();
+                bufs[1].push(flux);
+                None
+            }
             UseCase::Esperta => {
+                bufs.resize_with(1, Vec::new);
                 let sep = self.rng.chance(self.sep_rate);
-                (
-                    vec![generators::flare_features(&mut self.rng, sep)],
-                    Some(sep as usize),
-                )
+                generators::flare_features_into(&mut self.rng, sep, &mut bufs[0]);
+                Some(sep as usize)
             }
             UseCase::Mms => {
+                bufs.resize_with(1, Vec::new);
                 let region = Region::ALL[self.rng.below(4)];
-                (
-                    vec![generators::ion_distribution(&mut self.rng, region)],
-                    Some(region.index()),
-                )
+                generators::ion_distribution_into(&mut self.rng, region, &mut bufs[0]);
+                Some(region.index())
             }
-        };
+        }
+    }
+
+    /// Stamp `inputs`/`truth` into an event and advance the clock.
+    fn wrap(&mut self, inputs: Frame, truth: Option<usize>) -> SensorEvent {
         let ev = SensorEvent {
             t_s: self.t_s,
             use_case: self.use_case,
-            inputs: Arc::new(inputs),
+            inputs,
             truth,
             seq: self.seq,
         };
         self.t_s += self.cadence_s;
         self.seq += 1;
         ev
+    }
+
+    /// Produce the next event (fresh allocation per event).
+    pub fn next_event(&mut self) -> SensorEvent {
+        let mut inputs = Vec::new();
+        let truth = self.fill_inputs(&mut inputs);
+        self.wrap(Arc::new(inputs), truth)
+    }
+
+    /// Produce the next event into a frame from `pool` — bit-identical
+    /// to [`next_event`], allocation-free once the pool has warmed up.
+    pub fn next_event_pooled(&mut self, pool: &mut FramePool) -> SensorEvent {
+        let mut frame = pool.acquire();
+        let bufs = Arc::get_mut(&mut frame).expect("pool frames are uniquely owned");
+        let truth = self.fill_inputs(bufs);
+        self.wrap(frame, truth)
+    }
+
+    /// Does every RNG draw of this stream land in the pixel values of
+    /// its input tensors?  True for the truth-free image streams (VAE
+    /// magnetograms, CNet image pairs): no ground-truth label, no
+    /// branch on a drawn value — so a consumer that never reads the
+    /// pixels can skip synthesis entirely without perturbing anything
+    /// it *does* read.
+    pub fn synthesis_is_pixels_only(&self) -> bool {
+        matches!(self.use_case, UseCase::Vae | UseCase::Cnet)
+    }
+
+    /// Produce the next event as a pixel-free husk: the timestamp,
+    /// sequence number, and (absent) truth label of the real event,
+    /// sharing one caller-owned empty frame.  Only meaningful on
+    /// streams where [`Self::synthesis_is_pixels_only`] holds *and*
+    /// the consumer never reads `inputs` — the timing-only pipeline,
+    /// which prices batches from the model manifest, not the pixels.
+    /// The sensor RNG is left untouched; the skipped draws could only
+    /// have changed pixel values nobody reads.
+    pub fn next_event_husk(&mut self, shared: &Frame) -> SensorEvent {
+        debug_assert!(self.synthesis_is_pixels_only());
+        self.wrap(shared.clone(), None)
     }
 
     /// Produce `n` events.
@@ -168,5 +218,47 @@ mod tests {
         let (x, y) = (a.next_event(), b.next_event());
         assert_eq!(x.inputs[0], y.inputs[0]);
         assert_eq!(x.truth, y.truth);
+    }
+
+    #[test]
+    fn pooled_events_bit_identical_to_allocating_events() {
+        for uc in crate::model::UseCase::ALL {
+            let mut fresh = SensorStream::new(uc, 5, 0.25);
+            let mut pooled = SensorStream::new(uc, 5, 0.25);
+            let mut pool = super::FramePool::new(4);
+            for _ in 0..12 {
+                let a = fresh.next_event();
+                let b = pooled.next_event_pooled(&mut pool);
+                assert_eq!(a.inputs, b.inputs, "{uc:?} pooled inputs diverged");
+                assert_eq!(a.truth, b.truth);
+                assert_eq!(a.seq, b.seq);
+                assert_eq!(a.t_s.to_bits(), b.t_s.to_bits());
+                // hand the frame back like a reaped batch would
+                pool.reclaim(b.inputs);
+            }
+            assert!(
+                pool.stats().recycled > 0,
+                "{uc:?} never recycled a frame"
+            );
+        }
+    }
+
+    #[test]
+    fn husk_events_carry_clock_and_seq_without_touching_the_rng() {
+        let mut real = SensorStream::new(UseCase::Vae, 3, 0.5);
+        let mut lazy = SensorStream::new(UseCase::Vae, 3, 0.5);
+        assert!(lazy.synthesis_is_pixels_only());
+        let shared: super::Frame = Arc::new(Vec::new());
+        for _ in 0..4 {
+            let a = real.next_event();
+            let b = lazy.next_event_husk(&shared);
+            assert_eq!(a.seq, b.seq);
+            assert_eq!(a.t_s.to_bits(), b.t_s.to_bits());
+            assert_eq!(a.truth, b.truth);
+            assert!(b.inputs.is_empty(), "husk carries no pixels");
+            assert!(Arc::ptr_eq(&b.inputs, &shared));
+        }
+        assert!(!SensorStream::new(UseCase::Mms, 3, 0.5).synthesis_is_pixels_only());
+        assert!(!SensorStream::new(UseCase::Esperta, 3, 0.5).synthesis_is_pixels_only());
     }
 }

@@ -49,6 +49,17 @@ impl Histogram {
         self.max_us
     }
 
+    /// Fold another histogram into this one — the result is identical
+    /// to having recorded the other's samples here directly.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (d, s) in self.buckets.iter_mut().zip(&other.buckets) {
+            *d += s;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
     /// Approximate quantile from bucket boundaries (upper bound).
     pub fn quantile_us(&self, q: f64) -> u64 {
         if self.count == 0 {
@@ -87,14 +98,44 @@ impl Metrics {
         self.add(name, 1);
     }
 
-    /// Add to a counter.
+    /// Add to a counter.  Allocation-free once the key exists (the
+    /// `String` key is only built on first occurrence).
     pub fn add(&mut self, name: &str, v: u64) {
-        *self.counters.entry(name.to_string()).or_insert(0) += v;
+        match self.counters.get_mut(name) {
+            Some(c) => *c += v,
+            None => {
+                self.counters.insert(name.to_string(), v);
+            }
+        }
     }
 
     /// Record a duration sample into the named histogram.
+    /// Allocation-free once the key exists.
     pub fn observe(&mut self, name: &str, d: Duration) {
-        self.histograms.entry(name.to_string()).or_default().record(d);
+        match self.histograms.get_mut(name) {
+            Some(h) => h.record(d),
+            None => {
+                let mut h = Histogram::default();
+                h.record(d);
+                self.histograms.insert(name.to_string(), h);
+            }
+        }
+    }
+
+    /// Fold a pre-accumulated histogram in under `name` — identical
+    /// state to having observed every sample here directly.  Empty
+    /// histograms leave no trace (matching the observe-on-demand
+    /// behavior, so folded reports stay bit-identical).
+    pub fn merge_histogram(&mut self, name: &str, h: &Histogram) {
+        if h.count() == 0 {
+            return;
+        }
+        match self.histograms.get_mut(name) {
+            Some(dst) => dst.merge(h),
+            None => {
+                self.histograms.insert(name.to_string(), h.clone());
+            }
+        }
     }
 
     /// Current counter value (0 when absent).
@@ -158,6 +199,25 @@ mod tests {
         h.record(Duration::from_nanos(1));
         assert_eq!(h.count(), 1);
         assert!(h.quantile_us(1.0) >= 1);
+    }
+
+    #[test]
+    fn merge_histogram_matches_direct_observation() {
+        let mut direct = Metrics::default();
+        let mut h = Histogram::default();
+        for us in [3u64, 700, 90_000] {
+            direct.observe("lat", Duration::from_micros(us));
+            h.record(Duration::from_micros(us));
+        }
+        let mut folded = Metrics::default();
+        folded.merge_histogram("lat", &h);
+        assert_eq!(direct.report(), folded.report());
+        // empty histograms leave no trace (report stays bit-identical)
+        folded.merge_histogram("untouched", &Histogram::default());
+        assert!(folded.histogram("untouched").is_none());
+        // merging on top accumulates
+        folded.merge_histogram("lat", &h);
+        assert_eq!(folded.histogram("lat").unwrap().count(), 6);
     }
 
     #[test]

@@ -1,0 +1,104 @@
+//! Zero-allocation audit of the steady-state tick loop.
+//!
+//! Built only under `--features alloc-audit`, which swaps in a counting
+//! global allocator: every `alloc` / `realloc` / `alloc_zeroed` bumps a
+//! process-wide counter.  The single test (one `#[test]` fn, so no
+//! parallel test thread can pollute the counter) runs a timing-only
+//! pipeline per builtin use case, warms the run up past every one-time
+//! allocation — frame-pool priming, first-fill `Vec` growth, the
+//! dispatch cache's first miss, the `OnceLock` synthesis table — and
+//! then asserts that 1000 further ticks allocate **nothing**:
+//!
+//! * frames recycle through the [`FramePool`] (or are husked entirely
+//!   on timing-only image streams),
+//! * every hot-path counter is an interned `MetricBank` slot,
+//! * batcher / executor-item / surrogate scratch vectors cycle their
+//!   capacity instead of reallocating,
+//! * steady-state dispatch is a dispatch-cache hit (exact-bit keys,
+//!   Static-policy relaxation collapses to one entry).
+//!
+//! `max_wait_s` is pinned huge so every flush is a full-batch `offer`
+//! flush: the drained event vector is always restocked before the next
+//! push, keeping the accumulate/flush cycle allocation-free.
+//!
+//! [`FramePool`]: spaceinfer::sensors::FramePool
+
+#![cfg(feature = "alloc-audit")]
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use spaceinfer::board::Calibration;
+use spaceinfer::coordinator::{Pipeline, PipelineConfig};
+use spaceinfer::model::{Catalog, UseCase};
+
+/// System allocator wrapper that counts every allocation call.
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static AUDIT: CountingAlloc = CountingAlloc;
+
+/// Ticks before the counter snapshot: covers pool priming (several
+/// full batch cycles), first-fill buffer growth, and the dispatch
+/// cache's first miss.
+const WARMUP_TICKS: usize = 64;
+
+/// Ticks measured under the zero-allocation assertion.
+const MEASURED_TICKS: usize = 1000;
+
+#[test]
+fn steady_state_ticks_do_not_allocate() {
+    let catalog = Catalog::synthetic();
+    let calib = Calibration::default();
+    for uc in UseCase::ALL {
+        let cfg = PipelineConfig {
+            use_case: uc,
+            // sized so the preallocated latency buffers cover every tick
+            n_events: WARMUP_TICKS + MEASURED_TICKS + 8,
+            // full-batch offer flushes only: the drained event vector is
+            // restocked before the next push (a timer flush would force
+            // the open batch to regrow from zero capacity)
+            max_wait_s: 1e9,
+            ..Default::default()
+        };
+        let mut p = Pipeline::new(cfg, &catalog, &calib).unwrap();
+        let mut run = p.begin(None);
+        for _ in 0..WARMUP_TICKS {
+            run.tick().unwrap();
+        }
+        let before = ALLOCATIONS.load(Ordering::Relaxed);
+        for _ in 0..MEASURED_TICKS {
+            run.tick().unwrap();
+        }
+        let delta = ALLOCATIONS.load(Ordering::Relaxed) - before;
+        assert_eq!(
+            delta, 0,
+            "{uc}: {delta} heap allocations across {MEASURED_TICKS} \
+             steady-state ticks (the tick hot path must be allocation-free)"
+        );
+        run.finish().unwrap();
+    }
+}

@@ -1,0 +1,213 @@
+//! Frame-pool regression harness: recycling sensor frames must be a
+//! pure allocation knob — **zero behavioral drift**.
+//!
+//! Three layers of evidence, mirroring the dispatch-cache harness:
+//!
+//! * **Pipeline bit-identity** — `frame_pool: true` vs `false` over a
+//!   grid of use cases × policies × plan mode × armed fault injection:
+//!   every `PipelineReport` field must match bit for bit, including the
+//!   full rendered metrics dump (the pool adds no counters and may not
+//!   perturb any).
+//! * **Scenario and fleet bit-identity** — every built-in scenario, and
+//!   a contested multi-phase fleet across worker-thread counts, compare
+//!   equal with the pool on and off (recycling is per-craft state, so
+//!   thread-count invariance must survive it).
+//! * **The pool actually engages** — a stepped timing-only run reports
+//!   recycled frames on the synthesizing stream (MMS), and *zero*
+//!   acquisitions on an image stream (VAE), pinning the husk fast path
+//!   that skips pixel synthesis nobody reads.
+
+use spaceinfer::board::Calibration;
+use spaceinfer::coordinator::{Pipeline, PipelineConfig, PipelineReport, Policy};
+use spaceinfer::fleet::{self, FleetConfig};
+use spaceinfer::model::{Catalog, UseCase};
+use spaceinfer::rad::ScrubPolicy;
+use spaceinfer::scenario::{self, Phase, Scenario};
+
+const POLICIES: [Policy; 2] = [Policy::Static, Policy::MinLatency];
+
+fn catalog() -> Catalog {
+    Catalog::synthetic()
+}
+
+fn calib() -> Calibration {
+    Calibration::default()
+}
+
+/// Run `cfg` with the frame pool forced on or off.
+fn run_with_pool(cfg: &PipelineConfig, pool_on: bool) -> PipelineReport {
+    let mut cfg = cfg.clone();
+    cfg.frame_pool = pool_on;
+    Pipeline::new(cfg, &catalog(), &calib())
+        .unwrap()
+        .run(None)
+        .unwrap()
+}
+
+/// Every report field must match bit for bit — the pool has no counter
+/// block of its own, so even the rendered metrics must be identical.
+fn assert_reports_identical(a: &PipelineReport, b: &PipelineReport, ctx: &str) {
+    assert_eq!(a.target_mix, b.target_mix, "{ctx}: target_mix");
+    assert_eq!(a.events, b.events, "{ctx}: events");
+    assert_eq!(
+        a.sim_elapsed_s.to_bits(),
+        b.sim_elapsed_s.to_bits(),
+        "{ctx}: sim_elapsed_s"
+    );
+    assert_eq!(
+        a.mean_latency_s.to_bits(),
+        b.mean_latency_s.to_bits(),
+        "{ctx}: mean_latency_s"
+    );
+    assert_eq!(
+        a.p95_latency_s.to_bits(),
+        b.p95_latency_s.to_bits(),
+        "{ctx}: p95_latency_s"
+    );
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{ctx}: energy_j");
+    assert_eq!(
+        a.predicted_energy_j.to_bits(),
+        b.predicted_energy_j.to_bits(),
+        "{ctx}: predicted_energy_j"
+    );
+    assert_eq!(a.deadline_misses, b.deadline_misses, "{ctx}: deadline_misses");
+    assert_eq!(a.power_sheds, b.power_sheds, "{ctx}: power_sheds");
+    assert_eq!(a.ingress_accepted, b.ingress_accepted, "{ctx}: ingress_accepted");
+    assert_eq!(a.ingress_dropped, b.ingress_dropped, "{ctx}: ingress_dropped");
+    assert_eq!(a.plan_batches, b.plan_batches, "{ctx}: plan_batches");
+    assert_eq!(a.downlink_sent, b.downlink_sent, "{ctx}: downlink_sent");
+    assert_eq!(a.downlink_shed, b.downlink_shed, "{ctx}: downlink_shed");
+    assert_eq!(
+        a.downlink_sent_bytes, b.downlink_sent_bytes,
+        "{ctx}: downlink_sent_bytes"
+    );
+    assert_eq!(
+        a.accuracy.map(f64::to_bits),
+        b.accuracy.map(f64::to_bits),
+        "{ctx}: accuracy"
+    );
+    assert_eq!(a.decisions, b.decisions, "{ctx}: decisions");
+    assert_eq!(a.phases, b.phases, "{ctx}: phases");
+    assert_eq!(a.faults, b.faults, "{ctx}: faults");
+    assert_eq!(a.exec_errors, b.exec_errors, "{ctx}: exec_errors");
+    assert_eq!(
+        a.metrics.report(),
+        b.metrics.report(),
+        "{ctx}: rendered metrics"
+    );
+}
+
+#[test]
+fn pool_on_and_off_runs_are_bit_identical_across_the_grid() {
+    for use_case in [UseCase::Vae, UseCase::Cnet, UseCase::Esperta, UseCase::Mms] {
+        for policy in POLICIES {
+            for plan_mode in [false, true] {
+                for fault_seed in [None, Some(7u64)] {
+                    if plan_mode && fault_seed.is_some() {
+                        continue; // unsupported combination by design
+                    }
+                    let cfg = PipelineConfig {
+                        use_case,
+                        n_events: 96,
+                        policy,
+                        plan_mode,
+                        fault_seed,
+                        ..Default::default()
+                    };
+                    let on = run_with_pool(&cfg, true);
+                    let off = run_with_pool(&cfg, false);
+                    let ctx = format!(
+                        "{use_case} {policy:?} plan={plan_mode} faults={fault_seed:?}"
+                    );
+                    assert_reports_identical(&on, &off, &ctx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn builtin_scenarios_are_bit_identical_with_pool_on_and_off() {
+    for name in scenario::builtin_names() {
+        let mut sc = scenario::builtin(name).unwrap();
+        sc.config.frame_pool = true;
+        let on = scenario::run_scenario(&sc, &catalog(), &calib(), None).unwrap();
+        sc.config.frame_pool = false;
+        let off = scenario::run_scenario(&sc, &catalog(), &calib(), None).unwrap();
+        assert_reports_identical(&on, &off, name);
+    }
+}
+
+#[test]
+fn fleet_reports_are_bit_identical_with_pool_on_and_off_across_threads() {
+    let mut sc = Scenario {
+        name: "pool-fleet".into(),
+        summary: "frame-pool fleet equivalence mission".into(),
+        config: PipelineConfig {
+            use_case: UseCase::Esperta,
+            cadence_s: 0.1,
+            downlink_budget: 64,
+            policy: Policy::Static,
+            ..Default::default()
+        },
+        scrub: ScrubPolicy { period_s: 60.0 },
+        phases: vec![
+            Phase::new("cruise", 20, vec![]),
+            Phase::new("dense", 25, vec![]),
+            Phase::new("quiet", 5, vec![]),
+        ],
+    };
+    let cfg = |threads: usize| FleetConfig {
+        crafts: 24,
+        threads,
+        master_seed: 42,
+        pass_budget_bytes: 4_096,
+        pass_link_bytes_per_s: 125_000.0,
+        relay: true,
+        planes: 4,
+        stagger_events: 7,
+    };
+    sc.config.frame_pool = true;
+    let on_1t = fleet::run_fleet(&sc, &catalog(), &calib(), &cfg(1)).unwrap();
+    let on_4t = fleet::run_fleet(&sc, &catalog(), &calib(), &cfg(4)).unwrap();
+    sc.config.frame_pool = false;
+    let off_1t = fleet::run_fleet(&sc, &catalog(), &calib(), &cfg(1)).unwrap();
+    let off_4t = fleet::run_fleet(&sc, &catalog(), &calib(), &cfg(4)).unwrap();
+    assert_eq!(on_1t, on_4t, "pool on: thread-count invariance");
+    assert_eq!(off_1t, off_4t, "pool off: thread-count invariance");
+    assert_eq!(on_1t, off_1t, "pool on vs off: fleet report drift");
+}
+
+#[test]
+fn pooled_run_recycles_frames_and_husks_image_synthesis() {
+    // MMS synthesizes every frame (truth precedes inputs on the sensor
+    // RNG), so pooled frames must actually cycle through the free list
+    let cfg = PipelineConfig { use_case: UseCase::Mms, n_events: 64, ..Default::default() };
+    let mut p = Pipeline::new(cfg, &catalog(), &calib()).unwrap();
+    let mut run = p.begin(None);
+    for _ in 0..64 {
+        run.tick().unwrap();
+    }
+    let stats = run.pool_stats();
+    assert!(stats.acquired > 0, "pooled stream never acquired a frame");
+    assert!(
+        stats.recycled > 0,
+        "steady-state run never recycled a frame: {stats:?}"
+    );
+    run.finish().unwrap();
+
+    // a timing-only image stream (truth-free, outputs surrogate) skips
+    // pixel synthesis entirely: the pool is never even consulted
+    let cfg = PipelineConfig { use_case: UseCase::Vae, n_events: 64, ..Default::default() };
+    let mut p = Pipeline::new(cfg, &catalog(), &calib()).unwrap();
+    let mut run = p.begin(None);
+    for _ in 0..64 {
+        run.tick().unwrap();
+    }
+    assert_eq!(
+        run.pool_stats().acquired,
+        0,
+        "husked image stream must not touch the pool"
+    );
+    run.finish().unwrap();
+}
