@@ -11,7 +11,10 @@
 //! matrix is tracked on every machine.
 
 use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::path::PathBuf;
+use std::time::Instant;
 
 use spaceinfer::backend::{AccelModel, TargetRegistry, TargetSet};
 use spaceinfer::board::Calibration;
@@ -25,6 +28,7 @@ use spaceinfer::plan::Planner;
 use spaceinfer::rad::ScrubPolicy;
 use spaceinfer::scenario::{Phase, Scenario};
 use spaceinfer::runtime::{Engine, ExecutorPool, GoldenIo, InputSet, PoolConfig};
+use spaceinfer::serve::{ServeConfig, Server};
 use spaceinfer::util::benchkit::{bench, throughput};
 use spaceinfer::util::json::Json;
 
@@ -67,6 +71,26 @@ const MIN_FLEET_SPEEDUP_X: f64 = 4.0;
 
 /// Minimum core count for the fleet speedup gate to be binding.
 const MIN_FLEET_GATE_CORES: usize = 8;
+
+/// Concurrent clients in the serve-scaling section's high arm.
+const SERVE_CLIENTS: usize = 32;
+
+/// Requests each concurrent client sends in the high arm.
+const SERVE_REQS_PER_CLIENT: usize = 8;
+
+/// Requests the single sequential client sends in the low arm.
+const SERVE_REQS_1C: usize = 32;
+
+/// CI regression floor: requests/sec at [`SERVE_CLIENTS`] concurrent
+/// clients must clear this many × the single-client rate — the
+/// continuous-batching concurrency claim.  Enforced only under
+/// `BENCH_ENFORCE_SERVE=1` *and* on runners with at least
+/// [`MIN_SERVE_GATE_CORES`] cores (same reasoning as the fleet gate:
+/// a 4x concurrency floor is unreachable on a 2-core box).
+const MIN_SERVE_SPEEDUP_X: f64 = 4.0;
+
+/// Minimum core count for the serve speedup gate to be binding.
+const MIN_SERVE_GATE_CORES: usize = 8;
 
 fn repo_root() -> PathBuf {
     let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
@@ -429,6 +453,104 @@ fn fleet_rows(catalog: &Catalog) -> (BTreeMap<String, Json>, bool) {
     (rows, gate_ok)
 }
 
+/// One blocking `/infer` round trip against the bench server.  Panics
+/// on anything but a 200 — the scaling numbers are meaningless if any
+/// request was rejected.
+fn infer_once(addr: SocketAddr, tenant: usize, seed: u64) {
+    let body = format!(r#"{{"tenant":"c{tenant}","use_case":"esperta","seed":{seed}}}"#);
+    let mut stream = TcpStream::connect(addr).expect("connect serve bench");
+    let _ = stream.set_nodelay(true);
+    let msg = format!(
+        "POST /infer HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(msg.as_bytes()).expect("write request");
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("status line");
+    assert!(line.contains(" 200 "), "serve bench request failed: {line}");
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).expect("header");
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            len = v.trim().parse().expect("content length");
+        }
+    }
+    let mut raw = vec![0u8; len];
+    reader.read_exact(&mut raw).expect("response body");
+}
+
+/// Serve-scaling section: requests/sec through a live loopback server
+/// with 1 sequential client vs [`SERVE_CLIENTS`] concurrent clients on
+/// distinct tenants — the win continuous cross-tenant batching plus
+/// the worker pool buys over round-tripping one request at a time.
+/// Returns the JSON rows and whether the ≥[`MIN_SERVE_SPEEDUP_X`] gate
+/// holds.
+fn serve_rows(catalog: &Catalog) -> (BTreeMap<String, Json>, bool) {
+    let calib = Calibration::default();
+    let server = Server::bind(ServeConfig::default(), catalog, &calib)
+        .expect("bind serve bench");
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let workers = ServeConfig::default().workers;
+    let (rps_1, rps_n, stats) = std::thread::scope(|scope| {
+        let run = scope.spawn(|| server.run().expect("serve run"));
+        // warm the per-worker lane pipelines out of the measurement
+        for seed in 0..8u64 {
+            infer_once(addr, 0, seed);
+        }
+        let arm = |clients: usize, per_client: usize| {
+            let t0 = Instant::now();
+            std::thread::scope(|s| {
+                for c in 0..clients {
+                    s.spawn(move || {
+                        for i in 0..per_client {
+                            infer_once(addr, c, (c * per_client + i) as u64);
+                        }
+                    });
+                }
+            });
+            throughput((clients * per_client) as u64, t0.elapsed())
+        };
+        let rps_1 = arm(1, SERVE_REQS_1C);
+        let rps_n = arm(SERVE_CLIENTS, SERVE_REQS_PER_CLIENT);
+        handle.shutdown();
+        let stats = run.join().expect("serve thread");
+        (rps_1, rps_n, stats)
+    });
+    assert!(
+        stats.conserved(),
+        "serve bench violated request conservation: {stats:?}"
+    );
+    let speedup = rps_n / rps_1.max(1e-12);
+    println!("serve 1 client  x{SERVE_REQS_1C:<3}            -> {rps_1:.0} req/s");
+    println!(
+        "serve {SERVE_CLIENTS} clients x{SERVE_REQS_PER_CLIENT:<3}            \
+         -> {rps_n:.0} req/s"
+    );
+    println!("  serve scaling: {speedup:.2}x on {workers} worker(s)");
+
+    let gate_ok = speedup >= MIN_SERVE_SPEEDUP_X;
+    let mut rows = BTreeMap::new();
+    rows.insert("clients_hi".into(), Json::Num(SERVE_CLIENTS as f64));
+    rows.insert("workers".into(), Json::Num(workers as f64));
+    rows.insert("rps_1c".into(), Json::Num(rps_1));
+    rows.insert("rps_nc".into(), Json::Num(rps_n));
+    rows.insert("speedup_x".into(), Json::Num(speedup));
+    rows.insert("min_speedup_x".into(), Json::Num(MIN_SERVE_SPEEDUP_X));
+    rows.insert(
+        "gate_cores_min".into(),
+        Json::Num(MIN_SERVE_GATE_CORES as f64),
+    );
+    rows.insert("gate_ok".into(), Json::Num(gate_ok as u8 as f64));
+    (rows, gate_ok)
+}
+
 fn main() {
     let dir = std::path::Path::new("artifacts");
     let have_artifacts = Catalog::is_present(dir);
@@ -470,6 +592,14 @@ fn main() {
     println!("== fleet scaling (crafts/s, 1 thread vs available parallelism) ==");
     let (fleet_section, fleet_gate_ok) = fleet_rows(&catalog);
     doc.insert("fleet".to_string(), Json::Obj(fleet_section));
+    println!();
+
+    // serve-scaling section: live loopback server, 1 sequential client
+    // vs concurrent clients on distinct tenants (artifact-free; CI
+    // gates on it when the runner has enough cores)
+    println!("== serve scaling (req/s, 1 client vs {SERVE_CLIENTS} clients) ==");
+    let (serve_section, serve_gate_ok) = serve_rows(&catalog);
+    doc.insert("serve".to_string(), Json::Obj(serve_section));
     println!();
 
     let mut model_rows: BTreeMap<String, Json> = BTreeMap::new();
@@ -621,6 +751,30 @@ fn main() {
                 "fleet gate FAILED: {FLEET_CRAFTS}-craft fleet must clear \
                  {MIN_FLEET_SPEEDUP_X}x the single-thread craft rate \
                  (see the fleet section of {})",
+                out.display()
+            );
+            std::process::exit(1);
+        }
+    }
+
+    // serve gate (opt-in + core-gated): `BENCH_ENFORCE_SERVE=1` fails
+    // the build when concurrent serving throughput falls below the
+    // floor over the single-client rate — CI sets it; small machines
+    // report, never fail.
+    if std::env::var("BENCH_ENFORCE_SERVE").is_ok_and(|v| v == "1") {
+        let cores =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if cores < MIN_SERVE_GATE_CORES {
+            eprintln!(
+                "serve gate skipped: {cores} core(s) < {MIN_SERVE_GATE_CORES} \
+                 (the {MIN_SERVE_SPEEDUP_X}x floor assumes >= \
+                 {MIN_SERVE_GATE_CORES}-core runners)"
+            );
+        } else if !serve_gate_ok {
+            eprintln!(
+                "serve gate FAILED: {SERVE_CLIENTS} concurrent clients must \
+                 clear {MIN_SERVE_SPEEDUP_X}x the single-client req/s \
+                 (see the serve section of {})",
                 out.display()
             );
             std::process::exit(1);

@@ -68,6 +68,12 @@ impl<T> BoundedQueue<T> {
         self.items.pop_front()
     }
 
+    /// The oldest queued item, without removing it — what the serve
+    /// layer's cross-tenant batch former inspects to pick a lane.
+    pub fn peek(&self) -> Option<&T> {
+        self.items.front()
+    }
+
     /// Items currently queued.
     pub fn len(&self) -> usize {
         self.items.len()

@@ -202,6 +202,9 @@ pub struct PhaseReport {
     pub mean_latency_s: f64,
     /// p95 end-to-end latency of this phase's batches (s).
     pub p95_latency_s: f64,
+    /// p99 end-to-end latency of this phase's batches (s), nearest-rank
+    /// like p95 — the serving-SLO tail.
+    pub p99_latency_s: f64,
     /// Batches whose oldest event missed the deadline.
     pub deadline_misses: u64,
     /// Batches the power budget steered away from the policy's pick.
@@ -250,6 +253,9 @@ pub struct PipelineReport {
     pub mean_latency_s: f64,
     /// Simulated p95 end-to-end latency (s).
     pub p95_latency_s: f64,
+    /// Simulated p99 end-to-end latency (s), nearest-rank like p95 —
+    /// the tail that serving SLOs are written against.
+    pub p99_latency_s: f64,
     /// Simulated accelerator throughput (inferences/s while busy).
     pub busy_fps: f64,
     /// Aggregate busy time over the run window, summed across targets —
@@ -345,8 +351,12 @@ impl PipelineReport {
             self.power_sheds
         ));
         out.push_str(&format!(
-            "  events {}  sim_elapsed {:.3}s  mean_latency {:.4}s  p95 {:.4}s\n",
-            self.events, self.sim_elapsed_s, self.mean_latency_s, self.p95_latency_s
+            "  events {}  sim_elapsed {:.3}s  mean_latency {:.4}s  p95 {:.4}s  p99 {:.4}s\n",
+            self.events,
+            self.sim_elapsed_s,
+            self.mean_latency_s,
+            self.p95_latency_s,
+            self.p99_latency_s
         ));
         out.push_str(&format!(
             "  busy_fps {:.1}  util {:.1}%  energy {:.3}J (predicted {:.3}J)\n",
@@ -415,7 +425,7 @@ impl PipelineReport {
             for p in &self.phases {
                 out.push_str(&format!(
                     "    {:<16} [{:8.2}s..{:8.2}s]  events {:<5} mix [{}]  \
-                     energy {:.3}J  p95 {:.4}s  misses {}  sheds {}  \
+                     energy {:.3}J  p95 {:.4}s  p99 {:.4}s  misses {}  sheds {}  \
                      drops {}  dl {}/{}\n",
                     p.name,
                     p.start_s,
@@ -424,6 +434,7 @@ impl PipelineReport {
                     PipelineReport::mix_str(&p.target_mix),
                     p.energy_j,
                     p.p95_latency_s,
+                    p.p99_latency_s,
                     p.deadline_misses,
                     p.power_sheds,
                     p.dropped,
@@ -542,6 +553,7 @@ impl PhaseAccum {
             energy_j: self.energy_j,
             mean_latency_s: mean,
             p95_latency_s: percentile_nearest_rank(&self.latencies, 0.95),
+            p99_latency_s: percentile_nearest_rank(&self.latencies, 0.99),
             deadline_misses: self.deadline_misses,
             power_sheds: self.power_sheds,
             dropped: self.dropped,
@@ -1615,6 +1627,22 @@ impl Pipeline {
         }
         run.finish()
     }
+
+    /// Request-driven variant of the tick loop: rebind the seed and
+    /// event count, then replay the whole begin → tick → finish cycle
+    /// on the already-built dispatcher and registry.  This is the seam
+    /// the serving layer (`crate::serve`) calls once per admitted
+    /// request — construction (routing, registry build, planner) is
+    /// amortized across every request sharing a lane, while the run
+    /// itself is a pure function of `(config, seed, n_events)`, so the
+    /// report is bit-identical to a fresh [`Pipeline::new`] with the
+    /// same config.  Timing-only (`executor = None`) by design: serving
+    /// replies carry virtual-clock telemetry, not host numerics.
+    pub fn run_request(&mut self, seed: u64, n_events: usize) -> Result<PipelineReport> {
+        self.config.seed = seed;
+        self.config.n_events = n_events;
+        self.run(None)
+    }
 }
 
 /// How a run holds its pipeline: borrowed (the classic
@@ -2196,6 +2224,7 @@ impl RunCore<'_> {
         latencies.sort_by(f64::total_cmp);
         let mean = latencies.iter().sum::<f64>() / latencies.len().max(1) as f64;
         let p95 = percentile_nearest_rank(&latencies, 0.95);
+        let p99 = percentile_nearest_rank(&latencies, 0.99);
         // events counted per dispatched batch, not per timeline charge:
         // a hybrid plan schedules the same batch on several lanes, and
         // those segment charges must not inflate the event count
@@ -2225,6 +2254,7 @@ impl RunCore<'_> {
             sim_elapsed_s: sim_end,
             mean_latency_s: mean,
             p95_latency_s: p95,
+            p99_latency_s: p99,
             busy_fps,
             accel_utilization: busy_s / sim_end.max(1e-9),
             energy_j,
@@ -2699,6 +2729,38 @@ mod tests {
         assert!((ph.energy_j - r.energy_j).abs() < 1e-9);
         assert_eq!(ph.mean_latency_s.to_bits(), r.mean_latency_s.to_bits());
         assert_eq!(ph.p95_latency_s.to_bits(), r.p95_latency_s.to_bits());
+        assert_eq!(ph.p99_latency_s.to_bits(), r.p99_latency_s.to_bits());
+        // nearest-rank on the same sorted sample: the tail orders
+        assert!(r.p99_latency_s >= r.p95_latency_s);
+    }
+
+    #[test]
+    fn run_request_matches_fresh_pipeline() {
+        // the serving seam: rebinding seed + n_events on a built
+        // pipeline must reproduce a fresh construction bit for bit
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        let mut template = vae_pipeline(Policy::MinLatency);
+        let a = template.run_request(191, 48).unwrap();
+        let cfg = PipelineConfig {
+            use_case: UseCase::Vae,
+            n_events: 48,
+            cadence_s: 0.05,
+            seed: 191,
+            policy: Policy::MinLatency,
+            ..PipelineConfig::default()
+        };
+        let b = Pipeline::new(cfg, &catalog, &calib).unwrap().run(None).unwrap();
+        assert_eq!(a.target_mix, b.target_mix);
+        assert_eq!(a.mean_latency_s.to_bits(), b.mean_latency_s.to_bits());
+        assert_eq!(a.p99_latency_s.to_bits(), b.p99_latency_s.to_bits());
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        assert_eq!(a.decisions, b.decisions);
+        // and a second request on the same template stays independent of
+        // the first — no cross-request state bleeds through
+        let c = template.run_request(191, 48).unwrap();
+        assert_eq!(c.energy_j.to_bits(), b.energy_j.to_bits());
+        assert_eq!(c.render(), b.render());
     }
 
     #[test]

@@ -38,6 +38,14 @@
 //! into a [`fleet::FleetReport`] that is bit-identical at any thread
 //! count.
 //!
+//! The [`serve`] layer turns the closed loop into a request-driven
+//! service: `spaceinfer serve` is a zero-dependency HTTP/JSON
+//! front-end (std::net + a compute-worker pool) with per-tenant
+//! bounded admission queues and continuous cross-tenant batching —
+//! concurrent tenants' requests join the next flush in flight, while
+//! each response's `result` payload stays bit-identical to running
+//! the same request solo through the pipeline.
+//!
 //! Faults are first-class: the [`fault`] layer injects a seeded,
 //! deterministic fault vocabulary (transient execution failures,
 //! timeouts, SEU corruption scaled by essential bits, thermal
@@ -70,6 +78,7 @@ pub mod coordinator;
 pub mod scenario;
 pub mod fleet;
 pub mod report;
+pub mod serve;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -16,11 +16,12 @@
 //!     [--plan] [--faults SEED] [--tmr] [--no-dispatch-cache]
 //!     [--no-frame-pool]
 //! spaceinfer plan <model>                         execution-plan table
-//! spaceinfer policies [--use-case vae]            policy comparison table
+//! spaceinfer policies [--use-case vae] [--json]   policy comparison table
 //! spaceinfer scenario <name> | --list             mission scenario engine
 //! spaceinfer fleet <name> [--crafts N] [--threads T]  constellation shards
 //! spaceinfer fuzz [--seeds N] [--base-seed S]     scenario fuzzer
-//! spaceinfer targets [--use-case vae]             target-matrix table
+//! spaceinfer serve [--port P] [--workers N]       multi-tenant HTTP serving
+//! spaceinfer targets [--use-case vae] [--json]    target-matrix table
 //! spaceinfer inspect --model vae                  manifests, DPU program
 //! spaceinfer calibrate [--save calib.json]        dump calibration
 //! ```
@@ -31,7 +32,7 @@ use anyhow::{bail, Context, Result};
 
 use spaceinfer::backend::TargetSet;
 use spaceinfer::board::Calibration;
-use spaceinfer::coordinator::{Pipeline, PipelineConfig, Policy};
+use spaceinfer::coordinator::{OverflowPolicy, Pipeline, PipelineConfig, Policy};
 use spaceinfer::fault::RecoveryPolicy;
 use spaceinfer::model::catalog::{model_info, Catalog};
 use spaceinfer::model::{Precision, UseCase};
@@ -141,6 +142,7 @@ fn run() -> Result<()> {
         "scenario" => scenario_cmd(&args, &dir, calib),
         "fleet" => fleet_cmd(&args, &dir, calib),
         "fuzz" => fuzz_cmd(&args, &dir, calib),
+        "serve" => serve_cmd(&args, &dir, calib),
         "targets" => targets_cmd(&args, &dir, calib),
         "inspect" => inspect(&args, &dir, &calib),
         "calibrate" => {
@@ -400,7 +402,63 @@ fn policies_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
         targets: TargetSet::parse(args.get("targets", "default"))?,
         ingress_cap: parse_ingress_cap(args)?,
     };
-    println!("{}", policy::policy_comparison(&catalog, &calib, &run)?.render());
+    let table = policy::policy_comparison(&catalog, &calib, &run)?;
+    if args.has("json") {
+        println!("{}", table.to_json());
+    } else {
+        println!("{}", table.render());
+    }
+    Ok(())
+}
+
+/// `spaceinfer serve` — the multi-tenant serving front-end: an HTTP/
+/// JSON endpoint over the timing-only pipeline with per-tenant bounded
+/// admission and continuous cross-tenant batching.  Blocks until
+/// `POST /shutdown` drains the server, then prints the final counters
+/// and exits 0.
+fn serve_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
+    use spaceinfer::serve::{ServeConfig, Server};
+    let catalog = catalog_or_synthetic(dir)?;
+    let mut cfg = ServeConfig {
+        host: args.get("host", "127.0.0.1").to_string(),
+        ..Default::default()
+    };
+    cfg.port = u16::try_from(args.get_usize("port", 0)?)
+        .map_err(|_| anyhow::anyhow!("--port must fit in 16 bits"))?;
+    if args.flags.contains_key("workers") {
+        cfg.workers = args.get_usize("workers", cfg.workers)?;
+        if cfg.workers == 0 {
+            bail!("--workers must be >= 1");
+        }
+    }
+    cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?;
+    if cfg.max_batch == 0 {
+        bail!("--max-batch must be >= 1");
+    }
+    cfg.tenant_cap = args.get_usize("tenant-cap", cfg.tenant_cap)?;
+    if cfg.tenant_cap == 0 {
+        bail!("--tenant-cap must be >= 1");
+    }
+    cfg.overflow = match args.get("drop", "newest") {
+        "newest" => OverflowPolicy::DropNewest,
+        "oldest" => OverflowPolicy::DropOldest,
+        other => bail!("unknown --drop {other:?} (newest | oldest)"),
+    };
+    cfg.service_delay_ms = args.get_usize("service-delay-ms", 0)? as u64;
+    let server = Server::bind(cfg, &catalog, &calib)?;
+    let addr = server.local_addr();
+    println!(
+        "serving on http://{addr}  (POST /infer /shutdown, GET /healthz /stats)"
+    );
+    println!(
+        "  e.g. curl -s http://{addr}/infer -d \
+         '{{\"tenant\":\"ops\",\"use_case\":\"vae\",\"seed\":1}}'"
+    );
+    let stats = server.run()?;
+    println!("{}", stats.render());
+    if !stats.conserved() {
+        bail!("serve accounting violated conservation at drain");
+    }
     Ok(())
 }
 
@@ -561,6 +619,7 @@ fn fuzz_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
 /// `spaceinfer targets` — enumerate every registrable backend for one
 /// (or every) use case: the design-space table behind `--targets all`.
 fn targets_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
+    use spaceinfer::util::json::Json;
     let catalog = catalog_or_synthetic(dir)?;
     let mms_model = args.get("mms-model", "baseline");
     let batch = args.get_usize("batch", 8)? as u64;
@@ -569,7 +628,20 @@ fn targets_cmd(args: &Args, dir: &Path, calib: Calibration) -> Result<()> {
             let table = targets::target_matrix(
                 &catalog, &calib, UseCase::parse(uc)?, mms_model, batch,
             )?;
-            println!("{}", table.render());
+            if args.has("json") {
+                println!("{}", table.to_json());
+            } else {
+                println!("{}", table.render());
+            }
+        }
+        None if args.has("json") => {
+            let mut docs = Vec::new();
+            for uc in UseCase::ALL {
+                let table =
+                    targets::target_matrix(&catalog, &calib, uc, mms_model, batch)?;
+                docs.push(table.to_json());
+            }
+            println!("{}", Json::Arr(docs));
         }
         None => {
             for uc in UseCase::ALL {
@@ -652,6 +724,7 @@ usage: spaceinfer <subcommand> [--artifacts DIR] [--calib FILE]
                       [--batch B] [--max-wait S]
                       [--power-budget W] [--deadline-ms MS]
                       [--targets default|all|NAMES] [--ingress-cap N]
+                      [--json]  (machine-readable table)
   scenario            run a built-in mission scenario (steppable
                       pipeline + declarative timeline; artifact-free,
                       phase-segmented report)
@@ -670,9 +743,20 @@ usage: spaceinfer <subcommand> [--artifacts DIR] [--calib FILE]
                       each replayed bit-for-bit and checked against the
                       accounting invariants
                       [--seeds N] [--base-seed S] [--exact-seed S]
+  serve               multi-tenant HTTP/JSON serving front-end:
+                      POST /infer runs one request through the solo
+                      pipeline path (bit-identical results) with
+                      per-tenant bounded admission and continuous
+                      cross-tenant batching; POST /shutdown drains and
+                      exits 0 with conserved counters
+                      [--host H] [--port P]  (0 = ephemeral)
+                      [--workers N] [--max-batch B] [--tenant-cap N]
+                      [--drop newest|oldest] [--service-delay-ms MS]
   targets             registered-target comparison matrix (latency,
                       energy, power, footprint, essential bits)
                       [--use-case ...] [--mms-model NAME] [--batch B]
+                      [--json]  (single table, or an array without
+                      --use-case)
   inspect             model + DPU program listing  [--model NAME]
   calibrate           print or save calibration    [--save FILE]
 ";

@@ -87,6 +87,7 @@ pub fn policy_comparison(
             "Target mix (batches)",
             "Mean lat (s)",
             "p95 (s)",
+            "p99 (s)",
             "Energy (J)",
             "Deadline misses",
             "Power sheds",
@@ -120,6 +121,7 @@ pub fn policy_comparison(
             report.target_mix_str(),
             format!("{:.4}", report.mean_latency_s),
             format!("{:.4}", report.p95_latency_s),
+            format!("{:.4}", report.p99_latency_s),
             format!("{:.3}", report.energy_j),
             report.deadline_misses.to_string(),
             report.power_sheds.to_string(),

@@ -1,0 +1,241 @@
+//! Admission control and continuous cross-tenant batch forming.
+//!
+//! Every tenant gets its own [`BoundedQueue`] — the same ingress
+//! structure the pipeline uses for sensor decimation, here bounding
+//! *request* backlog per tenant (`DropNewest` sheds the incoming
+//! request with a 429; `DropOldest` evicts the tenant's stalest queued
+//! request, whose closed reply channel the connection handler also
+//! answers with a 429).  Compute workers call [`CoreState::take_batch`]
+//! whenever they free up: it picks the lane (use case) of the oldest
+//! queued request and drains up to `max_batch` matching requests
+//! round-robin across *all* tenants — that is the continuous-batching
+//! join point.  Requests never wait for a timer; they wait only for a
+//! worker, and whoever is queued when one frees up shares the flush.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::Sender;
+
+use crate::coordinator::{BoundedQueue, OverflowPolicy};
+use crate::model::UseCase;
+use crate::util::json::Json;
+
+use super::protocol::InferRequest;
+
+/// What the compute side sends back for one admitted request.
+#[derive(Debug)]
+pub enum Reply {
+    /// The run completed; `result` is the solo-identical payload and
+    /// `batch_size` how many requests shared the flush.
+    Done {
+        /// Solo-identical result object (the bit-identity surface).
+        result: Json,
+        /// Requests that joined this flush, this one included.
+        batch_size: usize,
+    },
+    /// The run failed inside the pipeline — answered with a 500.
+    Failed(String),
+}
+
+/// One admitted request waiting for a compute worker.
+#[derive(Debug)]
+pub struct Pending {
+    /// The validated request.
+    pub req: InferRequest,
+    /// Global admission order — the batch former serves the oldest
+    /// lane first, so no tenant can starve another.
+    pub seq: u64,
+    /// Reply channel back to the connection handler.  Dropping it
+    /// unanswered (a `DropOldest` eviction) surfaces as a disconnect,
+    /// which the handler answers with a 429.
+    pub reply: Sender<Reply>,
+}
+
+/// Outcome of [`CoreState::submit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Queued for the next flush.
+    Admitted,
+    /// The incoming request was shed (`DropNewest` on a full queue).
+    Shed,
+}
+
+/// The shared scheduling state behind the server mutex: per-tenant
+/// admission queues plus the counters that make the conservation
+/// invariant (`admitted == completed + evicted` at drain) checkable.
+#[derive(Debug)]
+pub struct CoreState {
+    /// Per-tenant bounded request queues, created on first submit.
+    pub tenants: BTreeMap<String, BoundedQueue<Pending>>,
+    /// Per-tenant queue capacity.
+    pub tenant_cap: usize,
+    /// Overflow policy every tenant queue is created with.
+    pub overflow: OverflowPolicy,
+    /// Admission sequence counter (also total admitted requests).
+    pub seq: u64,
+    /// Requests currently queued across all tenants.
+    pub pending: usize,
+    /// Requests handed to a worker and not yet replied.
+    pub in_flight: usize,
+}
+
+impl CoreState {
+    /// Empty state with the given per-tenant cap and overflow policy.
+    pub fn new(tenant_cap: usize, overflow: OverflowPolicy) -> CoreState {
+        CoreState {
+            tenants: BTreeMap::new(),
+            tenant_cap,
+            overflow,
+            seq: 0,
+            pending: 0,
+            in_flight: 0,
+        }
+    }
+
+    /// Admit one request into its tenant's queue.  A `DropOldest`
+    /// eviction keeps `pending` unchanged (one in, one out) — the
+    /// evicted entry's reply channel closes as the queue drops it.
+    pub fn submit(&mut self, req: InferRequest, reply: Sender<Reply>) -> Admission {
+        let (cap, overflow) = (self.tenant_cap, self.overflow);
+        let queue = self
+            .tenants
+            .entry(req.tenant.clone())
+            .or_insert_with(|| BoundedQueue::new(cap, overflow));
+        let was_full = queue.len() == queue.capacity;
+        let pending = Pending { req, seq: self.seq, reply };
+        if !queue.push(pending) {
+            return Admission::Shed;
+        }
+        self.seq += 1;
+        if !was_full {
+            self.pending += 1;
+        }
+        Admission::Admitted
+    }
+
+    /// Requests shed before admission across all tenants (`DropNewest`)
+    /// plus requests evicted after admission (`DropOldest`) — the
+    /// queues account both on the same counter.
+    pub fn dropped(&self) -> u64 {
+        self.tenants.values().map(|q| q.dropped).sum()
+    }
+
+    /// Requests admitted across all tenants.
+    pub fn admitted(&self) -> u64 {
+        self.tenants.values().map(|q| q.accepted).sum()
+    }
+
+    /// The lane (use case) of the oldest queued request, if any.
+    fn oldest_lane(&self) -> Option<UseCase> {
+        self.tenants
+            .values()
+            .filter_map(|q| q.peek().map(|p| (p.seq, p.req.use_case)))
+            .min_by_key(|(seq, _)| *seq)
+            .map(|(_, uc)| uc)
+    }
+
+    /// Form one cross-tenant batch: up to `max_batch` queued requests
+    /// whose tenant-queue heads match the oldest request's lane,
+    /// drained round-robin across tenants (one per tenant per sweep)
+    /// so a chatty tenant cannot monopolize a flush.  Returns an empty
+    /// vec when nothing is queued.
+    pub fn take_batch(&mut self, max_batch: usize) -> Vec<Pending> {
+        let Some(lane) = self.oldest_lane() else {
+            return Vec::new();
+        };
+        let mut batch = Vec::new();
+        loop {
+            let before = batch.len();
+            for queue in self.tenants.values_mut() {
+                if batch.len() >= max_batch {
+                    break;
+                }
+                if queue.peek().is_some_and(|p| p.req.use_case == lane) {
+                    let p = queue.pop().expect("peeked entry must pop");
+                    batch.push(p);
+                }
+            }
+            if batch.len() == before || batch.len() >= max_batch {
+                break;
+            }
+        }
+        self.pending -= batch.len();
+        self.in_flight += batch.len();
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Policy;
+    use std::sync::mpsc::channel;
+
+    fn req(tenant: &str, uc: UseCase) -> InferRequest {
+        InferRequest {
+            tenant: tenant.into(),
+            use_case: uc,
+            seed: 7,
+            count: 1,
+            policy: Policy::Static,
+            deadline_ms: None,
+        }
+    }
+
+    #[test]
+    fn batch_joins_across_tenants_on_one_lane() {
+        let mut st = CoreState::new(8, OverflowPolicy::DropNewest);
+        let (tx, _rx) = channel();
+        st.submit(req("a", UseCase::Vae), tx.clone());
+        st.submit(req("b", UseCase::Vae), tx.clone());
+        st.submit(req("c", UseCase::Mms), tx.clone());
+        st.submit(req("a", UseCase::Vae), tx);
+        let batch = st.take_batch(8);
+        // oldest request is vae; both tenants' vae requests join, the
+        // mms request waits for the next flush
+        assert_eq!(batch.len(), 3);
+        assert!(batch.iter().all(|p| p.req.use_case == UseCase::Vae));
+        let tenants: Vec<&str> =
+            batch.iter().map(|p| p.req.tenant.as_str()).collect();
+        assert_eq!(tenants, ["a", "b", "a"], "round-robin, one per sweep");
+        assert_eq!(st.pending, 1);
+        assert_eq!(st.take_batch(8).len(), 1);
+        assert_eq!(st.pending, 0);
+        assert!(st.take_batch(8).is_empty());
+    }
+
+    #[test]
+    fn max_batch_caps_the_flush() {
+        let mut st = CoreState::new(32, OverflowPolicy::DropNewest);
+        let (tx, _rx) = channel();
+        for i in 0..12 {
+            st.submit(req(&format!("t{i}"), UseCase::Esperta), tx.clone());
+        }
+        assert_eq!(st.take_batch(8).len(), 8);
+        assert_eq!(st.take_batch(8).len(), 4);
+    }
+
+    #[test]
+    fn drop_newest_sheds_incoming_request() {
+        let mut st = CoreState::new(1, OverflowPolicy::DropNewest);
+        let (tx, _rx) = channel();
+        assert_eq!(st.submit(req("t", UseCase::Vae), tx.clone()), Admission::Admitted);
+        assert_eq!(st.submit(req("t", UseCase::Vae), tx), Admission::Shed);
+        assert_eq!(st.pending, 1);
+        assert_eq!(st.dropped(), 1);
+        assert_eq!(st.admitted(), 1);
+    }
+
+    #[test]
+    fn drop_oldest_evicts_and_closes_the_reply_channel() {
+        let mut st = CoreState::new(1, OverflowPolicy::DropOldest);
+        let (tx1, rx1) = channel();
+        let (tx2, _rx2) = channel();
+        st.submit(req("t", UseCase::Vae), tx1);
+        assert_eq!(st.submit(req("t", UseCase::Vae), tx2), Admission::Admitted);
+        // the evicted request's channel is closed, unanswered
+        assert!(rx1.recv().is_err(), "evicted sender must be dropped");
+        assert_eq!(st.pending, 1, "one in, one out");
+        assert_eq!(st.dropped(), 1);
+        assert_eq!(st.admitted(), 2);
+    }
+}

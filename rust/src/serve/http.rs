@@ -1,0 +1,197 @@
+//! Minimal HTTP/1.1 plumbing for the serving layer — request parsing
+//! and response writing over a `TcpStream`, nothing more.
+//!
+//! Zero-dependency by design (the offline registry has no hyper/axum):
+//! the server speaks exactly the subset the serve protocol needs —
+//! `GET`/`POST`, `Content-Length` bodies, keep-alive — and rejects the
+//! rest with a 4xx before any compute happens.  Read timeouts are set
+//! by the connection handler so an idle keep-alive poll can observe
+//! the shutdown flag between requests.
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::TcpStream;
+
+/// Upper bound on a request body (bytes) — serve requests are small
+/// JSON objects; anything bigger is a client bug.
+pub const MAX_BODY: usize = 1 << 20;
+/// Upper bound on header count per request.
+pub const MAX_HEADERS: usize = 64;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    /// Request method (`GET`, `POST`, ...).
+    pub method: String,
+    /// Request path (`/infer`, `/healthz`, ...).
+    pub path: String,
+    /// Headers, names lowercased.
+    pub headers: Vec<(String, String)>,
+    /// Raw body bytes (empty without a `Content-Length`).
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First header with the given lowercase name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// What one read attempt on a keep-alive connection yielded.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// A complete request arrived.
+    Request(HttpRequest),
+    /// Clean EOF before any request bytes — the client closed the
+    /// keep-alive connection.
+    Closed,
+    /// The read timed out before any request bytes arrived — the
+    /// caller may check the shutdown flag and poll again.
+    Idle,
+}
+
+/// Read one request from a keep-alive connection.  Returns
+/// [`ReadOutcome::Idle`] on a clean between-requests timeout (so the
+/// handler can poll the shutdown flag) and errors on malformed or
+/// oversized requests — the handler answers those with a 4xx.
+pub fn read_request(reader: &mut BufReader<TcpStream>) -> Result<ReadOutcome> {
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) => return Ok(ReadOutcome::Closed),
+        Ok(_) => {}
+        Err(e)
+            if line.is_empty()
+                && matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) =>
+        {
+            return Ok(ReadOutcome::Idle);
+        }
+        Err(e) => return Err(e).context("reading request line"),
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        bail!("malformed request line {line:?}");
+    }
+    let mut headers = Vec::new();
+    loop {
+        if headers.len() > MAX_HEADERS {
+            bail!("too many headers");
+        }
+        let mut h = String::new();
+        reader.read_line(&mut h).context("reading header")?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let (name, value) = h.split_once(':').context("malformed header")?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let content_length = headers
+        .iter()
+        .find(|(n, _)| n == "content-length")
+        .map(|(_, v)| v.parse::<usize>().context("bad Content-Length"))
+        .transpose()?
+        .unwrap_or(0);
+    if content_length > MAX_BODY {
+        bail!("body of {content_length} bytes exceeds the {MAX_BODY} byte cap");
+    }
+    if headers.iter().any(|(n, v)| n == "transfer-encoding" && v != "identity") {
+        bail!("chunked transfer encoding is not supported");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).context("reading body")?;
+    Ok(ReadOutcome::Request(HttpRequest { method, path, headers, body }))
+}
+
+/// Standard reason phrase for the status codes the server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one `application/json` response.  `extra` carries per-response
+/// headers (`Retry-After`, ...); `close` requests connection teardown.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    extra: &[(&str, String)],
+    body: &str,
+    close: bool,
+) -> Result<()> {
+    let mut out = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n",
+        status,
+        reason(status),
+        body.len()
+    );
+    for (name, value) in extra {
+        out.push_str(&format!("{name}: {value}\r\n"));
+    }
+    out.push_str(if close { "Connection: close\r\n" } else { "Connection: keep-alive\r\n" });
+    out.push_str("\r\n");
+    out.push_str(body);
+    stream.write_all(out.as_bytes()).context("writing response")?;
+    stream.flush().context("flushing response")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+
+    fn roundtrip(raw: &[u8]) -> Result<ReadOutcome> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        client.write_all(raw).unwrap();
+        drop(client);
+        let (server_side, _) = listener.accept().unwrap();
+        read_request(&mut BufReader::new(server_side))
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /infer HTTP/1.1\r\nContent-Length: 4\r\nX-Tenant: a\r\n\r\nbody";
+        match roundtrip(raw).unwrap() {
+            ReadOutcome::Request(r) => {
+                assert_eq!(r.method, "POST");
+                assert_eq!(r.path, "/infer");
+                assert_eq!(r.header("x-tenant"), Some("a"));
+                assert_eq!(r.body, b"body");
+            }
+            other => panic!("expected a request, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn eof_reads_as_closed() {
+        assert!(matches!(roundtrip(b"").unwrap(), ReadOutcome::Closed));
+    }
+
+    #[test]
+    fn garbage_request_line_rejected() {
+        assert!(roundtrip(b"not http at all\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn oversized_body_rejected() {
+        let raw = format!("POST /infer HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        assert!(roundtrip(raw.as_bytes()).is_err());
+    }
+}

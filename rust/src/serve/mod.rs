@@ -1,0 +1,605 @@
+//! Multi-tenant serving front-end: `spaceinfer serve`.
+//!
+//! A zero-dependency HTTP/JSON server (std::net `TcpListener`, a
+//! thread-per-connection acceptor, and a small compute-worker pool in
+//! the same no-crates style as the fleet layer's work-stealing pool)
+//! that turns the closed-loop simulation into a request-driven
+//! service.  Concurrent clients POST `/infer`; admitted requests land
+//! in per-tenant [`crate::coordinator::BoundedQueue`]s and
+//! **continuous cross-tenant batching** drains them: whenever a compute worker frees up it takes
+//! every queued request sharing the oldest request's lane (use case),
+//! round-robin across tenants, up to `max_batch` — requests join the
+//! next flush in flight instead of each client round-tripping a
+//! private batch.
+//!
+//! Determinism: each admitted request runs the full solo pipeline path
+//! ([`crate::coordinator::Pipeline::run_request`] on a per-lane cached
+//! pipeline — construction amortized across the batch, the run itself
+//! a pure function of the request), so the `result` payload is
+//! bit-identical to running the same request alone through
+//! [`crate::coordinator::Pipeline`].  `tests/serve_loopback.rs` pins
+//! exactly that.
+//!
+//! Shutdown: `POST /shutdown` (or [`ServeHandle::shutdown`]) stops
+//! admission (new `/infer`s get a 503), drains every queued request,
+//! answers every in-flight reply, and returns the final [`ServeStats`]
+//! whose conservation invariant — admitted == completed + evicted —
+//! must hold at drain.
+
+mod core;
+mod http;
+mod protocol;
+
+pub use self::core::{Admission, CoreState, Pending, Reply};
+pub use self::http::{HttpRequest, ReadOutcome};
+pub use self::protocol::{
+    parse_infer, result_json, solo_config, InferRequest, MAX_COUNT, MAX_TENANT,
+};
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::board::Calibration;
+use crate::coordinator::{OverflowPolicy, Pipeline};
+use crate::model::catalog::Catalog;
+use crate::model::UseCase;
+use crate::util::json::{num, obj, s, Json};
+
+use self::http::{read_request, write_response};
+
+/// Knobs for one server instance.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind host (loopback by default).
+    pub host: String,
+    /// Bind port; 0 picks an ephemeral port (tests, benches).
+    pub port: u16,
+    /// Compute workers draining the admission queues.
+    pub workers: usize,
+    /// Most requests one flush may join.
+    pub max_batch: usize,
+    /// Per-tenant admission-queue capacity.
+    pub tenant_cap: usize,
+    /// What a full tenant queue does to overflow.
+    pub overflow: OverflowPolicy,
+    /// Most concurrent connections before the acceptor answers 503.
+    pub max_conns: usize,
+    /// Test/bench knob: artificial wall-clock delay per flush (ms) so
+    /// suites can hold a backlog open deterministically.  0 in
+    /// production.
+    pub service_delay_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let workers = thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2)
+            .clamp(2, 8);
+        ServeConfig {
+            host: "127.0.0.1".into(),
+            port: 0,
+            workers,
+            max_batch: 8,
+            tenant_cap: 32,
+            overflow: OverflowPolicy::DropNewest,
+            max_conns: 256,
+            service_delay_ms: 0,
+        }
+    }
+}
+
+/// Final (or live, via `GET /stats`) serving counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Requests admitted into a tenant queue.
+    pub admitted: u64,
+    /// Admitted requests answered with a result (or a pipeline error).
+    pub completed: u64,
+    /// Admitted requests evicted by `DropOldest` before compute.
+    pub evicted: u64,
+    /// Requests shed at admission by `DropNewest` (answered 429).
+    pub shed: u64,
+    /// Requests answered without admission: malformed 4xx, 503s during
+    /// drain, and the shed 429s.
+    pub rejected: u64,
+    /// Requests still queued (0 after a drain).
+    pub pending: u64,
+    /// Requests handed to a worker, reply outstanding (0 after drain).
+    pub in_flight: u64,
+}
+
+impl ServeStats {
+    /// The accounting invariant a drained server must satisfy: every
+    /// admitted request was either completed or evicted — a
+    /// killed-mid-batch server may not lose accepted requests.
+    pub fn conserved(&self) -> bool {
+        self.admitted == self.completed + self.evicted + self.pending + self.in_flight
+    }
+
+    /// JSON form (the `GET /stats` payload).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("admitted", num(self.admitted as f64)),
+            ("completed", num(self.completed as f64)),
+            ("evicted", num(self.evicted as f64)),
+            ("shed", num(self.shed as f64)),
+            ("rejected", num(self.rejected as f64)),
+            ("pending", num(self.pending as f64)),
+            ("in_flight", num(self.in_flight as f64)),
+            ("conserved", Json::Bool(self.conserved())),
+        ])
+    }
+
+    /// One-line text form for the CLI's shutdown summary.
+    pub fn render(&self) -> String {
+        format!(
+            "serve: admitted {}  completed {}  evicted {}  shed {}  \
+             rejected {}  conserved {}",
+            self.admitted,
+            self.completed,
+            self.evicted,
+            self.shed,
+            self.rejected,
+            self.conserved()
+        )
+    }
+}
+
+/// Shared server state: everything the acceptor, connection handlers,
+/// compute workers, and [`ServeHandle`] touch.
+struct Control {
+    cfg: ServeConfig,
+    state: Mutex<CoreState>,
+    work: Condvar,
+    shutdown: AtomicBool,
+    addr: SocketAddr,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    service_ns: AtomicU64,
+    conns: AtomicUsize,
+}
+
+impl Control {
+    fn stats(&self) -> ServeStats {
+        let state = self.state.lock().expect("serve state poisoned");
+        let dropped = state.dropped();
+        let (evicted, shed) = match self.cfg.overflow {
+            OverflowPolicy::DropOldest => (dropped, 0),
+            OverflowPolicy::DropNewest => (0, dropped),
+        };
+        ServeStats {
+            admitted: state.admitted(),
+            completed: self.completed.load(Ordering::SeqCst),
+            evicted,
+            shed,
+            rejected: self.rejected.load(Ordering::SeqCst),
+            pending: state.pending as u64,
+            in_flight: state.in_flight as u64,
+        }
+    }
+
+    /// Backlog-derived retry hint (s): queue depth over the measured
+    /// drain rate (completed requests per second of worker time),
+    /// never below 1 s.
+    fn retry_after_s(&self, pending: usize) -> u64 {
+        let completed = self.completed.load(Ordering::SeqCst).max(1);
+        let per_req_s =
+            self.service_ns.load(Ordering::SeqCst) as f64 / 1e9 / completed as f64;
+        let per_req_s = if per_req_s > 0.0 { per_req_s } else { 1e-3 };
+        let workers = self.cfg.workers.max(1) as f64;
+        ((pending as f64 + 1.0) * per_req_s / workers).ceil().max(1.0) as u64
+    }
+
+    fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.work.notify_all();
+        // unblock the acceptor with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// Remote control for a running [`Server`]: trigger the same graceful
+/// drain `POST /shutdown` does, from the embedding thread.
+#[derive(Clone)]
+pub struct ServeHandle {
+    control: Arc<Control>,
+}
+
+impl ServeHandle {
+    /// Stop admission, drain queued + in-flight requests, and make
+    /// [`Server::run`] return.
+    pub fn shutdown(&self) {
+        self.control.begin_shutdown();
+    }
+
+    /// Live counters (same numbers as `GET /stats`).
+    pub fn stats(&self) -> ServeStats {
+        self.control.stats()
+    }
+}
+
+/// A bound, not-yet-running server.  `bind` then `run`; `run` blocks
+/// until a shutdown request drains the server, so tests and benches
+/// run it on a scoped thread and drive it through [`ServeHandle`].
+pub struct Server<'a> {
+    listener: TcpListener,
+    control: Arc<Control>,
+    catalog: &'a Catalog,
+    calib: &'a Calibration,
+}
+
+impl<'a> Server<'a> {
+    /// Bind the listen socket and allocate shared state.
+    pub fn bind(
+        cfg: ServeConfig,
+        catalog: &'a Catalog,
+        calib: &'a Calibration,
+    ) -> Result<Server<'a>> {
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
+            .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let state = CoreState::new(cfg.tenant_cap, cfg.overflow);
+        let control = Arc::new(Control {
+            cfg,
+            state: Mutex::new(state),
+            work: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            addr,
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            service_ns: AtomicU64::new(0),
+            conns: AtomicUsize::new(0),
+        });
+        Ok(Server { listener, control, catalog, calib })
+    }
+
+    /// The bound address (the ephemeral port when `cfg.port == 0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.control.addr
+    }
+
+    /// A handle for shutting the server down from another thread.
+    pub fn handle(&self) -> ServeHandle {
+        ServeHandle { control: Arc::clone(&self.control) }
+    }
+
+    /// Serve until shutdown, then drain and return the final counters.
+    /// The returned stats of a clean drain always satisfy
+    /// [`ServeStats::conserved`] with `pending == in_flight == 0`.
+    pub fn run(self) -> Result<ServeStats> {
+        let control = &self.control;
+        let catalog = self.catalog;
+        let calib = self.calib;
+        thread::scope(|scope| {
+            for _ in 0..control.cfg.workers {
+                let control = Arc::clone(control);
+                scope.spawn(move || worker_loop(&control, catalog, calib));
+            }
+            loop {
+                let stream = match self.listener.accept() {
+                    Ok((stream, _)) => stream,
+                    Err(_) if control.shutdown.load(Ordering::SeqCst) => break,
+                    Err(_) => continue,
+                };
+                if control.shutdown.load(Ordering::SeqCst) {
+                    break; // the wakeup connection itself
+                }
+                if control.conns.load(Ordering::SeqCst) >= control.cfg.max_conns {
+                    let mut stream = stream;
+                    let _ = write_response(
+                        &mut stream,
+                        503,
+                        &[],
+                        &err_body("connection limit reached"),
+                        true,
+                    );
+                    control.rejected.fetch_add(1, Ordering::SeqCst);
+                    continue;
+                }
+                control.conns.fetch_add(1, Ordering::SeqCst);
+                let control = Arc::clone(control);
+                scope.spawn(move || {
+                    handle_connection(stream, &control);
+                    control.conns.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+            // belt and braces: make sure every worker sees the flag
+            control.work.notify_all();
+        });
+        Ok(control.stats())
+    }
+}
+
+/// Compute-worker loop: wait for pending requests, take a cross-tenant
+/// batch, run each request through its lane's cached pipeline, reply.
+/// Exits only once shutdown is flagged *and* the queues are drained.
+fn worker_loop(control: &Control, catalog: &Catalog, calib: &Calibration) {
+    // per-lane pipeline templates: construction (routing, registry,
+    // simulators) amortized across every request sharing the lane
+    let mut lanes: BTreeMap<LaneKey, Pipeline> = BTreeMap::new();
+    loop {
+        let batch = {
+            let mut state = control.state.lock().expect("serve state poisoned");
+            loop {
+                if state.pending > 0 {
+                    break state.take_batch(control.cfg.max_batch);
+                }
+                if control.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                state = control.work.wait(state).expect("serve state poisoned");
+            }
+        };
+        if batch.is_empty() {
+            continue;
+        }
+        let t0 = Instant::now();
+        if control.cfg.service_delay_ms > 0 {
+            thread::sleep(Duration::from_millis(control.cfg.service_delay_ms));
+        }
+        let n = batch.len();
+        for p in batch {
+            let reply = run_one(&mut lanes, &p.req, catalog, calib, n);
+            // a vanished receiver (client hung up) is not an error
+            let _ = p.reply.send(reply);
+            control.completed.fetch_add(1, Ordering::SeqCst);
+        }
+        control
+            .service_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::SeqCst);
+        let mut state = control.state.lock().expect("serve state poisoned");
+        state.in_flight -= n;
+    }
+}
+
+/// Pipelines are cached per lane: everything [`solo_config`] derives
+/// from a request *except* the per-run knobs `run_request` rebinds.
+type LaneKey = (UseCase, &'static str, Option<u64>);
+
+/// Most cached lane pipelines per worker before the cache resets.
+const MAX_LANES: usize = 64;
+
+fn run_one(
+    lanes: &mut BTreeMap<LaneKey, Pipeline>,
+    req: &InferRequest,
+    catalog: &Catalog,
+    calib: &Calibration,
+    batch_size: usize,
+) -> Reply {
+    let key: LaneKey = (req.use_case, req.policy.as_str(), req.deadline_ms);
+    if !lanes.contains_key(&key) {
+        if lanes.len() >= MAX_LANES {
+            lanes.clear();
+        }
+        match Pipeline::new(solo_config(req), catalog, calib) {
+            Ok(p) => {
+                lanes.insert(key, p);
+            }
+            Err(e) => return Reply::Failed(format!("{e:#}")),
+        }
+    }
+    let pipeline = lanes.get_mut(&key).expect("lane just inserted");
+    match pipeline.run_request(req.seed, req.count) {
+        Ok(report) => Reply::Done { result: result_json(&report), batch_size },
+        Err(e) => Reply::Failed(format!("{e:#}")),
+    }
+}
+
+fn err_body(msg: &str) -> String {
+    obj(vec![("error", s(msg))]).to_string()
+}
+
+/// One keep-alive connection: read requests until EOF, error, or
+/// shutdown; route each to a handler.  Read timeouts let an idle
+/// connection observe the shutdown flag instead of pinning the scope
+/// join forever.
+fn handle_connection(mut stream: TcpStream, control: &Control) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let read_side = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(read_side);
+    loop {
+        match read_request(&mut reader) {
+            Ok(ReadOutcome::Idle) => {
+                if control.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Ok(ReadOutcome::Closed) => return,
+            Ok(ReadOutcome::Request(req)) => {
+                let draining = control.shutdown.load(Ordering::SeqCst);
+                let keep = route(&mut stream, control, &req, draining);
+                if !keep || draining {
+                    return;
+                }
+            }
+            Err(e) => {
+                control.rejected.fetch_add(1, Ordering::SeqCst);
+                let _ =
+                    write_response(&mut stream, 400, &[], &err_body(&format!("{e:#}")), true);
+                return;
+            }
+        }
+    }
+}
+
+/// Dispatch one request to its endpoint.  Returns false when the
+/// connection should close after the response.
+fn route(stream: &mut TcpStream, control: &Control, req: &HttpRequest, close: bool) -> bool {
+    let respond = |stream: &mut TcpStream, status: u16, extra: &[(&str, String)], body: &str| {
+        write_response(stream, status, extra, body, close).is_ok() && !close
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            respond(stream, 200, &[], &obj(vec![("ok", Json::Bool(true))]).to_string())
+        }
+        ("GET", "/stats") => {
+            respond(stream, 200, &[], &control.stats().to_json().to_string())
+        }
+        ("POST", "/shutdown") => {
+            control.begin_shutdown();
+            let _ = write_response(
+                stream,
+                200,
+                &[],
+                &obj(vec![("draining", Json::Bool(true))]).to_string(),
+                true,
+            );
+            false
+        }
+        ("POST", "/infer") => infer(stream, control, req, close),
+        (_, "/infer" | "/shutdown" | "/healthz" | "/stats") => {
+            control.rejected.fetch_add(1, Ordering::SeqCst);
+            respond(stream, 405, &[], &err_body("method not allowed"))
+        }
+        _ => {
+            control.rejected.fetch_add(1, Ordering::SeqCst);
+            respond(stream, 404, &[], &err_body("no such endpoint"))
+        }
+    }
+}
+
+/// The `/infer` endpoint: validate (400 before any compute), admit
+/// (429/503 before any compute), then block on the reply channel the
+/// compute worker answers.
+fn infer(stream: &mut TcpStream, control: &Control, http: &HttpRequest, close: bool) -> bool {
+    let respond = |stream: &mut TcpStream, status: u16, extra: &[(&str, String)], body: &str| {
+        write_response(stream, status, extra, body, close).is_ok() && !close
+    };
+    let req = match parse_infer(&http.body) {
+        Ok(r) => r,
+        Err(e) => {
+            control.rejected.fetch_add(1, Ordering::SeqCst);
+            return respond(stream, 400, &[], &err_body(&format!("{e:#}")));
+        }
+    };
+    let tenant = req.tenant.clone();
+    let (tx, rx) = channel();
+    let admission = {
+        let mut state = control.state.lock().expect("serve state poisoned");
+        if control.shutdown.load(Ordering::SeqCst) {
+            None // draining: no new admissions
+        } else {
+            let a = state.submit(req, tx);
+            if a == Admission::Admitted {
+                control.work.notify_one();
+            }
+            Some((a, state.pending))
+        }
+    };
+    match admission {
+        None => {
+            control.rejected.fetch_add(1, Ordering::SeqCst);
+            respond(stream, 503, &[], &err_body("draining"))
+        }
+        Some((Admission::Shed, pending)) => {
+            control.rejected.fetch_add(1, Ordering::SeqCst);
+            let retry = control.retry_after_s(pending);
+            respond(
+                stream,
+                429,
+                &[("Retry-After", retry.to_string())],
+                &obj(vec![
+                    ("error", s("tenant backlog full")),
+                    ("tenant", s(&tenant)),
+                    ("retry_after_s", num(retry as f64)),
+                ])
+                .to_string(),
+            )
+        }
+        Some((Admission::Admitted, _)) => match rx.recv_timeout(Duration::from_secs(120)) {
+            Ok(Reply::Done { result, batch_size }) => {
+                let body = obj(vec![
+                    ("result", result),
+                    (
+                        "serve",
+                        obj(vec![
+                            ("tenant", s(&tenant)),
+                            ("batch_size", num(batch_size as f64)),
+                        ]),
+                    ),
+                ])
+                .to_string();
+                respond(stream, 200, &[], &body)
+            }
+            Ok(Reply::Failed(msg)) => respond(stream, 500, &[], &err_body(&msg)),
+            Err(RecvTimeoutError::Disconnected) => {
+                // the tenant queue evicted this request (DropOldest)
+                let pending = control.state.lock().expect("serve state poisoned").pending;
+                let retry = control.retry_after_s(pending);
+                respond(
+                    stream,
+                    429,
+                    &[("Retry-After", retry.to_string())],
+                    &obj(vec![
+                        ("error", s("evicted by newer request")),
+                        ("tenant", s(&tenant)),
+                        ("retry_after_s", num(retry as f64)),
+                    ])
+                    .to_string(),
+                )
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                respond(stream, 500, &[], &err_body("compute worker timed out"))
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let cfg = ServeConfig::default();
+        assert!(cfg.workers >= 2);
+        assert_eq!(cfg.max_batch, 8);
+        assert_eq!(cfg.overflow, OverflowPolicy::DropNewest);
+        assert_eq!(cfg.service_delay_ms, 0);
+    }
+
+    #[test]
+    fn conservation_arithmetic() {
+        let ok = ServeStats {
+            admitted: 10,
+            completed: 8,
+            evicted: 2,
+            shed: 3,
+            rejected: 5,
+            pending: 0,
+            in_flight: 0,
+        };
+        assert!(ok.conserved());
+        let lost = ServeStats { completed: 7, ..ok };
+        assert!(!lost.conserved());
+        assert!(ok.to_json().to_string().contains("\"conserved\":true"));
+    }
+
+    #[test]
+    fn bind_and_drain_without_traffic() {
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        let server =
+            Server::bind(ServeConfig { workers: 2, ..Default::default() }, &catalog, &calib)
+                .unwrap();
+        let handle = server.handle();
+        let stats = thread::scope(|s| {
+            let run = s.spawn(|| server.run().unwrap());
+            handle.shutdown();
+            run.join().unwrap()
+        });
+        assert_eq!(stats.admitted, 0);
+        assert!(stats.conserved());
+    }
+}

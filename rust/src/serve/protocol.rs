@@ -1,0 +1,214 @@
+//! The serve wire protocol: request validation and the per-request
+//! result payload.
+//!
+//! A request names a tenant, a use case, and the knobs of one solo
+//! pipeline run (`seed`, `count`, `policy`, `deadline_ms`).  The
+//! response's `result` object is derived from the [`PipelineReport`]
+//! of exactly that run — [`solo_config`] builds the config and
+//! [`result_json`] the payload, and both are public so the loopback
+//! suite can recompute a served response offline and compare it byte
+//! for byte (`util::json` prints `f64`s shortest-roundtrip, so float
+//! bit-identity survives serialization).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+use crate::coordinator::{PipelineConfig, PipelineReport, Policy};
+use crate::model::UseCase;
+use crate::util::json::{num, obj, s, Json};
+
+/// Hard cap on the per-request event count: a serve request is one
+/// interactive inference burst, not a batch import.
+pub const MAX_COUNT: usize = 64;
+
+/// Hard cap on tenant-name length (bytes).
+pub const MAX_TENANT: usize = 64;
+
+/// A validated `/infer` request — everything needed to reproduce the
+/// run solo: the response is a pure function of this struct.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferRequest {
+    /// Admission-control key: each tenant gets its own bounded queue.
+    pub tenant: String,
+    /// Which paper use case to run.
+    pub use_case: UseCase,
+    /// RNG seed for the run (sensors + surrogate decisions).
+    pub seed: u64,
+    /// Events in the run (1..=[`MAX_COUNT`]).
+    pub count: usize,
+    /// Dispatch policy for the run.
+    pub policy: Policy,
+    /// Per-tenant deadline override (ms); `None` = use-case default.
+    pub deadline_ms: Option<u64>,
+}
+
+/// Parse and validate an `/infer` body.  Any error here is answered
+/// with a 400 *before* the request touches the admission queue or a
+/// compute worker.
+pub fn parse_infer(body: &[u8]) -> Result<InferRequest> {
+    let text = std::str::from_utf8(body).context("body is not UTF-8")?;
+    let j = Json::parse(text)?;
+    let fields = j.as_obj().context("request must be a JSON object")?;
+    for key in fields.keys() {
+        match key.as_str() {
+            "tenant" | "use_case" | "seed" | "count" | "policy" | "deadline_ms" => {}
+            other => bail!("unknown field {other:?}"),
+        }
+    }
+    let tenant = j.req("tenant")?.as_str()?.to_string();
+    if tenant.is_empty() || tenant.len() > MAX_TENANT {
+        bail!("tenant must be 1..={MAX_TENANT} bytes");
+    }
+    let use_case = UseCase::parse(j.req("use_case")?.as_str()?)?;
+    let seed = match j.get("seed") {
+        Some(v) => {
+            let raw = v.as_i64().context("seed must be an integer")?;
+            u64::try_from(raw).ok().context("seed must be >= 0")?
+        }
+        None => 7,
+    };
+    let count = match j.get("count") {
+        Some(v) => v.as_usize().context("count must be a positive integer")?,
+        None => 1,
+    };
+    if count == 0 || count > MAX_COUNT {
+        bail!("count must be 1..={MAX_COUNT}");
+    }
+    let policy = match j.get("policy") {
+        Some(v) => Policy::parse(v.as_str()?)?,
+        None => Policy::Static,
+    };
+    let deadline_ms = match j.get("deadline_ms") {
+        Some(v) => {
+            let ms = v.as_i64().context("deadline_ms must be an integer")?;
+            if ms <= 0 {
+                bail!("deadline_ms must be > 0");
+            }
+            Some(ms as u64)
+        }
+        None => None,
+    };
+    Ok(InferRequest { tenant, use_case, seed, count, policy, deadline_ms })
+}
+
+/// The solo pipeline config this request reproduces: defaults
+/// everywhere the request has no say, so a served run and a
+/// `Pipeline::new(solo_config(req), ..).run(None)` run are the same
+/// run.
+pub fn solo_config(req: &InferRequest) -> PipelineConfig {
+    PipelineConfig {
+        use_case: req.use_case,
+        n_events: req.count,
+        seed: req.seed,
+        policy: req.policy,
+        deadline_s: req.deadline_ms.map(|ms| ms as f64 / 1000.0),
+        ..PipelineConfig::default()
+    }
+}
+
+/// The per-request telemetry payload: chosen target(s), predicted vs
+/// measured latency/energy, deadline status, and the decisions the run
+/// produced — everything a tenant needs to price its own traffic.
+/// Keys are `BTreeMap`-ordered, so serialization is canonical.
+pub fn result_json(report: &PipelineReport) -> Json {
+    let decisions = Json::Obj(
+        report
+            .decisions
+            .iter()
+            .map(|(k, v)| (k.clone(), num(*v as f64)))
+            .collect::<BTreeMap<_, _>>(),
+    );
+    obj(vec![
+        ("use_case", s(report.use_case.as_str())),
+        ("model", s(&report.model)),
+        ("policy", s(&report.policy)),
+        ("target_mix", s(&report.target_mix_str())),
+        ("events", num(report.events as f64)),
+        ("sim_elapsed_s", num(report.sim_elapsed_s)),
+        ("mean_latency_s", num(report.mean_latency_s)),
+        ("p95_latency_s", num(report.p95_latency_s)),
+        ("p99_latency_s", num(report.p99_latency_s)),
+        ("energy_j", num(report.energy_j)),
+        ("predicted_energy_j", num(report.predicted_energy_j)),
+        ("deadline_misses", num(report.deadline_misses as f64)),
+        ("deadline_ok", Json::Bool(report.deadline_misses == 0)),
+        ("power_sheds", num(report.power_sheds as f64)),
+        (
+            "accuracy",
+            match report.accuracy {
+                Some(a) => num(a),
+                None => Json::Null,
+            },
+        ),
+        ("decisions", decisions),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_request_parses() {
+        let r = parse_infer(
+            br#"{"tenant":"ops","use_case":"vae","seed":3,"count":4,
+                "policy":"min-latency","deadline_ms":250}"#,
+        )
+        .unwrap();
+        assert_eq!(r.tenant, "ops");
+        assert_eq!(r.use_case, UseCase::Vae);
+        assert_eq!(r.seed, 3);
+        assert_eq!(r.count, 4);
+        assert_eq!(r.policy, Policy::MinLatency);
+        assert_eq!(r.deadline_ms, Some(250));
+        let cfg = solo_config(&r);
+        assert_eq!(cfg.n_events, 4);
+        assert_eq!(cfg.deadline_s, Some(0.25));
+    }
+
+    #[test]
+    fn defaults_match_pipeline_defaults() {
+        let r = parse_infer(br#"{"tenant":"t","use_case":"esperta"}"#).unwrap();
+        let base = PipelineConfig::default();
+        assert_eq!(r.seed, base.seed);
+        assert_eq!(r.policy, base.policy);
+        assert_eq!(r.count, 1);
+        assert!(r.deadline_ms.is_none());
+    }
+
+    #[test]
+    fn malformed_shapes_rejected() {
+        for bad in [
+            &b"not json"[..],
+            br#"[1,2,3]"#,
+            br#"{"use_case":"vae"}"#,
+            br#"{"tenant":"","use_case":"vae"}"#,
+            br#"{"tenant":"t","use_case":"radar"}"#,
+            br#"{"tenant":"t","use_case":"vae","count":0}"#,
+            br#"{"tenant":"t","use_case":"vae","count":1000}"#,
+            br#"{"tenant":"t","use_case":"vae","seed":-1}"#,
+            br#"{"tenant":"t","use_case":"vae","policy":"fastest"}"#,
+            br#"{"tenant":"t","use_case":"vae","deadline_ms":0}"#,
+            br#"{"tenant":"t","use_case":"vae","surprise":1}"#,
+        ] {
+            assert!(parse_infer(bad).is_err(), "{:?}", String::from_utf8_lossy(bad));
+        }
+    }
+
+    #[test]
+    fn result_json_is_canonical_and_roundtrips() {
+        use crate::board::Calibration;
+        use crate::coordinator::Pipeline;
+        use crate::model::catalog::Catalog;
+        let catalog = Catalog::synthetic();
+        let calib = Calibration::default();
+        let req = parse_infer(br#"{"tenant":"t","use_case":"esperta","count":8}"#).unwrap();
+        let mut p = Pipeline::new(solo_config(&req), &catalog, &calib).unwrap();
+        let a = result_json(&p.run(None).unwrap());
+        let mut q = Pipeline::new(solo_config(&req), &catalog, &calib).unwrap();
+        let b = result_json(&q.run(None).unwrap());
+        assert_eq!(a.to_string(), b.to_string(), "same request, same bytes");
+        let back = Json::parse(&a.to_string()).unwrap();
+        assert_eq!(back.to_string(), a.to_string());
+    }
+}

@@ -75,6 +75,19 @@ impl Histogram {
         }
         self.max_us
     }
+
+    /// Nearest-rank p95 bucket bound (µs) — the same rank convention as
+    /// the pipeline report's `p95_latency_s`, resolved to this
+    /// histogram's power-of-two bucket granularity.
+    pub fn p95_us(&self) -> u64 {
+        self.quantile_us(0.95)
+    }
+
+    /// Nearest-rank p99 bucket bound (µs) — the serving-SLO tail the
+    /// `serve` layer reports per lane.
+    pub fn p99_us(&self) -> u64 {
+        self.quantile_us(0.99)
+    }
 }
 
 /// Named counters + histograms.

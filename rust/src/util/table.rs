@@ -1,5 +1,8 @@
 //! Plain-text table rendering for the paper-table reports.
 
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
 /// A simple column-aligned table with a header row.
 #[derive(Debug, Default, Clone)]
 pub struct Table {
@@ -76,6 +79,44 @@ impl Table {
         }
         out
     }
+
+    /// Machine-readable form: `{"title", "header", "rows"}` where each
+    /// row is an object keyed by header name — what `spaceinfer
+    /// policies --json` / `targets --json` emit so serve clients and CI
+    /// consume the comparison tables without scraping the ASCII layout.
+    /// Cells stay the formatted strings the text table shows, so both
+    /// outputs agree character for character.
+    ///
+    /// ```
+    /// use spaceinfer::util::table::Table;
+    /// let mut t = Table::new("T", &["model", "fps"]);
+    /// t.row(vec!["vae".into(), "606.6".into()]);
+    /// let j = t.to_json().to_string();
+    /// assert!(j.contains("\"fps\":\"606.6\""));
+    /// ```
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|row| {
+                Json::Obj(
+                    self.header
+                        .iter()
+                        .zip(row)
+                        .map(|(h, c)| (h.clone(), Json::Str(c.clone())))
+                        .collect(),
+                )
+            })
+            .collect();
+        let mut doc = BTreeMap::new();
+        doc.insert("title".to_string(), Json::Str(self.title.clone()));
+        doc.insert(
+            "header".to_string(),
+            Json::Arr(self.header.iter().map(|h| Json::Str(h.clone())).collect()),
+        );
+        doc.insert("rows".to_string(), Json::Arr(rows));
+        Json::Obj(doc)
+    }
 }
 
 /// Format a float with engineering-style precision (2 decimals under 100,
@@ -129,6 +170,21 @@ mod tests {
     fn row_width_checked() {
         let mut t = Table::new("T", &["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn json_rows_keyed_by_header() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["x".into(), "1".into()]);
+        t.row(vec!["y".into(), "2".into()]);
+        let j = t.to_json();
+        assert_eq!(j.get("title").unwrap().as_str().unwrap(), "T");
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].get("b").unwrap().as_str().unwrap(), "2");
+        // round-trips through the parser
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.to_string(), j.to_string());
     }
 
     #[test]

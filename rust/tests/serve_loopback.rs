@@ -1,0 +1,309 @@
+//! Loopback integration suite for `spaceinfer serve`.
+//!
+//! Pins the three serving contracts the benchmarks lean on:
+//!
+//! 1. **Bit identity** — the `result` payload of a served request is
+//!    byte-for-byte the payload of running the same request solo
+//!    through [`Pipeline`], even with concurrent clients joining
+//!    cross-tenant batches.
+//! 2. **Rejection before compute** — malformed requests are answered
+//!    with a 4xx without touching the admission queues, and a full
+//!    tenant queue answers 429 with a backlog-derived `Retry-After`.
+//! 3. **Graceful drain** — shutdown completes every admitted request,
+//!    and the final counters satisfy the conservation invariant.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use spaceinfer::board::Calibration;
+use spaceinfer::coordinator::Pipeline;
+use spaceinfer::model::catalog::Catalog;
+use spaceinfer::serve::{
+    parse_infer, result_json, solo_config, ServeConfig, ServeHandle, ServeStats,
+    Server,
+};
+use spaceinfer::util::json::Json;
+
+/// Run `f` against a live server, then drain it and return the final
+/// counters.  A panic inside `f` still shuts the server down (so the
+/// scope join cannot hang) before resurfacing.
+fn with_server(cfg: ServeConfig, f: impl FnOnce(SocketAddr, &ServeHandle)) -> ServeStats {
+    let catalog = Catalog::synthetic();
+    let calib = Calibration::default();
+    let server = Server::bind(cfg, &catalog, &calib).expect("bind loopback server");
+    let addr = server.local_addr();
+    let handle = server.handle();
+    thread::scope(|scope| {
+        let run = scope.spawn(|| server.run().expect("serve run"));
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(addr, &handle)));
+        handle.shutdown();
+        let stats = run.join().expect("server thread");
+        if let Err(p) = outcome {
+            std::panic::resume_unwind(p);
+        }
+        stats
+    })
+}
+
+/// One blocking HTTP request over a fresh connection.  Returns
+/// `(status, lowercased headers, body)`.
+fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (u16, Vec<(String, String)>, String) {
+    try_request(addr, method, path, body).expect("loopback request")
+}
+
+fn try_request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> std::io::Result<(u16, Vec<(String, String)>, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let msg = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(msg.as_bytes())?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|code| code.parse().ok())
+        .ok_or_else(|| std::io::Error::other(format!("bad status line {line:?}")))?;
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let (name, value) = h
+            .split_once(':')
+            .ok_or_else(|| std::io::Error::other(format!("bad header {h:?}")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let len: usize = headers
+        .iter()
+        .find(|(n, _)| n == "content-length")
+        .and_then(|(_, v)| v.parse().ok())
+        .unwrap_or(0);
+    let mut raw = vec![0u8; len];
+    reader.read_exact(&mut raw)?;
+    let body = String::from_utf8(raw)
+        .map_err(|e| std::io::Error::other(format!("non-UTF-8 body: {e}")))?;
+    Ok((status, headers, body))
+}
+
+/// Poll `cond` until it holds (every 5 ms, 30 s deadline).
+fn wait_until(mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !cond() {
+        assert!(Instant::now() < deadline, "condition not reached within 30 s");
+        thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// The serve bit-identity oracle: what the `result` payload of this
+/// request body must be, computed offline through the solo pipeline.
+fn solo_result(body: &str) -> String {
+    let catalog = Catalog::synthetic();
+    let calib = Calibration::default();
+    let req = parse_infer(body.as_bytes()).expect("oracle body parses");
+    let mut pipeline =
+        Pipeline::new(solo_config(&req), &catalog, &calib).expect("oracle pipeline");
+    let report = pipeline.run(None).expect("oracle run");
+    result_json(&report).to_string()
+}
+
+#[test]
+fn concurrent_results_are_bit_identical_to_solo() {
+    // mixed tenants, lanes, seeds, policies — enough concurrent
+    // traffic that cross-tenant batches actually form
+    let bodies: Vec<String> = [
+        ("alpha", "vae", 11, 4, "static"),
+        ("beta", "mms", 12, 6, "min-latency"),
+        ("gamma", "esperta", 13, 3, "min-energy"),
+        ("alpha", "cnet", 14, 2, "static"),
+        ("beta", "vae", 15, 5, "deadline"),
+        ("delta", "esperta", 16, 1, "static"),
+        ("gamma", "mms", 17, 8, "min-energy"),
+        ("delta", "vae", 18, 2, "min-latency"),
+    ]
+    .iter()
+    .map(|(tenant, uc, seed, count, policy)| {
+        format!(
+            r#"{{"tenant":"{tenant}","use_case":"{uc}","seed":{seed},"count":{count},"policy":"{policy}"}}"#
+        )
+    })
+    .collect();
+    let expected: Vec<String> = bodies.iter().map(|b| solo_result(b)).collect();
+    let stats = with_server(
+        ServeConfig { workers: 4, ..Default::default() },
+        |addr, _| {
+            thread::scope(|scope| {
+                let mut clients = Vec::new();
+                // two passes per body: repeats must also be identical
+                for round in 0..2 {
+                    for (i, body) in bodies.iter().enumerate() {
+                        clients.push((round, i, scope.spawn(move || {
+                            request(addr, "POST", "/infer", body)
+                        })));
+                    }
+                }
+                for (round, i, client) in clients {
+                    let (status, _, body) = client.join().expect("client thread");
+                    assert_eq!(status, 200, "round {round} request {i}: {body}");
+                    let j = Json::parse(&body).expect("response parses");
+                    let result = j.req("result").expect("result subtree").to_string();
+                    assert_eq!(
+                        result, expected[i],
+                        "round {round} request {i} diverged from the solo run"
+                    );
+                    let serve = j.req("serve").expect("serve subtree");
+                    assert!(serve.req("batch_size").unwrap().as_usize().unwrap() >= 1);
+                }
+            });
+        },
+    );
+    assert_eq!(stats.admitted, 16);
+    assert_eq!(stats.completed, 16);
+    assert!(stats.conserved(), "{stats:?}");
+}
+
+#[test]
+fn malformed_requests_rejected_before_admission() {
+    let stats = with_server(
+        ServeConfig { workers: 2, ..Default::default() },
+        |addr, _| {
+            for (body, want) in [
+                ("not json", 400),
+                (r#"{"use_case":"vae"}"#, 400),
+                (r#"{"tenant":"t","use_case":"warp-core"}"#, 400),
+                (r#"{"tenant":"t","use_case":"vae","count":0}"#, 400),
+                (r#"{"tenant":"t","use_case":"vae","surprise":1}"#, 400),
+            ] {
+                let (status, _, reply) = request(addr, "POST", "/infer", body);
+                assert_eq!(status, want, "body {body:?} got {reply}");
+                assert!(reply.contains("\"error\""), "body {body:?} got {reply}");
+            }
+            let (status, _, _) = request(addr, "GET", "/infer", "");
+            assert_eq!(status, 405);
+            let (status, _, _) = request(addr, "GET", "/no-such-endpoint", "");
+            assert_eq!(status, 404);
+            // nothing above may have reached the admission queues
+            let (status, _, body) = request(addr, "GET", "/stats", "");
+            assert_eq!(status, 200);
+            let j = Json::parse(&body).expect("stats parse");
+            assert_eq!(j.req("admitted").unwrap().as_i64().unwrap(), 0);
+            assert!(j.req("conserved").unwrap().as_bool().unwrap());
+        },
+    );
+    assert_eq!(stats.admitted, 0);
+    assert!(stats.rejected >= 7);
+    assert!(stats.conserved(), "{stats:?}");
+}
+
+#[test]
+fn tenant_cap_answers_429_with_retry_after() {
+    // one worker, one queue slot, slow service: r1 runs, r2 queues,
+    // r3 must be shed with a Retry-After derived from the backlog
+    let cfg = ServeConfig {
+        workers: 1,
+        tenant_cap: 1,
+        max_batch: 1,
+        service_delay_ms: 600,
+        ..Default::default()
+    };
+    let stats = with_server(cfg, |addr, handle| {
+        let body = |seed: u64| {
+            format!(r#"{{"tenant":"hot","use_case":"esperta","seed":{seed}}}"#)
+        };
+        thread::scope(|scope| {
+            let b1 = body(1);
+            let r1 = scope.spawn(move || request(addr, "POST", "/infer", &b1));
+            wait_until(|| handle.stats().in_flight == 1);
+            let b2 = body(2);
+            let r2 = scope.spawn(move || request(addr, "POST", "/infer", &b2));
+            wait_until(|| handle.stats().pending == 1);
+            let (status, headers, reply) = request(addr, "POST", "/infer", &body(3));
+            assert_eq!(status, 429, "expected shed, got {reply}");
+            let retry: u64 = headers
+                .iter()
+                .find(|(n, _)| n == "retry-after")
+                .expect("Retry-After header on a 429")
+                .1
+                .parse()
+                .expect("integer Retry-After");
+            assert!(retry >= 1);
+            let j = Json::parse(&reply).expect("429 body parses");
+            assert_eq!(j.req("tenant").unwrap().as_str().unwrap(), "hot");
+            assert!(j.req("retry_after_s").unwrap().as_i64().unwrap() >= 1);
+            // the admitted pair still completes normally
+            let (s1, _, _) = r1.join().expect("client r1");
+            let (s2, _, _) = r2.join().expect("client r2");
+            assert_eq!((s1, s2), (200, 200));
+        });
+    });
+    assert_eq!(stats.admitted, 2);
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.shed, 1);
+    assert!(stats.conserved(), "{stats:?}");
+}
+
+#[test]
+fn shutdown_drains_in_flight_and_conserves() {
+    let cfg = ServeConfig { workers: 2, service_delay_ms: 300, ..Default::default() };
+    let stats = with_server(cfg, |addr, handle| {
+        thread::scope(|scope| {
+            let clients: Vec<_> = (0..4)
+                .map(|i| {
+                    let body = format!(
+                        r#"{{"tenant":"t{}","use_case":"esperta","seed":{}}}"#,
+                        i % 2,
+                        20 + i,
+                    );
+                    scope.spawn(move || request(addr, "POST", "/infer", &body))
+                })
+                .collect();
+            wait_until(|| handle.stats().admitted == 4);
+            let (status, _, reply) = request(addr, "POST", "/shutdown", "");
+            assert_eq!(status, 200);
+            assert!(reply.contains("\"draining\":true"));
+            // every admitted request still gets its result
+            for client in clients {
+                let (status, _, reply) = client.join().expect("client thread");
+                assert_eq!(status, 200, "admitted request must drain: {reply}");
+                assert!(reply.contains("\"result\""));
+            }
+            // a latecomer is refused (503 while a handler still reads,
+            // or a dead socket once the acceptor has exited)
+            let late = try_request(
+                addr,
+                "POST",
+                "/infer",
+                r#"{"tenant":"late","use_case":"vae"}"#,
+            );
+            match late {
+                Ok((status, _, _)) => assert_eq!(status, 503),
+                Err(_) => {} // connection refused / reset: also a refusal
+            }
+        });
+    });
+    assert_eq!(stats.admitted, 4);
+    assert_eq!(stats.completed, 4);
+    assert_eq!(stats.pending, 0);
+    assert_eq!(stats.in_flight, 0);
+    assert!(stats.conserved(), "{stats:?}");
+}
